@@ -1,0 +1,156 @@
+"""AOT lowering: JAX step functions -> HLO text artifacts + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids so text round-trips cleanly. Lowered with return_tuple=True; the Rust
+runtime unwraps the tuple.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--paper-scale]
+        [--archs mlp,lenet5,cnn4,cnn6] [--train-batch 64] [--eval-batch 256]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as catalogue
+from .models import Arch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_artifact(fn, in_specs, name, out_dir):
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *in_specs)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    return {
+        "file": fname,
+        "inputs": [_shape_entry(s) for s in in_specs],
+        "outputs": [_shape_entry(s) for s in out_avals],
+    }
+
+
+def smoke_fn(x, y):
+    """Tiny artifact used by runtime unit tests: matmul(x, y) + 2."""
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default="mlp,lenet5,cnn4,cnn6")
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--train-batch", type=int, default=catalogue.TRAIN_BATCH)
+    ap.add_argument("--eval-batch", type=int, default=catalogue.EVAL_BATCH)
+    ap.add_argument("--no-pallas", action="store_true", help="debug: lower ref path")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.archs.split(","))
+    table = catalogue.PAPER_ARCHS if args.paper_scale else catalogue.DEFAULT_ARCHS
+    use_pallas = not args.no_pallas
+
+    manifest = {
+        "format": 1,
+        "train_batch": args.train_batch,
+        "eval_batch": args.eval_batch,
+        "paper_scale": bool(args.paper_scale),
+        "archs": {},
+        "artifacts": {},
+    }
+
+    # Smoke artifact (runtime unit tests).
+    s22 = _spec((2, 2))
+    manifest["artifacts"]["smoke"] = lower_artifact(
+        smoke_fn, [s22, s22], "smoke", args.out_dir
+    )
+
+    for name, in_shape, width in table:
+        if name not in wanted:
+            continue
+        arch = Arch(name, in_shape, width)
+        h, w, c = arch.in_shape
+        bt, be = args.train_batch, args.eval_batch
+        d = arch.d
+        print(f"[aot] {name}: d={d} in_shape={arch.in_shape} width={width}")
+
+        manifest["archs"][name] = {
+            "d": d,
+            "in_shape": list(arch.in_shape),
+            "width": width,
+            "params": [
+                {"name": pn, "shape": list(sh), "offset": off, "fan_in": fi}
+                for (pn, sh, off, fi) in arch.params
+            ],
+        }
+
+        steps = {
+            "mask_train": (
+                catalogue.make_mask_train_step(arch, use_pallas),
+                [
+                    _spec((d,)),
+                    _spec((d,)),
+                    _spec((d,)),
+                    _spec((bt, h, w, c)),
+                    _spec((bt,), jnp.int32),
+                    _spec(()),
+                ],
+            ),
+            "cfl_grad": (
+                catalogue.make_cfl_grad_step(arch, use_pallas),
+                [
+                    _spec((d,)),
+                    _spec((bt, h, w, c)),
+                    _spec((bt,), jnp.int32),
+                ],
+            ),
+            "eval": (
+                catalogue.make_eval_step(arch, use_pallas),
+                [
+                    _spec((d,)),
+                    _spec((be, h, w, c)),
+                    _spec((be,), jnp.int32),
+                ],
+            ),
+        }
+        for step_name, (fn, in_specs) in steps.items():
+            art_name = f"{name}_{step_name}"
+            manifest["artifacts"][art_name] = lower_artifact(
+                fn, in_specs, art_name, args.out_dir
+            )
+            print(f"[aot]   wrote {art_name}.hlo.txt")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

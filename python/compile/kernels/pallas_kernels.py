@@ -1,0 +1,194 @@
+"""Layer-1 Pallas kernels: the compute hot-spots of BiCompFL's model steps.
+
+The paper's workload is federated probabilistic mask training (FedPM-style):
+every forward/backward is dominated by *masked* dense contractions
+``a @ (w * m)`` plus the elementwise Bernoulli mask sampling ``1{u < sigma(s)}``.
+These are written as Pallas kernels so the mask product fuses into the matmul
+tile loop (on TPU the mask never round-trips through HBM) and the HBM->VMEM
+schedule is explicit via ``BlockSpec``.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper ran on
+CUDA GPUs; instead of porting threadblock logic we tile for the MXU —
+128x128x128 f32 tiles (a/w/acc resident in VMEM, ~192 KiB << 16 MiB), grid
+over (M/bm, N/bn, K/bk) with accumulation in the output ref across the K grid
+dimension.
+
+On this image Pallas MUST run ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); interpret-mode lowering inlines the kernel into
+plain HLO so the resulting artifact runs anywhere, numerics identical.
+
+Autodiff: ``pallas_call`` has no automatic VJP, so the matmul kernels are
+wrapped in ``jax.custom_vjp`` with backward passes that are themselves Pallas
+matmul kernels. The mask-sampling kernel is non-differentiable by design (the
+straight-through estimator lives in L2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge targeted at the MXU systolic array. Dimensions not divisible by
+# the tile collapse to a single block along that axis (small model fallback);
+# production shapes should be padded to multiples of 128.
+TILE = 128
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _block(dim: int) -> int:
+    """Largest allowed tile for a dimension: TILE when divisible, else dim."""
+    return TILE if dim % TILE == 0 else dim
+
+
+# ---------------------------------------------------------------------------
+# Plain matmul kernel (used standalone and as the VJP workhorse).
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # Accumulate over the K grid dimension; zero the tile on the first step.
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_impl(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = _block(m), _block(k), _block(n)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul_pallas(a, b):
+    """``a @ b`` via a tiled Pallas kernel; f32 in/out, Pallas VJP."""
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # da = g @ b^T ; db = a^T @ g — both as Pallas contractions.
+    return _matmul_impl(g, jnp.transpose(b)), _matmul_impl(jnp.transpose(a), g)
+
+
+matmul_pallas.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Masked matmul: a @ (w * m), the hot-spot of probabilistic mask training.
+# ---------------------------------------------------------------------------
+
+
+def _masked_matmul_kernel(a_ref, w_ref, m_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The mask product happens on the VMEM-resident tile: fused epilogue-free
+    # contraction, no HBM traffic for (w * m).
+    o_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...] * m_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _masked_matmul_fwd_impl(a, w, m):
+    mm, k = a.shape
+    k2, n = w.shape
+    assert k == k2 and w.shape == m.shape, (a.shape, w.shape, m.shape)
+    bm, bk, bn = _block(mm), _block(k), _block(n)
+    grid = (mm // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, w, m)
+
+
+@jax.custom_vjp
+def masked_matmul(a, w, m):
+    """``a @ (w * m)`` with a Pallas forward and Pallas backward.
+
+    Cotangents: ``da = g @ (w*m)^T``, ``dw = (a^T @ g) * m``,
+    ``dm = (a^T @ g) * w``. ``dm`` is what carries the straight-through
+    gradient to the Bernoulli parameters in mask training.
+    """
+    return _masked_matmul_fwd_impl(a, w, m)
+
+
+def _masked_matmul_fwd(a, w, m):
+    return _masked_matmul_fwd_impl(a, w, m), (a, w, m)
+
+
+def _masked_matmul_bwd(res, g):
+    a, w, m = res
+    wm_t = jnp.transpose(w * m)
+    da = matmul_pallas(g, wm_t)
+    atg = matmul_pallas(jnp.transpose(a), g)
+    return da, atg * m, atg * w
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise Bernoulli mask sampling: 1{u < sigmoid(s)}.
+# ---------------------------------------------------------------------------
+
+
+def _mask_sample_kernel(s_ref, u_ref, o_ref):
+    s = s_ref[...]
+    # Stable logistic: exp on the negative branch only.
+    theta = jnp.where(
+        s >= 0.0, 1.0 / (1.0 + jnp.exp(-s)), jnp.exp(s) / (1.0 + jnp.exp(s))
+    )
+    o_ref[...] = (u_ref[...] < theta).astype(jnp.float32)
+
+
+def mask_sample(scores, u):
+    """Hard Bernoulli mask over a flat vector; non-differentiable by design.
+
+    The caller wraps this in ``stop_gradient`` and applies the STE in L2.
+    Uniforms ``u`` come from the Rust coordinator (deterministic replay).
+    """
+    (d,) = scores.shape
+    bd = TILE * TILE if d % (TILE * TILE) == 0 else d
+    return pl.pallas_call(
+        _mask_sample_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=INTERPRET,
+    )(scores, u)

@@ -1,0 +1,39 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer-1 correctness).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+(+ hypothesis) asserts allclose between the two across shapes/dtypes/densities.
+These references are also what the L2 model uses when `use_pallas=False`
+(debug path), so the oracle doubles as documentation of kernel semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain matmul: a @ b with f32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def masked_matmul_ref(a, w, m):
+    """Masked matmul: a @ (w * m).
+
+    `m` is the (possibly straight-through-estimated) Bernoulli mask over the
+    weight matrix; fusing the product into the matmul is the kernel's reason
+    to exist (the mask never round-trips through HBM on TPU).
+    """
+    return jnp.matmul(a.astype(jnp.float32), (w * m).astype(jnp.float32))
+
+
+def sigmoid_ref(x):
+    """Numerically stable logistic in f32."""
+    x = x.astype(jnp.float32)
+    return jnp.where(x >= 0, 1.0 / (1.0 + jnp.exp(-x)), jnp.exp(x) / (1.0 + jnp.exp(x)))
+
+
+def mask_sample_ref(scores, u):
+    """Hard Bernoulli mask: 1{u < sigmoid(scores)} as f32.
+
+    `u` are uniforms in [0,1) supplied by the Rust coordinator (all RNG lives
+    in L3 so runs replay deterministically).
+    """
+    return (u < sigmoid_ref(scores)).astype(jnp.float32)

@@ -1,0 +1,37 @@
+"""Layer-2 entry point: artifact catalogue for `aot.py`.
+
+Defines which (architecture, step) pairs get lowered, at which shapes. The
+default scale is CPU-friendly (16x16 inputs, width-scaled channels); pass
+`--paper-scale` to aot.py for the published dimensions (LeNet5 61,706 params /
+4CNN 1,933,258 / 6CNN 2,262,602 at 28x28/32x32 inputs).
+"""
+
+from .models import Arch, make_cfl_grad_step, make_eval_step, make_mask_train_step
+
+# (name, in_shape(H,W,C), width)
+DEFAULT_ARCHS = [
+    ("mlp", (16, 16, 1), 1.0),
+    ("lenet5", (16, 16, 1), 1.0),
+    ("cnn4", (16, 16, 1), 0.25),
+    ("cnn6", (16, 16, 3), 0.25),
+]
+
+PAPER_ARCHS = [
+    ("mlp", (28, 28, 1), 1.0),
+    ("lenet5", (32, 32, 1), 1.0),  # classic LeNet5 takes 32x32 (padded MNIST)
+    ("cnn4", (28, 28, 1), 1.0),
+    ("cnn6", (32, 32, 3), 1.0),
+]
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+STEP_MAKERS = {
+    "mask_train": make_mask_train_step,
+    "cfl_grad": make_cfl_grad_step,
+    "eval": make_eval_step,
+}
+
+
+def build_arch(name, in_shape, width):
+    return Arch(name, in_shape, width)

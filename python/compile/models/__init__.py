@@ -1,0 +1,10 @@
+from .archs import (  # noqa: F401
+    Arch,
+    NUM_CLASSES,
+    accuracy,
+    arch_spec,
+    cross_entropy,
+    make_cfl_grad_step,
+    make_eval_step,
+    make_mask_train_step,
+)

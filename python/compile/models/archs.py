@@ -1,0 +1,258 @@
+"""Model architectures (Layer 2), parameterized and flat-parameter addressed.
+
+The Rust coordinator owns *all* state as flat f32 vectors (scores, weights,
+gradients); each architecture here defines a static parameter spec — a list of
+(name, shape, offset, fan_in) — that both sides agree on through the artifact
+manifest. Forward passes unflatten via static slices, so the lowered HLO is a
+pure function of flat vectors + batch.
+
+Architectures follow the paper (Appendix F, Tables 2-4): LeNet5, 4CNN, 6CNN,
+plus a small MLP used by the quickstart and tests. `width` scales channel and
+hidden counts so the default artifacts train on CPU in minutes while
+`--paper-scale` reproduces the published parameter counts.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import pallas_kernels as pk
+from ..kernels import ref
+
+
+def _scaled(c: int, width: float) -> int:
+    return max(4, int(round(c * width)))
+
+
+def arch_spec(name: str, in_shape, width: float = 1.0):
+    """Return the layer list for an architecture.
+
+    Layers are tuples:
+      ("conv", out_ch, ksize, padding, pool)  pool in {None, "max2", "avg2"}
+      ("dense", out_features)
+    The final dense(10) classifier is appended automatically.
+    """
+    if name == "mlp":
+        return [("dense", _scaled(64, width))]
+    if name == "lenet5":
+        return [
+            ("conv", _scaled(6, width), 5, "VALID", "avg2"),
+            ("conv", _scaled(16, width), 5, "VALID", "avg2"),
+            ("dense", _scaled(120, width)),
+            ("dense", _scaled(84, width)),
+        ]
+    if name == "cnn4":
+        return [
+            ("conv", _scaled(64, width), 3, "SAME", None),
+            ("conv", _scaled(64, width), 3, "SAME", "max2"),
+            ("conv", _scaled(128, width), 3, "SAME", None),
+            ("conv", _scaled(128, width), 3, "SAME", "max2"),
+            ("dense", _scaled(256, width)),
+            ("dense", _scaled(256, width)),
+        ]
+    if name == "cnn6":
+        return [
+            ("conv", _scaled(64, width), 3, "SAME", None),
+            ("conv", _scaled(64, width), 3, "SAME", "max2"),
+            ("conv", _scaled(128, width), 3, "SAME", None),
+            ("conv", _scaled(128, width), 3, "SAME", "max2"),
+            ("conv", _scaled(256, width), 3, "SAME", None),
+            ("conv", _scaled(256, width), 3, "SAME", "max2"),
+            ("dense", _scaled(256, width)),
+            ("dense", _scaled(256, width)),
+        ]
+    raise ValueError(f"unknown arch {name!r}")
+
+
+NUM_CLASSES = 10
+
+
+class Arch:
+    """Static description of one architecture instance (shapes fixed)."""
+
+    def __init__(self, name: str, in_shape, width: float = 1.0):
+        self.name = name
+        self.in_shape = tuple(in_shape)  # (H, W, C)
+        self.width = width
+        self.layers = arch_spec(name, in_shape, width)
+        self.params = []  # (pname, shape, offset, fan_in)
+        h, w, c = self.in_shape
+        off = 0
+
+        def add(pname, shape, fan_in):
+            nonlocal off
+            n = math.prod(shape)
+            self.params.append((pname, tuple(shape), off, fan_in))
+            off += n
+
+        for li, layer in enumerate(self.layers):
+            if layer[0] == "conv":
+                _, out_ch, k, pad, pool = layer
+                add(f"conv{li}_w", (k, k, c, out_ch), k * k * c)
+                add(f"conv{li}_b", (out_ch,), k * k * c)
+                if pad == "VALID":
+                    h, w = h - k + 1, w - k + 1
+                if pool is not None:
+                    h, w = h // 2, w // 2
+                c = out_ch
+            else:
+                _, units = layer
+                in_f = h * w * c
+                add(f"dense{li}_w", (in_f, units), in_f)
+                add(f"dense{li}_b", (units,), in_f)
+                h, w, c = 1, 1, units
+        in_f = h * w * c
+        add("head_w", (in_f, NUM_CLASSES), in_f)
+        add("head_b", (NUM_CLASSES,), in_f)
+        self.d = off
+
+    def unflatten(self, flat):
+        """Static-slice a flat [d] vector into the parameter dict."""
+        out = {}
+        for pname, shape, offset, _ in self.params:
+            n = math.prod(shape)
+            out[pname] = lax.slice(flat, (offset,), (offset + n,)).reshape(shape)
+        return out
+
+    # -- forward ------------------------------------------------------------
+
+    def forward(self, flat_w, x, flat_m=None, use_pallas=True):
+        """Logits for batch x [B,H,W,C] given flat weights (and optional mask).
+
+        With `flat_m`, every parameter is masked elementwise; dense layers use
+        the fused Pallas `masked_matmul` so the straight-through gradient
+        flows through the kernel's `dm` cotangent.
+        """
+        p = self.unflatten(flat_w)
+        m = self.unflatten(flat_m) if flat_m is not None else None
+
+        def wt(name):
+            return p[name] * m[name] if m is not None else p[name]
+
+        a = x
+        for li, layer in enumerate(self.layers):
+            if layer[0] == "conv":
+                _, out_ch, k, pad, pool = layer
+                a = lax.conv_general_dilated(
+                    a,
+                    wt(f"conv{li}_w"),
+                    window_strides=(1, 1),
+                    padding=pad,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+                a = a + wt(f"conv{li}_b")
+                a = jax.nn.relu(a)
+                if pool == "max2":
+                    a = lax.reduce_window(
+                        a, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                    )
+                elif pool == "avg2":
+                    a = (
+                        lax.reduce_window(
+                            a, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                        )
+                        / 4.0
+                    )
+            else:
+                li_name = f"dense{li}"
+                if a.ndim > 2:
+                    a = a.reshape(a.shape[0], -1)
+                if m is not None:
+                    mm = pk.masked_matmul if use_pallas else ref.masked_matmul_ref
+                    a = mm(a, p[f"{li_name}_w"], m[f"{li_name}_w"])
+                else:
+                    mm = pk.matmul_pallas if use_pallas else ref.matmul_ref
+                    a = mm(a, p[f"{li_name}_w"])
+                a = jax.nn.relu(a + wt(f"{li_name}_b"))
+        if a.ndim > 2:
+            a = a.reshape(a.shape[0], -1)
+        if m is not None:
+            mm = pk.masked_matmul if use_pallas else ref.masked_matmul_ref
+            logits = mm(a, p["head_w"], m["head_w"]) + wt("head_b")
+        else:
+            mm = pk.matmul_pallas if use_pallas else ref.matmul_ref
+            logits = mm(a, p["head_w"]) + wt("head_b")
+        return logits
+
+
+def cross_entropy(logits, y):
+    """Mean CE over the batch; y int32 labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Step functions — these are the lowered artifacts.
+# ---------------------------------------------------------------------------
+
+
+def make_mask_train_step(arch: Arch, use_pallas=True):
+    """One local SGD iteration of probabilistic mask training (Alg. 3).
+
+    (scores s, fixed weights w, uniforms u, batch x, labels y, lr eta)
+      -> (s', loss, acc)
+
+    Scores live in the dual (logit) space; theta = sigma(s); the hard mask is
+    sampled by the Pallas kernel and made differentiable via the straight-
+    through estimator m~ = m + theta - sg(theta)  (gradient w.r.t. theta is
+    identity — mirror descent with a KL proximity, Appendix D/G).
+    """
+
+    def step(s, w, u, x, y, eta):
+        # The hard mask is sampled outside the differentiated closure: under
+        # the STE its derivative is defined to be zero, and evaluating it at
+        # the linearization point s (== s_) keeps the primal identical while
+        # avoiding AD through the (non-differentiable) Pallas kernel.
+        sample = pk.mask_sample if use_pallas else ref.mask_sample_ref
+        m_hard = lax.stop_gradient(sample(s, u))
+
+        def loss_fn(s_):
+            theta = jax.nn.sigmoid(s_)
+            m_ste = m_hard + theta - lax.stop_gradient(theta)
+            logits = arch.forward(w, x, flat_m=m_ste, use_pallas=use_pallas)
+            loss = cross_entropy(logits, y)
+            return loss, accuracy(logits, y)
+
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(s)
+        return s - eta * g, loss, acc
+
+    return step
+
+
+def make_cfl_grad_step(arch: Arch, use_pallas=True):
+    """Gradient step for conventional FL: (params, x, y) -> (grad, loss, acc)."""
+
+    def step(params, x, y):
+        def loss_fn(p_):
+            logits = arch.forward(p_, x, use_pallas=use_pallas)
+            return cross_entropy(logits, y), accuracy(logits, y)
+
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return g, loss, acc
+
+    return step
+
+
+def make_eval_step(arch: Arch, use_pallas=True):
+    """Evaluation: (effective weights, x, y) -> (per-example loss, correct).
+
+    Takes *effective* weights (w ⊙ mask for stochastic FL, raw params for
+    CFL) so one artifact serves both paths; Rust sums the valid prefix of the
+    per-example outputs to handle ragged final batches.
+    """
+
+    def step(w_eff, x, y):
+        logits = arch.forward(w_eff, x, use_pallas=use_pallas)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return nll, correct
+
+    return step

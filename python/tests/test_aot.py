@@ -1,0 +1,73 @@
+"""Manifest/artifact integrity: what aot.py wrote matches the arch specs."""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile.models import Arch
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_artifact_files_exist():
+    man = load()
+    for name, art in man["artifacts"].items():
+        path = os.path.join(ART_DIR, art["file"])
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) > 100
+
+
+def test_arch_entries_match_specs():
+    man = load()
+    for name, entry in man["archs"].items():
+        arch = Arch(name, tuple(entry["in_shape"]), entry["width"])
+        assert arch.d == entry["d"]
+        assert len(arch.params) == len(entry["params"])
+        for (pn, sh, off, fi), rec in zip(arch.params, entry["params"]):
+            assert rec["name"] == pn
+            assert tuple(rec["shape"]) == sh
+            assert rec["offset"] == off
+            assert rec["fan_in"] == fi
+
+
+def test_step_shapes_consistent():
+    man = load()
+    bt, be = man["train_batch"], man["eval_batch"]
+    for name, entry in man["archs"].items():
+        d = entry["d"]
+        h, w, c = entry["in_shape"]
+        mt = man["artifacts"][f"{name}_mask_train"]
+        assert [i["shape"] for i in mt["inputs"]] == [
+            [d],
+            [d],
+            [d],
+            [bt, h, w, c],
+            [bt],
+            [],
+        ]
+        assert [o["shape"] for o in mt["outputs"]] == [[d], [], []]
+        ev = man["artifacts"][f"{name}_eval"]
+        assert [o["shape"] for o in ev["outputs"]] == [[be], [be]]
+        cg = man["artifacts"][f"{name}_cfl_grad"]
+        assert [o["shape"] for o in cg["outputs"]] == [[d], [], []]
+
+
+def test_hlo_is_text_not_proto():
+    """The interchange must be HLO text (xla_extension 0.5.1 gotcha)."""
+    man = load()
+    any_file = os.path.join(ART_DIR, man["artifacts"]["smoke"]["file"])
+    with open(any_file, "rb") as f:
+        head = f.read(64)
+    assert b"HloModule" in head

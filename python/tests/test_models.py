@@ -1,0 +1,164 @@
+"""L2 correctness: architecture specs, step semantics, training sanity."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.models import (
+    Arch,
+    NUM_CLASSES,
+    make_cfl_grad_step,
+    make_eval_step,
+    make_mask_train_step,
+)
+
+ARCHS = [
+    ("mlp", (16, 16, 1), 1.0),
+    ("lenet5", (16, 16, 1), 1.0),
+    ("cnn4", (16, 16, 1), 0.25),
+    ("cnn6", (16, 16, 3), 0.25),
+]
+
+
+def _batch(arch, b, seed=0):
+    r = np.random.default_rng(seed)
+    h, w, c = arch.in_shape
+    x = r.standard_normal((b, h, w, c), dtype=np.float32)
+    y = r.integers(0, NUM_CLASSES, size=b).astype(np.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name,in_shape,width", ARCHS)
+def test_param_spec_contiguous(name, in_shape, width):
+    arch = Arch(name, in_shape, width)
+    off = 0
+    for pname, shape, offset, fan_in in arch.params:
+        assert offset == off, (pname, offset, off)
+        assert fan_in > 0
+        off += math.prod(shape)
+    assert off == arch.d
+    # Head always classifies into NUM_CLASSES.
+    assert arch.params[-2][1][-1] == NUM_CLASSES
+
+
+def test_paper_scale_param_counts():
+    """Appendix F: LeNet5 61,706 / 4CNN 1,933,258 / 6CNN 2,262,602 params."""
+    assert Arch("lenet5", (32, 32, 1), 1.0).d == 61706
+    assert Arch("cnn4", (28, 28, 1), 1.0).d == 1933258
+    assert Arch("cnn6", (32, 32, 3), 1.0).d == 2262602
+
+
+@pytest.mark.parametrize("name,in_shape,width", ARCHS)
+def test_forward_shapes(name, in_shape, width):
+    arch = Arch(name, in_shape, width)
+    r = np.random.default_rng(1)
+    wf = r.standard_normal(arch.d, dtype=np.float32) * 0.1
+    x, _ = _batch(arch, 3)
+    logits = arch.forward(wf, x, use_pallas=False)
+    assert logits.shape == (3, NUM_CLASSES)
+    m = (r.random(arch.d) < 0.5).astype(np.float32)
+    logits_m = arch.forward(wf, x, flat_m=m, use_pallas=False)
+    assert logits_m.shape == (3, NUM_CLASSES)
+
+
+def test_pallas_and_ref_forward_agree():
+    arch = Arch("mlp", (16, 16, 1), 1.0)
+    r = np.random.default_rng(2)
+    wf = r.standard_normal(arch.d, dtype=np.float32) * 0.1
+    m = (r.random(arch.d) < 0.7).astype(np.float32)
+    x, _ = _batch(arch, 4)
+    lp = arch.forward(wf, x, flat_m=m, use_pallas=True)
+    lr = arch.forward(wf, x, flat_m=m, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-4, atol=1e-4)
+
+
+def test_full_mask_equals_unmasked():
+    arch = Arch("lenet5", (16, 16, 1), 1.0)
+    r = np.random.default_rng(3)
+    wf = r.standard_normal(arch.d, dtype=np.float32) * 0.1
+    x, _ = _batch(arch, 2)
+    lm = arch.forward(wf, x, flat_m=np.ones(arch.d, np.float32), use_pallas=False)
+    lu = arch.forward(wf, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lu), rtol=1e-5, atol=1e-5)
+
+
+def test_mask_train_step_moves_scores_toward_lower_loss():
+    """A few STE steps on one batch must reduce loss (overfit sanity)."""
+    arch = Arch("mlp", (16, 16, 1), 1.0)
+    r = np.random.default_rng(4)
+    # Signed-constant init (Ramanujan et al.): sign(N) * sqrt(2/fan_in).
+    w = np.concatenate(
+        [
+            np.sign(r.standard_normal(math.prod(sh)))
+            * math.sqrt(2.0 / fi)
+            for (_, sh, _, fi) in arch.params
+        ]
+    ).astype(np.float32)
+    s = np.zeros(arch.d, np.float32)  # theta = 0.5
+    x, y = _batch(arch, 32, seed=5)
+    step = jax.jit(make_mask_train_step(arch, use_pallas=False))
+    # Fixed uniforms keep the objective deterministic so the descent is
+    # monotone enough to assert on (fresh uniforms each step is the training
+    # regime, but too noisy for a 30-step unit test).
+    u = r.random(arch.d, dtype=np.float32)
+    losses = []
+    for it in range(30):
+        s, loss, acc = step(s, w, u, x, y, jnp.float32(5.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_cfl_grad_matches_fd():
+    """CFL gradient vs central finite differences on a few coordinates."""
+    arch = Arch("mlp", (16, 16, 1), 1.0)
+    r = np.random.default_rng(6)
+    p = (r.standard_normal(arch.d) * 0.05).astype(np.float32)
+    x, y = _batch(arch, 8, seed=7)
+    step = make_cfl_grad_step(arch, use_pallas=False)
+    g, loss, acc = step(p, x, y)
+    g = np.asarray(g)
+
+    from compile.models import cross_entropy
+
+    def loss_at(pv):
+        return float(cross_entropy(arch.forward(pv, x, use_pallas=False), y))
+
+    eps = 1e-3
+    idx = r.integers(0, arch.d, size=5)
+    for i in idx:
+        pp, pm = p.copy(), p.copy()
+        pp[i] += eps
+        pm[i] -= eps
+        fd = (loss_at(pp) - loss_at(pm)) / (2 * eps)
+        assert abs(fd - g[i]) < 5e-2 * max(1.0, abs(fd)), (i, fd, g[i])
+
+
+def test_eval_step_counts_correct():
+    arch = Arch("mlp", (16, 16, 1), 1.0)
+    r = np.random.default_rng(8)
+    w = (r.standard_normal(arch.d) * 0.1).astype(np.float32)
+    x, y = _batch(arch, 16, seed=9)
+    nll, correct = make_eval_step(arch, use_pallas=False)(w, x, y)
+    assert nll.shape == (16,) and correct.shape == (16,)
+    logits = arch.forward(w, x, use_pallas=False)
+    expect = (np.argmax(np.asarray(logits), axis=-1) == y).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(correct), expect)
+    assert np.all(np.asarray(nll) > 0)
+
+
+def test_cfl_training_reduces_loss():
+    arch = Arch("mlp", (16, 16, 1), 1.0)
+    r = np.random.default_rng(10)
+    p = (r.standard_normal(arch.d) * 0.05).astype(np.float32)
+    x, y = _batch(arch, 32, seed=11)
+    step = jax.jit(make_cfl_grad_step(arch, use_pallas=False))
+    first = None
+    for it in range(15):
+        g, loss, acc = step(p, x, y)
+        if first is None:
+            first = float(loss)
+        p = p - 0.5 * np.asarray(g)
+    assert float(loss) < first - 0.1, (first, float(loss))

@@ -1,0 +1,61 @@
+//! Baseline compressor throughput (sign / TopK / RandK / Q_s) plus the
+//! error-feedback memory update — the per-round client cost of every
+//! non-stochastic baseline in the tables.
+//!
+//! Run: `cargo bench --bench bench_compressors`
+
+use std::time::Duration;
+
+use bicompfl::compressors::{sign_compress, Compressor, Memory, Qs, RandK, TopK};
+use bicompfl::util::rng::Xoshiro256;
+use bicompfl::util::timer::bench;
+
+fn main() {
+    println!("== compressor benchmarks (d = 100k) ==");
+    let d = 100_000usize;
+    let warm = Duration::from_millis(100);
+    let target = Duration::from_millis(400);
+    let mut rng = Xoshiro256::new(1);
+    let g: Vec<f32> = (0..d).map(|_| rng.next_normal()).collect();
+
+    {
+        let stats = bench(warm, target, || {
+            std::hint::black_box(sign_compress(&g));
+        });
+        println!("{}", stats.throughput_line("sign", d as f64));
+    }
+    {
+        let mut c = TopK { k: d / 10 };
+        let mut r = Xoshiro256::new(2);
+        let stats = bench(warm, target, || {
+            std::hint::black_box(c.compress(&g, &mut r));
+        });
+        println!("{}", stats.throughput_line("topk k=d/10", d as f64));
+    }
+    {
+        let mut c = RandK { k: d / 10 };
+        let mut r = Xoshiro256::new(3);
+        let stats = bench(warm, target, || {
+            std::hint::black_box(c.compress(&g, &mut r));
+        });
+        println!("{}", stats.throughput_line("randk k=d/10", d as f64));
+    }
+    {
+        let mut c = Qs { s: 16 };
+        let mut r = Xoshiro256::new(4);
+        let stats = bench(warm, target, || {
+            std::hint::black_box(c.compress(&g, &mut r));
+        });
+        println!("{}", stats.throughput_line("qsgd s=16", d as f64));
+    }
+    {
+        let mut mem = Memory::new(d);
+        let (c, _) = sign_compress(&g);
+        let stats = bench(warm, target, || {
+            let p = mem.compensate(&g);
+            mem.update(&p, &c);
+            std::hint::black_box(&mem.e);
+        });
+        println!("{}", stats.throughput_line("error-feedback cycle", d as f64));
+    }
+}

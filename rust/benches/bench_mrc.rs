@@ -1,0 +1,100 @@
+//! MRC codec throughput — the L3 hot path (§Perf target).
+//!
+//! Encode cost is O(n_IS · m) per block; this bench sweeps block size and
+//! n_IS and reports both per-iteration latency and element throughput
+//! (elements = n_IS × block entries visited per encode).
+//!
+//! Run: `cargo bench --bench bench_mrc`
+
+use std::time::Duration;
+
+use bicompfl::mrc::block::BlockPlan;
+use bicompfl::mrc::codec::BlockCodec;
+use bicompfl::util::rng::{Philox, Xoshiro256};
+use bicompfl::util::timer::bench;
+
+fn main() {
+    println!("== MRC codec benchmarks ==");
+    let warm = Duration::from_millis(100);
+    let target = Duration::from_millis(400);
+
+    // Encode throughput across block sizes (n_IS = 256).
+    for &m in &[32usize, 128, 512, 2048] {
+        let n_is = 256;
+        let codec = BlockCodec::new(n_is);
+        let mut rng = Xoshiro256::new(1);
+        let q: Vec<f32> = (0..m).map(|_| 0.3 + 0.4 * rng.next_f32()).collect();
+        let p = vec![0.5f32; m];
+        let stream = Philox::keyed(7, 3);
+        let mut sel = Xoshiro256::new(2);
+        let stats = bench(warm, target, || {
+            std::hint::black_box(codec.encode(&q, &p, &stream, 0, &mut sel));
+        });
+        println!(
+            "{}",
+            stats.throughput_line(
+                &format!("encode m={m} n_is={n_is}"),
+                (m * n_is) as f64
+            )
+        );
+    }
+
+    // Encode throughput across n_IS (block 128).
+    for &n_is in &[64usize, 256, 1024] {
+        let m = 128;
+        let codec = BlockCodec::new(n_is);
+        let mut rng = Xoshiro256::new(3);
+        let q: Vec<f32> = (0..m).map(|_| 0.3 + 0.4 * rng.next_f32()).collect();
+        let p = vec![0.5f32; m];
+        let stream = Philox::keyed(9, 1);
+        let mut sel = Xoshiro256::new(4);
+        let stats = bench(warm, target, || {
+            std::hint::black_box(codec.encode(&q, &p, &stream, 0, &mut sel));
+        });
+        println!(
+            "{}",
+            stats.throughput_line(
+                &format!("encode m={m} n_is={n_is}"),
+                (m * n_is) as f64
+            )
+        );
+    }
+
+    // Decode (reconstruction) throughput — O(m), independent of n_IS.
+    {
+        let m = 2048;
+        let codec = BlockCodec::new(256);
+        let p = vec![0.5f32; m];
+        let stream = Philox::keyed(11, 2);
+        let mut out = vec![0.0f32; m];
+        let stats = bench(warm, target, || {
+            codec.decode(&p, &stream, 0, 17, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", stats.throughput_line("decode m=2048", m as f64));
+    }
+
+    // Full-vector encode (one client's uplink, d = 100k, fixed 128 blocks):
+    // the per-round per-client cost in the experiments.
+    {
+        let d = 100_000;
+        let n_is = 256;
+        let codec = BlockCodec::new(n_is);
+        let plan = BlockPlan::fixed(d, 128);
+        let mut rng = Xoshiro256::new(5);
+        let q: Vec<f32> = (0..d).map(|_| 0.3 + 0.4 * rng.next_f32()).collect();
+        let p = vec![0.5f32; d];
+        let stream = Philox::keyed(13, 4);
+        let mut sel = Xoshiro256::new(6);
+        let stats = bench(warm, Duration::from_secs(2), || {
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                std::hint::black_box(codec.encode(&q[r.clone()], &p[r], &stream, 0, &mut sel));
+            }
+        });
+        println!(
+            "{}",
+            stats.throughput_line("uplink d=100k bs=128 n_is=256", (d * n_is) as f64)
+        );
+    }
+}

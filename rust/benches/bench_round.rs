@@ -1,0 +1,62 @@
+//! End-to-end round latency on the synthetic oracle: the full coordinator
+//! cost (local train stand-in + MRC both directions + aggregation) per
+//! variant, plus the parallel-uplink topology speedup.
+//!
+//! Run: `cargo bench --bench bench_round`
+
+use std::time::Duration;
+
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::topology::parallel_uplink;
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::util::rng::Xoshiro256;
+use bicompfl::util::timer::bench;
+
+fn main() {
+    println!("== end-to-end round benchmarks (synthetic L2, d=16384, n=10) ==");
+    let warm = Duration::from_millis(200);
+    let target = Duration::from_secs(2);
+    let d = 16_384;
+    let n = 10;
+
+    for variant in [Variant::Gr, Variant::Pr, Variant::PrSplitDl] {
+        let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
+        let mut alg = BiCompFl::new(
+            d,
+            n,
+            BiCompFlConfig {
+                variant,
+                n_is: 256,
+                allocation: AllocationStrategy::fixed(128),
+                ..Default::default()
+            },
+        );
+        let stats = bench(warm, target, || {
+            std::hint::black_box(alg.round(&mut oracle));
+        });
+        println!(
+            "{}",
+            stats.throughput_line(&format!("round {}", variant.label()), d as f64)
+        );
+    }
+
+    // Parallel vs serial uplink encode (the topology win).
+    {
+        let mut rng = Xoshiro256::new(2);
+        let qs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| 0.3 + 0.4 * rng.next_f32()).collect())
+            .collect();
+        let prior = vec![0.5f32; d];
+        let plan = BlockPlan::fixed(d, 128);
+        let seeds = vec![7u64; n];
+
+        let stats = bench(warm, target, || {
+            std::hint::black_box(parallel_uplink(&qs, &prior, &plan, &seeds, 0, 256, 1, 3));
+        });
+        println!(
+            "{}",
+            stats.throughput_line("parallel_uplink n=10", (d * n) as f64)
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! PJRT artifact step latency: mask_train / cfl_grad / eval per
+//! architecture — the L2 execution cost that dominates real-model rounds.
+//! Skipped (with a notice) when `artifacts/` is absent.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use std::time::Duration;
+
+use bicompfl::coordinator::MaskOracle;
+use bicompfl::config::preset;
+use bicompfl::exp::build_runtime_oracle;
+use bicompfl::util::timer::bench;
+
+fn main() {
+    if !bicompfl::runtime::manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        println!("bench_runtime: artifacts missing; run `make artifacts` first");
+        return;
+    }
+    println!("== PJRT artifact step benchmarks ==");
+    let warm = Duration::from_millis(300);
+    let target = Duration::from_secs(2);
+
+    for arch in ["mlp", "lenet5", "cnn4"] {
+        let mut cfg = preset("quick").unwrap();
+        cfg.arch = arch.to_string();
+        cfg.dataset = if arch == "cnn6" {
+            "cifar-like".into()
+        } else {
+            "mnist-like".into()
+        };
+        cfg.n_clients = 2;
+        let Ok(mut oracle) = build_runtime_oracle(&cfg) else {
+            println!("{arch}: oracle unavailable, skipping");
+            continue;
+        };
+        let d = oracle.arch.d;
+        let theta = vec![0.5f32; d];
+
+        let stats = bench(warm, target, || {
+            std::hint::black_box(oracle.local_train(0, &theta, 1, 0.5, 0));
+        });
+        println!(
+            "{}",
+            stats.throughput_line(&format!("{arch} mask_train step (d={d})"), d as f64)
+        );
+
+        let mut g = vec![0.0f32; d];
+        let params = vec![0.01f32; d];
+        let stats = bench(warm, target, || {
+            bicompfl::algorithms::GradOracle::grad(&mut oracle, 0, &params, &mut g);
+            std::hint::black_box(&g);
+        });
+        println!(
+            "{}",
+            stats.throughput_line(&format!("{arch} cfl_grad step (d={d})"), d as f64)
+        );
+
+        let stats = bench(warm, target, || {
+            std::hint::black_box(oracle.eval_weights(&params));
+        });
+        println!(
+            "{}",
+            stats.throughput_line(&format!("{arch} full test eval (d={d})"), d as f64)
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! CSER — Communication-efficient SGD with Error Reset (Xie et al. 2020).
+//!
+//! Clients EF-sign their gradients; every `period` rounds the residual state
+//! is *reset* after a full synchronization. Downlink carries the full-
+//! precision global model each round plus the sign of the aggregate update
+//! (the partial-sync signal), matching the paper's Appendix-I accounting
+//! (UL 1.0 / DL 33).
+
+use super::{CflAlgorithm, GradOracle, RoundBits};
+use crate::compressors::{sign_compress, Memory};
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+pub struct Cser {
+    x: Vec<f32>,
+    mems: Vec<Memory>,
+    lr: f32,
+    period: usize,
+    t: usize,
+    scratch: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl Cser {
+    pub fn new(d: usize, n_clients: usize, server_lr: f32, period: usize) -> Self {
+        Self {
+            x: vec![0.0; d],
+            mems: (0..n_clients).map(|_| Memory::new(d)).collect(),
+            lr: server_lr,
+            period: period.max(1),
+            t: 0,
+            scratch: vec![0.0; d],
+            agg: vec![0.0; d],
+        }
+    }
+}
+
+impl CflAlgorithm for Cser {
+    fn name(&self) -> &'static str {
+        "CSER"
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
+        let d = self.x.len() as u64;
+        let n = self.mems.len();
+        let mut ul = 0u64;
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            oracle.grad(i, &self.x, &mut self.scratch);
+            let p = self.mems[i].compensate(&self.scratch);
+            let (c, bits) = sign_compress(&p);
+            self.mems[i].update(&p, &c);
+            ul += bits;
+            tensor::add_assign(&mut self.agg, &c);
+        }
+        tensor::axpy(&mut self.x, -self.lr / n as f32, &self.agg);
+        self.t += 1;
+        if self.t % self.period == 0 {
+            // Error reset after full synchronization.
+            for m in self.mems.iter_mut() {
+                m.reset();
+            }
+        }
+        // Downlink: full model (32 bpp) + sign of aggregate (1 bpp).
+        let per_client_dl = 32 * d + (d + 32);
+        RoundBits {
+            ul,
+            dl: per_client_dl * n as u64,
+            dl_bc: per_client_dl,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn converges() {
+        let mut o = QuadraticOracle::new(16, 4, 13);
+        let mut alg = Cser::new(16, 4, 0.3, 50);
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..400 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.05 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn error_resets_on_period() {
+        let mut o = QuadraticOracle::new(8, 2, 2);
+        let mut alg = Cser::new(8, 2, 0.1, 3);
+        let mut rng = Xoshiro256::new(0);
+        alg.round(&mut o, &mut rng);
+        alg.round(&mut o, &mut rng);
+        assert!(alg.mems.iter().any(|m| m.norm() > 0.0));
+        alg.round(&mut o, &mut rng); // t=3 -> reset
+        assert!(alg.mems.iter().all(|m| m.norm() == 0.0));
+    }
+
+    #[test]
+    fn accounting_is_one_up_thirtythree_down() {
+        let mut o = QuadraticOracle::new(1000, 2, 1);
+        let mut alg = Cser::new(1000, 2, 0.1, 50);
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        let bpp_ul = b.ul as f64 / (2.0 * 1000.0);
+        let bpp_dl = b.dl as f64 / (2.0 * 1000.0);
+        assert!((bpp_ul - 1.0).abs() < 0.1, "ul {bpp_ul}");
+        assert!((bpp_dl - 33.0).abs() < 0.1, "dl {bpp_dl}");
+    }
+}

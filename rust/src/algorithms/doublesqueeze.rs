@@ -1,0 +1,108 @@
+//! DoubleSqueeze (Tang et al. 2019): error-compensated compression at *both*
+//! ends. Clients EF-sign their gradients (1 bpp up); the server aggregates
+//! the decompressed messages, EF-signs the aggregate, and broadcasts it
+//! (1 bpp down). Paper accounting: UL 1.0 / DL 1.0.
+
+use super::{CflAlgorithm, GradOracle, RoundBits};
+use crate::compressors::{sign_compress, Memory};
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+pub struct DoubleSqueeze {
+    x: Vec<f32>,
+    client_mems: Vec<Memory>,
+    server_mem: Memory,
+    lr: f32,
+    scratch: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl DoubleSqueeze {
+    pub fn new(d: usize, n_clients: usize, server_lr: f32) -> Self {
+        Self {
+            x: vec![0.0; d],
+            client_mems: (0..n_clients).map(|_| Memory::new(d)).collect(),
+            server_mem: Memory::new(d),
+            lr: server_lr,
+            scratch: vec![0.0; d],
+            agg: vec![0.0; d],
+        }
+    }
+}
+
+impl CflAlgorithm for DoubleSqueeze {
+    fn name(&self) -> &'static str {
+        "DoubleSqueeze"
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
+        let n = self.client_mems.len();
+        let mut ul = 0u64;
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            oracle.grad(i, &self.x, &mut self.scratch);
+            let p = self.client_mems[i].compensate(&self.scratch);
+            let (c, bits) = sign_compress(&p);
+            self.client_mems[i].update(&p, &c);
+            ul += bits;
+            tensor::add_assign(&mut self.agg, &c);
+        }
+        tensor::scale(&mut self.agg, 1.0 / n as f32);
+        // Server-side squeeze: compress the aggregate with its own memory.
+        let v = self.server_mem.compensate(&self.agg);
+        let (cs, dl_bits) = sign_compress(&v);
+        self.server_mem.update(&v, &cs);
+        // Every client (and the server) applies the same compressed update.
+        tensor::axpy(&mut self.x, -self.lr, &cs);
+        RoundBits {
+            ul,
+            dl: dl_bits * n as u64,
+            dl_bc: dl_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn converges_with_double_compression() {
+        let mut o = QuadraticOracle::new(16, 4, 11);
+        let mut alg = DoubleSqueeze::new(16, 4, 0.2);
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..500 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.05 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn one_bit_each_direction() {
+        let mut o = QuadraticOracle::new(64, 3, 1);
+        let mut alg = DoubleSqueeze::new(64, 3, 0.1);
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        assert_eq!(b.ul, 3 * (64 + 32));
+        assert_eq!(b.dl, 3 * (64 + 32));
+        assert_eq!(b.dl_bc, 64 + 32);
+    }
+
+    #[test]
+    fn server_memory_engages() {
+        let mut o = QuadraticOracle::new(8, 2, 2);
+        let mut alg = DoubleSqueeze::new(8, 2, 0.1);
+        alg.round(&mut o, &mut Xoshiro256::new(0));
+        assert!(alg.server_mem.norm() > 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! FedAvg / PSGD (McMahan et al. 2017): the uncompressed reference point.
+//!
+//! Clients send full-precision gradients (32 bpp up); the federator averages
+//! and returns the full-precision model (32 bpp down; broadcastable).
+
+use super::{CflAlgorithm, GradOracle, RoundBits};
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+pub struct FedAvg {
+    x: Vec<f32>,
+    n: usize,
+    lr: f32,
+    scratch: Vec<f32>,
+    gsum: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new(d: usize, n_clients: usize, server_lr: f32) -> Self {
+        Self {
+            x: vec![0.0; d],
+            n: n_clients,
+            lr: server_lr,
+            scratch: vec![0.0; d],
+            gsum: vec![0.0; d],
+        }
+    }
+}
+
+impl CflAlgorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "FedAvg"
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
+        let d = self.x.len() as u64;
+        self.gsum.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.n {
+            oracle.grad(i, &self.x, &mut self.scratch);
+            tensor::add_assign(&mut self.gsum, &self.scratch);
+        }
+        tensor::axpy(&mut self.x, -self.lr / self.n as f32, &self.gsum);
+        RoundBits {
+            ul: 32 * d * self.n as u64,
+            dl: 32 * d * self.n as u64,
+            dl_bc: 32 * d, // identical payload -> broadcast once
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn converges_to_optimum() {
+        let mut o = QuadraticOracle::new(16, 4, 9);
+        let mut alg = FedAvg::new(16, 4, 0.5);
+        let mut rng = Xoshiro256::new(0);
+        for _ in 0..300 {
+            alg.round(&mut o, &mut rng);
+        }
+        let err: f32 = alg
+            .params()
+            .iter()
+            .zip(o.optimum())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "max err {err}");
+    }
+
+    #[test]
+    fn bit_accounting() {
+        let mut o = QuadraticOracle::new(10, 3, 1);
+        let mut alg = FedAvg::new(10, 3, 0.1);
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        assert_eq!(b.ul, 32 * 10 * 3);
+        assert_eq!(b.dl, 32 * 10 * 3);
+        assert_eq!(b.dl_bc, 32 * 10);
+    }
+}

@@ -1,0 +1,158 @@
+//! M3 (Gruntkowska et al. 2024): worst-case-optimal bi-directional scheme
+//! that *partitions* the model for the downlink — each client receives a
+//! different disjoint 1/n-th of the model in full precision (so broadcast
+//! cannot help), and client replicas therefore drift between full refreshes.
+//! Uplink: TopK with K = ⌊d/n⌋ (the paper found TopK more stable than the
+//! original RandK; §4).
+
+use super::{CflAlgorithm, GradOracle, RoundBits};
+use crate::compressors::{Compressor, TopK};
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+pub struct M3 {
+    /// Server model.
+    x: Vec<f32>,
+    /// Per-client replicas (clients only see their downlink parts).
+    replicas: Vec<Vec<f32>>,
+    lr: f32,
+    n: usize,
+    t: usize,
+    scratch: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl M3 {
+    pub fn new(d: usize, n_clients: usize, server_lr: f32) -> Self {
+        Self {
+            x: vec![0.0; d],
+            replicas: vec![vec![0.0; d]; n_clients],
+            lr: server_lr,
+            n: n_clients,
+            t: 0,
+            scratch: vec![0.0; d],
+            agg: vec![0.0; d],
+        }
+    }
+
+    /// The disjoint slice of the model client i refreshes this round;
+    /// rotates each round so every part is eventually refreshed everywhere.
+    fn part(&self, client: usize, round: usize, d: usize) -> std::ops::Range<usize> {
+        let part_len = d.div_ceil(self.n);
+        let which = (client + round) % self.n;
+        let start = which * part_len;
+        start.min(d)..(start + part_len).min(d)
+    }
+
+    fn t_bump(&mut self) -> usize {
+        self.t += 1;
+        self.t
+    }
+}
+
+impl CflAlgorithm for M3 {
+    fn name(&self) -> &'static str {
+        "M3"
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+        for r in self.replicas.iter_mut() {
+            r.copy_from_slice(x0);
+        }
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, rng: &mut Xoshiro256) -> RoundBits {
+        let d = self.x.len();
+        let k = (d / self.n).max(1);
+        let mut topk = TopK { k };
+        let mut ul = 0u64;
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        // Clients compute gradients at their (stale) replicas.
+        for i in 0..self.n {
+            let replica = self.replicas[i].clone();
+            oracle.grad(i, &replica, &mut self.scratch);
+            let (c, bits) = topk.compress(&self.scratch, rng);
+            ul += bits;
+            tensor::add_assign(&mut self.agg, &c);
+        }
+        tensor::axpy(&mut self.x, -self.lr / self.n as f32, &self.agg);
+        // Downlink: each client gets a different full-precision part.
+        let t = self.t_bump();
+        let mut dl = 0u64;
+        for i in 0..self.n {
+            let range = self.part(i, t, d);
+            let (s, e) = (range.start, range.end);
+            self.replicas[i][s..e].copy_from_slice(&self.x[s..e]);
+            dl += 32 * (e - s) as u64;
+        }
+        RoundBits {
+            ul,
+            dl,
+            dl_bc: dl, // parts are distinct: broadcast cannot reduce them
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn converges_despite_stale_replicas() {
+        let mut o = QuadraticOracle::new(16, 4, 15);
+        let mut alg = M3::new(16, 4, 0.4);
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..600 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.1 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn downlink_is_one_nth_full_precision() {
+        let d = 100usize;
+        let n = 4usize;
+        let mut o = QuadraticOracle::new(d, n, 1);
+        let mut alg = M3::new(d, n, 0.1);
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        // Each client gets ~d/n values at 32 bits.
+        assert_eq!(b.dl, b.dl_bc);
+        let per_client = b.dl / n as u64;
+        assert!((per_client as i64 - (32 * d as i64 / n as i64)).abs() <= 32);
+    }
+
+    #[test]
+    fn parts_rotate_and_cover() {
+        let mut alg = M3::new(100, 4, 0.1);
+        let mut covered = vec![false; 100];
+        for t in 1..=4 {
+            let r = alg.part(0, t, 100);
+            covered[r].iter_mut().for_each(|c| *c = true);
+        }
+        assert!(covered.iter().all(|&c| c), "rotation must cover the model");
+    }
+
+    #[test]
+    fn replicas_drift_from_server() {
+        let mut o = QuadraticOracle::new(32, 4, 2);
+        let mut alg = M3::new(32, 4, 0.3);
+        let mut rng = Xoshiro256::new(0);
+        for _ in 0..3 {
+            alg.round(&mut o, &mut rng);
+        }
+        // At least one replica must differ from the server model (staleness).
+        let drift = alg
+            .replicas
+            .iter()
+            .any(|r| r.iter().zip(&alg.x).any(|(a, b)| a != b));
+        assert!(drift);
+    }
+}

@@ -1,0 +1,129 @@
+//! Neolithic (Huang et al. 2022): near-optimal compressed communication via
+//! *multi-pass* compression — each message is sent as R sequential
+//! error-feedback passes of the base compressor, which tightens the per-round
+//! compression error at R× the bit cost. We use R = 2 sign passes in each
+//! direction, matching the paper's Appendix-I accounting (UL 2.0 / DL 2.0).
+
+use super::{CflAlgorithm, GradOracle, RoundBits};
+use crate::compressors::sign_compress;
+use crate::compressors::Memory;
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+const PASSES: usize = 2;
+
+/// R-pass sign compression: c = Σ_r C(residual_r). Returns (approx, bits).
+fn multi_pass_sign(v: &[f32]) -> (Vec<f32>, u64) {
+    let mut approx = vec![0.0f32; v.len()];
+    let mut resid = v.to_vec();
+    let mut bits = 0u64;
+    for _ in 0..PASSES {
+        let (c, b) = sign_compress(&resid);
+        bits += b;
+        tensor::add_assign(&mut approx, &c);
+        tensor::sub_assign(&mut resid, &c);
+    }
+    (approx, bits)
+}
+
+pub struct Neolithic {
+    x: Vec<f32>,
+    client_mems: Vec<Memory>,
+    server_mem: Memory,
+    lr: f32,
+    scratch: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl Neolithic {
+    pub fn new(d: usize, n_clients: usize, server_lr: f32) -> Self {
+        Self {
+            x: vec![0.0; d],
+            client_mems: (0..n_clients).map(|_| Memory::new(d)).collect(),
+            server_mem: Memory::new(d),
+            lr: server_lr,
+            scratch: vec![0.0; d],
+            agg: vec![0.0; d],
+        }
+    }
+}
+
+impl CflAlgorithm for Neolithic {
+    fn name(&self) -> &'static str {
+        "Neolithic"
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
+        let n = self.client_mems.len();
+        let mut ul = 0u64;
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            oracle.grad(i, &self.x, &mut self.scratch);
+            let p = self.client_mems[i].compensate(&self.scratch);
+            let (c, bits) = multi_pass_sign(&p);
+            self.client_mems[i].update(&p, &c);
+            ul += bits;
+            tensor::add_assign(&mut self.agg, &c);
+        }
+        tensor::scale(&mut self.agg, 1.0 / n as f32);
+        let v = self.server_mem.compensate(&self.agg);
+        let (cs, dl_bits) = multi_pass_sign(&v);
+        self.server_mem.update(&v, &cs);
+        tensor::axpy(&mut self.x, -self.lr, &cs);
+        RoundBits {
+            ul,
+            dl: dl_bits * n as u64,
+            dl_bc: dl_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn multi_pass_tightens_error() {
+        let v: Vec<f32> = (0..64).map(|i| ((i * 37 % 64) as f32 - 32.0) / 8.0).collect();
+        let (one, _) = sign_compress(&v);
+        let (two, _) = multi_pass_sign(&v);
+        let err = |a: &[f32]| -> f64 {
+            a.iter()
+                .zip(&v)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        assert!(err(&two) < err(&one), "{} !< {}", err(&two), err(&one));
+    }
+
+    #[test]
+    fn two_bits_each_direction() {
+        let mut o = QuadraticOracle::new(64, 3, 1);
+        let mut alg = Neolithic::new(64, 3, 0.1);
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        assert_eq!(b.ul, 3 * 2 * (64 + 32));
+        assert_eq!(b.dl_bc, 2 * (64 + 32));
+    }
+
+    #[test]
+    fn converges() {
+        let mut o = QuadraticOracle::new(16, 4, 12);
+        let mut alg = Neolithic::new(16, 4, 0.25);
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..400 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.05 * l0, "loss {l0} -> {l1}");
+    }
+}

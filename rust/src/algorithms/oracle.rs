@@ -1,0 +1,202 @@
+//! The gradient oracle abstraction and the synthetic quadratic instance.
+//!
+//! The production oracle (PJRT artifacts, `runtime::oracle`) and this
+//! synthetic one implement the same trait, so every algorithm and the whole
+//! coordinator stack is testable without XLA in the loop.
+
+use crate::util::rng::Xoshiro256;
+
+/// Source of per-client gradients and global evaluation.
+pub trait GradOracle {
+    fn dim(&self) -> usize;
+    fn n_clients(&self) -> usize;
+    /// Write client `i`'s (possibly multi-local-step) gradient at `params`.
+    fn grad(&mut self, client: usize, params: &[f32], out: &mut [f32]);
+    /// Global (test) loss and accuracy at `params`.
+    fn eval(&mut self, params: &[f32]) -> (f64, f64);
+}
+
+/// Heterogeneous quadratic: client i's loss is 0.5 Σ_e a_e (x_e − c_{i,e})².
+///
+/// Per-client optima c_i are drawn around a shared center with a
+/// heterogeneity radius, mimicking non-i.i.d. client objectives; the global
+/// optimum is the mean of the c_i. "Accuracy" is a monotone proxy
+/// 1/(1+loss) so the record plumbing matches the real training path.
+pub struct QuadraticOracle {
+    d: usize,
+    n: usize,
+    a: Vec<f32>,         // curvature (shared)
+    c: Vec<Vec<f32>>,    // per-client optimum
+    c_mean: Vec<f32>,
+    pub grad_noise: f32, // stochastic-gradient noise stddev
+    noise_rng: Xoshiro256,
+}
+
+impl QuadraticOracle {
+    pub fn new(d: usize, n_clients: usize, seed: u64) -> Self {
+        Self::with_heterogeneity(d, n_clients, seed, 1.0)
+    }
+
+    pub fn with_heterogeneity(d: usize, n_clients: usize, seed: u64, spread: f32) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let a: Vec<f32> = (0..d).map(|_| 0.5 + rng.next_f32()).collect();
+        let center: Vec<f32> = (0..d).map(|_| rng.next_normal()).collect();
+        let c: Vec<Vec<f32>> = (0..n_clients)
+            .map(|_| {
+                center
+                    .iter()
+                    .map(|&m| m + spread * rng.next_normal())
+                    .collect()
+            })
+            .collect();
+        let mut c_mean = vec![0.0f32; d];
+        for ci in &c {
+            crate::tensor::add_assign(&mut c_mean, ci);
+        }
+        crate::tensor::scale(&mut c_mean, 1.0 / n_clients as f32);
+        Self {
+            d,
+            n: n_clients,
+            a,
+            c,
+            c_mean,
+            grad_noise: 0.0,
+            noise_rng: rng.fork(0x401),
+        }
+    }
+
+    /// The unique minimizer of the average loss.
+    pub fn optimum(&self) -> &[f32] {
+        &self.c_mean
+    }
+
+    /// Loss above the irreducible floor (the spread of client optima keeps
+    /// eval() bounded away from zero even at the global optimum).
+    pub fn excess_loss(&mut self, params: &[f32]) -> f64 {
+        let opt = self.c_mean.clone();
+        let (floor, _) = self.eval(&opt);
+        let (l, _) = self.eval(params);
+        l - floor
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+
+    fn grad(&mut self, client: usize, params: &[f32], out: &mut [f32]) {
+        let ci = &self.c[client];
+        for e in 0..self.d {
+            let mut g = self.a[e] * (params[e] - ci[e]);
+            if self.grad_noise > 0.0 {
+                g += self.grad_noise * self.noise_rng.next_normal();
+            }
+            out[e] = g;
+        }
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        // Average loss over clients == quadratic around c_mean + constant.
+        let mut loss = 0.0f64;
+        for ci in &self.c {
+            for e in 0..self.d {
+                let diff = (params[e] - ci[e]) as f64;
+                loss += 0.5 * self.a[e] as f64 * diff * diff;
+            }
+        }
+        loss /= (self.n * self.d) as f64;
+        (loss, 1.0 / (1.0 + loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_is_zero_at_client_optimum() {
+        let mut o = QuadraticOracle::new(8, 3, 1);
+        let ci = o.c[1].clone();
+        let mut g = vec![0.0f32; 8];
+        o.grad(1, &ci, &mut g);
+        assert!(g.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn eval_minimized_at_mean_optimum() {
+        let mut o = QuadraticOracle::new(8, 3, 2);
+        let opt = o.optimum().to_vec();
+        let (l_opt, acc_opt) = o.eval(&opt);
+        let mut perturbed = opt.clone();
+        perturbed[0] += 1.0;
+        let (l_pert, acc_pert) = o.eval(&perturbed);
+        assert!(l_opt < l_pert);
+        assert!(acc_opt > acc_pert);
+    }
+
+    #[test]
+    fn gd_on_oracle_converges() {
+        let mut o = QuadraticOracle::new(16, 4, 3);
+        let mut x = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        let mut gsum = vec![0.0f32; 16];
+        for _ in 0..200 {
+            gsum.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..4 {
+                o.grad(i, &x, &mut g);
+                crate::tensor::add_assign(&mut gsum, &g);
+            }
+            crate::tensor::axpy(&mut x, -0.25 / 4.0, &gsum);
+        }
+        let opt = o.optimum().to_vec();
+        let err: f32 = x
+            .iter()
+            .zip(&opt)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "max err {err}");
+    }
+
+    #[test]
+    fn heterogeneity_spreads_optima() {
+        let o_homo = QuadraticOracle::with_heterogeneity(8, 4, 5, 0.0);
+        let o_hetero = QuadraticOracle::with_heterogeneity(8, 4, 5, 2.0);
+        let spread = |o: &QuadraticOracle| {
+            let mut s = 0.0f64;
+            for ci in &o.c {
+                for (a, b) in ci.iter().zip(o.optimum()) {
+                    s += ((a - b) as f64).powi(2);
+                }
+            }
+            s
+        };
+        assert!(spread(&o_homo) < 1e-9);
+        assert!(spread(&o_hetero) > 1.0);
+    }
+
+    #[test]
+    fn noise_perturbs_but_centers() {
+        let mut o = QuadraticOracle::new(4, 1, 6);
+        o.grad_noise = 0.5;
+        let x = vec![0.0f32; 4];
+        let mut g = vec![0.0f32; 4];
+        let mut mean = vec![0.0f64; 4];
+        for _ in 0..2000 {
+            o.grad(0, &x, &mut g);
+            for (m, &v) in mean.iter_mut().zip(&g) {
+                *m += v as f64;
+            }
+        }
+        o.grad_noise = 0.0;
+        let mut clean = vec![0.0f32; 4];
+        o.grad(0, &x, &mut clean);
+        for e in 0..4 {
+            assert!((mean[e] / 2000.0 - clean[e] as f64).abs() < 0.05);
+        }
+    }
+}

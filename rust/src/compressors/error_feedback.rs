@@ -1,0 +1,116 @@
+//! Error-feedback memory (Stich et al. 2018; Karimireddy et al. 2019).
+//!
+//! The residual of a biased compressor is accumulated and re-injected into
+//! the next round's input: p_t = g_t + e_t; e_{t+1} = p_t − C(p_t). Used by
+//! MemSGD, DoubleSqueeze (both ends), CSER (with reset), LIEC, Neolithic.
+
+use crate::tensor;
+
+#[derive(Clone, Debug)]
+pub struct Memory {
+    pub e: Vec<f32>,
+}
+
+impl Memory {
+    pub fn new(d: usize) -> Self {
+        Self { e: vec![0.0; d] }
+    }
+
+    /// p = g + e (returns the compensated vector).
+    pub fn compensate(&self, g: &[f32]) -> Vec<f32> {
+        let mut p = g.to_vec();
+        tensor::add_assign(&mut p, &self.e);
+        p
+    }
+
+    /// e ← p − c  (store the new residual after compressing p to c).
+    pub fn update(&mut self, p: &[f32], c: &[f32]) {
+        debug_assert_eq!(p.len(), c.len());
+        for ((e, &pv), &cv) in self.e.iter_mut().zip(p).zip(c) {
+            *e = pv - cv;
+        }
+    }
+
+    /// CSER-style error reset.
+    pub fn reset(&mut self) {
+        self.e.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn norm(&self) -> f64 {
+        tensor::norm2(&self.e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{sign_compress, Compressor, TopK};
+    use crate::util::prop::{run_prop, vec_f32};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn residual_identity() {
+        let mut m = Memory::new(3);
+        let g = vec![1.0f32, -2.0, 0.5];
+        let p = m.compensate(&g);
+        assert_eq!(p, g); // zero initial memory
+        let (c, _) = sign_compress(&p);
+        m.update(&p, &c);
+        // p = c + e exactly.
+        for i in 0..3 {
+            assert!((c[i] + m.e[i] - p[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ef_recovers_mean_signal_over_time() {
+        // With a constant gradient and TopK-1 compression, error feedback
+        // must transmit every coordinate eventually: the sum of compressed
+        // outputs approaches t * g.
+        let g = vec![1.0f32, 0.8, 0.6, 0.4];
+        let mut m = Memory::new(4);
+        let mut sum = vec![0.0f32; 4];
+        let mut rng = Xoshiro256::new(0);
+        let t = 200;
+        for _ in 0..t {
+            let p = m.compensate(&g);
+            let (c, _) = TopK { k: 1 }.compress(&p, &mut rng);
+            m.update(&p, &c);
+            tensor::add_assign(&mut sum, &c);
+        }
+        for i in 0..4 {
+            let avg = sum[i] / t as f32;
+            assert!(
+                (avg - g[i]).abs() < 0.05,
+                "coordinate {i}: long-run mean {avg} vs {g:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = Memory::new(2);
+        m.e = vec![1.0, 2.0];
+        m.reset();
+        assert_eq!(m.e, vec![0.0, 0.0]);
+        assert_eq!(m.norm(), 0.0);
+    }
+
+    #[test]
+    fn prop_memory_bounded_under_contractive_compressor() {
+        // For a delta-contractive compressor, ||e_t|| stays bounded given
+        // bounded inputs (classic EF stability).
+        run_prop("ef-bounded", 10, |rng, _| {
+            let d = 8;
+            let mut m = Memory::new(d);
+            let mut topk = TopK { k: 2 };
+            for _ in 0..100 {
+                let g = vec_f32(rng, d, -1.0, 1.0);
+                let p = m.compensate(&g);
+                let (c, _) = topk.compress(&p, rng);
+                m.update(&p, &c);
+            }
+            assert!(m.norm() < 50.0, "memory exploded: {}", m.norm());
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Gradient compressors used by the non-stochastic baselines (§4, §6) and by
+//! the stochastic-quantization path of BiCompFL-GR-CFL (§5).
+//!
+//! Every compressor reports its *exact* bit cost alongside the compressed
+//! vector; the experiment tables are bit-accounting driven, so costs are
+//! first-class outputs, not estimates.
+
+pub mod sign;
+pub mod topk;
+pub mod qsgd;
+pub mod error_feedback;
+
+pub use error_feedback::Memory;
+pub use qsgd::Qs;
+pub use sign::{sign_compress, stochastic_sign_posterior, SignCompressor};
+pub use topk::{RandK, TopK};
+
+use crate::util::rng::Xoshiro256;
+
+/// A lossy gradient compressor: `compress` maps g to an approximation and
+/// the exact number of bits a transmission of that approximation costs.
+pub trait Compressor {
+    fn name(&self) -> &'static str;
+    fn compress(&mut self, g: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trait_objects_work() {
+        let mut cs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(SignCompressor),
+            Box::new(TopK { k: 2 }),
+            Box::new(RandK { k: 2 }),
+            Box::new(Qs { s: 4 }),
+        ];
+        let g = vec![0.5f32, -1.0, 2.0, -0.25];
+        let mut rng = Xoshiro256::new(0);
+        for c in cs.iter_mut() {
+            let (out, bits) = c.compress(&g, &mut rng);
+            assert_eq!(out.len(), g.len(), "{}", c.name());
+            assert!(bits > 0);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! The QSGD-style stochastic quantizer Q_s (Alistarh et al. 2017), exactly
+//! as defined in the paper's §5: for s quantization intervals and entry g_e,
+//! with integer τ_e s.t. τ_e/s ≤ |g_e|/‖g‖ ≤ (τ_e+1)/s,
+//!
+//!   Q_s(g_e) = ‖g‖ sign(g_e) (τ_e+1)/s  w.p.  |g_e|/‖g‖·s − τ_e,
+//!              ‖g‖ sign(g_e)  τ_e   /s  otherwise.
+//!
+//! Q_s is unbiased with variance ≤ min(d/s², √d/s)·‖g‖². Its Bernoulli
+//! success probabilities are what BiCompFL composes with MRC (Lemma 1):
+//! [`Qs::posterior`] exposes them, and [`Qs::reconstruct`] maps sampled bits
+//! back to quantized values.
+
+use super::Compressor;
+use crate::tensor::norm2;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Qs {
+    /// Number of quantization intervals (s ≥ 1; Lemma 1 wants s ≥ √(2d)).
+    pub s: usize,
+}
+
+/// Decomposition of Q_s(g): everything except the Bernoulli outcomes.
+pub struct QsPosterior {
+    pub norm: f32,
+    pub signs: Vec<f32>,  // ±1
+    pub tau: Vec<u32>,    // lower level index per entry
+    pub q: Vec<f32>,      // Bernoulli success probability per entry
+}
+
+impl Qs {
+    /// Bernoulli decomposition: q_e = |g_e|/‖g‖·s − τ_e.
+    pub fn posterior(&self, g: &[f32]) -> QsPosterior {
+        let norm = norm2(g) as f32;
+        let s = self.s as f32;
+        let mut signs = Vec::with_capacity(g.len());
+        let mut tau = Vec::with_capacity(g.len());
+        let mut q = Vec::with_capacity(g.len());
+        for &x in g {
+            signs.push(if x >= 0.0 { 1.0 } else { -1.0 });
+            if norm == 0.0 {
+                tau.push(0);
+                q.push(0.0);
+                continue;
+            }
+            let r = (x.abs() / norm * s).min(s - 1e-6);
+            let t = r.floor();
+            tau.push(t as u32);
+            q.push(r - t);
+        }
+        QsPosterior {
+            norm,
+            signs,
+            tau,
+            q,
+        }
+    }
+
+    /// Map Bernoulli outcomes b ∈ {0,1}^d back to quantized values.
+    pub fn reconstruct(&self, post: &QsPosterior, bits: &[f32], out: &mut [f32]) {
+        let s = self.s as f32;
+        for e in 0..bits.len() {
+            let level = post.tau[e] as f32 + bits[e];
+            out[e] = post.norm * post.signs[e] * level / s;
+        }
+    }
+
+    /// Bits for the side information (‖g‖, signs, τ) assuming plain binary
+    /// coding of τ (the paper notes Elias coding applies; binary is an upper
+    /// bound and keeps accounting deterministic).
+    pub fn side_bits(&self, d: usize) -> u64 {
+        let tau_bits = (usize::BITS - self.s.saturating_sub(1).leading_zeros()) as u64;
+        32 + d as u64 * (1 + tau_bits)
+    }
+}
+
+impl Compressor for Qs {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn compress(&mut self, g: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, u64) {
+        let post = self.posterior(g);
+        let bits: Vec<f32> = post
+            .q
+            .iter()
+            .map(|&qe| if rng.next_f32() < qe { 1.0 } else { 0.0 })
+            .collect();
+        let mut out = vec![0.0f32; g.len()];
+        self.reconstruct(&post, &bits, &mut out);
+        // Direct transmission: side info + 1 Bernoulli outcome bit per entry.
+        let cost = self.side_bits(g.len()) + g.len() as u64;
+        (out, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, vec_f32};
+
+    #[test]
+    fn posterior_in_unit_interval_and_levels_valid() {
+        run_prop("qs-posterior", 100, |rng, _| {
+            let d = 1 + rng.next_below(64);
+            let g = vec_f32(rng, d, -3.0, 3.0);
+            let qs = Qs {
+                s: 1 + rng.next_below(32),
+            };
+            let post = qs.posterior(&g);
+            for e in 0..d {
+                assert!((0.0..=1.0).contains(&post.q[e]), "q={}", post.q[e]);
+                assert!((post.tau[e] as usize) < qs.s);
+            }
+        });
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q_s(x)] == x, verified by averaging many stochastic draws.
+        let g = vec![0.7f32, -0.2, 0.05, 1.3, -0.9];
+        let mut qs = Qs { s: 4 };
+        let mut acc = vec![0.0f64; g.len()];
+        let mut rng = Xoshiro256::new(42);
+        let reps = 20_000;
+        for _ in 0..reps {
+            let (out, _) = qs.compress(&g, &mut rng);
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += *o as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&g) {
+            let mean = a / reps as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.01,
+                "E[Qs] = {mean}, x = {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_bound_alistarh() {
+        // E||Q_s(x) - x||^2 <= min(d/s^2, sqrt(d)/s) ||x||^2.
+        let mut rng = Xoshiro256::new(7);
+        for &s in &[2usize, 8, 32] {
+            let d = 16;
+            let g: Vec<f32> = (0..d).map(|i| ((i as f32) - 8.0) * 0.3).collect();
+            let norm_sq: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+            let mut qs = Qs { s };
+            let reps = 5000;
+            let mut err = 0.0f64;
+            for _ in 0..reps {
+                let (out, _) = qs.compress(&g, &mut rng);
+                err += out
+                    .iter()
+                    .zip(&g)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            err /= reps as f64;
+            let bound = (d as f64 / (s * s) as f64).min((d as f64).sqrt() / s as f64);
+            assert!(
+                err <= bound * norm_sq * 1.05,
+                "s={s}: var {err} > bound {}",
+                bound * norm_sq
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruct_is_exact_inverse_of_bits() {
+        let g = vec![0.5f32, -1.5, 2.0];
+        let qs = Qs { s: 8 };
+        let post = qs.posterior(&g);
+        let mut lo = vec![0.0f32; 3];
+        let mut hi = vec![0.0f32; 3];
+        qs.reconstruct(&post, &[0.0, 0.0, 0.0], &mut lo);
+        qs.reconstruct(&post, &[1.0, 1.0, 1.0], &mut hi);
+        for e in 0..3 {
+            assert!(lo[e].abs() <= g[e].abs() + 1e-6);
+            assert!(hi[e].abs() >= g[e].abs() - 1e-6);
+            assert_eq!(lo[e] >= 0.0, g[e] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        let g = vec![0.0f32; 4];
+        let (out, _) = Qs { s: 4 }.compress(&g, &mut Xoshiro256::new(0));
+        assert_eq!(out, g);
+    }
+
+    use crate::util::rng::Xoshiro256;
+}

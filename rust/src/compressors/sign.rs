@@ -1,0 +1,93 @@
+//! Sign-based compression.
+//!
+//! * [`sign_compress`] / [`SignCompressor`] — classic 1-bit SGD (Seide et al.
+//!   2014): transmit sign(g) plus one scale ‖g‖₁/d; cost d + 32 bits. This is
+//!   the compressor the paper plugs into every non-stochastic baseline.
+//! * [`stochastic_sign_posterior`] — the §4 stochastic SignSGD front-end of
+//!   BiCompFL-GR-CFL: maps each gradient entry to a Bernoulli parameter
+//!   q_e = 1 / (1 + exp(−g_e / K)); the *samples* take value +1 w.p. q_e and
+//!   −1 otherwise, and are carried by MRC rather than transmitted directly.
+
+use super::Compressor;
+use crate::util::rng::Xoshiro256;
+
+/// sign(g) scaled by the mean magnitude; (compressed, bits = d + 32).
+pub fn sign_compress(g: &[f32]) -> (Vec<f32>, u64) {
+    let d = g.len();
+    let scale = (g.iter().map(|x| x.abs() as f64).sum::<f64>() / d.max(1) as f64) as f32;
+    let out = g
+        .iter()
+        .map(|&x| if x >= 0.0 { scale } else { -scale })
+        .collect();
+    (out, d as u64 + 32)
+}
+
+pub struct SignCompressor;
+
+impl Compressor for SignCompressor {
+    fn name(&self) -> &'static str {
+        "sign"
+    }
+
+    fn compress(&mut self, g: &[f32], _rng: &mut Xoshiro256) -> (Vec<f32>, u64) {
+        sign_compress(g)
+    }
+}
+
+/// Bernoulli posterior of stochastic SignSGD: q_e = sigmoid(g_e / K).
+/// A sample b_e ∈ {0,1} decodes to the update (2 b_e − 1), i.e. ±1.
+pub fn stochastic_sign_posterior(g: &[f32], k: f32, out: &mut [f32]) {
+    debug_assert_eq!(g.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(g) {
+        *o = crate::tensor::sigmoid(x / k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, vec_f32};
+
+    #[test]
+    fn sign_preserves_signs_and_scale() {
+        let g = vec![3.0f32, -1.0, 0.5, -0.5];
+        let (c, bits) = sign_compress(&g);
+        assert_eq!(bits, 4 + 32);
+        let scale = (3.0 + 1.0 + 0.5 + 0.5) / 4.0;
+        assert_eq!(c, vec![scale, -scale, scale, -scale]);
+    }
+
+    #[test]
+    fn sign_is_contractive_for_uniformish_vectors() {
+        // ||C(g) - g||^2 <= ||g||^2 is not universal for sign, but holds for
+        // well-spread vectors; check the classic identity on a random sweep
+        // only as a sanity signal of scaling, not a hard contraction claim.
+        run_prop("sign-bounded", 50, |rng, _| {
+            let n = 1 + rng.next_below(100);
+            let g = vec_f32(rng, n, -1.0, 1.0);
+            let (c, _) = sign_compress(&g);
+            let err: f64 = c
+                .iter()
+                .zip(&g)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let norm: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+            assert!(err <= 4.0 * norm + 1e-9);
+        });
+    }
+
+    #[test]
+    fn stochastic_posterior_matches_paper_formula() {
+        let g = vec![0.0f32, 1.0, -1.0, 100.0];
+        let mut q = vec![0.0f32; 4];
+        stochastic_sign_posterior(&g, 1.0, &mut q);
+        assert!((q[0] - 0.5).abs() < 1e-6);
+        assert!((q[1] - 1.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-6);
+        assert!((q[1] + q[2] - 1.0).abs() < 1e-6); // symmetry
+        assert!(q[3] > 0.999);
+        // Temperature: larger K flattens toward 0.5.
+        let mut qk = vec![0.0f32; 4];
+        stochastic_sign_posterior(&g, 10.0, &mut qk);
+        assert!((qk[1] - 0.5).abs() < (q[1] - 0.5).abs());
+    }
+}

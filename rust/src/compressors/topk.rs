@@ -1,0 +1,117 @@
+//! Sparsification compressors: TopK (Wangni et al. 2018; used by M3's uplink
+//! in our experiments, per §4) and RandK (M3's original choice, kept for the
+//! ablation). Bit cost: k values at 32 bits + k indices at ceil(log2 d) bits.
+
+use super::Compressor;
+use crate::util::rng::Xoshiro256;
+
+fn index_bits(d: usize) -> u64 {
+    (usize::BITS - d.saturating_sub(1).leading_zeros()).max(1) as u64
+}
+
+/// Keep the k largest-magnitude entries.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&mut self, g: &[f32], _rng: &mut Xoshiro256) -> (Vec<f32>, u64) {
+        let d = g.len();
+        let k = self.k.min(d);
+        // Select the k-th largest magnitude via partial sort of indices.
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1).min(d - 1), |&a, &b| {
+            g[b].abs().partial_cmp(&g[a].abs()).unwrap()
+        });
+        let mut out = vec![0.0f32; d];
+        for &i in &idx[..k] {
+            out[i] = g[i];
+        }
+        (out, k as u64 * (32 + index_bits(d)))
+    }
+}
+
+/// Keep k uniformly random entries, unscaled (biased variant; the unbiased
+/// d/k-scaled variant is a flag since both appear in the literature).
+pub struct RandK {
+    pub k: usize,
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn compress(&mut self, g: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, u64) {
+        let d = g.len();
+        let k = self.k.min(d);
+        let mut idx: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut idx);
+        let mut out = vec![0.0f32; d];
+        for &i in &idx[..k] {
+            out[i] = g[i];
+        }
+        (out, k as u64 * (32 + index_bits(d)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, vec_f32};
+
+    #[test]
+    fn topk_keeps_largest() {
+        let g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let (out, bits) = TopK { k: 2 }.compress(&g, &mut Xoshiro256::new(0));
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+        assert_eq!(bits, 2 * (32 + 3));
+    }
+
+    #[test]
+    fn topk_is_contractive() {
+        // ||TopK(g) - g||^2 = ||g||^2 - ||TopK(g)||^2 <= (1 - k/d) ||g||^2.
+        run_prop("topk-contraction", 100, |rng, _| {
+            let d = 2 + rng.next_below(200);
+            let k = 1 + rng.next_below(d);
+            let g = vec_f32(rng, d, -2.0, 2.0);
+            let (out, _) = TopK { k }.compress(&g, rng);
+            let err: f64 = out
+                .iter()
+                .zip(&g)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let norm: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+            assert!(err <= (1.0 - k as f64 / d as f64) * norm + 1e-6);
+        });
+    }
+
+    #[test]
+    fn randk_keeps_exactly_k() {
+        run_prop("randk-support", 50, |rng, _| {
+            let d = 1 + rng.next_below(100);
+            let k = 1 + rng.next_below(d);
+            let g = vec_f32(rng, d, 0.5, 1.0); // strictly nonzero
+            let (out, _) = RandK { k }.compress(&g, rng);
+            let nz = out.iter().filter(|&&x| x != 0.0).count();
+            assert_eq!(nz, k);
+            // Kept entries are unmodified.
+            for (o, orig) in out.iter().zip(&g) {
+                assert!(*o == 0.0 || o == orig);
+            }
+        });
+    }
+
+    #[test]
+    fn k_larger_than_d_is_identity() {
+        let g = vec![1.0f32, 2.0];
+        let (out, _) = TopK { k: 10 }.compress(&g, &mut Xoshiro256::new(0));
+        assert_eq!(out, g);
+    }
+
+    use crate::util::rng::Xoshiro256;
+}

@@ -1,0 +1,223 @@
+//! Experiment configuration and the preset catalogue mapping every paper
+//! table / figure to a concrete run specification (DESIGN.md §5).
+//!
+//! Presets come in two scales: the CPU-friendly default (small synthetic
+//! datasets, width-scaled models, fewer rounds) and `paper_scale` (the
+//! published dimensions — expensive, intended for larger machines).
+
+use crate::coordinator::bicompfl::Variant;
+use crate::mrc::block::AllocationStrategy;
+
+/// Which block allocation to use for a BiCompFL method entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alloc {
+    Fixed,
+    Adaptive,
+    AdaptiveAvg,
+}
+
+impl Alloc {
+    pub fn build(&self, n_is: usize, block_size: usize, b_max: usize) -> AllocationStrategy {
+        match self {
+            Alloc::Fixed => AllocationStrategy::fixed(block_size),
+            Alloc::Adaptive => AllocationStrategy::adaptive(n_is, b_max),
+            Alloc::AdaptiveAvg => AllocationStrategy::adaptive_avg(n_is, b_max),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Alloc::Fixed => "Fixed",
+            Alloc::Adaptive => "Adaptive",
+            Alloc::AdaptiveAvg => "Adaptive-Avg",
+        }
+    }
+}
+
+/// One BiCompFL method entry in a table (variant × allocation).
+#[derive(Clone, Copy, Debug)]
+pub struct BiCompFlMethod {
+    pub variant: Variant,
+    pub alloc: Alloc,
+}
+
+impl BiCompFlMethod {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.variant.label(), self.alloc.label())
+    }
+}
+
+/// The method set of the paper's tables (Appendix I).
+pub fn table_methods() -> Vec<BiCompFlMethod> {
+    use Variant::*;
+    vec![
+        BiCompFlMethod { variant: Gr, alloc: Alloc::Adaptive },
+        BiCompFlMethod { variant: Gr, alloc: Alloc::AdaptiveAvg },
+        BiCompFlMethod { variant: Gr, alloc: Alloc::Fixed },
+        BiCompFlMethod { variant: GrReconst, alloc: Alloc::Fixed },
+        BiCompFlMethod { variant: Pr, alloc: Alloc::Fixed },
+        BiCompFlMethod { variant: PrSplitDl, alloc: Alloc::Fixed },
+    ]
+}
+
+/// A full experiment specification (one table or figure).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub preset: String,
+    pub dataset: String, // synth spec name
+    pub arch: String,
+    pub iid: bool,
+    pub dirichlet_alpha: f64,
+    pub n_clients: usize,
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub local_iters: usize,
+    pub mask_lr: f32,
+    pub server_lr: f32, // baselines
+    pub cfl_server_lr: f32,
+    pub n_is: usize,
+    pub n_ul: usize,
+    pub n_dl: usize, // 0 = auto
+    pub block_size: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            preset: "custom".into(),
+            dataset: "mnist-like".into(),
+            arch: "lenet5".into(),
+            iid: true,
+            dirichlet_alpha: 0.1,
+            n_clients: 10,
+            rounds: 30,
+            eval_every: 5,
+            local_iters: 3,
+            mask_lr: 5.0,
+            server_lr: 0.1,
+            cfl_server_lr: 0.005,
+            n_is: 256,
+            n_ul: 1,
+            n_dl: 0,
+            block_size: 128,
+            seed: 1,
+        }
+    }
+}
+
+/// Table/figure presets. `(dataset, arch, iid)` per Appendix I; the paper
+/// trains 200 rounds (400 for CIFAR) — the default scale trims rounds for
+/// CPU, `--rounds` overrides.
+pub fn preset(name: &str) -> Option<ExpConfig> {
+    let mut c = ExpConfig {
+        preset: name.to_string(),
+        ..Default::default()
+    };
+    match name {
+        // Tables 5/6 + Fig 3/4.
+        "mnist-lenet-iid" => {
+            c.dataset = "mnist-like".into();
+            c.arch = "lenet5".into();
+        }
+        "mnist-lenet-noniid" => {
+            c.dataset = "mnist-like".into();
+            c.arch = "lenet5".into();
+            c.iid = false;
+        }
+        // Tables 7/8 + Fig 2(a,b), 5/6.
+        "mnist-cnn4-iid" => {
+            c.dataset = "mnist-like".into();
+            c.arch = "cnn4".into();
+        }
+        "mnist-cnn4-noniid" => {
+            c.dataset = "mnist-like".into();
+            c.arch = "cnn4".into();
+            c.iid = false;
+        }
+        // Tables 9/10 + Fig 1, 7/8.
+        "fashion-cnn4-iid" => {
+            c.dataset = "fashion-like".into();
+            c.arch = "cnn4".into();
+        }
+        "fashion-cnn4-noniid" => {
+            c.dataset = "fashion-like".into();
+            c.arch = "cnn4".into();
+            c.iid = false;
+        }
+        // Tables 11/12 + Fig 2(c), 9/10.
+        "cifar-cnn6-iid" => {
+            c.dataset = "cifar-like".into();
+            c.arch = "cnn6".into();
+            c.rounds = 40;
+        }
+        "cifar-cnn6-noniid" => {
+            c.dataset = "cifar-like".into();
+            c.arch = "cnn6".into();
+            c.iid = false;
+            c.rounds = 40;
+        }
+        // Fast smoke preset for CI / quickstart.
+        "quick" => {
+            c.arch = "mlp".into();
+            c.rounds = 10;
+            c.eval_every = 2;
+        }
+        _ => return None,
+    }
+    Some(c)
+}
+
+pub const PRESET_NAMES: &[&str] = &[
+    "mnist-lenet-iid",
+    "mnist-lenet-noniid",
+    "mnist-cnn4-iid",
+    "mnist-cnn4-noniid",
+    "fashion-cnn4-iid",
+    "fashion-cnn4-noniid",
+    "cifar-cnn6-iid",
+    "cifar-cnn6-noniid",
+    "quick",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in PRESET_NAMES {
+            let c = preset(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(&c.preset, name);
+            assert!(crate::data::SynthSpec::by_name(&c.dataset).is_some(), "{name}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn table_method_labels_unique() {
+        let ms = table_methods();
+        let mut labels: Vec<String> = ms.iter().map(|m| m.label()).collect();
+        let before = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), before);
+    }
+
+    #[test]
+    fn alloc_builders_match_strategy() {
+        assert_eq!(Alloc::Fixed.build(256, 128, 4096).name(), "Fixed");
+        assert_eq!(Alloc::Adaptive.build(256, 128, 4096).name(), "Adaptive");
+        assert_eq!(
+            Alloc::AdaptiveAvg.build(256, 128, 4096).name(),
+            "Adaptive-Avg"
+        );
+    }
+
+    #[test]
+    fn noniid_presets_flag_dirichlet() {
+        assert!(!preset("mnist-cnn4-noniid").unwrap().iid);
+        assert!(preset("mnist-cnn4-iid").unwrap().iid);
+        assert_eq!(preset("mnist-cnn4-noniid").unwrap().dirichlet_alpha, 0.1);
+    }
+}

@@ -1,0 +1,676 @@
+//! BiCompFL over Bayesian mask training — Algorithms 1 and 2 of the paper,
+//! plus the GR-Reconst ablation and the PR-SplitDL downlink partitioning.
+//!
+//! One [`BiCompFl`] instance owns the federator state and all client model
+//! estimates; the [`MaskOracle`] supplies Layer-2 compute. All communication
+//! is metered exactly (index bits + allocation signalling), with separate
+//! point-to-point and broadcast downlink accounting (Appendix I).
+
+use super::oracle::MaskOracle;
+use super::shared_rand::{mrc_stream, private_seed, Direction};
+use crate::algorithms::runner::RoundRecord;
+use crate::mrc::block::{AllocationStrategy, BlockPlan};
+use crate::mrc::codec::BlockCodec;
+use crate::mrc::kl;
+use crate::util::rng::Xoshiro256;
+
+/// Which BiCompFL variant to run (§3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Algorithm 1: global shared randomness; downlink relays uplink indices.
+    Gr,
+    /// Ablation: GR but the federator *reconstructs* then re-encodes the
+    /// global model with a second MRC pass (suboptimal; Fig. 1).
+    GrReconst,
+    /// Algorithm 2: private randomness; per-client downlink MRC round.
+    Pr,
+    /// PR with the downlink partitioned into n disjoint block groups.
+    PrSplitDl,
+}
+
+impl Variant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Gr => "BiCompFL-GR",
+            Variant::GrReconst => "BiCompFL-GR-Reconst",
+            Variant::Pr => "BiCompFL-PR",
+            Variant::PrSplitDl => "BiCompFL-PR-SplitDL",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BiCompFlConfig {
+    pub variant: Variant,
+    /// Importance samples per block; index costs log2(n_is) bits.
+    pub n_is: usize,
+    /// Posterior samples per client on the uplink (n_UL; typically 1).
+    pub n_ul: usize,
+    /// Downlink samples (n_DL; 0 = auto n·n_UL as in §3).
+    pub n_dl: usize,
+    pub allocation: AllocationStrategy,
+    pub local_iters: usize,
+    pub local_lr: f32,
+    /// Initial Bernoulli parameter θ₀ for every weight.
+    pub theta0: f32,
+    /// Optional per-entry KL-ball projection of posteriors (Theorem 1's ρ).
+    pub kl_budget: Option<f64>,
+    /// Model estimates are clamped into [θ_clamp, 1−θ_clamp] so saturated
+    /// entries keep a nonzero escape probability and next-round divergences
+    /// stay within the n_IS budget (FedPM-style probability clamping).
+    pub theta_clamp: f32,
+    /// Fraction of clients participating per round (PR variants only).
+    pub participation: f32,
+    pub seed: u64,
+    /// Mix coefficient λ for the PR uplink prior:
+    /// p_{i,u} = λ·θ̂_i + (1−λ)·q̂_i_prev (Appendix J.2; 1.0 = paper default).
+    pub lambda: f32,
+}
+
+impl Default for BiCompFlConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Gr,
+            n_is: 256,
+            n_ul: 1,
+            n_dl: 0,
+            allocation: AllocationStrategy::fixed(128),
+            local_iters: 3,
+            local_lr: 0.1,
+            theta0: 0.5,
+            kl_budget: None,
+            theta_clamp: 0.05,
+            participation: 1.0,
+            seed: 0xB1C0,
+            lambda: 1.0,
+        }
+    }
+}
+
+/// Traffic of one round (bits).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaskRoundBits {
+    pub ul: u64,
+    pub dl: u64,
+    pub dl_bc: u64,
+}
+
+pub struct BiCompFl {
+    pub cfg: BiCompFlConfig,
+    d: usize,
+    n: usize,
+    /// Federator's global model θ_t.
+    theta: Vec<f32>,
+    /// Per-client global-model estimates θ̂_{i,t} (PR; GR keeps them equal).
+    client_theta: Vec<Vec<f32>>,
+    /// Previous decoded posterior estimate per client (for λ-mixed priors).
+    prev_qhat: Vec<Option<Vec<f32>>>,
+    round: u64,
+    part_rng: Xoshiro256,
+}
+
+impl BiCompFl {
+    pub fn new(d: usize, n_clients: usize, cfg: BiCompFlConfig) -> Self {
+        let theta = vec![cfg.theta0.clamp(cfg.theta_clamp, 1.0 - cfg.theta_clamp); d];
+        Self {
+            d,
+            n: n_clients,
+            theta: theta.clone(),
+            client_theta: vec![theta; n_clients],
+            prev_qhat: vec![None; n_clients],
+            round: 0,
+            part_rng: Xoshiro256::new(cfg.seed ^ 0xAA17),
+            cfg,
+        }
+    }
+
+    pub fn global_model(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn client_model(&self, i: usize) -> &[f32] {
+        &self.client_theta[i]
+    }
+
+    fn n_dl(&self) -> usize {
+        if self.cfg.n_dl == 0 {
+            self.n * self.cfg.n_ul
+        } else {
+            self.cfg.n_dl
+        }
+    }
+
+    fn seed_for(&self, client: usize) -> u64 {
+        match self.cfg.variant {
+            Variant::Gr | Variant::GrReconst => self.cfg.seed,
+            Variant::Pr | Variant::PrSplitDl => private_seed(self.cfg.seed, client as u64),
+        }
+    }
+
+    /// MRC-encode `q` against `prior` on all blocks of `plan` (free-function
+    /// form so per-client encodes run on worker threads); returns (indices
+    /// per (sample, block), index bits).
+    #[allow(clippy::too_many_arguments)]
+    fn encode_vector_at(
+        n_is: usize,
+        round: u64,
+        q: &[f32],
+        prior: &[f32],
+        plan: &BlockPlan,
+        seed: u64,
+        client: u64,
+        n_samples: usize,
+        dir: Direction,
+        sel_seed: u64,
+    ) -> (Vec<Vec<u32>>, u64) {
+        let codec = BlockCodec::new(n_is);
+        let mut sel = Xoshiro256::new(sel_seed);
+        let mut bits = 0u64;
+        let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
+        for b in 0..plan.n_blocks() {
+            let r = plan.block(b);
+            let stream = mrc_stream(seed, round, client, b as u64, dir);
+            for (ell, row) in indices.iter_mut().enumerate() {
+                let out = codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
+                row[b] = out.index;
+                bits += out.bits;
+            }
+        }
+        (indices, bits)
+    }
+
+    /// Deterministic per-(round, client, direction) seed for the encoder's
+    /// private Gumbel selector — parallel encode == serial encode.
+    fn sel_seed(&self, client: u64, dir: Direction) -> u64 {
+        let mut s = self.cfg.seed ^ 0x5E1EC7 ^ (self.round << 20) ^ (client << 2) ^ dir as u64;
+        crate::util::rng::splitmix64(&mut s)
+    }
+
+    /// Decode `indices` into the mean of the reconstructed samples.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_mean_at(
+        n_is: usize,
+        round: u64,
+        prior: &[f32],
+        plan: &BlockPlan,
+        seed: u64,
+        client: u64,
+        indices: &[Vec<u32>],
+        dir: Direction,
+    ) -> Vec<f32> {
+        let codec = BlockCodec::new(n_is);
+        let mut mean = vec![0.0f32; prior.len()];
+        let mut buf = vec![0.0f32; prior.len()];
+        for (ell, row) in indices.iter().enumerate() {
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                let stream = mrc_stream(seed, round, client, b as u64, dir);
+                codec.decode(&prior[r.clone()], &stream, ell as u64, row[b], &mut buf[r.clone()]);
+            }
+            crate::tensor::add_assign(&mut mean, &buf);
+        }
+        crate::tensor::scale(&mut mean, 1.0 / indices.len().max(1) as f32);
+        mean
+    }
+
+    /// Plan blocks for (q, prior) under the configured strategy.
+    fn plan_for(&mut self, q: &[f32], prior: &[f32]) -> BlockPlan {
+        let mut kl_each = vec![0.0f64; self.d];
+        kl::bern_kl_each(q, prior, &mut kl_each);
+        self.cfg.allocation.plan(&kl_each)
+    }
+
+    /// The uplink prior for client i (Appendix J.2's λ-mix; λ=1 ⇒ θ̂_i).
+    fn uplink_prior(&self, i: usize) -> Vec<f32> {
+        let lam = self.cfg.lambda;
+        match (&self.prev_qhat[i], lam < 1.0) {
+            (Some(qprev), true) => self.client_theta[i]
+                .iter()
+                .zip(qprev)
+                .map(|(&t, &qp)| kl::clamp_param(lam * t + (1.0 - lam) * qp))
+                .collect(),
+            _ => self.client_theta[i].clone(),
+        }
+    }
+
+    /// Execute one full BiCompFL round against the oracle.
+    pub fn round(&mut self, oracle: &mut dyn MaskOracle) -> MaskRoundBits {
+        let n = self.n;
+        // -- participation (PR only; GR requires all clients in sync) -------
+        let participating: Vec<usize> = match self.cfg.variant {
+            Variant::Pr | Variant::PrSplitDl if self.cfg.participation < 1.0 => {
+                let k = ((n as f32 * self.cfg.participation).round() as usize).max(1);
+                let mut ids: Vec<usize> = (0..n).collect();
+                self.part_rng.shuffle(&mut ids);
+                ids.truncate(k);
+                ids.sort_unstable();
+                ids
+            }
+            _ => (0..n).collect(),
+        };
+
+        // -- local training (serial: PJRT execution is thread-local) --------
+        let mut bits = MaskRoundBits::default();
+        struct UlJob {
+            client: usize,
+            q: Vec<f32>,
+            prior: Vec<f32>,
+            plan: BlockPlan,
+            seed: u64,
+            sel_seed: u64,
+        }
+        let mut jobs: Vec<UlJob> = Vec::with_capacity(participating.len());
+        for &i in &participating {
+            let prior = self.uplink_prior(i);
+            let (mut q, _loss, _acc) =
+                oracle.local_train(i, &self.client_theta[i], self.cfg.local_iters, self.cfg.local_lr, self.round);
+            crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+            if let Some(budget) = self.cfg.kl_budget {
+                kl::project_kl_ball_vec(&mut q, &prior, budget);
+            }
+            let plan = self.plan_for(&q, &prior);
+            jobs.push(UlJob {
+                client: i,
+                q,
+                prior,
+                plan,
+                seed: self.seed_for(i),
+                sel_seed: self.sel_seed(i as u64, Direction::Uplink),
+            });
+        }
+
+        // -- uplink MRC: one worker thread per client (the L3 hot path) -----
+        let n_is = self.cfg.n_is;
+        let n_ul = self.cfg.n_ul;
+        let round = self.round;
+        let mut encoded: Vec<(usize, Vec<Vec<u32>>, u64, Vec<f32>)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = jobs
+                    .iter()
+                    .map(|j| {
+                        scope.spawn(move || {
+                            let (indices, idx_bits) = Self::encode_vector_at(
+                                n_is,
+                                round,
+                                &j.q,
+                                &j.prior,
+                                &j.plan,
+                                j.seed,
+                                j.client as u64,
+                                n_ul,
+                                Direction::Uplink,
+                                j.sel_seed,
+                            );
+                            let qhat = Self::decode_mean_at(
+                                n_is,
+                                round,
+                                &j.prior,
+                                &j.plan,
+                                j.seed,
+                                j.client as u64,
+                                &indices,
+                                Direction::Uplink,
+                            );
+                            (j.client, indices, idx_bits, qhat)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        encoded.sort_by_key(|e| e.0);
+        let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(encoded.len());
+        let mut ul_payloads: Vec<(usize, BlockPlan, Vec<Vec<u32>>, u64)> = Vec::new();
+        for ((client, indices, idx_bits, qhat), job) in encoded.into_iter().zip(jobs) {
+            debug_assert_eq!(client, job.client);
+            bits.ul += idx_bits + job.plan.overhead_bits;
+            qhats.push(qhat);
+            ul_payloads.push((client, job.plan, indices, idx_bits));
+        }
+
+        // -- aggregation -----------------------------------------------------
+        let refs: Vec<&[f32]> = qhats.iter().map(|v| v.as_slice()).collect();
+        let mut theta_next = crate::tensor::mean_of(&refs);
+        let tc = self.cfg.theta_clamp;
+        crate::tensor::clamp(&mut theta_next, tc, 1.0 - tc);
+
+        // Remember decoded posteriors for λ-mixed priors next round.
+        for (slot, &i) in participating.iter().enumerate() {
+            self.prev_qhat[i] = Some(qhats[slot].clone());
+        }
+
+        // -- downlink ---------------------------------------------------------
+        match self.cfg.variant {
+            Variant::Gr => {
+                // Relay: client j receives every other client's indices and
+                // reconstructs the identical average (it already knows its
+                // own samples). Per-client DL = Σ_{i≠j} (bits_i).
+                let total_idx_bits: u64 = ul_payloads.iter().map(|p| p.3).sum();
+                let total_overhead: u64 =
+                    ul_payloads.iter().map(|p| p.1.overhead_bits).sum();
+                for p in &ul_payloads {
+                    // Client j already knows its own indices and plan.
+                    bits.dl += (total_idx_bits - p.3) + (total_overhead - p.1.overhead_bits);
+                }
+                // Broadcast: the concatenation goes out once.
+                bits.dl_bc += total_idx_bits + total_overhead;
+                // All parties now hold θ_{t+1} exactly.
+                self.theta = theta_next.clone();
+                for ct in self.client_theta.iter_mut() {
+                    *ct = theta_next.clone();
+                }
+            }
+            Variant::GrReconst => {
+                // Second MRC pass: encode θ_{t+1} against the shared prior;
+                // all clients decode the same estimate via global randomness.
+                let prior = self.client_theta[0].clone();
+                let plan = self.plan_for(&theta_next, &prior);
+                let n_dl = self.n_dl();
+                const FED: u64 = u64::MAX; // sentinel party id for the federator
+                let (indices, idx_bits) = Self::encode_vector_at(
+                    self.cfg.n_is,
+                    self.round,
+                    &theta_next,
+                    &prior,
+                    &plan,
+                    self.cfg.seed,
+                    FED,
+                    n_dl,
+                    Direction::Downlink,
+                    self.sel_seed(FED, Direction::Downlink),
+                );
+                let mut theta_hat = Self::decode_mean_at(
+                    self.cfg.n_is,
+                    self.round,
+                    &prior,
+                    &plan,
+                    self.cfg.seed,
+                    FED,
+                    &indices,
+                    Direction::Downlink,
+                );
+                let tc = self.cfg.theta_clamp;
+                crate::tensor::clamp(&mut theta_hat, tc, 1.0 - tc);
+                bits.dl += (idx_bits + plan.overhead_bits) * n as u64;
+                bits.dl_bc += idx_bits + plan.overhead_bits;
+                // Everyone (including the federator's notion of the shared
+                // prior) moves to the *reconstructed* estimate.
+                self.theta = theta_hat.clone();
+                for ct in self.client_theta.iter_mut() {
+                    *ct = theta_hat.clone();
+                }
+            }
+            Variant::Pr | Variant::PrSplitDl => {
+                let split = self.cfg.variant == Variant::PrSplitDl;
+                let n_dl = self.n_dl();
+                self.theta = theta_next.clone();
+                // Per-client plans are sequenced (Adaptive-Avg negotiation is
+                // stateful), then the per-client downlink MRC runs on worker
+                // threads: each (client, block) stream is independent.
+                struct DlJob {
+                    client: usize,
+                    prior: Vec<f32>,
+                    plan: BlockPlan,
+                    blocks: Vec<usize>,
+                    seed: u64,
+                    sel_seed: u64,
+                }
+                let mut jobs: Vec<DlJob> = Vec::with_capacity(n);
+                for i in 0..n {
+                    let prior = self.client_theta[i].clone();
+                    let plan = self.plan_for(&theta_next, &prior);
+                    // SplitDL: client i receives only its rotating share of
+                    // the blocks; other blocks keep the prior value.
+                    let blocks: Vec<usize> = (0..plan.n_blocks())
+                        .filter(|b| !split || (b + self.round as usize) % n == i)
+                        .collect();
+                    jobs.push(DlJob {
+                        client: i,
+                        prior,
+                        plan,
+                        blocks,
+                        seed: self.seed_for(i),
+                        sel_seed: self.sel_seed(i as u64, Direction::Downlink),
+                    });
+                }
+                let n_is = self.cfg.n_is;
+                let round = self.round;
+                let theta_ref = &theta_next;
+                let mut results: Vec<(usize, Vec<f32>, u64, u64)> =
+                    std::thread::scope(|scope| {
+                        let handles: Vec<_> = jobs
+                            .iter()
+                            .map(|j| {
+                                scope.spawn(move || {
+                                    let codec = BlockCodec::new(n_is);
+                                    let mut sel = Xoshiro256::new(j.sel_seed);
+                                    let mut est = j.prior.clone();
+                                    let mut idx_bits = 0u64;
+                                    for &b in &j.blocks {
+                                        let r = j.plan.block(b);
+                                        let stream = mrc_stream(
+                                            j.seed,
+                                            round,
+                                            j.client as u64,
+                                            b as u64,
+                                            Direction::Downlink,
+                                        );
+                                        let mut mean = vec![0.0f32; r.len()];
+                                        let mut buf = vec![0.0f32; r.len()];
+                                        for ell in 0..n_dl {
+                                            let out = codec.encode(
+                                                &theta_ref[r.clone()],
+                                                &j.prior[r.clone()],
+                                                &stream,
+                                                ell as u64,
+                                                &mut sel,
+                                            );
+                                            idx_bits += out.bits;
+                                            codec.decode(
+                                                &j.prior[r.clone()],
+                                                &stream,
+                                                ell as u64,
+                                                out.index,
+                                                &mut buf,
+                                            );
+                                            crate::tensor::add_assign(&mut mean, &buf);
+                                        }
+                                        crate::tensor::scale(&mut mean, 1.0 / n_dl as f32);
+                                        est[r].copy_from_slice(&mean);
+                                    }
+                                    (j.client, est, idx_bits, j.plan.overhead_bits)
+                                })
+                            })
+                            .collect();
+                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                    });
+                results.sort_by_key(|r| r.0);
+                let tc = self.cfg.theta_clamp;
+                for (i, mut est, idx_bits, overhead) in results {
+                    crate::tensor::clamp(&mut est, tc, 1.0 - tc);
+                    bits.dl += idx_bits + overhead;
+                    self.client_theta[i] = est;
+                }
+                // No broadcast gain: messages are client-specific.
+                bits.dl_bc = bits.dl;
+            }
+        }
+
+        self.round += 1;
+        bits
+    }
+
+    /// Run `rounds` rounds, evaluating the federator's global model.
+    pub fn run(
+        &mut self,
+        oracle: &mut dyn MaskOracle,
+        rounds: usize,
+        eval_every: usize,
+    ) -> Vec<RoundRecord> {
+        let mut out = Vec::with_capacity(rounds);
+        let (mut loss, mut acc) = oracle.eval(&self.theta);
+        for t in 0..rounds {
+            let b = self.round(oracle);
+            if t % eval_every.max(1) == 0 || t + 1 == rounds {
+                let (l, a) = oracle.eval(&self.theta);
+                loss = l;
+                acc = a;
+            }
+            out.push(RoundRecord {
+                round: t,
+                loss,
+                acc,
+                ul_bits: b.ul,
+                dl_bits: b.dl,
+                dl_bc_bits: b.dl_bc,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::SyntheticMaskOracle;
+
+    fn cfg(variant: Variant) -> BiCompFlConfig {
+        BiCompFlConfig {
+            variant,
+            n_is: 64,
+            allocation: AllocationStrategy::fixed(32),
+            local_iters: 3,
+            local_lr: 0.1,
+            ..Default::default()
+        }
+    }
+
+    fn run_variant(variant: Variant, rounds: usize) -> (BiCompFl, SyntheticMaskOracle, Vec<RoundRecord>) {
+        let d = 256;
+        let n = 4;
+        let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
+        let mut alg = BiCompFl::new(d, n, cfg(variant));
+        let recs = alg.run(&mut oracle, rounds, 1);
+        (alg, oracle, recs)
+    }
+
+    #[test]
+    fn gr_all_parties_hold_identical_model() {
+        let (alg, _, _) = run_variant(Variant::Gr, 3);
+        for i in 0..4 {
+            assert_eq!(alg.client_model(i), alg.global_model());
+        }
+    }
+
+    #[test]
+    fn gr_reconst_keeps_parties_synchronized() {
+        let (alg, _, _) = run_variant(Variant::GrReconst, 3);
+        for i in 0..4 {
+            assert_eq!(alg.client_model(i), alg.global_model());
+        }
+    }
+
+    #[test]
+    fn pr_clients_hold_different_estimates() {
+        let (alg, _, _) = run_variant(Variant::Pr, 2);
+        let any_diff = (0..4).any(|i| alg.client_model(i) != alg.global_model());
+        assert!(any_diff, "PR must introduce per-client reconstruction noise");
+    }
+
+    #[test]
+    fn all_variants_learn() {
+        for v in [Variant::Gr, Variant::GrReconst, Variant::Pr, Variant::PrSplitDl] {
+            let (alg, mut oracle, recs) = run_variant(v, 60);
+            let first = recs[0].loss;
+            let last = oracle.eval(alg.global_model()).0;
+            assert!(
+                last < first * 0.75,
+                "{}: loss {first} -> {last}",
+                v.label()
+            );
+        }
+    }
+
+    #[test]
+    fn gr_downlink_is_n_minus_one_times_uplink() {
+        let (_, _, recs) = run_variant(Variant::Gr, 1);
+        let r = &recs[0];
+        // Fixed allocation, equal-size payloads: DL = (n-1) * UL exactly.
+        assert_eq!(r.dl_bits, 3 * r.ul_bits);
+        // Broadcast: one copy of all indices.
+        assert_eq!(r.dl_bc_bits, r.ul_bits);
+    }
+
+    #[test]
+    fn split_dl_reduces_downlink_by_n() {
+        let (_, _, full) = run_variant(Variant::Pr, 2);
+        let (_, _, split) = run_variant(Variant::PrSplitDl, 2);
+        let dl_full: u64 = full.iter().map(|r| r.dl_bits).sum();
+        let dl_split: u64 = split.iter().map(|r| r.dl_bits).sum();
+        let ratio = dl_full as f64 / dl_split as f64;
+        assert!(
+            (ratio - 4.0).abs() < 0.8,
+            "SplitDL should cut DL ~n=4x, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn pr_supports_partial_participation() {
+        let d = 128;
+        let n = 4;
+        let mut oracle = SyntheticMaskOracle::new(d, n, 7, 0.3);
+        let mut c = cfg(Variant::Pr);
+        c.participation = 0.5;
+        let mut alg = BiCompFl::new(d, n, c);
+        let recs = alg.run(&mut oracle, 10, 1);
+        // Uplink bits must be roughly half the full-participation case.
+        let mut full_cfg = cfg(Variant::Pr);
+        full_cfg.participation = 1.0;
+        let mut alg_full = BiCompFl::new(d, n, full_cfg);
+        let recs_full = alg_full.run(&mut SyntheticMaskOracle::new(d, n, 7, 0.3), 10, 1);
+        let ul: u64 = recs.iter().map(|r| r.ul_bits).sum();
+        let ul_full: u64 = recs_full.iter().map(|r| r.ul_bits).sum();
+        assert!((ul as f64 / ul_full as f64 - 0.5).abs() < 0.1);
+        // And it still learns.
+        assert!(recs.last().unwrap().loss < recs[0].loss);
+    }
+
+    #[test]
+    fn kl_budget_caps_posterior_divergence() {
+        // Observable consequence of the KL-ball projection: under Adaptive
+        // allocation (equal-KL-mass blocks), capping per-entry divergence
+        // caps the number of blocks and therefore the uplink index bits.
+        let d = 512;
+        let run_bits = |budget: Option<f64>| {
+            let mut oracle = SyntheticMaskOracle::new(d, 2, 9, 0.0);
+            let mut c = cfg(Variant::Gr);
+            c.allocation = AllocationStrategy::adaptive(64, 4096);
+            c.kl_budget = budget;
+            c.local_lr = 2.0; // aggressive local steps; projection must cap
+            let mut alg = BiCompFl::new(d, 2, c);
+            let recs = alg.run(&mut oracle, 2, 1);
+            recs.iter().map(|r| r.ul_bits).sum::<u64>()
+        };
+        let tight = run_bits(Some(0.001));
+        let free = run_bits(None);
+        assert!(
+            tight * 2 < free,
+            "projection should shrink adaptive uplink: tight={tight} free={free}"
+        );
+    }
+
+    #[test]
+    fn adaptive_allocation_variants_run() {
+        for alloc in [
+            AllocationStrategy::adaptive(64, 4096),
+            AllocationStrategy::adaptive_avg(64, 4096),
+        ] {
+            let mut c = cfg(Variant::Gr);
+            c.allocation = alloc;
+            let mut oracle = SyntheticMaskOracle::new(128, 2, 11, 0.2);
+            let mut alg = BiCompFl::new(128, 2, c);
+            let recs = alg.run(&mut oracle, 8, 1);
+            assert!(recs.iter().all(|r| r.ul_bits > 0));
+            assert!(recs.last().unwrap().loss < recs[0].loss);
+        }
+    }
+}

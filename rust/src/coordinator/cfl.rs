@@ -1,0 +1,274 @@
+//! BiCompFL-GR-CFL (§4, §5): the MRC machinery applied to *conventional* FL.
+//!
+//! Clients compute real gradients; a stochastic quantizer turns each gradient
+//! into a Bernoulli posterior which MRC carries over both links with a
+//! Ber(0.5) prior and global shared randomness (index relay downlink, as in
+//! Algorithm 1 step 7). Two quantizer front-ends:
+//!
+//! * **Stochastic SignSGD** — q_e = σ(g_e / K); a sampled bit decodes to ±1.
+//! * **Q_s (QSGD)** — q_e = |g_e|/‖g‖·s − τ_e; the bit selects the upper or
+//!   lower quantization level (Lemma 1's composition C_mrc(Q_s(·))). The
+//!   side information (‖g‖, signs, τ) is transmitted directly and metered.
+//!
+//! Implements [`CflAlgorithm`] so it appears in the same tables as the
+//! baselines.
+
+use super::shared_rand::{mrc_stream, Direction};
+use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits};
+use crate::compressors::qsgd::Qs;
+use crate::compressors::sign::stochastic_sign_posterior;
+use crate::mrc::block::BlockPlan;
+use crate::mrc::codec::BlockCodec;
+use crate::tensor;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quantizer {
+    /// Stochastic sign with temperature K.
+    StochasticSign,
+    /// Alistarh et al. Q_s with s levels.
+    Qs,
+}
+
+#[derive(Clone, Debug)]
+pub struct CflConfig {
+    pub quantizer: Quantizer,
+    pub n_is: usize,
+    pub n_ul: usize,
+    pub block_size: usize,
+    /// Temperature K for stochastic sign.
+    pub temperature: f32,
+    /// Levels s for Q_s.
+    pub s_levels: usize,
+    /// Federator learning rate η_s.
+    pub server_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for CflConfig {
+    fn default() -> Self {
+        Self {
+            quantizer: Quantizer::StochasticSign,
+            n_is: 256,
+            n_ul: 1,
+            block_size: 128,
+            temperature: 1.0,
+            s_levels: 0, // 0 = auto sqrt(2d) per Lemma 1
+            server_lr: 0.005,
+            seed: 0xCF1,
+        }
+    }
+}
+
+pub struct BiCompFlCfl {
+    cfg: CflConfig,
+    x: Vec<f32>,
+    round: u64,
+    sel_rng: Xoshiro256,
+    scratch: Vec<f32>,
+}
+
+impl BiCompFlCfl {
+    pub fn new(d: usize, cfg: CflConfig) -> Self {
+        Self {
+            x: vec![0.0; d],
+            round: 0,
+            sel_rng: Xoshiro256::new(cfg.seed ^ 0xC0FFEE),
+            scratch: vec![0.0; d],
+            cfg,
+        }
+    }
+
+    fn s_levels(&self) -> usize {
+        if self.cfg.s_levels == 0 {
+            ((2.0 * self.x.len() as f64).sqrt().ceil() as usize).max(2)
+        } else {
+            self.cfg.s_levels
+        }
+    }
+
+    /// MRC-transport a Bernoulli posterior with the Ber(0.5) prior; returns
+    /// (mean decoded bits over n_UL samples, index bits).
+    fn transport(
+        &mut self,
+        q: &[f32],
+        client: u64,
+    ) -> (Vec<f32>, u64) {
+        let d = q.len();
+        let plan = BlockPlan::fixed(d, self.cfg.block_size);
+        let codec = BlockCodec::new(self.cfg.n_is);
+        let prior = vec![0.5f32; d];
+        let mut mean = vec![0.0f32; d];
+        let mut buf = vec![0.0f32; d];
+        let mut bits = 0u64;
+        for ell in 0..self.cfg.n_ul {
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                let stream =
+                    mrc_stream(self.cfg.seed, self.round, client, b as u64, Direction::Uplink);
+                let out = codec.encode(
+                    &q[r.clone()],
+                    &prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    &mut self.sel_rng,
+                );
+                bits += out.bits;
+                codec.decode(&prior[r.clone()], &stream, ell as u64, out.index, &mut buf[r.clone()]);
+            }
+            tensor::add_assign(&mut mean, &buf);
+        }
+        tensor::scale(&mut mean, 1.0 / self.cfg.n_ul as f32);
+        (mean, bits)
+    }
+}
+
+impl CflAlgorithm for BiCompFlCfl {
+    fn name(&self) -> &'static str {
+        match self.cfg.quantizer {
+            Quantizer::StochasticSign => "BiCompFL-GR-CFL",
+            Quantizer::Qs => "BiCompFL-GR-CFL-Qs",
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.x.copy_from_slice(x0);
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
+        let d = self.x.len();
+        let n = oracle.n_clients();
+        let mut agg = vec![0.0f32; d];
+        let mut ul = 0u64;
+        let mut per_client_idx_bits = Vec::with_capacity(n);
+        let x_snapshot = self.x.clone();
+        for i in 0..n {
+            oracle.grad(i, &x_snapshot, &mut self.scratch);
+            let (update, idx_bits, side_bits) = match self.cfg.quantizer {
+                Quantizer::StochasticSign => {
+                    let mut q = vec![0.0f32; d];
+                    stochastic_sign_posterior(&self.scratch, self.cfg.temperature, &mut q);
+                    let (bits_mean, idx_bits) = self.transport(&q, i as u64);
+                    // bit b decodes to the ±1 update 2b − 1, scaled by the
+                    // mean gradient magnitude (the usual scaled-sign step).
+                    let scale = (tensor::norm1(&self.scratch) / d as f64) as f32;
+                    let update: Vec<f32> =
+                        bits_mean.iter().map(|&b| scale * (2.0 * b - 1.0)).collect();
+                    (update, idx_bits, 0u64)
+                }
+                Quantizer::Qs => {
+                    let qs = Qs { s: self.s_levels() };
+                    let post = qs.posterior(&self.scratch);
+                    let (bits_mean, idx_bits) = self.transport(&post.q, i as u64);
+                    let mut update = vec![0.0f32; d];
+                    qs.reconstruct(&post, &bits_mean, &mut update);
+                    (update, idx_bits, qs.side_bits(d))
+                }
+            };
+            ul += idx_bits + side_bits;
+            per_client_idx_bits.push(idx_bits + side_bits);
+            tensor::add_assign(&mut agg, &update);
+        }
+        tensor::axpy(&mut self.x, -self.cfg.server_lr / n as f32, &agg);
+        // Downlink: index relay (Algorithm 1 step 7) — client j receives all
+        // other clients' indices (+ side info under Q_s) and reconstructs the
+        // same aggregate via the global randomness.
+        let total: u64 = per_client_idx_bits.iter().sum();
+        let dl: u64 = per_client_idx_bits.iter().map(|&own| total - own).sum();
+        self.round += 1;
+        RoundBits {
+            ul,
+            dl,
+            dl_bc: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::QuadraticOracle;
+
+    #[test]
+    fn stochastic_sign_variant_converges() {
+        let mut o = QuadraticOracle::new(64, 4, 21);
+        let mut alg = BiCompFlCfl::new(
+            64,
+            CflConfig {
+                server_lr: 0.3,
+                n_is: 64,
+                block_size: 32,
+                ..Default::default()
+            },
+        );
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..250 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.3 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn qs_variant_converges() {
+        let mut o = QuadraticOracle::new(64, 4, 22);
+        let mut alg = BiCompFlCfl::new(
+            64,
+            CflConfig {
+                quantizer: Quantizer::Qs,
+                server_lr: 0.5,
+                n_is: 64,
+                block_size: 32,
+                ..Default::default()
+            },
+        );
+        let mut rng = Xoshiro256::new(0);
+        let l0 = o.excess_loss(alg.params());
+        for _ in 0..250 {
+            alg.round(&mut o, &mut rng);
+        }
+        let l1 = o.excess_loss(alg.params());
+        assert!(l1 < 0.3 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn bitrate_is_orders_below_fedavg() {
+        let d = 1024usize;
+        let n = 4;
+        let mut o = QuadraticOracle::new(d, n, 23);
+        let mut alg = BiCompFlCfl::new(
+            d,
+            CflConfig {
+                n_is: 256,
+                block_size: 128,
+                ..Default::default()
+            },
+        );
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        // 8 index bits per 128-entry block: 1/16 bpp uplink per client.
+        let ul_bpp = b.ul as f64 / (n as f64 * d as f64);
+        assert!(
+            (ul_bpp - 8.0 / 128.0).abs() < 1e-9,
+            "uplink bpp {ul_bpp} != 0.0625"
+        );
+        // Total (UL+DL p2p) must be far below FedAvg's 64 bpp.
+        let total_bpp = (b.ul + b.dl) as f64 / (n as f64 * d as f64);
+        assert!(total_bpp < 1.0, "total bpp {total_bpp}");
+    }
+
+    #[test]
+    fn relay_downlink_accounting() {
+        let d = 256usize;
+        let n = 3;
+        let mut o = QuadraticOracle::new(d, n, 24);
+        let mut alg = BiCompFlCfl::new(d, CflConfig::default());
+        let b = alg.round(&mut o, &mut Xoshiro256::new(0));
+        assert_eq!(b.dl, (n as u64 - 1) * b.ul);
+        assert_eq!(b.dl_bc, b.ul);
+    }
+}

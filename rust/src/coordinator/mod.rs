@@ -1,0 +1,25 @@
+//! The BiCompFL coordinator (Layer 3): the paper's system contribution.
+//!
+//! * [`oracle`]      — the `MaskOracle` abstraction over Layer-2 compute
+//!   (artifact-backed in production, synthetic in tests) for probabilistic
+//!   mask training.
+//! * [`shared_rand`] — shared-randomness stream derivation: every party
+//!   derives identical Philox streams from (seed, round, client, block,
+//!   direction) labels; *global* vs *private* randomness is a seed-scoping
+//!   policy.
+//! * [`bicompfl`]    — Algorithms 1 & 2: BiCompFL-GR (index relay),
+//!   GR-Reconst, PR, PR-SplitDL over Bayesian mask training.
+//! * [`cfl`]         — BiCompFL-GR-CFL (§4/§5): the same machinery applied to
+//!   conventional FL with stochastic SignSGD or the Q_s quantizer; implements
+//!   `CflAlgorithm` so it slots into the baseline tables.
+//! * [`topology`]    — thread-per-client round execution with channels (the
+//!   federator/worker process shape; MRC encoding parallelizes per client).
+
+pub mod oracle;
+pub mod shared_rand;
+pub mod bicompfl;
+pub mod cfl;
+pub mod topology;
+
+pub use bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+pub use oracle::{MaskOracle, SyntheticMaskOracle};

@@ -1,0 +1,14 @@
+//! Datasets and partitioning.
+//!
+//! The paper trains on MNIST / Fashion-MNIST / CIFAR-10; no dataset files are
+//! available offline, so `synth` procedurally generates 10-class image
+//! classification tasks with matched structure (see DESIGN.md §3) and
+//! `partition` implements the paper's i.i.d. and Dirichlet(α) allocations.
+
+pub mod synth;
+pub mod partition;
+pub mod batcher;
+
+pub use batcher::Batcher;
+pub use partition::{dirichlet_partition, iid_partition, Allocation};
+pub use synth::{Dataset, SynthSpec};

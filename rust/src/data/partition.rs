@@ -1,0 +1,168 @@
+//! Client data allocation: i.i.d. (uniform) and Dirichlet(α) heterogeneous.
+//!
+//! The paper's non-i.i.d. regime draws each client's class mixture from a
+//! Dirichlet distribution with α = 0.1 — "a rather challenging regime due to
+//! high class imbalance" (§4). We implement the standard label-Dirichlet
+//! scheme: for each class, the class's samples are split across clients
+//! proportionally to a Dirichlet draw over clients.
+
+use super::synth::{Dataset, NUM_CLASSES};
+use crate::util::rng::Xoshiro256;
+
+/// Per-client index lists into a dataset.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub client_indices: Vec<Vec<usize>>,
+}
+
+impl Allocation {
+    pub fn n_clients(&self) -> usize {
+        self.client_indices.len()
+    }
+
+    /// Histogram of classes per client (diagnostics, tests).
+    pub fn class_histogram(&self, data: &Dataset) -> Vec<[usize; NUM_CLASSES]> {
+        self.client_indices
+            .iter()
+            .map(|idx| {
+                let mut h = [0usize; NUM_CLASSES];
+                for &i in idx {
+                    h[data.labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+/// Uniform shuffle-and-split.
+pub fn iid_partition(data: &Dataset, n_clients: usize, seed: u64) -> Allocation {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    let mut rng = Xoshiro256::new(seed);
+    rng.shuffle(&mut idx);
+    let mut client_indices = vec![Vec::new(); n_clients];
+    for (pos, i) in idx.into_iter().enumerate() {
+        client_indices[pos % n_clients].push(i);
+    }
+    Allocation { client_indices }
+}
+
+/// Label-Dirichlet partition: per class c, split its samples across clients
+/// proportional to p_c ~ Dirichlet(alpha * 1_n).
+pub fn dirichlet_partition(
+    data: &Dataset,
+    n_clients: usize,
+    alpha: f64,
+    seed: u64,
+) -> Allocation {
+    let mut rng = Xoshiro256::new(seed);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); NUM_CLASSES];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut client_indices = vec![Vec::new(); n_clients];
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let p = rng.dirichlet(alpha, n_clients);
+        // Convert proportions to contiguous slice boundaries.
+        let n = idxs.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (c, &pc) in p.iter().enumerate() {
+            acc += pc;
+            let end = if c + 1 == n_clients {
+                n
+            } else {
+                (acc * n as f64).round() as usize
+            }
+            .clamp(start, n);
+            client_indices[c].extend_from_slice(&idxs[start..end]);
+            start = end;
+        }
+    }
+    Allocation { client_indices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::prop::run_prop;
+
+    fn data() -> Dataset {
+        Dataset::generate(&SynthSpec::mnist_like()).0
+    }
+
+    fn assert_exact_cover(alloc: &Allocation, n: usize) {
+        let mut seen = vec![false; n];
+        for ci in &alloc.client_indices {
+            for &i in ci {
+                assert!(!seen[i], "sample {i} allocated twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some samples unallocated");
+    }
+
+    #[test]
+    fn iid_covers_exactly_and_balances() {
+        let d = data();
+        let a = iid_partition(&d, 10, 7);
+        assert_exact_cover(&a, d.len());
+        let sizes: Vec<usize> = a.client_indices.iter().map(|v| v.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn dirichlet_covers_exactly() {
+        let d = data();
+        for &alpha in &[0.1, 1.0, 100.0] {
+            let a = dirichlet_partition(&d, 10, alpha, 11);
+            assert_exact_cover(&a, d.len());
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_heterogeneity() {
+        let d = data();
+        // Average max-class-fraction per client: higher for small alpha.
+        let skew = |alpha: f64| {
+            let a = dirichlet_partition(&d, 10, alpha, 13);
+            let hists = a.class_histogram(&d);
+            let mut total = 0.0;
+            let mut count = 0usize;
+            for h in hists {
+                let n: usize = h.iter().sum();
+                if n == 0 {
+                    continue;
+                }
+                total += *h.iter().max().unwrap() as f64 / n as f64;
+                count += 1;
+            }
+            total / count as f64
+        };
+        let s_low = skew(0.1);
+        let s_high = skew(100.0);
+        assert!(
+            s_low > s_high + 0.15,
+            "alpha=0.1 skew {s_low} vs alpha=100 skew {s_high}"
+        );
+    }
+
+    #[test]
+    fn prop_partitions_always_cover() {
+        let d = data();
+        run_prop("partition-cover", 20, |rng, case| {
+            let n_clients = 2 + rng.next_below(20);
+            let alpha = 0.05 + rng.next_f64() * 5.0;
+            let a = if case % 2 == 0 {
+                iid_partition(&d, n_clients, rng.next_u64())
+            } else {
+                dirichlet_partition(&d, n_clients, alpha, rng.next_u64())
+            };
+            assert_eq!(a.n_clients(), n_clients);
+            assert_exact_cover(&a, d.len());
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Ablation drivers: Figures 12–17 and Appendix J.
+//!
+//! Each sweep runs BiCompFL while varying exactly one factor and reports
+//! accuracy-vs-bits trajectories per sweep point. Sweeps run on either
+//! oracle (`fast` selects the synthetic one; the recorded results use the
+//! artifact oracle at the default experiment scale).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{bicompfl_config, build_runtime_oracle, build_synthetic_oracle};
+use crate::algorithms::runner::RoundRecord;
+use crate::config::{Alloc, BiCompFlMethod, ExpConfig};
+use crate::coordinator::bicompfl::{BiCompFl, Variant};
+use crate::coordinator::MaskOracle;
+use crate::metrics::{render_table, write_summary_json, CsvLog, TableRow};
+
+fn run_one(
+    cfg: &ExpConfig,
+    method: BiCompFlMethod,
+    fast: bool,
+    mutate: impl FnOnce(&mut crate::coordinator::bicompfl::BiCompFlConfig),
+) -> Result<(usize, Vec<RoundRecord>)> {
+    let run = |oracle: &mut dyn MaskOracle| {
+        let d = oracle.dim();
+        let mut bcfg = bicompfl_config(cfg, &method, d);
+        mutate(&mut bcfg);
+        let mut alg = BiCompFl::new(d, oracle.n_clients(), bcfg);
+        (d, alg.run(oracle, cfg.rounds, cfg.eval_every))
+    };
+    Ok(if fast {
+        let mut oracle = build_synthetic_oracle(cfg);
+        run(&mut oracle)
+    } else {
+        let mut oracle = build_runtime_oracle(cfg)?;
+        run(&mut oracle)
+    })
+}
+
+fn sweep<T: std::fmt::Display + Copy>(
+    name: &str,
+    cfg: &ExpConfig,
+    fast: bool,
+    out_dir: &Path,
+    points: &[T],
+    setup: impl Fn(T, &mut ExpConfig) -> BiCompFlMethod,
+    mutate: impl Fn(T, &mut crate::coordinator::bicompfl::BiCompFlConfig),
+) -> Result<Vec<TableRow>> {
+    let mut csv = CsvLog::create(&out_dir.join(format!("{name}.csv")))?;
+    let mut rows = Vec::new();
+    for &p in points {
+        let mut c = cfg.clone();
+        let method = setup(p, &mut c);
+        let (d, recs) = run_one(&c, method, fast, |b| mutate(p, b))?;
+        let label = format!("{name}={p}");
+        csv.log_all(&label, &recs)?;
+        rows.push(TableRow::from_records(&label, &recs, d, c.n_clients));
+        crate::info!("ablation {name}: point {p} done");
+    }
+    write_summary_json(&out_dir.join(format!("{name}.json")), name, &rows)?;
+    println!("{}", render_table(name, &rows));
+    Ok(rows)
+}
+
+fn default_method() -> BiCompFlMethod {
+    BiCompFlMethod {
+        variant: Variant::Gr,
+        alloc: Alloc::Fixed,
+    }
+}
+
+/// Fig. 12/13: number of clients n ∈ {10, 30, 50} (GR and PR).
+pub fn ablate_clients(cfg: &ExpConfig, fast: bool, out_dir: &Path) -> Result<Vec<TableRow>> {
+    sweep(
+        "ablate-clients",
+        cfg,
+        fast,
+        out_dir,
+        &[5usize, 10, 20],
+        |n, c| {
+            c.n_clients = n;
+            default_method()
+        },
+        |_, _| {},
+    )
+}
+
+/// Fig. 15: downlink samples n_DL ∈ {5, 10, 20} (PR).
+pub fn ablate_ndl(cfg: &ExpConfig, fast: bool, out_dir: &Path) -> Result<Vec<TableRow>> {
+    sweep(
+        "ablate-ndl",
+        cfg,
+        fast,
+        out_dir,
+        &[5usize, 10, 20],
+        |_, _| BiCompFlMethod {
+            variant: Variant::Pr,
+            alloc: Alloc::Fixed,
+        },
+        |ndl, b| b.n_dl = ndl,
+    )
+}
+
+/// Fig. 16: block size ∈ {128, 256, 512} (GR-Fixed).
+pub fn ablate_blocksize(cfg: &ExpConfig, fast: bool, out_dir: &Path) -> Result<Vec<TableRow>> {
+    sweep(
+        "ablate-blocksize",
+        cfg,
+        fast,
+        out_dir,
+        &[64usize, 128, 256],
+        |bs, c| {
+            c.block_size = bs;
+            default_method()
+        },
+        |_, _| {},
+    )
+}
+
+/// Fig. 17: importance samples n_IS ∈ {64, 256, 1024} (GR-Fixed).
+pub fn ablate_nis(cfg: &ExpConfig, fast: bool, out_dir: &Path) -> Result<Vec<TableRow>> {
+    sweep(
+        "ablate-nis",
+        cfg,
+        fast,
+        out_dir,
+        &[64usize, 256, 1024],
+        |nis, c| {
+            c.n_is = nis;
+            default_method()
+        },
+        |_, _| {},
+    )
+}
+
+/// Fig. 14 / Appendix J.2: PR prior optimization — λ mix of the global-model
+/// estimate and the previous posterior estimate.
+pub fn ablate_prior(cfg: &ExpConfig, fast: bool, out_dir: &Path) -> Result<Vec<TableRow>> {
+    sweep(
+        "ablate-prior",
+        cfg,
+        fast,
+        out_dir,
+        &[1.0f32, 0.75, 0.5],
+        |_, _| BiCompFlMethod {
+            variant: Variant::Pr,
+            alloc: Alloc::Fixed,
+        },
+        |lam, b| b.lambda = lam,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn quick_cfg() -> ExpConfig {
+        let mut c = preset("quick").unwrap();
+        c.rounds = 3;
+        c.n_clients = 3;
+        c.n_is = 32;
+        c.block_size = 64;
+        c
+    }
+
+    #[test]
+    fn all_ablations_run_fast() {
+        let cfg = quick_cfg();
+        let dir = std::env::temp_dir().join("bicompfl_ablate_test");
+        assert_eq!(ablate_clients(&cfg, true, &dir).unwrap().len(), 3);
+        assert_eq!(ablate_ndl(&cfg, true, &dir).unwrap().len(), 3);
+        assert_eq!(ablate_blocksize(&cfg, true, &dir).unwrap().len(), 3);
+        assert_eq!(ablate_nis(&cfg, true, &dir).unwrap().len(), 3);
+        assert_eq!(ablate_prior(&cfg, true, &dir).unwrap().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blocksize_monotone_bits() {
+        // Larger blocks => fewer blocks => fewer index bits per round.
+        let cfg = quick_cfg();
+        let dir = std::env::temp_dir().join("bicompfl_ablate_bs_test");
+        let rows = ablate_blocksize(&cfg, true, &dir).unwrap();
+        assert!(rows[0].summary.ul_bpp > rows[1].summary.ul_bpp);
+        assert!(rows[1].summary.ul_bpp > rows[2].summary.ul_bpp);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ndl_scales_downlink() {
+        let cfg = quick_cfg();
+        let dir = std::env::temp_dir().join("bicompfl_ablate_ndl_test");
+        let rows = ablate_ndl(&cfg, true, &dir).unwrap();
+        // n_DL = 5 -> 10 -> 20 should scale DL bits ~linearly.
+        let r = rows[2].summary.dl_bpp / rows[0].summary.dl_bpp;
+        assert!((r - 4.0).abs() < 0.5, "dl ratio {r}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,111 @@
+//! Experiment drivers: every table and figure in the paper's evaluation maps
+//! to a function here (DESIGN.md §5 for the index).
+//!
+//! * [`tables`]    — Tables 5–12 and Figures 1–11: all methods on one
+//!   (dataset, arch, allocation) setting; per-round CSV (the figures) plus a
+//!   summary table (the tables / Fig. 2 scatter points).
+//! * [`ablations`] — Figures 12–17 and Appendix J: sweeps over n, n_DL,
+//!   n_IS, block size, and the λ prior mix.
+//!
+//! Every driver can run against the PJRT artifact oracle (real model, the
+//! recorded results) or the synthetic oracle (`fast=true`; exercises the
+//! identical coordinator/compression code with a closed-form Layer 2, for
+//! CI and quick iteration).
+
+pub mod tables;
+pub mod ablations;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExpConfig;
+use crate::coordinator::bicompfl::{BiCompFl, BiCompFlConfig};
+use crate::coordinator::{MaskOracle, SyntheticMaskOracle};
+use crate::data::{dirichlet_partition, iid_partition, Dataset, SynthSpec};
+use crate::runtime::manifest::default_dir;
+use crate::runtime::{Manifest, RuntimeOracle};
+
+/// Build the artifact-backed oracle for an experiment config.
+pub fn build_runtime_oracle(cfg: &ExpConfig) -> Result<RuntimeOracle> {
+    let manifest = Manifest::load(&default_dir())?;
+    manifest.check()?;
+    let spec = SynthSpec::by_name(&cfg.dataset)
+        .ok_or_else(|| anyhow!("unknown dataset {}", cfg.dataset))?;
+    let (train, test) = Dataset::generate(&spec);
+    let alloc = if cfg.iid {
+        iid_partition(&train, cfg.n_clients, cfg.seed ^ 0xA110C)
+    } else {
+        dirichlet_partition(&train, cfg.n_clients, cfg.dirichlet_alpha, cfg.seed ^ 0xA110C)
+    };
+    RuntimeOracle::new(
+        &manifest,
+        &cfg.arch,
+        train,
+        test,
+        alloc.client_indices,
+        cfg.seed,
+    )
+}
+
+/// Build the fast synthetic oracle matching the experiment's shape. The
+/// dimension mirrors the arch when artifacts exist, else a fixed small d.
+pub fn build_synthetic_oracle(cfg: &ExpConfig) -> SyntheticMaskOracle {
+    let d = Manifest::load(&default_dir())
+        .ok()
+        .and_then(|m| m.arch(&cfg.arch).map(|a| a.d.min(4096)))
+        .unwrap_or(1024);
+    let het = if cfg.iid { 0.05 } else { 0.25 };
+    SyntheticMaskOracle::new(d, cfg.n_clients, cfg.seed, het)
+}
+
+/// Instantiate a BiCompFL run from an experiment config + method selection.
+pub fn bicompfl_config(
+    cfg: &ExpConfig,
+    method: &crate::config::BiCompFlMethod,
+    d_hint: usize,
+) -> BiCompFlConfig {
+    let b_max = (d_hint / 4).max(16).min(4096);
+    BiCompFlConfig {
+        variant: method.variant,
+        n_is: cfg.n_is,
+        n_ul: cfg.n_ul,
+        n_dl: cfg.n_dl,
+        allocation: method.alloc.build(cfg.n_is, cfg.block_size, b_max),
+        local_iters: cfg.local_iters,
+        local_lr: cfg.mask_lr,
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+/// Run one BiCompFL method against any mask oracle.
+pub fn run_bicompfl(
+    cfg: &ExpConfig,
+    method: &crate::config::BiCompFlMethod,
+    oracle: &mut dyn MaskOracle,
+) -> Vec<crate::algorithms::runner::RoundRecord> {
+    let d = oracle.dim();
+    let n = oracle.n_clients();
+    let mut alg = BiCompFl::new(d, n, bicompfl_config(cfg, method, d));
+    alg.run(oracle, cfg.rounds, cfg.eval_every)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, table_methods};
+
+    #[test]
+    fn synthetic_pipeline_runs_every_method() {
+        let mut cfg = preset("quick").unwrap();
+        cfg.rounds = 3;
+        cfg.n_clients = 3;
+        cfg.n_is = 32;
+        cfg.block_size = 32;
+        for m in table_methods() {
+            let mut oracle = build_synthetic_oracle(&cfg);
+            let recs = run_bicompfl(&cfg, &m, &mut oracle);
+            assert_eq!(recs.len(), 3, "{}", m.label());
+            assert!(recs.iter().all(|r| r.ul_bits > 0));
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Table / figure driver: run every method of the paper's evaluation on one
+//! setting and emit (a) the per-round CSV behind Figures 1 & 3–11, (b) the
+//! summary table behind Tables 5–12 and the Fig. 2 scatter.
+//!
+//! Methods: 7 non-stochastic baselines (gradient path), 6 BiCompFL mask-
+//! training entries (GR-{Adaptive,Adaptive-Avg,Fixed}, GR-Reconst-Fixed,
+//! PR-Fixed, PR-Fixed-SplitDL), plus BiCompFL-GR-CFL (stochastic sign).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{build_runtime_oracle, build_synthetic_oracle, run_bicompfl};
+use crate::coordinator::MaskOracle;
+use crate::algorithms::runner::{run_algorithm, RoundRecord};
+use crate::algorithms::{make_baseline, CflAlgorithm, QuadraticOracle, BASELINE_NAMES};
+use crate::config::{table_methods, ExpConfig};
+use crate::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
+use crate::metrics::{render_table, write_summary_json, CsvLog, TableRow};
+
+/// Which method families to include.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodFilter {
+    pub baselines: bool,
+    pub bicompfl: bool,
+    pub cfl: bool,
+}
+
+impl Default for MethodFilter {
+    fn default() -> Self {
+        Self {
+            baselines: true,
+            bicompfl: true,
+            cfl: true,
+        }
+    }
+}
+
+pub struct TableOutput {
+    pub rows: Vec<TableRow>,
+    pub d: usize,
+}
+
+/// Run the full method set for one experiment setting.
+///
+/// `fast` replaces the PJRT oracle with synthetic stand-ins (identical
+/// coordinator code, closed-form Layer 2) — used by tests and smoke runs.
+pub fn run_table(
+    cfg: &ExpConfig,
+    filter: MethodFilter,
+    fast: bool,
+    out_dir: &Path,
+) -> Result<TableOutput> {
+    let mut csv = CsvLog::create(&out_dir.join(format!("{}.csv", cfg.preset)))?;
+    let mut rows: Vec<TableRow> = Vec::new();
+    let n = cfg.n_clients;
+
+    // Establish the model dimension once.
+    let d = if fast {
+        build_synthetic_oracle(cfg).dim()
+    } else {
+        build_runtime_oracle(cfg)?.arch.d
+    };
+
+    // -- non-stochastic baselines (gradient path) --------------------------
+    if filter.baselines {
+        for name in BASELINE_NAMES {
+            let recs = if fast {
+                let dd = d.min(4096);
+                let mut oracle = QuadraticOracle::new(dd, n, cfg.seed);
+                let mut alg = make_baseline(name, dd, n, 0.3).unwrap();
+                run_algorithm(alg.as_mut(), &mut oracle, cfg.rounds, cfg.eval_every, cfg.seed)
+            } else {
+                let mut oracle = build_runtime_oracle(cfg)?;
+                let mut alg = make_baseline(name, d, n, cfg.server_lr).unwrap();
+                // Symmetry-breaking init: start from the oracle's
+                // signed-constant weights (an all-zero CNN has zero grads).
+                alg.set_params(&oracle.weights);
+                run_algorithm(alg.as_mut(), &mut oracle, cfg.rounds, cfg.eval_every, cfg.seed)
+            };
+            let label = display_name(name);
+            csv.log_all(&label, &recs)?;
+            rows.push(TableRow::from_records(&label, &recs, d_for(fast, d), n));
+            crate::info!("table {}: {} done", cfg.preset, label);
+        }
+    }
+
+    // -- BiCompFL mask-training variants ------------------------------------
+    if filter.bicompfl {
+        for m in table_methods() {
+            let recs = if fast {
+                let mut oracle = build_synthetic_oracle(cfg);
+                run_bicompfl(cfg, &m, &mut oracle)
+            } else {
+                let mut oracle = build_runtime_oracle(cfg)?;
+                run_bicompfl(cfg, &m, &mut oracle)
+            };
+            let label = m.label();
+            csv.log_all(&label, &recs)?;
+            rows.push(TableRow::from_records(&label, &recs, d_for(fast, d), n));
+            crate::info!("table {}: {} done", cfg.preset, label);
+        }
+    }
+
+    // -- BiCompFL-GR-CFL (stochastic sign through MRC) ----------------------
+    if filter.cfl {
+        let recs = run_cfl(cfg, fast, d)?;
+        csv.log_all("BiCompFL-GR-CFL", &recs)?;
+        rows.push(TableRow::from_records(
+            "BiCompFL-GR-CFL",
+            &recs,
+            d_for(fast, d),
+            n,
+        ));
+        crate::info!("table {}: BiCompFL-GR-CFL done", cfg.preset);
+    }
+
+    write_summary_json(&out_dir.join(format!("{}.json", cfg.preset)), &cfg.preset, &rows)?;
+    println!("{}", render_table(&cfg.preset, &rows));
+    Ok(TableOutput { rows, d })
+}
+
+fn run_cfl(cfg: &ExpConfig, fast: bool, d: usize) -> Result<Vec<RoundRecord>> {
+    let ccfg = CflConfig {
+        quantizer: Quantizer::StochasticSign,
+        n_is: cfg.n_is,
+        n_ul: cfg.n_ul,
+        block_size: cfg.block_size,
+        server_lr: cfg.cfl_server_lr,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    Ok(if fast {
+        let dd = d.min(4096);
+        let mut oracle = QuadraticOracle::new(dd, cfg.n_clients, cfg.seed);
+        let mut alg = BiCompFlCfl::new(dd, CflConfig { server_lr: 0.3, ..ccfg });
+        run_algorithm(&mut alg, &mut oracle, cfg.rounds, cfg.eval_every, cfg.seed)
+    } else {
+        let mut oracle = build_runtime_oracle(cfg)?;
+        let mut alg = BiCompFlCfl::new(d, ccfg);
+        alg.set_params(&oracle.weights);
+        run_algorithm(&mut alg, &mut oracle, cfg.rounds, cfg.eval_every, cfg.seed)
+    })
+}
+
+/// The dimension used for bpp normalization: the synthetic substitutes cap
+/// d at 4096 (both the quadratic and mask oracles), the real path uses the
+/// arch's true d.
+fn d_for(fast: bool, d: usize) -> usize {
+    if fast {
+        d.min(4096)
+    } else {
+        d
+    }
+}
+
+fn display_name(name: &str) -> String {
+    match name {
+        "fedavg" => "FedAvg".into(),
+        "doublesqueeze" => "Doublesqueeze".into(),
+        "memsgd" => "Memsgd".into(),
+        "liec" => "Liec".into(),
+        "cser" => "Cser".into(),
+        "neolithic" => "Neolithic".into(),
+        "m3" => "M3".into(),
+        other => other.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn fast_table_produces_all_method_rows() {
+        let mut cfg = preset("quick").unwrap();
+        cfg.rounds = 3;
+        cfg.n_clients = 3;
+        cfg.n_is = 32;
+        cfg.block_size = 64;
+        let dir = std::env::temp_dir().join("bicompfl_table_test");
+        let out = run_table(&cfg, MethodFilter::default(), true, &dir).unwrap();
+        // 7 baselines + 6 bicompfl + 1 cfl.
+        assert_eq!(out.rows.len(), 14);
+        // BiCompFL rows must be far cheaper than FedAvg.
+        let fedavg = out.rows.iter().find(|r| r.method == "FedAvg").unwrap();
+        let gr = out
+            .rows
+            .iter()
+            .find(|r| r.method.contains("BiCompFL-GR-Fixed"))
+            .unwrap();
+        assert!(
+            gr.summary.bpp < fedavg.summary.bpp / 30.0,
+            "GR bpp {} vs FedAvg {}",
+            gr.summary.bpp,
+            fedavg.summary.bpp
+        );
+        assert!(dir.join("quick.csv").exists());
+        assert!(dir.join("quick.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn filters_restrict_method_set() {
+        let mut cfg = preset("quick").unwrap();
+        cfg.rounds = 2;
+        cfg.n_clients = 2;
+        cfg.n_is = 16;
+        cfg.block_size = 64;
+        let dir = std::env::temp_dir().join("bicompfl_table_filter_test");
+        let out = run_table(
+            &cfg,
+            MethodFilter {
+                baselines: false,
+                bicompfl: true,
+                cfl: false,
+            },
+            true,
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(out.rows.len(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

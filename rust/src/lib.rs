@@ -1,0 +1,19 @@
+//! BiCompFL: stochastic federated learning with bi-directional compression.
+//!
+//! Three-layer architecture: this Rust crate is Layer 3 (the coordination
+//! system — MRC codec, shared randomness, federator/client topology, bit
+//! accounting, baselines). Layer 2 (JAX model steps) and Layer 1 (Pallas
+//! kernels) are AOT-compiled to HLO text by `python/compile/aot.py` and
+//! executed here through PJRT (`runtime`).
+
+pub mod util;
+pub mod tensor;
+pub mod data;
+pub mod mrc;
+pub mod compressors;
+pub mod algorithms;
+pub mod coordinator;
+pub mod runtime;
+pub mod metrics;
+pub mod config;
+pub mod exp;

@@ -1,0 +1,207 @@
+//! `bicompfl` — the launcher.
+//!
+//! Subcommands:
+//!   train     Run one BiCompFL training job (variant/allocation/dataset).
+//!   exp       Regenerate a paper table/figure or an ablation sweep.
+//!   presets   List experiment presets (one per paper table).
+//!   info      Show the artifact manifest summary.
+//!
+//! Examples:
+//!   bicompfl train --arch mlp --variant gr --rounds 20
+//!   bicompfl exp table --preset mnist-lenet-iid
+//!   bicompfl exp ablate-nis --fast
+//!   bicompfl exp all-tables --fast
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use bicompfl::config::{preset, ExpConfig, PRESET_NAMES};
+use bicompfl::coordinator::bicompfl::Variant;
+use bicompfl::exp::ablations;
+use bicompfl::exp::tables::{run_table, MethodFilter};
+use bicompfl::info;
+use bicompfl::metrics::render_table;
+use bicompfl::util::cli::Cli;
+use bicompfl::util::logging;
+
+fn main() {
+    logging::init();
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new(
+        "bicompfl — stochastic federated learning with bi-directional compression\n\n\
+         Usage: bicompfl <train|exp|presets|info> [flags]\n\
+         exp subcommands: table, all-tables, ablate-clients, ablate-ndl,\n\
+         ablate-blocksize, ablate-nis, ablate-prior",
+    )
+    .flag("preset", "quick", "experiment preset (see `bicompfl presets`)")
+    .flag("arch", "", "model architecture (mlp|lenet5|cnn4|cnn6); overrides preset")
+    .flag("dataset", "", "dataset (mnist-like|fashion-like|cifar-like); overrides preset")
+    .flag("variant", "gr", "bicompfl variant (gr|gr-reconst|pr|pr-splitdl)")
+    .flag("alloc", "fixed", "block allocation (fixed|adaptive|adaptive-avg)")
+    .flag("rounds", "0", "global rounds (0 = preset default)")
+    .flag("clients", "0", "number of clients (0 = preset default)")
+    .flag("nis", "0", "importance samples per block (0 = preset default)")
+    .flag("nul", "0", "uplink samples n_UL (0 = preset default)")
+    .flag("ndl", "0", "downlink samples n_DL (0 = auto n*n_UL)")
+    .flag("block-size", "0", "fixed block size (0 = preset default)")
+    .flag("local-iters", "0", "local iterations per round (0 = preset default)")
+    .flag("mask-lr", "0", "mask-training score learning rate (0 = preset default)")
+    .flag("seed", "1", "master seed")
+    .flag("out", "results", "output directory")
+    .switch("fast", "use the synthetic oracle instead of PJRT artifacts")
+    .switch("noniid", "force Dirichlet(0.1) data allocation")
+    .switch("no-baselines", "exp table: skip non-stochastic baselines")
+    .switch("no-cfl", "exp table: skip BiCompFL-GR-CFL")
+}
+
+fn build_cfg(c: &Cli) -> Result<ExpConfig> {
+    let mut cfg = preset(&c.get("preset"))
+        .ok_or_else(|| anyhow!("unknown preset {:?}; see `bicompfl presets`", c.get("preset")))?;
+    let ov = |v: usize, cur: usize| if v == 0 { cur } else { v };
+    cfg.rounds = ov(c.get_usize("rounds"), cfg.rounds);
+    cfg.n_clients = ov(c.get_usize("clients"), cfg.n_clients);
+    cfg.n_is = ov(c.get_usize("nis"), cfg.n_is);
+    cfg.n_ul = ov(c.get_usize("nul"), cfg.n_ul);
+    if c.get_usize("ndl") > 0 {
+        cfg.n_dl = c.get_usize("ndl");
+    }
+    cfg.block_size = ov(c.get_usize("block-size"), cfg.block_size);
+    cfg.local_iters = ov(c.get_usize("local-iters"), cfg.local_iters);
+    if c.get_f32("mask-lr") > 0.0 {
+        cfg.mask_lr = c.get_f32("mask-lr");
+    }
+    if !c.get("arch").is_empty() {
+        cfg.arch = c.get("arch");
+    }
+    if !c.get("dataset").is_empty() {
+        cfg.dataset = c.get("dataset");
+    }
+    if c.get_bool("noniid") {
+        cfg.iid = false;
+    }
+    cfg.seed = c.get_u64("seed");
+    Ok(cfg)
+}
+
+fn real_main() -> Result<()> {
+    let c = cli().parse().map_err(|e| anyhow!(e))?;
+    let cmd = c.positionals.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "presets" => {
+            println!("available presets (one per paper table; DESIGN.md §5):");
+            for p in PRESET_NAMES {
+                println!("  {p}");
+            }
+        }
+        "info" => {
+            let m =
+                bicompfl::runtime::Manifest::load(&bicompfl::runtime::manifest::default_dir())?;
+            m.check()?;
+            println!(
+                "artifacts: {} modules, train_batch={}, eval_batch={}",
+                m.artifacts.len(),
+                m.train_batch,
+                m.eval_batch
+            );
+            for a in &m.archs {
+                println!(
+                    "  arch {:<8} d={:<8} in={:?} width={}",
+                    a.name, a.d, a.in_shape, a.width
+                );
+            }
+        }
+        "train" => {
+            let cfg = build_cfg(&c)?;
+            let variant = match c.get("variant").as_str() {
+                "gr" => Variant::Gr,
+                "gr-reconst" => Variant::GrReconst,
+                "pr" => Variant::Pr,
+                "pr-splitdl" => Variant::PrSplitDl,
+                v => return Err(anyhow!("unknown variant {v}")),
+            };
+            let alloc = match c.get("alloc").as_str() {
+                "fixed" => bicompfl::config::Alloc::Fixed,
+                "adaptive" => bicompfl::config::Alloc::Adaptive,
+                "adaptive-avg" => bicompfl::config::Alloc::AdaptiveAvg,
+                v => return Err(anyhow!("unknown alloc {v}")),
+            };
+            let method = bicompfl::config::BiCompFlMethod { variant, alloc };
+            info!("train: {} on {}/{}", method.label(), cfg.dataset, cfg.arch);
+            let (d, recs) = if c.get_bool("fast") {
+                let mut oracle = bicompfl::exp::build_synthetic_oracle(&cfg);
+                let d = bicompfl::coordinator::MaskOracle::dim(&oracle);
+                (d, bicompfl::exp::run_bicompfl(&cfg, &method, &mut oracle))
+            } else {
+                let mut oracle = bicompfl::exp::build_runtime_oracle(&cfg)?;
+                let d = oracle.arch.d;
+                (d, bicompfl::exp::run_bicompfl(&cfg, &method, &mut oracle))
+            };
+            for r in &recs {
+                println!(
+                    "round {:>4}: loss {:.4} acc {:.4} ul {} dl {}",
+                    r.round, r.loss, r.acc, r.ul_bits, r.dl_bits
+                );
+            }
+            let rows = vec![bicompfl::metrics::TableRow::from_records(
+                &method.label(),
+                &recs,
+                d,
+                cfg.n_clients,
+            )];
+            println!("{}", render_table("train", &rows));
+        }
+        "exp" => {
+            let sub = c.positionals.get(1).map(|s| s.as_str()).unwrap_or("table");
+            let cfg = build_cfg(&c)?;
+            let fast = c.get_bool("fast");
+            let out = PathBuf::from(c.get("out"));
+            match sub {
+                "table" => {
+                    let filter = MethodFilter {
+                        baselines: !c.get_bool("no-baselines"),
+                        bicompfl: true,
+                        cfl: !c.get_bool("no-cfl"),
+                    };
+                    run_table(&cfg, filter, fast, &out)?;
+                }
+                "all-tables" => {
+                    for p in PRESET_NAMES.iter().filter(|p| **p != "quick") {
+                        let mut pc = preset(p).unwrap();
+                        if c.get_usize("rounds") > 0 {
+                            pc.rounds = c.get_usize("rounds");
+                        }
+                        pc.seed = cfg.seed;
+                        run_table(&pc, MethodFilter::default(), fast, &out)?;
+                    }
+                }
+                "ablate-clients" => {
+                    ablations::ablate_clients(&cfg, fast, &out)?;
+                }
+                "ablate-ndl" => {
+                    ablations::ablate_ndl(&cfg, fast, &out)?;
+                }
+                "ablate-blocksize" => {
+                    ablations::ablate_blocksize(&cfg, fast, &out)?;
+                }
+                "ablate-nis" => {
+                    ablations::ablate_nis(&cfg, fast, &out)?;
+                }
+                "ablate-prior" => {
+                    ablations::ablate_prior(&cfg, fast, &out)?;
+                }
+                other => return Err(anyhow!("unknown exp subcommand {other}")),
+            }
+        }
+        _ => {
+            eprintln!("{}", cli().usage());
+        }
+    }
+    Ok(())
+}

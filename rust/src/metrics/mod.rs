@@ -1,0 +1,173 @@
+//! Results recording: CSV round logs and JSON summaries under `results/`.
+//!
+//! Every experiment writes (a) a per-round CSV — one row per (method, round)
+//! with loss/acc/bits — and (b) a summary JSON with the table-level numbers
+//! (max acc, bpp, bpp(BC), UL/DL split) that regenerate the paper's tables.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::runner::{summarize, RoundRecord, RunSummary};
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub struct CsvLog {
+    file: fs::File,
+    pub path: PathBuf,
+}
+
+impl CsvLog {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut file = fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(file, "method,round,loss,acc,ul_bits,dl_bits,dl_bc_bits")?;
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn log(&mut self, method: &str, r: &RoundRecord) -> Result<()> {
+        writeln!(
+            self.file,
+            "{method},{},{:.6},{:.6},{},{},{}",
+            r.round, r.loss, r.acc, r.ul_bits, r.dl_bits, r.dl_bc_bits
+        )?;
+        Ok(())
+    }
+
+    pub fn log_all(&mut self, method: &str, recs: &[RoundRecord]) -> Result<()> {
+        for r in recs {
+            self.log(method, r)?;
+        }
+        Ok(())
+    }
+}
+
+/// One method-row of a paper table.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub method: String,
+    pub summary: RunSummary,
+}
+
+impl TableRow {
+    pub fn from_records(method: &str, recs: &[RoundRecord], d: usize, n: usize) -> Self {
+        Self {
+            method: method.to_string(),
+            summary: summarize(recs, d, n),
+        }
+    }
+}
+
+/// Render rows in the paper's Appendix-I table format.
+pub fn render_table(title: &str, rows: &[TableRow]) -> String {
+    let mut out = format!(
+        "## {title}\n\n| Method | Acc | bpp | bpp (BC) | Uplink | Downlink |\n|---|---|---|---|---|---|\n"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.3} | {} | {} | {} | {} |\n",
+            r.method,
+            r.summary.max_acc,
+            fmt_bpp(r.summary.bpp),
+            fmt_bpp(r.summary.bpp_bc),
+            fmt_bpp(r.summary.ul_bpp),
+            fmt_bpp(r.summary.dl_bpp),
+        ));
+    }
+    out
+}
+
+/// Two-significant-digit formatting like the paper's tables.
+pub fn fmt_bpp(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let digits = (1 - mag).max(0) as usize;
+    format!("{v:.digits$}")
+}
+
+pub fn write_summary_json(path: &Path, title: &str, rows: &[TableRow]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("method", s(&r.method)),
+                ("max_acc", num(r.summary.max_acc)),
+                ("final_loss", num(r.summary.final_loss)),
+                ("bpp", num(r.summary.bpp)),
+                ("bpp_bc", num(r.summary.bpp_bc)),
+                ("ul_bpp", num(r.summary.ul_bpp)),
+                ("dl_bpp", num(r.summary.dl_bpp)),
+            ])
+        })
+        .collect();
+    let j = obj(vec![("title", s(title)), ("rows", arr(rows_json))]);
+    fs::write(path, j.emit()).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss: 1.0 / (round + 1) as f64,
+            acc: 0.5 + 0.1 * round as f64,
+            ul_bits: 100,
+            dl_bits: 300,
+            dl_bc_bits: 100,
+        }
+    }
+
+    #[test]
+    fn csv_log_writes_rows() {
+        let dir = std::env::temp_dir().join("bicompfl_test_csv");
+        let path = dir.join("log.csv");
+        let mut log = CsvLog::create(&path).unwrap();
+        log.log_all("test", &[rec(0), rec(1)]).unwrap();
+        drop(log);
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("method,round"));
+        assert!(lines[1].starts_with("test,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_rendering_and_formatting() {
+        let rows = vec![TableRow::from_records("m1", &[rec(0), rec(1)], 10, 2)];
+        let t = render_table("Test", &rows);
+        assert!(t.contains("| m1 |"));
+        assert!(t.contains("## Test"));
+        assert_eq!(fmt_bpp(64.0), "64");
+        assert_eq!(fmt_bpp(0.3149), "0.31");
+        assert_eq!(fmt_bpp(0.0625), "0.062"); // ties-to-even
+        assert_eq!(fmt_bpp(2.28), "2.3");
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let dir = std::env::temp_dir().join("bicompfl_test_json");
+        let path = dir.join("summary.json");
+        let rows = vec![TableRow::from_records("m", &[rec(0)], 10, 2)];
+        write_summary_json(&path, "T", &rows).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req("title").as_str(), Some("T"));
+        assert_eq!(j.req("rows").as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,254 @@
+//! Block allocation strategies (paper §3 "Block Allocation", Appendix E).
+//!
+//! MRC is applied per block of the d-dimensional model; n_IS must be on the
+//! order of exp(per-block KL) for faithful sampling, so how entries are
+//! grouped into blocks controls both fidelity and cost:
+//!
+//! * **Fixed** — constant block size, no overhead. The baseline.
+//! * **Adaptive** (Isik et al. 2024) — per-iteration partition into blocks of
+//!   *equal KL mass*; every boundary costs log2(b_max) bits of signalling.
+//! * **Adaptive-Avg** (this paper) — a single equal block size chosen from
+//!   the *average* KL per entry, renegotiated only when the average drifts by
+//!   more than a factor; one log2(b_max) transmission per renegotiation.
+
+/// A concrete partition of [0, d) into blocks, plus its signalling overhead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockPlan {
+    /// Block boundaries: blocks are [bounds[i], bounds[i+1]).
+    pub bounds: Vec<usize>,
+    /// Signalling bits spent to communicate this plan (uplink metadata).
+    pub overhead_bits: u64,
+}
+
+impl BlockPlan {
+    pub fn n_blocks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn block(&self, b: usize) -> std::ops::Range<usize> {
+        self.bounds[b]..self.bounds[b + 1]
+    }
+
+    pub fn fixed(d: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && d > 0);
+        let mut bounds = Vec::with_capacity(d / block_size + 2);
+        let mut i = 0;
+        while i < d {
+            bounds.push(i);
+            i += block_size;
+        }
+        bounds.push(d);
+        Self {
+            bounds,
+            overhead_bits: 0,
+        }
+    }
+
+    /// Validate the plan covers [0, d) exactly, in order.
+    pub fn check(&self, d: usize) {
+        assert!(self.bounds.len() >= 2);
+        assert_eq!(*self.bounds.first().unwrap(), 0);
+        assert_eq!(*self.bounds.last().unwrap(), d);
+        for w in self.bounds.windows(2) {
+            assert!(w[0] < w[1], "empty or reversed block {w:?}");
+        }
+    }
+}
+
+/// Strategy state machine; one instance lives per training run and is shared
+/// by all parties (its decisions are driven by broadcast metadata).
+#[derive(Clone, Debug)]
+pub enum AllocationStrategy {
+    Fixed {
+        block_size: usize,
+    },
+    /// Equal-KL-mass partition, re-planned every round. `target_kl` is the
+    /// per-block divergence budget (nats), typically ln(n_IS).
+    Adaptive {
+        target_kl: f64,
+        b_max: usize,
+    },
+    /// Single size from the average KL; renegotiated when drift > factor.
+    AdaptiveAvg {
+        target_kl: f64,
+        b_max: usize,
+        drift_factor: f64,
+        current_size: usize,
+    },
+}
+
+impl AllocationStrategy {
+    pub fn fixed(block_size: usize) -> Self {
+        Self::Fixed { block_size }
+    }
+
+    pub fn adaptive(n_is: usize, b_max: usize) -> Self {
+        Self::Adaptive {
+            target_kl: (n_is as f64).ln(),
+            b_max,
+        }
+    }
+
+    pub fn adaptive_avg(n_is: usize, b_max: usize) -> Self {
+        Self::AdaptiveAvg {
+            target_kl: (n_is as f64).ln(),
+            b_max,
+            drift_factor: 1.5,
+            current_size: 0, // 0 = not yet negotiated
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fixed { .. } => "Fixed",
+            Self::Adaptive { .. } => "Adaptive",
+            Self::AdaptiveAvg { .. } => "Adaptive-Avg",
+        }
+    }
+
+    /// Produce the plan for this round given per-entry divergences (nats).
+    /// May mutate internal state (Adaptive-Avg renegotiation).
+    pub fn plan(&mut self, kl_each: &[f64]) -> BlockPlan {
+        let d = kl_each.len();
+        match self {
+            Self::Fixed { block_size } => BlockPlan::fixed(d, *block_size),
+            Self::Adaptive { target_kl, b_max } => {
+                let bits_per_boundary = (usize::BITS
+                    - (b_max.saturating_sub(1)).leading_zeros())
+                    as u64;
+                let mut bounds = vec![0usize];
+                let mut acc = 0.0f64;
+                let mut start = 0usize;
+                for (i, &k) in kl_each.iter().enumerate() {
+                    acc += k;
+                    let size = i + 1 - start;
+                    if (acc >= *target_kl && size >= 1) || size >= *b_max {
+                        bounds.push(i + 1);
+                        start = i + 1;
+                        acc = 0.0;
+                    }
+                }
+                if *bounds.last().unwrap() != d {
+                    bounds.push(d);
+                }
+                let n_blocks = bounds.len() - 1;
+                BlockPlan {
+                    bounds,
+                    overhead_bits: n_blocks as u64 * bits_per_boundary,
+                }
+            }
+            Self::AdaptiveAvg {
+                target_kl,
+                b_max,
+                drift_factor,
+                current_size,
+            } => {
+                let total: f64 = kl_each.iter().sum();
+                let per_entry = (total / d as f64).max(1e-9);
+                // Ideal size puts target_kl nats in each block.
+                let ideal = ((*target_kl / per_entry) as usize).clamp(1, *b_max);
+                let bits_per_boundary =
+                    (usize::BITS - (b_max.saturating_sub(1)).leading_zeros()) as u64;
+                let renegotiate = *current_size == 0 || {
+                    let ratio = ideal as f64 / *current_size as f64;
+                    ratio > *drift_factor || ratio < 1.0 / *drift_factor
+                };
+                let (size, overhead) = if renegotiate {
+                    (ideal, bits_per_boundary)
+                } else {
+                    (*current_size, 0)
+                };
+                *current_size = size;
+                let mut plan = BlockPlan::fixed(d, size);
+                plan.overhead_bits = overhead;
+                plan
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn fixed_plan_covers_with_tail() {
+        let p = BlockPlan::fixed(100, 32);
+        p.check(100);
+        assert_eq!(p.bounds, vec![0, 32, 64, 96, 100]);
+        assert_eq!(p.overhead_bits, 0);
+        assert_eq!(p.n_blocks(), 4);
+        assert_eq!(p.block(3), 96..100);
+    }
+
+    #[test]
+    fn adaptive_equalizes_kl_mass() {
+        let mut strat = AllocationStrategy::Adaptive {
+            target_kl: 1.0,
+            b_max: 1000,
+        };
+        // Rising divergence: early blocks should be longer than late blocks.
+        let kl: Vec<f64> = (0..1000).map(|i| 0.001 + i as f64 * 1e-5).collect();
+        let plan = strat.plan(&kl);
+        plan.check(1000);
+        let sizes: Vec<usize> = (0..plan.n_blocks()).map(|b| plan.block(b).len()).collect();
+        assert!(*sizes.first().unwrap() > sizes[sizes.len() - 2]);
+        // Each full block's KL mass ~ target (within one entry's divergence).
+        for b in 0..plan.n_blocks() - 1 {
+            let mass: f64 = kl[plan.block(b)].iter().sum();
+            assert!(mass >= 1.0 - 0.02 && mass < 1.1, "block {b} mass {mass}");
+        }
+        assert!(plan.overhead_bits > 0);
+    }
+
+    #[test]
+    fn adaptive_respects_bmax() {
+        let mut strat = AllocationStrategy::Adaptive {
+            target_kl: 100.0,
+            b_max: 64,
+        };
+        let kl = vec![1e-9; 1000];
+        let plan = strat.plan(&kl);
+        plan.check(1000);
+        for b in 0..plan.n_blocks() {
+            assert!(plan.block(b).len() <= 64);
+        }
+    }
+
+    #[test]
+    fn adaptive_avg_negotiates_then_holds() {
+        let mut strat = AllocationStrategy::adaptive_avg(256, 4096);
+        let kl = vec![0.02f64; 10_000];
+        let p1 = strat.plan(&kl);
+        p1.check(10_000);
+        assert!(p1.overhead_bits > 0, "first plan must signal a size");
+        let expected = ((256f64.ln() / 0.02) as usize).clamp(1, 4096);
+        assert_eq!(p1.block(0).len(), expected);
+        // Mild drift: keep the size, zero overhead.
+        let kl2 = vec![0.021f64; 10_000];
+        let p2 = strat.plan(&kl2);
+        assert_eq!(p2.block(0).len(), expected);
+        assert_eq!(p2.overhead_bits, 0);
+        // Large drift: renegotiate.
+        let kl3 = vec![0.2f64; 10_000];
+        let p3 = strat.plan(&kl3);
+        assert!(p3.block(0).len() < expected);
+        assert!(p3.overhead_bits > 0);
+    }
+
+    #[test]
+    fn prop_all_strategies_cover() {
+        run_prop("block-cover", 50, |rng, case| {
+            let d = 1 + rng.next_below(5000);
+            let kl: Vec<f64> = (0..d).map(|_| rng.next_f64() * 0.1).collect();
+            let mut strat = match case % 3 {
+                0 => AllocationStrategy::fixed(1 + rng.next_below(512)),
+                1 => AllocationStrategy::adaptive(256, 1 + rng.next_below(2048)),
+                _ => AllocationStrategy::adaptive_avg(256, 1 + rng.next_below(2048)),
+            };
+            let plan = strat.plan(&kl);
+            plan.check(d);
+        });
+    }
+}

@@ -1,0 +1,303 @@
+//! The MRC block encoder/decoder over Bernoulli vectors.
+//!
+//! ## Weight computation (the L3 hot path)
+//!
+//! For a block of m entries with posterior q and prior p, candidate i's
+//! importance log-weight is
+//!
+//! ```text
+//! ln W~(i) = sum_e [ x_ie * ln(q_e/p_e) + (1 - x_ie) * ln((1-q_e)/(1-p_e)) ]
+//!          = B + sum_{e: x_ie = 1} (a_e - b_e)
+//! ```
+//!
+//! with `a_e = ln(q_e/p_e)`, `b_e = ln((1-q_e)/(1-p_e))`, `B = Σ b_e`. The
+//! per-entry ratios are precomputed once per block and reused across all
+//! n_IS candidates; the common offset B cancels in the softmax and is never
+//! added. Candidate bits are regenerated on the fly from Philox counters —
+//! candidates are O(1) memory, the decoder reads only the selected one.
+//!
+//! ## Index sampling
+//!
+//! I ~ softmax(ℓ) via the Gumbel-max trick with the encoder's *private*
+//! randomness (the index itself is the message — it must not be derivable by
+//! the decoder, only interpretable).
+
+use crate::util::rng::{Philox, Xoshiro256};
+use super::kl::clamp_param;
+
+/// Encoder/decoder for one MRC block configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockCodec {
+    /// Number of importance-sampling candidates; the index costs
+    /// log2(n_is) bits. Power of two recommended.
+    pub n_is: usize,
+}
+
+/// Encoder output for one block.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeOut {
+    pub index: u32,
+    /// Bits to transmit the index: log2(n_is) (ceil for non-powers of two).
+    pub bits: u64,
+}
+
+impl BlockCodec {
+    pub fn new(n_is: usize) -> Self {
+        assert!(n_is >= 2);
+        Self { n_is }
+    }
+
+    /// ceil(log2(n_is)) — the index cost in bits.
+    #[inline]
+    pub fn index_bits(&self) -> u64 {
+        (usize::BITS - (self.n_is - 1).leading_zeros()) as u64
+    }
+
+    /// Philox counter stride per candidate (4 uniform lanes per block).
+    #[inline]
+    fn stride(m: usize) -> u64 {
+        ((m + 3) / 4) as u64
+    }
+
+    /// Regenerate candidate `i`'s Bernoulli(p) bits into `out` (0.0/1.0).
+    pub fn candidate_bits(
+        &self,
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        i: u32,
+        out: &mut [f32],
+    ) {
+        let m = p.len();
+        debug_assert_eq!(out.len(), m);
+        let stride = Self::stride(m);
+        let base = sample_idx * self.n_is as u64 * stride + i as u64 * stride;
+        let mut e = 0usize;
+        let mut ctr = 0u64;
+        while e < m {
+            let u4 = stream.uniform4_at(base + ctr);
+            let take = (m - e).min(4);
+            for lane in 0..take {
+                out[e + lane] = if u4[lane] < clamp_param(p[e + lane]) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            e += take;
+            ctr += 1;
+        }
+    }
+
+    /// Encode one block: compute all candidate log-weights, Gumbel-max
+    /// sample an index with the encoder's private `sel` randomness.
+    ///
+    /// `sample_idx` distinguishes the n_UL / n_DL repetitions so each uses a
+    /// fresh candidate set from the same stream.
+    pub fn encode(
+        &self,
+        q: &[f32],
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        sel: &mut Xoshiro256,
+    ) -> EncodeOut {
+        let m = q.len();
+        debug_assert_eq!(p.len(), m);
+        // Precompute per-entry log-ratio deltas: on-bit contribution a_e - b_e
+        // (the constant Σ b_e cancels in the softmax).
+        let mut delta = vec![0.0f32; m];
+        let mut pc = vec![0.0f32; m];
+        for e in 0..m {
+            let qe = clamp_param(q[e]);
+            let pe = clamp_param(p[e]);
+            pc[e] = pe;
+            delta[e] = (qe / pe).ln() - ((1.0 - qe) / (1.0 - pe)).ln();
+        }
+
+        let stride = Self::stride(m);
+        let sample_base = sample_idx * self.n_is as u64 * stride;
+        let full = m & !3; // largest multiple of 4
+        let mut best_idx = 0u32;
+        let mut best_val = f64::NEG_INFINITY;
+        for i in 0..self.n_is {
+            let base = sample_base + i as u64 * stride;
+            // Branchless 4-lane accumulation: one Philox block yields the
+            // four uniforms of an entry group; the select compiles to a
+            // compare + masked add (vectorizable, no data-dependent branch).
+            let mut acc = [0.0f32; 4];
+            let mut ctr = 0u64;
+            let mut e = 0usize;
+            while e < full {
+                let u = stream.uniform4_at(base + ctr);
+                acc[0] += delta[e] * ((u[0] < pc[e]) as u32 as f32);
+                acc[1] += delta[e + 1] * ((u[1] < pc[e + 1]) as u32 as f32);
+                acc[2] += delta[e + 2] * ((u[2] < pc[e + 2]) as u32 as f32);
+                acc[3] += delta[e + 3] * ((u[3] < pc[e + 3]) as u32 as f32);
+                e += 4;
+                ctr += 1;
+            }
+            if e < m {
+                let u = stream.uniform4_at(base + ctr);
+                for lane in 0..(m - e) {
+                    acc[lane] += delta[e + lane] * ((u[lane] < pc[e + lane]) as u32 as f32);
+                }
+            }
+            let logw = (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
+            // Gumbel-max: argmax_i (logw_i + G_i), G_i ~ Gumbel(0,1).
+            let g = -(-(sel.next_f64().max(1e-300)).ln()).ln();
+            let val = logw + g;
+            if val > best_val {
+                best_val = val;
+                best_idx = i as u32;
+            }
+        }
+        EncodeOut {
+            index: best_idx,
+            bits: self.index_bits(),
+        }
+    }
+
+    /// Decode one block: regenerate the selected candidate's bits.
+    pub fn decode(
+        &self,
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        index: u32,
+        out: &mut [f32],
+    ) {
+        self.candidate_bits(p, stream, sample_idx, index, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mrc::kl::bern_kl_vec;
+    use crate::util::prop::{bern_param, len_in, run_prop};
+
+    fn stream() -> Philox {
+        Philox::keyed(0xC0DEC, 7)
+    }
+
+    #[test]
+    fn index_bits_power_of_two() {
+        assert_eq!(BlockCodec::new(2).index_bits(), 1);
+        assert_eq!(BlockCodec::new(256).index_bits(), 8);
+        assert_eq!(BlockCodec::new(1024).index_bits(), 10);
+        assert_eq!(BlockCodec::new(300).index_bits(), 9); // ceil
+    }
+
+    #[test]
+    fn decode_reproduces_encoder_candidate() {
+        // The decoder must regenerate exactly the candidate the encoder saw.
+        run_prop("codec-roundtrip", 30, |rng, _| {
+            let m = len_in(rng, 200);
+            let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+            let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+            let codec = BlockCodec::new(64);
+            let st = stream();
+            let mut sel = rng.fork(1);
+            let out = codec.encode(&q, &p, &st, 3, &mut sel);
+            assert!((out.index as usize) < 64);
+            let mut dec = vec![0.0f32; m];
+            codec.decode(&p, &st, 3, out.index, &mut dec);
+            let mut expect = vec![0.0f32; m];
+            codec.candidate_bits(&p, &st, 3, out.index, &mut expect);
+            assert_eq!(dec, expect);
+            assert!(dec.iter().all(|&b| b == 0.0 || b == 1.0));
+        });
+    }
+
+    #[test]
+    fn different_sample_idx_gives_fresh_candidates() {
+        let p = vec![0.5f32; 64];
+        let codec = BlockCodec::new(16);
+        let st = stream();
+        let mut a = vec![0.0f32; 64];
+        let mut b = vec![0.0f32; 64];
+        codec.candidate_bits(&p, &st, 0, 3, &mut a);
+        codec.candidate_bits(&p, &st, 1, 3, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn candidate_density_follows_prior() {
+        let p = vec![0.2f32; 4000];
+        let codec = BlockCodec::new(8);
+        let st = stream();
+        let mut bits = vec![0.0f32; 4000];
+        let mut total = 0.0;
+        for i in 0..8 {
+            codec.candidate_bits(&p, &st, 0, i, &mut bits);
+            total += bits.iter().sum::<f32>();
+        }
+        let density = total / (8.0 * 4000.0);
+        assert!((density - 0.2).abs() < 0.02, "density {density}");
+    }
+
+    #[test]
+    fn mrc_estimate_approaches_posterior_when_nis_large() {
+        // Statistical: with n_IS >> exp(KL), the decoded samples' mean over
+        // many repetitions approaches q, not p.
+        let mut rng = Xoshiro256::new(9);
+        let m = 64;
+        let q = vec![0.7f32; m];
+        let p = vec![0.5f32; m];
+        let kl = bern_kl_vec(&q, &p); // ~ 64 * 0.082 = 5.3 nats
+        let n_is = (kl.exp() * 8.0) as usize; // comfortably above exp(KL)
+        let codec = BlockCodec::new(n_is.next_power_of_two());
+        let reps = 200;
+        let mut mean = vec![0.0f64; m];
+        let mut out = vec![0.0f32; m];
+        for r in 0..reps {
+            let st = Philox::keyed(0xFEED, r as u64);
+            let e = codec.encode(&q, &p, &st, 0, &mut rng);
+            codec.decode(&p, &st, 0, e.index, &mut out);
+            for (acc, &b) in mean.iter_mut().zip(&out) {
+                *acc += b as f64;
+            }
+        }
+        let avg: f64 = mean.iter().map(|&x| x / reps as f64).sum::<f64>() / m as f64;
+        assert!(
+            (avg - 0.7).abs() < 0.05,
+            "decoded density {avg}, want ~0.7 (prior 0.5)"
+        );
+    }
+
+    #[test]
+    fn identical_priors_make_mrc_unbiased_sampler() {
+        // q == p => W uniform => decoded bits are plain prior samples.
+        let mut rng = Xoshiro256::new(10);
+        let m = 128;
+        let q = vec![0.35f32; m];
+        let codec = BlockCodec::new(32);
+        let mut mean = 0.0f64;
+        let mut out = vec![0.0f32; m];
+        let reps = 300;
+        for r in 0..reps {
+            let st = Philox::keyed(0xABBA, r as u64);
+            let e = codec.encode(&q, &q, &st, 0, &mut rng);
+            codec.decode(&q, &st, 0, e.index, &mut out);
+            mean += out.iter().sum::<f32>() as f64;
+        }
+        let density = mean / (reps as f64 * m as f64);
+        assert!((density - 0.35).abs() < 0.02, "density {density}");
+    }
+
+    #[test]
+    fn extreme_parameters_clamped_not_nan() {
+        let q = vec![0.0f32, 1.0, 0.5];
+        let p = vec![1.0f32, 0.0, 0.5];
+        let codec = BlockCodec::new(8);
+        let st = stream();
+        let mut sel = Xoshiro256::new(1);
+        let e = codec.encode(&q, &p, &st, 0, &mut sel);
+        let mut out = vec![0.0f32; 3];
+        codec.decode(&p, &st, 0, e.index, &mut out);
+        assert!(out.iter().all(|b| b.is_finite()));
+    }
+
+    use crate::util::rng::Xoshiro256;
+}

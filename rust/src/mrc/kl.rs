@@ -1,0 +1,138 @@
+//! Bernoulli KL-divergence utilities.
+//!
+//! The MRC communication cost is governed by D_KL(Q‖P): `n_IS` must be on
+//! the order of exp(D_KL) for the importance-sampling estimate to be
+//! faithful (Chatterjee & Diaconis 2018). These helpers compute per-entry
+//! divergences in nats, and the KL-ball projection that enforces the
+//! bounded-progress assumption |q - p| <= rho of Theorem 1.
+
+/// Parameter clamp: keeps divergences finite and matches the codec's domain.
+pub const EPS: f32 = 1e-3;
+
+#[inline]
+pub fn clamp_param(p: f32) -> f32 {
+    p.clamp(EPS, 1.0 - EPS)
+}
+
+/// d_KL(q ‖ p) between Bernoulli(q) and Bernoulli(p), in nats.
+#[inline]
+pub fn bern_kl(q: f32, p: f32) -> f64 {
+    let q = clamp_param(q) as f64;
+    let p = clamp_param(p) as f64;
+    q * (q / p).ln() + (1.0 - q) * ((1.0 - q) / (1.0 - p)).ln()
+}
+
+/// Sum of per-entry Bernoulli divergences over a slice pair (nats).
+pub fn bern_kl_vec(q: &[f32], p: &[f32]) -> f64 {
+    debug_assert_eq!(q.len(), p.len());
+    q.iter().zip(p).map(|(&a, &b)| bern_kl(a, b)).sum()
+}
+
+/// Per-entry divergences (nats), written into `out`.
+pub fn bern_kl_each(q: &[f32], p: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(q.len(), p.len());
+    for ((o, &a), &b) in out.iter_mut().zip(q).zip(p) {
+        *o = bern_kl(a, b);
+    }
+}
+
+/// Project q onto the KL ball {x : d_KL(x ‖ p) <= budget} (per entry).
+///
+/// d_KL(· ‖ p) is convex with minimum 0 at q = p, so the projection moves q
+/// toward p along the line segment; we bisect on the divergence. This is the
+/// enforcement mechanism for Theorem 1's bounded-progress assumption (the
+/// paper: "can be strictly enforced through the projection of q_j onto a KL
+/// ball around p_j of fixed divergence").
+pub fn project_kl_ball(q: f32, p: f32, budget: f64) -> f32 {
+    let q = clamp_param(q);
+    let p = clamp_param(p);
+    if bern_kl(q, p) <= budget {
+        return q;
+    }
+    let (mut lo, mut hi) = (0.0f32, 1.0f32); // interpolation t: p + t(q-p)
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        let x = p + mid * (q - p);
+        if bern_kl(x, p) <= budget {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    p + lo * (q - p)
+}
+
+/// In-place KL-ball projection of a posterior vector toward its prior.
+pub fn project_kl_ball_vec(q: &mut [f32], p: &[f32], budget_per_entry: f64) {
+    for (qe, &pe) in q.iter_mut().zip(p) {
+        *qe = project_kl_ball(*qe, pe, budget_per_entry);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{bern_param, run_prop};
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        assert_eq!(bern_kl(0.3, 0.3), 0.0);
+        assert!(bern_kl(0.3, 0.7) > 0.0);
+        assert!(bern_kl(0.7, 0.3) > 0.0);
+    }
+
+    #[test]
+    fn kl_known_value() {
+        // d_KL(0.5 || 0.25) = 0.5 ln2 + 0.5 ln(2/3)
+        let expect = 0.5 * (2.0f64).ln() + 0.5 * (2.0f64 / 3.0).ln();
+        assert!((bern_kl(0.5, 0.25) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_handles_extremes_finite() {
+        assert!(bern_kl(0.0, 1.0).is_finite());
+        assert!(bern_kl(1.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn vec_matches_scalar_sum() {
+        let q = [0.2f32, 0.8, 0.5];
+        let p = [0.5f32, 0.5, 0.5];
+        let s: f64 = q.iter().zip(&p).map(|(&a, &b)| bern_kl(a, b)).sum();
+        assert!((bern_kl_vec(&q, &p) - s).abs() < 1e-12);
+        let mut each = [0.0f64; 3];
+        bern_kl_each(&q, &p, &mut each);
+        assert!((each.iter().sum::<f64>() - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projection_enforces_budget_and_is_noop_inside() {
+        run_prop("kl-projection", 200, |rng, _| {
+            let p = bern_param(rng, 0.01);
+            let q = bern_param(rng, 0.01);
+            let budget = rng.next_f64() * 0.2;
+            let proj = project_kl_ball(q, p, budget);
+            assert!(
+                bern_kl(proj, p) <= budget + 1e-6,
+                "q={q} p={p} budget={budget} proj={proj}"
+            );
+            if bern_kl(q, p) <= budget {
+                assert_eq!(proj, clamp_param(q));
+            }
+            // Projection stays on the segment [p, q].
+            let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+            assert!((lo - 1e-6..=hi + 1e-6).contains(&proj));
+        });
+    }
+
+    #[test]
+    fn projection_vec_applies_per_entry() {
+        let mut q = vec![0.99f32, 0.5, 0.01];
+        let p = vec![0.5f32, 0.5, 0.5];
+        project_kl_ball_vec(&mut q, &p, 0.05);
+        for (qe, pe) in q.iter().zip(&p) {
+            assert!(bern_kl(*qe, *pe) <= 0.05 + 1e-6);
+        }
+        assert_eq!(q[1], 0.5);
+    }
+}

@@ -1,0 +1,23 @@
+//! Minimal Random Coding (MRC) over Bernoulli vectors — the compression
+//! engine of BiCompFL (§2, §3, Appendix H).
+//!
+//! To transmit a sample from posterior Q using a shared prior P and shared
+//! randomness, both parties conceptually draw `n_IS` candidates X_1..X_nIS
+//! i.i.d. from P; the encoder samples an index I from the importance-weight
+//! distribution W(i) ∝ Q(X_i)/P(X_i) and transmits only I (log2(n_IS) bits);
+//! the decoder reconstructs X_I. The candidates are never stored or sent:
+//! both sides regenerate them from a counter-based RNG ([`crate::util::rng::Philox`]).
+//!
+//! Submodules:
+//! * [`kl`]     — Bernoulli KL utilities and the KL-ball projection (§5).
+//! * [`codec`]  — the block encoder/decoder (log-domain weights, Gumbel-max).
+//! * [`block`]  — block allocation strategies (Fixed / Adaptive / Adaptive-Avg).
+//! * [`theory`] — Prop. 1 / Lemma 1 / Lemma 2 / Theorem 1 bound calculators.
+
+pub mod kl;
+pub mod codec;
+pub mod block;
+pub mod theory;
+
+pub use block::{AllocationStrategy, BlockPlan};
+pub use codec::BlockCodec;

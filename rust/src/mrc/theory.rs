@@ -1,0 +1,196 @@
+//! Theory-bound calculators for the paper's §5 / Appendix B results, with
+//! empirical validation in the tests.
+//!
+//! * [`prop1_bound`]  — Proposition 1: |Pr(X=1) − q| ≤ q (max{p/q, (1−p)/(1−q),
+//!   q/p, (1−q)/(1−p)} − 1). n_IS-independent.
+//! * [`lemma2_bound`] — Lemma 2: |Pr(X=1) − q| ≤ Δ′/n_IS² +
+//!   C·(Δ+Δ²)·sqrt(6 p log(2 n_IS)/n_IS), the refined bound capturing n_IS.
+//! * [`lemma1_delta`] — Lemma 1: the contraction coefficient δ for
+//!   C_mrc(Q_s(·)) (the Big-O constant is taken as 1, as in the paper's
+//!   asymptotic statement; the tests check the *shape*, monotonicity, and the
+//!   empirical contraction directly).
+//! * [`theorem1_bound`] — Theorem 1: high-probability bound on
+//!   d_KL((1/n)Σ q̂_j ‖ p_i) exposing the uplink/downlink interplay.
+
+/// Δ := q/p − (1−q)/(1−p); the signed weight spread of Lemma 2.
+pub fn delta(q: f64, p: f64) -> f64 {
+    q / p - (1.0 - q) / (1.0 - p)
+}
+
+/// Δ′ := q (p/q + (1−p)/(1−q)).
+pub fn delta_prime(q: f64, p: f64) -> f64 {
+    q * (p / q + (1.0 - p) / (1.0 - q))
+}
+
+/// Proposition 1 bound on the per-sample bias |Pr(X=1) − q|.
+pub fn prop1_bound(q: f64, p: f64) -> f64 {
+    let m = (p / q)
+        .max((1.0 - p) / (1.0 - q))
+        .max(q / p)
+        .max((1.0 - q) / (1.0 - p));
+    q * (m - 1.0)
+}
+
+/// Lemma 2 bound on |Pr(X=1) − q| with explicit n_IS dependence.
+/// `c` is the constant hidden in the O(·) (1.0 for the nominal bound).
+pub fn lemma2_bound(q: f64, p: f64, n_is: usize, c: f64) -> f64 {
+    let d = delta(q, p).abs();
+    let dp = delta_prime(q, p);
+    let n = n_is as f64;
+    dp / (n * n) + c * (d + d * d) * (6.0 * p * (2.0 * n).ln() / n).sqrt()
+}
+
+/// Lemma 1 contraction coefficient δ for C_mrc(Q_s(·)) with s quantization
+/// levels on a d-dimensional vector; requires s ≥ sqrt(2 d) for δ ∈ [0, 1].
+pub fn lemma1_delta(
+    d_dim: usize,
+    s_levels: usize,
+    q_max: f64,
+    p_max: f64,
+    n_is: usize,
+) -> f64 {
+    let dbar = delta(q_max, p_max).abs();
+    let dpbar = delta_prime(q_max, p_max);
+    let n = n_is as f64;
+    let inner = 1.0
+        + dpbar / (n * n)
+        + (dbar + dbar * dbar) * (6.0 * p_max * (2.0 * n).ln() / n).sqrt();
+    1.0 - (d_dim as f64 / (s_levels * s_levels) as f64) * inner
+}
+
+/// Theorem 1: with probability 1−δ′, d_KL((1/n)Σ q̂_j ‖ p_i) is bounded by
+/// the sum below. All clients share (q_j, p_j) bounds: |q_j−p_j| ≤ rho,
+/// |p_i−p_j| ≤ zeta.
+#[allow(clippy::too_many_arguments)]
+pub fn theorem1_bound(
+    n_clients: usize,
+    q: &[f64],
+    p: &[f64],
+    p_i: f64,
+    zeta: f64,
+    rho: f64,
+    n_is: usize,
+    n_ul: usize,
+    delta_conf: f64,
+) -> f64 {
+    assert_eq!(q.len(), n_clients);
+    assert_eq!(p.len(), n_clients);
+    let n = n_is as f64;
+    let mut total = 0.0;
+    for j in 0..n_clients {
+        assert!(p[j] > zeta, "Theorem 1 requires p_j > zeta");
+        let dj = q[j] / (p[j] - zeta) - (1.0 - q[j]) / (1.0 - p[j] + zeta);
+        let dpj = q[j] * ((p[j] + zeta) / q[j] + (1.0 - p[j] + zeta) / (1.0 - q[j]));
+        let hoeffding = ((2.0f64 / delta_conf).ln() / (2.0 * n_ul as f64)).sqrt();
+        let big_o = (dj.abs() + dj * dj)
+            * (6.0 * (p_i + zeta) * (2.0 * n).ln() / n).sqrt();
+        let inner = dpj / (n * n) + hoeffding + rho + zeta * zeta + big_o;
+        total += 2.0 / (n_clients as f64 * p_i.min(1.0 - p_i)) * inner;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mrc::codec::BlockCodec;
+    use crate::util::rng::{Philox, Xoshiro256};
+
+    /// Empirical Pr(X=1) of the MRC sampler for scalar Bernoulli (q, p).
+    fn empirical_bias(q: f32, p: f32, n_is: usize, reps: usize) -> f64 {
+        let codec = BlockCodec::new(n_is);
+        let mut sel = Xoshiro256::new(0xB1A5);
+        let qv = [q];
+        let pv = [p];
+        let mut ones = 0usize;
+        let mut out = [0.0f32];
+        for r in 0..reps {
+            let st = Philox::keyed(0x7E57, r as u64);
+            let e = codec.encode(&qv, &pv, &st, 0, &mut sel);
+            codec.decode(&pv, &st, 0, e.index, &mut out);
+            if out[0] == 1.0 {
+                ones += 1;
+            }
+        }
+        ones as f64 / reps as f64
+    }
+
+    #[test]
+    fn bounds_vanish_when_q_equals_p() {
+        // Prop. 1 vanishes exactly at q = p (the property Chatterjee-Diaconis
+        // lacks); Lemma 2 retains only the Δ'/n_IS² residue.
+        assert!(prop1_bound(0.4, 0.4).abs() < 1e-12);
+        assert_eq!(delta(0.3, 0.3), 0.0);
+        let l2 = lemma2_bound(0.4, 0.4, 256, 1.0);
+        assert!(l2 <= delta_prime(0.4, 0.4) / (256.0f64 * 256.0) + 1e-12);
+    }
+
+    #[test]
+    fn lemma2_decreases_in_nis() {
+        let b64 = lemma2_bound(0.6, 0.4, 64, 1.0);
+        let b256 = lemma2_bound(0.6, 0.4, 256, 1.0);
+        let b4096 = lemma2_bound(0.6, 0.4, 4096, 1.0);
+        assert!(b64 > b256 && b256 > b4096);
+    }
+
+    #[test]
+    fn empirical_bias_within_prop1() {
+        // Prop. 1 holds for any n_IS.
+        for &(q, p) in &[(0.6f32, 0.5f32), (0.3, 0.5), (0.8, 0.6)] {
+            let hat = empirical_bias(q, p, 16, 4000);
+            let bound = prop1_bound(q as f64, p as f64);
+            // 3-sigma statistical slack on the estimate itself.
+            let sigma = (0.25f64 / 4000.0).sqrt() * 3.0;
+            assert!(
+                (hat - q as f64).abs() <= bound + sigma,
+                "q={q} p={p}: |{hat}-{q}| > {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_bias_shrinks_with_nis_like_lemma2() {
+        // The refinement: bias decreases as n_IS grows. Compare small vs
+        // large n_IS empirically for a fixed (q, p) pair.
+        let (q, p) = (0.75f32, 0.45f32);
+        let small = (empirical_bias(q, p, 4, 6000) - q as f64).abs();
+        let large = (empirical_bias(q, p, 512, 6000) - q as f64).abs();
+        assert!(
+            large < small,
+            "bias should shrink with n_IS: small={small} large={large}"
+        );
+        // And the large-n_IS bias is within the Lemma-2 envelope (c=1).
+        let bound = lemma2_bound(q as f64, p as f64, 512, 1.0);
+        let sigma = (0.25f64 / 6000.0).sqrt() * 3.0;
+        assert!(large <= bound + sigma, "large-n_IS bias {large} > bound {bound}");
+    }
+
+    #[test]
+    fn lemma1_delta_shape() {
+        // s >= sqrt(2d) makes delta in (0, 1] as n_IS grows.
+        let d = 100;
+        let s = ((2.0 * d as f64).sqrt().ceil()) as usize + 5;
+        let del = lemma1_delta(d, s, 0.6, 0.5, 4096);
+        assert!(del > 0.0 && del <= 1.0, "delta={del}");
+        // More quantization levels => stronger contraction.
+        assert!(lemma1_delta(d, 4 * s, 0.6, 0.5, 4096) > del);
+    }
+
+    #[test]
+    fn theorem1_interplay() {
+        let n = 10;
+        let q = vec![0.55f64; n];
+        let p = vec![0.5f64; n];
+        let base = theorem1_bound(n, &q, &p, 0.5, 0.0, 0.05, 256, 1, 0.05);
+        assert!(base.is_finite() && base > 0.0);
+        // More uplink samples tighten the downlink bound (1/sqrt(n_UL)).
+        let more_ul = theorem1_bound(n, &q, &p, 0.5, 0.0, 0.05, 256, 16, 0.05);
+        assert!(more_ul < base);
+        // Prior disagreement (zeta > 0) loosens it.
+        let with_zeta = theorem1_bound(n, &q, &p, 0.5, 0.05, 0.05, 256, 1, 0.05);
+        assert!(with_zeta > base);
+        // Larger n_IS tightens it.
+        let more_is = theorem1_bound(n, &q, &p, 0.5, 0.0, 0.05, 4096, 1, 0.05);
+        assert!(more_is < base);
+    }
+}

@@ -1,0 +1,157 @@
+//! One compiled XLA executable: HLO text → PJRT compile → typed execute.
+//!
+//! The interchange is HLO *text* (not serialized HloModuleProto): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Artifacts were lowered with `return_tuple=True`, so
+//! every execution returns a tuple literal we decompose here.
+
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ArtifactInfo;
+
+thread_local! {
+    static CLIENT: std::cell::OnceCell<xla::PjRtClient> = const { std::cell::OnceCell::new() };
+}
+
+/// Shared PJRT CPU client, one per thread (the `xla` crate's client is
+/// Rc-based and not Send; all XLA execution stays on the calling thread —
+/// the coordinator parallelizes MRC, not model steps).
+pub fn client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = cell.set(c);
+        }
+        Ok(cell.get().unwrap().clone())
+    })
+}
+
+/// Inputs to an execution: f32 slices or i32 slices with shapes.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+}
+
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+}
+
+impl Artifact {
+    /// Load + compile one artifact.
+    pub fn load(name: &str, info: &ArtifactInfo) -> Result<Self> {
+        let c = client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = c
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        Ok(Self {
+            name: name.to_string(),
+            exe,
+            info: info.clone(),
+        })
+    }
+
+    /// Execute with the given args; returns the decomposed output tuple as
+    /// f32 vectors (all our artifact outputs are f32).
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.info.input_shapes.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.info.input_shapes.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let lit = match a {
+                Arg::F32(data, shape) => {
+                    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                    let expected: usize = shape.iter().product();
+                    if data.len() != expected {
+                        return Err(anyhow!(
+                            "{}: input {i} has {} elems, shape {:?} wants {expected}",
+                            self.name,
+                            data.len(),
+                            shape
+                        ));
+                    }
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                Arg::I32(data, shape) => {
+                    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                Arg::ScalarF32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{default_dir, Manifest};
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn smoke_artifact_round_trips() {
+        let Some(m) = manifest() else { return };
+        let art = Artifact::load("smoke", m.artifact("smoke").unwrap()).unwrap();
+        // smoke(x, y) = matmul(x, y) + 2 over f32[2,2].
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [1.0f32, 1.0, 1.0, 1.0];
+        let out = art
+            .run(&[Arg::F32(&x, &[2, 2]), Arg::F32(&y, &[2, 2])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn wrong_arity_is_error() {
+        let Some(m) = manifest() else { return };
+        let art = Artifact::load("smoke", m.artifact("smoke").unwrap()).unwrap();
+        let x = [0.0f32; 4];
+        assert!(art.run(&[Arg::F32(&x, &[2, 2])]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_is_error() {
+        let Some(m) = manifest() else { return };
+        let art = Artifact::load("smoke", m.artifact("smoke").unwrap()).unwrap();
+        let x = [0.0f32; 6];
+        let y = [0.0f32; 4];
+        assert!(art
+            .run(&[Arg::F32(&x, &[2, 2]), Arg::F32(&y, &[2, 2])])
+            .is_err());
+    }
+}

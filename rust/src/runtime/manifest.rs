@@ -1,0 +1,229 @@
+//! The artifact manifest: the contract between `python/compile/aot.py` and
+//! this runtime. Shapes, dtypes, parameter layouts and batch sizes all come
+//! from here — nothing about the model is hard-coded on the Rust side.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub fan_in: usize,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArchInfo {
+    pub name: String,
+    pub d: usize,
+    /// (H, W, C)
+    pub in_shape: (usize, usize, usize),
+    pub width: f64,
+    pub params: Vec<ParamSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub archs: Vec<ArchInfo>,
+    pub artifacts: Vec<(String, ArtifactInfo)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let shapes = |v: &Json, key: &str| -> Result<Vec<Vec<usize>>> {
+            v.req(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(|s| {
+                    s.req("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("shape not an array"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect()
+                })
+                .collect()
+        };
+
+        let mut archs = Vec::new();
+        for (name, a) in j.req("archs").as_obj().ok_or_else(|| anyhow!("archs"))? {
+            let ins = a.req("in_shape").as_arr().ok_or_else(|| anyhow!("in_shape"))?;
+            let params = a
+                .req("params")
+                .as_arr()
+                .ok_or_else(|| anyhow!("params"))?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.req("name").as_str().unwrap_or_default().to_string(),
+                        shape: p
+                            .req("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("param shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<_>>()?,
+                        offset: p.req("offset").as_usize().ok_or_else(|| anyhow!("offset"))?,
+                        fan_in: p.req("fan_in").as_usize().ok_or_else(|| anyhow!("fan_in"))?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            archs.push(ArchInfo {
+                name: name.clone(),
+                d: a.req("d").as_usize().ok_or_else(|| anyhow!("d"))?,
+                in_shape: (
+                    ins[0].as_usize().unwrap_or(0),
+                    ins[1].as_usize().unwrap_or(0),
+                    ins[2].as_usize().unwrap_or(0),
+                ),
+                width: a.req("width").as_f64().unwrap_or(1.0),
+                params,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for (name, art) in j
+            .req("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts"))?
+        {
+            artifacts.push((
+                name.clone(),
+                ArtifactInfo {
+                    file: dir.join(art.req("file").as_str().unwrap_or_default()),
+                    input_shapes: shapes(art, "inputs")?,
+                    output_shapes: shapes(art, "outputs")?,
+                },
+            ));
+        }
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            train_batch: j.req("train_batch").as_usize().ok_or_else(|| anyhow!("train_batch"))?,
+            eval_batch: j.req("eval_batch").as_usize().ok_or_else(|| anyhow!("eval_batch"))?,
+            archs,
+            artifacts,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Option<&ArchInfo> {
+        self.archs.iter().find(|a| a.name == name)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, a)| a)
+    }
+
+    /// Validate internal consistency (param coverage, file existence).
+    pub fn check(&self) -> Result<()> {
+        for a in &self.archs {
+            let mut off = 0usize;
+            for p in &a.params {
+                if p.offset != off {
+                    return Err(anyhow!("{}: param {} offset {} != {}", a.name, p.name, p.offset, off));
+                }
+                off += p.len();
+            }
+            if off != a.d {
+                return Err(anyhow!("{}: params cover {} != d {}", a.name, off, a.d));
+            }
+        }
+        for (name, art) in &self.artifacts {
+            if !art.file.exists() {
+                return Err(anyhow!("artifact {name}: missing file {:?}", art.file));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$BICOMPFL_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("BICOMPFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_checks_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&default_dir()).unwrap();
+        m.check().unwrap();
+        assert!(m.train_batch > 0 && m.eval_batch > 0);
+        let mlp = m.arch("mlp").expect("mlp arch");
+        assert!(mlp.d > 0);
+        assert!(m.artifact("mlp_mask_train").is_some());
+        assert!(m.artifact("smoke").is_some());
+        // mask_train inputs: s, w, u, x, y, eta
+        let mt = m.artifact("mlp_mask_train").unwrap();
+        assert_eq!(mt.input_shapes.len(), 6);
+        assert_eq!(mt.input_shapes[0], vec![mlp.d]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_manifest() {
+        let m = Manifest {
+            dir: PathBuf::from("/nonexistent"),
+            train_batch: 1,
+            eval_batch: 1,
+            archs: vec![ArchInfo {
+                name: "x".into(),
+                d: 10,
+                in_shape: (1, 1, 1),
+                width: 1.0,
+                params: vec![ParamSpec {
+                    name: "w".into(),
+                    shape: vec![3],
+                    offset: 0,
+                    fan_in: 1,
+                }],
+            }],
+            artifacts: vec![],
+        };
+        assert!(m.check().is_err()); // 3 != 10
+    }
+}

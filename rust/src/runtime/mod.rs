@@ -1,0 +1,17 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (lowered by
+//! `python/compile/aot.py`), compile them on the CPU PJRT client, and
+//! execute them from the coordinator's hot path. Python is never involved at
+//! runtime — the Rust binary is self-contained once artifacts exist.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (shapes, param specs).
+//! * [`artifact`] — compile + execute one HLO module (tuple outputs).
+//! * [`oracle`]   — [`crate::coordinator::MaskOracle`] and
+//!   [`crate::algorithms::GradOracle`] implementations backed by artifacts.
+
+pub mod manifest;
+pub mod artifact;
+pub mod oracle;
+
+pub use artifact::Artifact;
+pub use manifest::{ArchInfo, Manifest};
+pub use oracle::RuntimeOracle;

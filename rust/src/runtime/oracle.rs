@@ -1,0 +1,253 @@
+//! Artifact-backed oracles: the production Layer-2 compute path.
+//!
+//! [`RuntimeOracle`] owns the dataset partition, the fixed random weights of
+//! the masked network (signed-constant init, Ramanujan et al. 2020), and the
+//! compiled artifacts; it implements both [`MaskOracle`] (probabilistic mask
+//! training) and [`GradOracle`] (conventional FL) so every coordinator and
+//! baseline runs on the real model by swapping the oracle.
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{Arg, Artifact};
+use super::manifest::{ArchInfo, Manifest};
+use crate::algorithms::GradOracle;
+use crate::coordinator::MaskOracle;
+use crate::data::{Batcher, Dataset};
+use crate::tensor::{logit, sigmoid};
+use crate::util::rng::Xoshiro256;
+
+pub struct RuntimeOracle {
+    pub arch: ArchInfo,
+    mask_train: Artifact,
+    cfl_grad: Artifact,
+    eval: Artifact,
+    train: Dataset,
+    test: Dataset,
+    batchers: Vec<Batcher>,
+    /// Fixed random weights w (mask training); also CFL init.
+    pub weights: Vec<f32>,
+    train_batch: usize,
+    eval_batch: usize,
+    mask_rng: Xoshiro256,
+    eval_rng: Xoshiro256,
+    /// Number of sampled masks averaged at evaluation (paper samples masks
+    /// at inference; 1 is enough for the small models).
+    pub n_eval_masks: usize,
+    /// Evaluate on at most this many test examples (0 = all).
+    pub eval_limit: usize,
+}
+
+impl RuntimeOracle {
+    pub fn new(
+        manifest: &Manifest,
+        arch_name: &str,
+        train: Dataset,
+        test: Dataset,
+        client_indices: Vec<Vec<usize>>,
+        seed: u64,
+    ) -> Result<Self> {
+        let arch = manifest
+            .arch(arch_name)
+            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
+            .clone();
+        let (h, w, c) = arch.in_shape;
+        if (train.spec.height, train.spec.width, train.spec.channels) != (h, w, c) {
+            return Err(anyhow!(
+                "dataset {:?} does not match arch input {:?}",
+                (train.spec.height, train.spec.width, train.spec.channels),
+                arch.in_shape
+            ));
+        }
+        let load = |suffix: &str| -> Result<Artifact> {
+            let name = format!("{arch_name}_{suffix}");
+            Artifact::load(
+                &name,
+                manifest
+                    .artifact(&name)
+                    .ok_or_else(|| anyhow!("missing artifact {name}"))?,
+            )
+        };
+        let mask_train = load("mask_train")?;
+        let cfl_grad = load("cfl_grad")?;
+        let eval = load("eval")?;
+
+        // Signed-constant init: w_e = sign(N(0,1)) * sqrt(2 / fan_in).
+        let mut wrng = Xoshiro256::new(seed ^ 0x57E16);
+        let mut weights = vec![0.0f32; arch.d];
+        for p in &arch.params {
+            let scale = (2.0 / p.fan_in as f32).sqrt();
+            for e in p.offset..p.offset + p.len() {
+                weights[e] = if wrng.next_normal() >= 0.0 { scale } else { -scale };
+            }
+        }
+
+        let batchers = client_indices
+            .into_iter()
+            .enumerate()
+            .map(|(i, idx)| Batcher::new(idx, seed ^ (0xBA7C << 8) ^ i as u64))
+            .collect();
+
+        Ok(Self {
+            arch,
+            mask_train,
+            cfl_grad,
+            eval,
+            train,
+            test,
+            batchers,
+            weights,
+            train_batch: manifest.train_batch,
+            eval_batch: manifest.eval_batch,
+            mask_rng: Xoshiro256::new(seed ^ 0x3A5C),
+            eval_rng: Xoshiro256::new(seed ^ 0xE7A1),
+            n_eval_masks: 1,
+            eval_limit: 0,
+        })
+    }
+
+    fn in_shape(&self, batch: usize) -> Vec<usize> {
+        let (h, w, c) = self.arch.in_shape;
+        vec![batch, h, w, c]
+    }
+
+    /// Evaluate effective weights over the test set; (mean loss, accuracy).
+    pub fn eval_weights(&mut self, w_eff: &[f32]) -> (f64, f64) {
+        let be = self.eval_batch;
+        let pixels = self.test.spec.pixels();
+        let mut x = vec![0.0f32; be * pixels];
+        let mut y = vec![0i32; be];
+        let total = if self.eval_limit > 0 {
+            self.eval_limit.min(self.test.len())
+        } else {
+            self.test.len()
+        };
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        while seen < total {
+            let take = (total - seen).min(be);
+            for b in 0..take {
+                let i = seen + b;
+                x[b * pixels..(b + 1) * pixels].copy_from_slice(self.test.image(i));
+                y[b] = self.test.labels[i];
+            }
+            // Zero-pad the ragged tail; only the first `take` rows counted.
+            for b in take..be {
+                x[b * pixels..(b + 1) * pixels].fill(0.0);
+                y[b] = 0;
+            }
+            let out = self
+                .eval
+                .run(&[
+                    Arg::F32(w_eff, &[self.arch.d]),
+                    Arg::F32(&x, &self.in_shape(be)),
+                    Arg::I32(&y, &[be]),
+                ])
+                .expect("eval artifact failed");
+            for b in 0..take {
+                loss_sum += out[0][b] as f64;
+                correct += out[1][b] as f64;
+            }
+            seen += take;
+        }
+        (loss_sum / total as f64, correct / total as f64)
+    }
+}
+
+impl MaskOracle for RuntimeOracle {
+    fn dim(&self) -> usize {
+        self.arch.d
+    }
+
+    fn n_clients(&self) -> usize {
+        self.batchers.len()
+    }
+
+    fn local_train(
+        &mut self,
+        client: usize,
+        theta: &[f32],
+        local_iters: usize,
+        lr: f32,
+        _round: u64,
+    ) -> (Vec<f32>, f64, f64) {
+        let d = self.arch.d;
+        let bt = self.train_batch;
+        let pixels = self.train.spec.pixels();
+        let mut s: Vec<f32> = theta.iter().map(|&t| logit(t)).collect();
+        let mut u = vec![0.0f32; d];
+        let mut x = vec![0.0f32; bt * pixels];
+        let mut y = vec![0i32; bt];
+        let (mut loss, mut acc) = (0.0f64, 0.0f64);
+        for _ in 0..local_iters {
+            self.batchers[client].next_batch(&self.train, &mut x, &mut y);
+            self.mask_rng.fill_f32(&mut u);
+            let out = self
+                .mask_train
+                .run(&[
+                    Arg::F32(&s, &[d]),
+                    Arg::F32(&self.weights, &[d]),
+                    Arg::F32(&u, &[d]),
+                    Arg::F32(&x, &self.in_shape(bt)),
+                    Arg::I32(&y, &[bt]),
+                    Arg::ScalarF32(lr),
+                ])
+                .expect("mask_train artifact failed");
+            s = out[0].clone();
+            loss = out[1][0] as f64;
+            acc = out[2][0] as f64;
+        }
+        let q: Vec<f32> = s.iter().map(|&v| sigmoid(v)).collect();
+        (q, loss, acc)
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> (f64, f64) {
+        let d = self.arch.d;
+        let n_masks = self.n_eval_masks.max(1);
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for _ in 0..n_masks {
+            let mut w_eff = vec![0.0f32; d];
+            for e in 0..d {
+                let m = if self.eval_rng.next_f32() < theta[e] { 1.0 } else { 0.0 };
+                w_eff[e] = self.weights[e] * m;
+            }
+            let (l, a) = self.eval_weights(&w_eff);
+            loss += l;
+            acc += a;
+        }
+        (loss / n_masks as f64, acc / n_masks as f64)
+    }
+}
+
+impl GradOracle for RuntimeOracle {
+    fn dim(&self) -> usize {
+        self.arch.d
+    }
+
+    fn n_clients(&self) -> usize {
+        self.batchers.len()
+    }
+
+    fn grad(&mut self, client: usize, params: &[f32], out: &mut [f32]) {
+        let d = self.arch.d;
+        let bt = self.train_batch;
+        let pixels = self.train.spec.pixels();
+        let mut x = vec![0.0f32; bt * pixels];
+        let mut y = vec![0i32; bt];
+        self.batchers[client].next_batch(&self.train, &mut x, &mut y);
+        let res = self
+            .cfl_grad
+            .run(&[
+                Arg::F32(params, &[d]),
+                Arg::F32(&x, &self.in_shape(bt)),
+                Arg::I32(&y, &[bt]),
+            ])
+            .expect("cfl_grad artifact failed");
+        out.copy_from_slice(&res[0]);
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        self.eval_weights(params)
+    }
+}

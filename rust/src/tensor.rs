@@ -1,0 +1,137 @@
+//! Flat f32 vector ops used on the L3 hot path (aggregation, priors, KL).
+//!
+//! All model state crossing the Rust/XLA boundary is a flat `Vec<f32>`; these
+//! helpers keep the coordinator code branch-light and auto-vectorizable.
+
+/// y += x
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += *b;
+    }
+}
+
+/// y -= x
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a -= *b;
+    }
+}
+
+/// y *= c
+pub fn scale(y: &mut [f32], c: f32) {
+    for a in y.iter_mut() {
+        *a *= c;
+    }
+}
+
+/// y += c * x
+pub fn axpy(y: &mut [f32], c: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += c * *b;
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+}
+
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn norm1(a: &[f32]) -> f64 {
+    a.iter().map(|x| x.abs() as f64).sum()
+}
+
+pub fn mean(a: &[f32]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().map(|&x| x as f64).sum::<f64>() / a.len() as f64
+}
+
+/// Elementwise mean of several equal-length vectors.
+pub fn mean_of(vs: &[&[f32]]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let n = vs[0].len();
+    let mut out = vec![0.0f32; n];
+    for v in vs {
+        debug_assert_eq!(v.len(), n);
+        add_assign(&mut out, v);
+    }
+    scale(&mut out, 1.0 / vs.len() as f32);
+    out
+}
+
+/// Clamp every entry into [lo, hi].
+pub fn clamp(v: &mut [f32], lo: f32, hi: f32) {
+    for x in v.iter_mut() {
+        *x = x.clamp(lo, hi);
+    }
+}
+
+/// Numerically stable logistic.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Inverse logistic; input clamped away from {0,1}.
+#[inline]
+pub fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        add_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+        sub_assign(&mut y, &[1.0, 1.0, 1.0]);
+        scale(&mut y, 2.0);
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+        axpy(&mut y, 0.5, &[2.0, 2.0, 2.0]);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn norms_and_means() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(norm1(&[-1.0, 2.0]), 3.0);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        let a = [1.0f32, 3.0];
+        let b = [3.0f32, 5.0];
+        assert_eq!(mean_of(&[&a, &b]), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn sigmoid_logit_roundtrip() {
+        for &p in &[0.01f32, 0.3, 0.5, 0.9, 0.999] {
+            assert!((sigmoid(logit(p)) - p).abs() < 1e-5);
+        }
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(100.0) <= 1.0);
+        assert_eq!(sigmoid(0.0), 0.5);
+    }
+
+    #[test]
+    fn clamp_bounds() {
+        let mut v = vec![-1.0, 0.5, 2.0];
+        clamp(&mut v, 0.0, 1.0);
+        assert_eq!(v, vec![0.0, 0.5, 1.0]);
+    }
+}

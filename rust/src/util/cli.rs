@@ -1,0 +1,201 @@
+//! Declarative CLI flag parsing (no clap offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! subcommands. Each binary declares its flags up front so `--help` is
+//! generated and unknown flags are hard errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+pub struct Cli {
+    pub program: String,
+    pub about: &'static str,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            program: std::env::args().next().unwrap_or_default(),
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse the given args (without argv[0]). Exits on --help; errors on
+    /// unknown flags.
+    pub fn parse_from(mut self, args: &[String]) -> Result<Self, String> {
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                eprintln!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    }
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    "true".to_string()
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(arg.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse(self) -> Result<Self, String> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&args)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default)
+            .map(|s| s.to_string())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a u64"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get_f64(name) as f32
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{}\n\nFlags:\n", self.about);
+        for s in &self.specs {
+            let val = if s.takes_value {
+                format!(" <value{}>", s.default.map(|d| format!(", default {d}")).unwrap_or_default())
+            } else {
+                String::new()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", s.name, val, s.help));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let c = Cli::new("t")
+            .flag("rounds", "10", "rounds")
+            .switch("verbose", "v")
+            .parse_from(&argv(&["run", "--rounds", "30", "--verbose", "extra"]))
+            .unwrap();
+        assert_eq!(c.positionals, vec!["run", "extra"]);
+        assert_eq!(c.get_usize("rounds"), 30);
+        assert!(c.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let c = Cli::new("t")
+            .flag("alpha", "0.1", "dirichlet")
+            .parse_from(&argv(&["--alpha=0.5"]))
+            .unwrap();
+        assert_eq!(c.get_f64("alpha"), 0.5);
+        let c2 = Cli::new("t")
+            .flag("alpha", "0.1", "dirichlet")
+            .parse_from(&argv(&[]))
+            .unwrap();
+        assert_eq!(c2.get_f64("alpha"), 0.1);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Cli::new("t").parse_from(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Cli::new("t")
+            .flag("x", "1", "x")
+            .parse_from(&argv(&["--x"]))
+            .is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation utilities: RNG (the shared-randomness substrate), minimal JSON,
+//! CLI parsing, logging, timing, and a small property-testing harness.
+//!
+//! Everything here is dependency-free by necessity (the build is offline) and
+//! by design: the RNG streams in particular must be bit-exact across every
+//! party of the simulation, so we own the implementations.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod logging;
+pub mod prop;
+pub mod timer;

@@ -1,0 +1,82 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `run_prop` executes a property over `cases` seeded inputs; on failure it
+//! reports the seed so the case replays exactly. Generators are plain
+//! closures over [`Xoshiro256`], which keeps shrinking out of scope but makes
+//! every failure a one-liner to reproduce.
+
+use super::rng::Xoshiro256;
+
+/// Run `prop(rng, case_index)` for `cases` cases; panic with the failing seed.
+pub fn run_prop<F: FnMut(&mut Xoshiro256, usize)>(name: &str, cases: usize, mut prop: F) {
+    let base = 0xB1C0_FF1E_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}",);
+        }
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub fn f32_in(rng: &mut Xoshiro256, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+/// Random Bernoulli parameter safely inside (eps, 1-eps).
+pub fn bern_param(rng: &mut Xoshiro256, eps: f32) -> f32 {
+    f32_in(rng, eps, 1.0 - eps)
+}
+
+/// Random length in [1, max].
+pub fn len_in(rng: &mut Xoshiro256, max: usize) -> usize {
+    1 + rng.next_below(max)
+}
+
+/// Random f32 vector with entries in [lo, hi).
+pub fn vec_f32(rng: &mut Xoshiro256, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| f32_in(rng, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_pass_when_true() {
+        run_prop("tautology", 50, |rng, _| {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn props_report_failures() {
+        run_prop("falsum", 10, |rng, _| {
+            assert!(rng.next_f32() < 0.0, "impossible");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        run_prop("gen-ranges", 100, |rng, _| {
+            let p = bern_param(rng, 0.01);
+            assert!((0.01..0.99).contains(&p));
+            let n = len_in(rng, 17);
+            assert!((1..=17).contains(&n));
+            let v = vec_f32(rng, n, -2.0, 3.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+        });
+    }
+}

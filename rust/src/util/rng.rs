@@ -1,0 +1,389 @@
+//! Random number generation: the *shared randomness* substrate of BiCompFL.
+//!
+//! Two generators:
+//!
+//! * [`Xoshiro256`] — fast sequential stream RNG (xoshiro256++), used for data
+//!   generation, initialization, client-local sampling.
+//! * [`Philox`] — Philox4x32-7 counter-based RNG with *random access*: the
+//!   i-th block of randomness is a pure function of (key, counter). This is
+//!   what makes MRC practical: encoder and decoder regenerate candidate
+//!   sample bits from (seed, round, client, block, candidate, lane) without
+//!   ever storing or transmitting them, and the decoder touches only the
+//!   *selected* candidate's bits — O(m) instead of O(n_IS * m).
+
+/// SplitMix64 — used to seed the other generators from a u64.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ by Blackman & Vigna. Fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = splitmix64(&mut sm);
+        }
+        Self { s }
+    }
+
+    /// Derive an independent stream keyed by a label (domain separation).
+    pub fn fork(&self, label: u64) -> Self {
+        let mut sm = self.s[0] ^ self.s[2] ^ label.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = splitmix64(&mut sm);
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (pairs are wasted; fine off hot path).
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Fill a slice with uniforms in [0, 1).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from a Dirichlet(alpha * 1_k) via Gamma(alpha) marginals
+    /// (Marsaglia-Tsang for alpha >= 1, boost trick below 1).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // All-zero underflow corner: fall back to a one-hot draw.
+            let mut out = vec![0.0; k];
+            out[self.next_below(k)] = 1.0;
+            return out;
+        }
+        for v in g.iter_mut() {
+            *v /= sum;
+        }
+        g
+    }
+
+    fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u: f64 = self.next_f64().max(1e-300);
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = {
+                // normal
+                let u1 = self.next_f64().max(1e-300);
+                let u2 = self.next_f64();
+                (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+            };
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+/// Philox4x32 (Salmon et al., SC'11): counter-based, random-access RNG.
+///
+/// `block(ctr)` returns 4 x u32 of randomness as a pure function of
+/// (key, ctr) — 10 rounds of multiply-bumping. Used for MRC candidate bits.
+#[derive(Clone, Copy, Debug)]
+pub struct Philox {
+    key: [u32; 2],
+}
+
+/// Number of Philox rounds. Salmon et al. (SC'11) report Philox4x32-7 as
+/// the lowest round count passing the full BigCrush battery; we use it for
+/// the MRC hot path (the default upstream choice of 10 carries extra safety
+/// margin that candidate sampling does not need). See EXPERIMENTS.md §Perf.
+pub const PHILOX_ROUNDS: usize = 7;
+
+const PHILOX_M0: u64 = 0xD2511F53;
+const PHILOX_M1: u64 = 0xCD9E8D57;
+const PHILOX_W0: u32 = 0x9E3779B9;
+const PHILOX_W1: u32 = 0xBB67AE85;
+
+impl Philox {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            key: [(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32],
+        }
+    }
+
+    /// Derive a stream key via splitmix of (seed, label) — domain separation
+    /// for (round, client, block, direction) tuples.
+    pub fn keyed(seed: u64, label: u64) -> Self {
+        let mut sm = seed ^ label.wrapping_mul(0xA24BAED4963EE407);
+        Self::new(splitmix64(&mut sm))
+    }
+
+    /// One Philox4x32-PHILOX_ROUNDS block for a 128-bit counter (as two u64 halves).
+    #[inline]
+    pub fn block(&self, ctr_lo: u64, ctr_hi: u64) -> [u32; 4] {
+        let mut c = [
+            (ctr_lo & 0xFFFF_FFFF) as u32,
+            (ctr_lo >> 32) as u32,
+            (ctr_hi & 0xFFFF_FFFF) as u32,
+            (ctr_hi >> 32) as u32,
+        ];
+        let mut k = self.key;
+        for _ in 0..PHILOX_ROUNDS {
+            let p0 = PHILOX_M0 * c[0] as u64;
+            let p1 = PHILOX_M1 * c[2] as u64;
+            c = [
+                (p1 >> 32) as u32 ^ c[1] ^ k[0],
+                p1 as u32,
+                (p0 >> 32) as u32 ^ c[3] ^ k[1],
+                p0 as u32,
+            ];
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+        c
+    }
+
+    /// Uniform f32 in [0,1) for a scalar counter `i` (lane 0 of its block).
+    #[inline]
+    pub fn uniform_at(&self, i: u64) -> f32 {
+        let b = self.block(i, 0);
+        (b[0] >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Four uniforms in [0,1) for counter `i` — the batch primitive the MRC
+    /// hot path consumes (one Philox block = 4 lanes).
+    #[inline]
+    pub fn uniform4_at(&self, i: u64) -> [f32; 4] {
+        let b = self.block(i, 0);
+        let s = 1.0 / (1u32 << 24) as f32;
+        [
+            (b[0] >> 8) as f32 * s,
+            (b[1] >> 8) as f32 * s,
+            (b[2] >> 8) as f32 * s,
+            (b[3] >> 8) as f32 * s,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xoshiro_deterministic_and_seeded() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        let mut c = Xoshiro256::new(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn fork_gives_independent_streams() {
+        let base = Xoshiro256::new(7);
+        let mut f1 = base.fork(1);
+        let mut f2 = base.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+        // Re-fork is reproducible.
+        let mut f1b = base.fork(1);
+        let mut f1a = base.fork(1);
+        assert_eq!(f1a.next_u64(), f1b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval_and_uniform() {
+        let mut r = Xoshiro256::new(1);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Xoshiro256::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(3);
+        let n = 200_000;
+        let (mut m, mut v) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.next_normal() as f64;
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean={m}");
+        assert!((v - 1.0).abs() < 0.03, "var={v}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut r = Xoshiro256::new(4);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let p = r.dirichlet(alpha, 10);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+        // alpha=0.1 should often put most mass on few classes.
+        let mut maxes = 0.0;
+        for _ in 0..50 {
+            let p = r.dirichlet(0.1, 10);
+            maxes += p.iter().cloned().fold(0.0, f64::max);
+        }
+        assert!(maxes / 50.0 > 0.5);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn philox_random_access_consistency() {
+        let p = Philox::new(99);
+        // Same counter twice -> same block; different counters differ.
+        assert_eq!(p.block(5, 0), p.block(5, 0));
+        assert_ne!(p.block(5, 0), p.block(6, 0));
+        assert_ne!(p.block(5, 0), p.block(5, 1));
+        // Different keys differ.
+        assert_ne!(Philox::new(1).block(0, 0), Philox::new(2).block(0, 0));
+    }
+
+    #[test]
+    fn philox_keyed_domain_separation() {
+        let a = Philox::keyed(10, 1);
+        let b = Philox::keyed(10, 2);
+        assert_ne!(a.block(0, 0), b.block(0, 0));
+        let a2 = Philox::keyed(10, 1);
+        assert_eq!(a.block(7, 0), a2.block(7, 0));
+    }
+
+    #[test]
+    fn philox_uniform_statistics() {
+        let p = Philox::new(123);
+        let n = 100_000u64;
+        let mut sum = 0.0f64;
+        let mut buckets = [0u32; 10];
+        for i in 0..n {
+            let u = p.uniform_at(i);
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+            buckets[(u * 10.0) as usize] += 1;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+        for &b in &buckets {
+            let frac = b as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.01, "bucket {frac}");
+        }
+    }
+
+    #[test]
+    fn philox_uniform4_matches_lanes() {
+        let p = Philox::new(55);
+        let lanes = p.uniform4_at(17);
+        assert_eq!(lanes[0], {
+            let b = p.block(17, 0);
+            (b[0] >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+        });
+        assert!(lanes.iter().all(|u| (0.0..1.0).contains(u)));
+    }
+}

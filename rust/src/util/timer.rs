@@ -1,0 +1,102 @@
+//! Timing helpers shared by the bench harness and the perf instrumentation.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating scoped timer: `let _t = Scope::new(&mut acc);`
+pub struct Scope<'a> {
+    start: Instant,
+    acc: &'a mut Duration,
+}
+
+impl<'a> Scope<'a> {
+    pub fn new(acc: &'a mut Duration) -> Self {
+        Self {
+            start: Instant::now(),
+            acc,
+        }
+    }
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        *self.acc += self.start.elapsed();
+    }
+}
+
+/// Measurement statistics used by the custom bench harness (no criterion
+/// offline): warm up, run for a target time, report mean/p50/p99.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_line(&self, name: &str, items_per_iter: f64) -> String {
+        let per_item = self.mean_ns / items_per_iter;
+        format!(
+            "{name:<44} {:>10.1} us/iter  p50 {:>8.1} us  p99 {:>8.1} us  {:>12.1} Melem/s",
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            1e3 / per_item
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`target` wall time (after warmup) and report stats.
+pub fn bench<F: FnMut()>(warmup: Duration, target: Duration, mut f: F) -> BenchStats {
+    let wstart = Instant::now();
+    let mut warm_iters = 0usize;
+    while wstart.elapsed() < warmup || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < target || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples[n / 2],
+        p99_ns: samples[(n as f64 * 0.99) as usize % n],
+        min_ns: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_accumulates() {
+        let mut acc = Duration::ZERO;
+        {
+            let _t = Scope::new(&mut acc);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(acc >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let stats = bench(Duration::from_millis(1), Duration::from_millis(10), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(stats.iters >= 10);
+        assert!(stats.min_ns <= stats.mean_ns);
+        assert!(stats.p50_ns <= stats.p99_ns);
+    }
+}

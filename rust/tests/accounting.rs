@@ -1,0 +1,146 @@
+//! Bit-accounting invariants across the whole system — the experiment tables
+//! are only as credible as these meters, so the conventions of Appendix I
+//! are pinned down as executable checks.
+
+use bicompfl::algorithms::runner::summarize;
+use bicompfl::algorithms::{make_baseline, CflAlgorithm, QuadraticOracle};
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig};
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::AllocationStrategy;
+use bicompfl::util::rng::Xoshiro256;
+
+fn gr_cfg(n_is: usize, bs: usize) -> BiCompFlConfig {
+    BiCompFlConfig {
+        n_is,
+        allocation: AllocationStrategy::fixed(bs),
+        local_iters: 1,
+        local_lr: 0.2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn gr_uplink_formula_exact() {
+    // UL per round = n * n_UL * ceil(d / bs) * log2(n_IS) (Fixed, no overhead).
+    let (d, n, bs, n_is) = (1000usize, 5usize, 64usize, 256usize);
+    let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
+    let mut alg = BiCompFl::new(d, n, gr_cfg(n_is, bs));
+    let bits = alg.round(&mut oracle);
+    let blocks = d.div_ceil(bs) as u64;
+    assert_eq!(bits.ul, n as u64 * blocks * 8);
+    // GR relay: per client (n-1) payloads; broadcast sends one concatenation.
+    assert_eq!(bits.dl, (n as u64 - 1) * bits.ul);
+    assert_eq!(bits.dl_bc, bits.ul);
+}
+
+#[test]
+fn pr_downlink_formula_exact() {
+    // PR: DL per client = n_DL * blocks * log2(n_IS); n_DL defaults n*n_UL.
+    let (d, n, bs, n_is) = (512usize, 4usize, 32usize, 64usize);
+    let mut oracle = SyntheticMaskOracle::new(d, n, 2, 0.1);
+    let mut cfg = gr_cfg(n_is, bs);
+    cfg.variant = Variant::Pr;
+    let mut alg = BiCompFl::new(d, n, cfg);
+    let bits = alg.round(&mut oracle);
+    let blocks = d.div_ceil(bs) as u64;
+    let n_dl = (n * 1) as u64;
+    assert_eq!(bits.dl, n as u64 * n_dl * blocks * 6);
+    // Private randomness: broadcast cannot help.
+    assert_eq!(bits.dl_bc, bits.dl);
+}
+
+#[test]
+fn splitdl_partition_is_exhaustive_and_disjoint() {
+    // Over n consecutive rounds the rotating shares cover every block for
+    // every client exactly once => total DL over n rounds equals one full
+    // PR downlink.
+    let (d, n, bs, n_is) = (512usize, 4usize, 32usize, 64usize);
+    let run = |variant: Variant| -> u64 {
+        let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.0);
+        let mut cfg = gr_cfg(n_is, bs);
+        cfg.variant = variant;
+        cfg.local_lr = 0.0; // freeze learning: block counts stay constant
+        let mut alg = BiCompFl::new(d, n, cfg);
+        (0..n).map(|_| alg.round(&mut oracle).dl).sum()
+    };
+    let split_total = run(Variant::PrSplitDl);
+    let full_one_round = {
+        let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.0);
+        let mut cfg = gr_cfg(n_is, bs);
+        cfg.variant = Variant::Pr;
+        cfg.local_lr = 0.0;
+        let mut alg = BiCompFl::new(d, n, cfg);
+        alg.round(&mut oracle).dl
+    };
+    assert_eq!(split_total, full_one_round);
+}
+
+#[test]
+fn nul_scales_uplink_linearly() {
+    let (d, n) = (256usize, 3usize);
+    let ul_for = |n_ul: usize| {
+        let mut oracle = SyntheticMaskOracle::new(d, n, 4, 0.1);
+        let mut cfg = gr_cfg(64, 32);
+        cfg.n_ul = n_ul;
+        let mut alg = BiCompFl::new(d, n, cfg);
+        alg.round(&mut oracle).ul
+    };
+    assert_eq!(ul_for(4), 4 * ul_for(1));
+}
+
+#[test]
+fn summaries_match_paper_conventions() {
+    // bpp = (UL + DL) / (d * n * rounds); bpp_bc divides broadcastable DL by n.
+    let d = 400;
+    let n = 4;
+    let mut oracle = SyntheticMaskOracle::new(d, n, 5, 0.1);
+    let mut alg = BiCompFl::new(d, n, gr_cfg(64, 100));
+    let recs = alg.run(&mut oracle, 10, 5);
+    let s = summarize(&recs, d, n);
+    let blocks = 4u64; // 400/100
+    let ul_per_round = n as u64 * blocks * 6;
+    let expect_ul_bpp = ul_per_round as f64 / (d * n) as f64;
+    assert!((s.ul_bpp - expect_ul_bpp).abs() < 1e-12);
+    assert!((s.bpp - (s.ul_bpp + s.dl_bpp)).abs() < 1e-12);
+    assert!(s.bpp_bc < s.bpp);
+}
+
+#[test]
+fn cfl_relay_conserves_bits() {
+    let d = 512;
+    let n = 4;
+    let mut oracle = QuadraticOracle::new(d, n, 6);
+    let mut alg = BiCompFlCfl::new(d, CflConfig::default());
+    let mut rng = Xoshiro256::new(0);
+    let b = alg.round(&mut oracle, &mut rng);
+    // Relay: sum over clients of (total - own) == (n-1) * total.
+    assert_eq!(b.dl, (n as u64 - 1) * b.ul);
+    assert_eq!(b.dl_bc, b.ul);
+}
+
+#[test]
+fn fedavg_is_exactly_32_plus_32() {
+    let d = 123;
+    let n = 7;
+    let mut oracle = QuadraticOracle::new(d, n, 7);
+    let mut alg = make_baseline("fedavg", d, n, 0.1).unwrap();
+    let mut rng = Xoshiro256::new(0);
+    let b = alg.round(oracle_mut(&mut oracle), &mut rng);
+    assert_eq!(b.ul + b.dl, 64 * (d * n) as u64);
+}
+
+fn oracle_mut(o: &mut QuadraticOracle) -> &mut QuadraticOracle {
+    o
+}
+
+#[test]
+fn set_params_initializes_all_replicas() {
+    let d = 64;
+    let x0: Vec<f32> = (0..d).map(|i| i as f32 * 0.01).collect();
+    for name in ["fedavg", "m3", "memsgd"] {
+        let mut alg = make_baseline(name, d, 3, 0.1).unwrap();
+        alg.set_params(&x0);
+        assert_eq!(alg.params(), &x0[..], "{name}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Cross-module integration tests: the full coordinator stack over the
+//! synthetic oracles (always run) and over the PJRT artifact oracle (run
+//! when `artifacts/` exists — i.e. after `make artifacts`).
+
+use bicompfl::algorithms::runner::{run_algorithm, summarize};
+use bicompfl::algorithms::{make_baseline, QuadraticOracle, BASELINE_NAMES};
+use bicompfl::config::{preset, table_methods};
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
+use bicompfl::exp::{build_runtime_oracle, run_bicompfl};
+use bicompfl::mrc::block::AllocationStrategy;
+use bicompfl::runtime::manifest::default_dir;
+
+fn have_artifacts() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic end-to-end (always run)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bicompfl_beats_baselines_on_bitrate_at_similar_quality() {
+    // The paper's headline: order-of-magnitude bitrate reduction at similar
+    // quality. On the synthetic substrate we verify the bitrate ordering and
+    // that all methods learn.
+    let d = 512;
+    let n = 4;
+    let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.05);
+    let mut alg = BiCompFl::new(
+        d,
+        n,
+        BiCompFlConfig {
+            n_is: 64,
+            allocation: AllocationStrategy::fixed(32),
+            ..Default::default()
+        },
+    );
+    let recs = alg.run(&mut oracle, 30, 5);
+    let s = summarize(&recs, d, n);
+    assert!(s.bpp < 1.0, "BiCompFL total bpp {}", s.bpp);
+    // FedAvg equivalent is 64 bpp; require >30x reduction.
+    assert!(64.0 / s.bpp > 30.0);
+    assert!(recs.last().unwrap().loss < recs[0].loss);
+}
+
+#[test]
+fn gr_and_pr_consistency_under_shared_randomness() {
+    // GR: after every round all parties hold the identical model.
+    let d = 128;
+    let n = 3;
+    let mut oracle = SyntheticMaskOracle::new(d, n, 5, 0.1);
+    let mut alg = BiCompFl::new(
+        d,
+        n,
+        BiCompFlConfig {
+            n_is: 32,
+            allocation: AllocationStrategy::fixed(32),
+            ..Default::default()
+        },
+    );
+    for _ in 0..3 {
+        alg.round(&mut oracle);
+        for i in 0..n {
+            assert_eq!(alg.client_model(i), alg.global_model());
+        }
+    }
+}
+
+#[test]
+fn every_table_method_runs_on_synthetic() {
+    let mut cfg = preset("quick").unwrap();
+    cfg.rounds = 2;
+    cfg.n_clients = 2;
+    cfg.n_is = 16;
+    cfg.block_size = 64;
+    for m in table_methods() {
+        let mut oracle = SyntheticMaskOracle::new(256, cfg.n_clients, 7, 0.1);
+        let recs = run_bicompfl(&cfg, &m, &mut oracle);
+        assert_eq!(recs.len(), 2, "{}", m.label());
+    }
+}
+
+#[test]
+fn baselines_and_cfl_run_on_quadratic() {
+    let d = 64;
+    let n = 3;
+    for name in BASELINE_NAMES {
+        let mut oracle = QuadraticOracle::new(d, n, 11);
+        let mut alg = make_baseline(name, d, n, 0.25).unwrap();
+        let recs = run_algorithm(alg.as_mut(), &mut oracle, 20, 5, 1);
+        assert_eq!(recs.len(), 20);
+        assert!(recs.iter().all(|r| r.ul_bits > 0 && r.dl_bits > 0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed end-to-end (gated on `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_mask_training_improves_accuracy() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = preset("quick").unwrap();
+    cfg.rounds = 15;
+    cfg.eval_every = 3;
+    cfg.n_clients = 4;
+    cfg.mask_lr = 5.0;
+    let m = table_methods()[0]; // GR-Adaptive
+    let mut oracle = build_runtime_oracle(&cfg).unwrap();
+    let recs = run_bicompfl(&cfg, &m, &mut oracle);
+    // 15 rounds of a tiny masked MLP: the best evaluated accuracy must be
+    // clearly above chance (0.1). Per-round values are noisy (each eval
+    // samples one mask), so we assert on the max.
+    let best = recs.iter().map(|r| r.acc).fold(0.0, f64::max);
+    assert!(best > 0.15, "best acc {best}");
+}
+
+#[test]
+fn runtime_oracle_grad_path_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = preset("quick").unwrap();
+    cfg.n_clients = 4;
+    let mut oracle = build_runtime_oracle(&cfg).unwrap();
+    let d = oracle.arch.d;
+    let mut alg = make_baseline("fedavg", d, 4, 0.5).unwrap();
+    // Seed params: FedAvg starts at zero which is a saddle for CE; nudge via
+    // a few rounds and check loss decreases.
+    let recs = run_algorithm(alg.as_mut(), &mut oracle, 8, 8, 1);
+    let first = recs.first().unwrap().loss;
+    let last = recs.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+}

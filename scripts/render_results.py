@@ -1,0 +1,37 @@
+#!/usr/bin/env python3
+"""Render results/*.json summaries as the paper-style markdown tables.
+
+Usage: python scripts/render_results.py results/quick.json [more.json ...]
+"""
+
+import json
+import sys
+
+
+def fmt(v):
+    if v == 0:
+        return "0"
+    import math
+
+    mag = math.floor(math.log10(abs(v)))
+    digits = max(0, 1 - mag)
+    return f"{v:.{digits}f}"
+
+
+def render(path):
+    with open(path) as f:
+        j = json.load(f)
+    print(f"## {j['title']}\n")
+    print("| Method | Acc | bpp | bpp (BC) | Uplink | Downlink |")
+    print("|---|---|---|---|---|---|")
+    for r in j["rows"]:
+        print(
+            f"| {r['method']} | {r['max_acc']:.3f} | {fmt(r['bpp'])} "
+            f"| {fmt(r['bpp_bc'])} | {fmt(r['ul_bpp'])} | {fmt(r['dl_bpp'])} |"
+        )
+    print()
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        render(p)
