@@ -10,6 +10,7 @@ use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
 use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::runtime::ParallelRoundEngine;
 use bicompfl::util::rng::Xoshiro256;
 use bicompfl::util::timer::bench;
 
@@ -39,6 +40,46 @@ fn main() {
             "{}",
             stats.throughput_line(&format!("round {}", variant.label()), d as f64)
         );
+    }
+
+    // Serial vs sharded round engine on the same workload: the engine win.
+    // (Both produce bit-identical rounds; only wall clock differs.)
+    println!("\n== serial vs sharded ParallelRoundEngine ==");
+    for variant in [Variant::Gr, Variant::Pr] {
+        for (label, engine) in [
+            ("serial", ParallelRoundEngine::serial()),
+            (
+                "sharded",
+                ParallelRoundEngine::auto(),
+            ),
+        ] {
+            let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
+            let mut alg = BiCompFl::new(
+                d,
+                n,
+                BiCompFlConfig {
+                    variant,
+                    n_is: 256,
+                    allocation: AllocationStrategy::fixed(128),
+                    ..Default::default()
+                },
+            )
+            .with_engine(engine);
+            let stats = bench(warm, target, || {
+                std::hint::black_box(alg.round(&mut oracle));
+            });
+            println!(
+                "{}",
+                stats.throughput_line(
+                    &format!(
+                        "round {} [{label} x{}]",
+                        variant.label(),
+                        engine.shards()
+                    ),
+                    d as f64
+                )
+            );
+        }
     }
 
     // Parallel vs serial uplink encode (the topology win).

@@ -20,12 +20,12 @@ pub mod m3;
 pub mod runner;
 
 pub use oracle::{GradOracle, QuadraticOracle};
-pub use runner::{run_algorithm, RoundRecord};
+pub use runner::{run_algorithm, run_algorithm_sharded, RoundRecord};
 
 use crate::util::rng::Xoshiro256;
 
 /// Per-round traffic produced by one algorithm round, in bits.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RoundBits {
     /// Total uplink bits across all clients.
     pub ul: u64,
@@ -45,6 +45,11 @@ pub trait CflAlgorithm {
     /// oracles need a symmetry-breaking init; the default zero init is only
     /// suitable for convex test objectives.
     fn set_params(&mut self, x0: &[f32]);
+    /// Install a round engine for algorithms that shard independent
+    /// per-client work (MRC transport). Sharding never changes results —
+    /// see `runtime::engine`'s determinism contract. Default: no-op, for
+    /// baselines whose rounds are inherently sequential accumulations.
+    fn set_engine(&mut self, _engine: crate::runtime::ParallelRoundEngine) {}
     /// Execute one communication round; returns the traffic it cost.
     fn round(&mut self, oracle: &mut dyn GradOracle, rng: &mut Xoshiro256) -> RoundBits;
 }

@@ -2,10 +2,11 @@
 //! and collect the per-round record stream the experiment harness consumes.
 
 use super::{CflAlgorithm, GradOracle};
+use crate::runtime::ParallelRoundEngine;
 use crate::util::rng::Xoshiro256;
 
 /// One evaluated round of any algorithm (baseline or BiCompFL).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     pub loss: f64,
@@ -26,6 +27,20 @@ impl RoundRecord {
     pub fn bpp_bc(&self, d: usize, n_clients: usize) -> f64 {
         (self.ul_bits + self.dl_bc_bits) as f64 / (d as f64 * n_clients as f64)
     }
+}
+
+/// Run `rounds` rounds with an explicit round engine installed on the
+/// algorithm (sharded per-client work; bit-identical to serial execution).
+pub fn run_algorithm_sharded(
+    alg: &mut dyn CflAlgorithm,
+    oracle: &mut dyn GradOracle,
+    rounds: usize,
+    eval_every: usize,
+    seed: u64,
+    engine: ParallelRoundEngine,
+) -> Vec<RoundRecord> {
+    alg.set_engine(engine);
+    run_algorithm(alg, oracle, rounds, eval_every, seed)
 }
 
 /// Run `rounds` rounds, evaluating every `eval_every` rounds (and on the
@@ -105,6 +120,26 @@ mod tests {
         assert!((s.bpp - 64.0).abs() < 1e-9, "fedavg is 32+32 bpp: {}", s.bpp);
         assert!(s.bpp_bc < s.bpp);
         assert!(recs.last().unwrap().loss < recs[0].loss);
+    }
+
+    #[test]
+    fn sharded_runner_matches_plain_for_baselines() {
+        // set_engine defaults to a no-op on baselines: the sharded entry
+        // point must reproduce the plain run record-for-record.
+        let mut o1 = QuadraticOracle::new(16, 3, 20);
+        let mut a1 = make_baseline("fedavg", 16, 3, 0.3).unwrap();
+        let r1 = run_algorithm(a1.as_mut(), &mut o1, 20, 5, 1);
+        let mut o2 = QuadraticOracle::new(16, 3, 20);
+        let mut a2 = make_baseline("fedavg", 16, 3, 0.3).unwrap();
+        let r2 = run_algorithm_sharded(
+            a2.as_mut(),
+            &mut o2,
+            20,
+            5,
+            1,
+            ParallelRoundEngine::with_shards(4),
+        );
+        assert_eq!(r1, r2);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::algorithms::runner::RoundRecord;
 use crate::mrc::block::{AllocationStrategy, BlockPlan};
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
+use crate::runtime::ParallelRoundEngine;
 use crate::util::rng::Xoshiro256;
 
 /// Which BiCompFL variant to run (§3).
@@ -88,7 +89,7 @@ impl Default for BiCompFlConfig {
 }
 
 /// Traffic of one round (bits).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MaskRoundBits {
     pub ul: u64,
     pub dl: u64,
@@ -107,6 +108,9 @@ pub struct BiCompFl {
     prev_qhat: Vec<Option<Vec<f32>>>,
     round: u64,
     part_rng: Xoshiro256,
+    /// Shards per-client uplink/downlink MRC work; bit-identical for any
+    /// shard count (see `runtime::engine`'s determinism contract).
+    engine: ParallelRoundEngine,
 }
 
 impl BiCompFl {
@@ -120,8 +124,20 @@ impl BiCompFl {
             prev_qhat: vec![None; n_clients],
             round: 0,
             part_rng: Xoshiro256::new(cfg.seed ^ 0xAA17),
+            engine: ParallelRoundEngine::auto(),
             cfg,
         }
+    }
+
+    /// Replace the round engine (e.g. [`ParallelRoundEngine::serial`] for
+    /// reference runs; the results are identical either way).
+    pub fn set_engine(&mut self, engine: ParallelRoundEngine) {
+        self.engine = engine;
+    }
+
+    pub fn with_engine(mut self, engine: ParallelRoundEngine) -> Self {
+        self.engine = engine;
+        self
     }
 
     pub fn global_model(&self) -> &[f32] {
@@ -180,10 +196,10 @@ impl BiCompFl {
     }
 
     /// Deterministic per-(round, client, direction) seed for the encoder's
-    /// private Gumbel selector — parallel encode == serial encode.
+    /// private Gumbel selector — parallel encode == serial encode. Shares
+    /// the derivation with every other coordinator (`shared_rand`).
     fn sel_seed(&self, client: u64, dir: Direction) -> u64 {
-        let mut s = self.cfg.seed ^ 0x5E1EC7 ^ (self.round << 20) ^ (client << 2) ^ dir as u64;
-        crate::util::rng::splitmix64(&mut s)
+        super::shared_rand::selector_seed(self.cfg.seed, self.round, client, dir)
     }
 
     /// Decode `indices` into the mean of the reconstructed samples.
@@ -279,45 +295,37 @@ impl BiCompFl {
             });
         }
 
-        // -- uplink MRC: one worker thread per client (the L3 hot path) -----
+        // -- uplink MRC: sharded across the round engine (the L3 hot path);
+        //    results come back in job (= client) order by construction ------
         let n_is = self.cfg.n_is;
         let n_ul = self.cfg.n_ul;
         let round = self.round;
-        let mut encoded: Vec<(usize, Vec<Vec<u32>>, u64, Vec<f32>)> =
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = jobs
-                    .iter()
-                    .map(|j| {
-                        scope.spawn(move || {
-                            let (indices, idx_bits) = Self::encode_vector_at(
-                                n_is,
-                                round,
-                                &j.q,
-                                &j.prior,
-                                &j.plan,
-                                j.seed,
-                                j.client as u64,
-                                n_ul,
-                                Direction::Uplink,
-                                j.sel_seed,
-                            );
-                            let qhat = Self::decode_mean_at(
-                                n_is,
-                                round,
-                                &j.prior,
-                                &j.plan,
-                                j.seed,
-                                j.client as u64,
-                                &indices,
-                                Direction::Uplink,
-                            );
-                            (j.client, indices, idx_bits, qhat)
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
+        let encoded: Vec<(usize, Vec<Vec<u32>>, u64, Vec<f32>)> =
+            self.engine.run(&jobs, |_, j| {
+                let (indices, idx_bits) = Self::encode_vector_at(
+                    n_is,
+                    round,
+                    &j.q,
+                    &j.prior,
+                    &j.plan,
+                    j.seed,
+                    j.client as u64,
+                    n_ul,
+                    Direction::Uplink,
+                    j.sel_seed,
+                );
+                let qhat = Self::decode_mean_at(
+                    n_is,
+                    round,
+                    &j.prior,
+                    &j.plan,
+                    j.seed,
+                    j.client as u64,
+                    &indices,
+                    Direction::Uplink,
+                );
+                (j.client, indices, idx_bits, qhat)
             });
-        encoded.sort_by_key(|e| e.0);
         let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(encoded.len());
         let mut ul_payloads: Vec<(usize, BlockPlan, Vec<Vec<u32>>, u64)> = Vec::new();
         for ((client, indices, idx_bits, qhat), job) in encoded.into_iter().zip(jobs) {
@@ -404,8 +412,8 @@ impl BiCompFl {
                 let n_dl = self.n_dl();
                 self.theta = theta_next.clone();
                 // Per-client plans are sequenced (Adaptive-Avg negotiation is
-                // stateful), then the per-client downlink MRC runs on worker
-                // threads: each (client, block) stream is independent.
+                // stateful), then the per-client downlink MRC is sharded on
+                // the round engine: each (client, block) stream is independent.
                 struct DlJob {
                     client: usize,
                     prior: Vec<f32>,
@@ -435,55 +443,46 @@ impl BiCompFl {
                 let n_is = self.cfg.n_is;
                 let round = self.round;
                 let theta_ref = &theta_next;
-                let mut results: Vec<(usize, Vec<f32>, u64, u64)> =
-                    std::thread::scope(|scope| {
-                        let handles: Vec<_> = jobs
-                            .iter()
-                            .map(|j| {
-                                scope.spawn(move || {
-                                    let codec = BlockCodec::new(n_is);
-                                    let mut sel = Xoshiro256::new(j.sel_seed);
-                                    let mut est = j.prior.clone();
-                                    let mut idx_bits = 0u64;
-                                    for &b in &j.blocks {
-                                        let r = j.plan.block(b);
-                                        let stream = mrc_stream(
-                                            j.seed,
-                                            round,
-                                            j.client as u64,
-                                            b as u64,
-                                            Direction::Downlink,
-                                        );
-                                        let mut mean = vec![0.0f32; r.len()];
-                                        let mut buf = vec![0.0f32; r.len()];
-                                        for ell in 0..n_dl {
-                                            let out = codec.encode(
-                                                &theta_ref[r.clone()],
-                                                &j.prior[r.clone()],
-                                                &stream,
-                                                ell as u64,
-                                                &mut sel,
-                                            );
-                                            idx_bits += out.bits;
-                                            codec.decode(
-                                                &j.prior[r.clone()],
-                                                &stream,
-                                                ell as u64,
-                                                out.index,
-                                                &mut buf,
-                                            );
-                                            crate::tensor::add_assign(&mut mean, &buf);
-                                        }
-                                        crate::tensor::scale(&mut mean, 1.0 / n_dl as f32);
-                                        est[r].copy_from_slice(&mean);
-                                    }
-                                    (j.client, est, idx_bits, j.plan.overhead_bits)
-                                })
-                            })
-                            .collect();
-                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                let results: Vec<(usize, Vec<f32>, u64, u64)> =
+                    self.engine.run(&jobs, |_, j| {
+                        let codec = BlockCodec::new(n_is);
+                        let mut sel = Xoshiro256::new(j.sel_seed);
+                        let mut est = j.prior.clone();
+                        let mut idx_bits = 0u64;
+                        for &b in &j.blocks {
+                            let r = j.plan.block(b);
+                            let stream = mrc_stream(
+                                j.seed,
+                                round,
+                                j.client as u64,
+                                b as u64,
+                                Direction::Downlink,
+                            );
+                            let mut mean = vec![0.0f32; r.len()];
+                            let mut buf = vec![0.0f32; r.len()];
+                            for ell in 0..n_dl {
+                                let out = codec.encode(
+                                    &theta_ref[r.clone()],
+                                    &j.prior[r.clone()],
+                                    &stream,
+                                    ell as u64,
+                                    &mut sel,
+                                );
+                                idx_bits += out.bits;
+                                codec.decode(
+                                    &j.prior[r.clone()],
+                                    &stream,
+                                    ell as u64,
+                                    out.index,
+                                    &mut buf,
+                                );
+                                crate::tensor::add_assign(&mut mean, &buf);
+                            }
+                            crate::tensor::scale(&mut mean, 1.0 / n_dl as f32);
+                            est[r].copy_from_slice(&mean);
+                        }
+                        (j.client, est, idx_bits, j.plan.overhead_bits)
                     });
-                results.sort_by_key(|r| r.0);
                 let tc = self.cfg.theta_clamp;
                 for (i, mut est, idx_bits, overhead) in results {
                     crate::tensor::clamp(&mut est, tc, 1.0 - tc);

@@ -13,12 +13,13 @@
 //! Implements [`CflAlgorithm`] so it appears in the same tables as the
 //! baselines.
 
-use super::shared_rand::{mrc_stream, Direction};
+use super::shared_rand::{mrc_stream, selector_seed, Direction};
 use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::qsgd::Qs;
+use crate::compressors::qsgd::{Qs, QsPosterior};
 use crate::compressors::sign::stochastic_sign_posterior;
 use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
+use crate::runtime::ParallelRoundEngine;
 use crate::tensor;
 use crate::util::rng::Xoshiro256;
 
@@ -64,8 +65,8 @@ pub struct BiCompFlCfl {
     cfg: CflConfig,
     x: Vec<f32>,
     round: u64,
-    sel_rng: Xoshiro256,
     scratch: Vec<f32>,
+    engine: ParallelRoundEngine,
 }
 
 impl BiCompFlCfl {
@@ -73,8 +74,8 @@ impl BiCompFlCfl {
         Self {
             x: vec![0.0; d],
             round: 0,
-            sel_rng: Xoshiro256::new(cfg.seed ^ 0xC0FFEE),
             scratch: vec![0.0; d],
+            engine: ParallelRoundEngine::auto(),
             cfg,
         }
     }
@@ -86,41 +87,50 @@ impl BiCompFlCfl {
             self.cfg.s_levels
         }
     }
+}
 
-    /// MRC-transport a Bernoulli posterior with the Ber(0.5) prior; returns
-    /// (mean decoded bits over n_UL samples, index bits).
-    fn transport(
-        &mut self,
-        q: &[f32],
-        client: u64,
-    ) -> (Vec<f32>, u64) {
-        let d = q.len();
-        let plan = BlockPlan::fixed(d, self.cfg.block_size);
-        let codec = BlockCodec::new(self.cfg.n_is);
-        let prior = vec![0.5f32; d];
-        let mut mean = vec![0.0f32; d];
-        let mut buf = vec![0.0f32; d];
-        let mut bits = 0u64;
-        for ell in 0..self.cfg.n_ul {
-            for b in 0..plan.n_blocks() {
-                let r = plan.block(b);
-                let stream =
-                    mrc_stream(self.cfg.seed, self.round, client, b as u64, Direction::Uplink);
-                let out = codec.encode(
-                    &q[r.clone()],
-                    &prior[r.clone()],
-                    &stream,
-                    ell as u64,
-                    &mut self.sel_rng,
-                );
-                bits += out.bits;
-                codec.decode(&prior[r.clone()], &stream, ell as u64, out.index, &mut buf[r.clone()]);
-            }
-            tensor::add_assign(&mut mean, &buf);
+/// MRC-transport one client's Bernoulli posterior with the Ber(0.5) prior
+/// (free-function form so per-client transports run on engine shards); the
+/// encoder's private Gumbel selector is seeded per (round, client) via
+/// [`selector_seed`], so sharded execution is bit-identical to serial.
+/// Returns (mean decoded bits over n_UL samples, index bits).
+#[allow(clippy::too_many_arguments)]
+fn transport_at(
+    q: &[f32],
+    client: u64,
+    round: u64,
+    seed: u64,
+    n_is: usize,
+    n_ul: usize,
+    block_size: usize,
+    sel_seed: u64,
+) -> (Vec<f32>, u64) {
+    let d = q.len();
+    let plan = BlockPlan::fixed(d, block_size);
+    let codec = BlockCodec::new(n_is);
+    let prior = vec![0.5f32; d];
+    let mut sel = Xoshiro256::new(sel_seed);
+    let mut mean = vec![0.0f32; d];
+    let mut buf = vec![0.0f32; d];
+    let mut bits = 0u64;
+    for ell in 0..n_ul {
+        for b in 0..plan.n_blocks() {
+            let r = plan.block(b);
+            let stream = mrc_stream(seed, round, client, b as u64, Direction::Uplink);
+            let out = codec.encode(
+                &q[r.clone()],
+                &prior[r.clone()],
+                &stream,
+                ell as u64,
+                &mut sel,
+            );
+            bits += out.bits;
+            codec.decode(&prior[r.clone()], &stream, ell as u64, out.index, &mut buf[r.clone()]);
         }
-        tensor::scale(&mut mean, 1.0 / self.cfg.n_ul as f32);
-        (mean, bits)
+        tensor::add_assign(&mut mean, &buf);
     }
+    tensor::scale(&mut mean, 1.0 / n_ul as f32);
+    (mean, bits)
 }
 
 impl CflAlgorithm for BiCompFlCfl {
@@ -139,39 +149,94 @@ impl CflAlgorithm for BiCompFlCfl {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_engine(&mut self, engine: ParallelRoundEngine) {
+        self.engine = engine;
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
         let d = self.x.len();
         let n = oracle.n_clients();
-        let mut agg = vec![0.0f32; d];
-        let mut ul = 0u64;
-        let mut per_client_idx_bits = Vec::with_capacity(n);
         let x_snapshot = self.x.clone();
+        let qs = Qs { s: self.s_levels() };
+
+        // -- serial front-end: gradients are oracle-stateful ----------------
+        struct UlJob {
+            client: u64,
+            /// Bernoulli posterior carried by MRC (empty under Q_s, whose
+            /// posterior lives in `post.q` — no duplicate d-length copy).
+            q: Vec<f32>,
+            /// Q_s side information (None under stochastic sign).
+            post: Option<QsPosterior>,
+            /// ±1 update scale under stochastic sign.
+            scale: f32,
+            side_bits: u64,
+            sel_seed: u64,
+        }
+        let mut jobs: Vec<UlJob> = Vec::with_capacity(n);
         for i in 0..n {
             oracle.grad(i, &x_snapshot, &mut self.scratch);
-            let (update, idx_bits, side_bits) = match self.cfg.quantizer {
+            let sel_seed = selector_seed(self.cfg.seed, self.round, i as u64, Direction::Uplink);
+            let job = match self.cfg.quantizer {
                 Quantizer::StochasticSign => {
                     let mut q = vec![0.0f32; d];
                     stochastic_sign_posterior(&self.scratch, self.cfg.temperature, &mut q);
-                    let (bits_mean, idx_bits) = self.transport(&q, i as u64);
-                    // bit b decodes to the ±1 update 2b − 1, scaled by the
-                    // mean gradient magnitude (the usual scaled-sign step).
+                    // A decoded bit b becomes the ±1 update 2b − 1, scaled by
+                    // the mean gradient magnitude (the usual scaled-sign step).
                     let scale = (tensor::norm1(&self.scratch) / d as f64) as f32;
-                    let update: Vec<f32> =
-                        bits_mean.iter().map(|&b| scale * (2.0 * b - 1.0)).collect();
-                    (update, idx_bits, 0u64)
+                    UlJob {
+                        client: i as u64,
+                        q,
+                        post: None,
+                        scale,
+                        side_bits: 0,
+                        sel_seed,
+                    }
                 }
                 Quantizer::Qs => {
-                    let qs = Qs { s: self.s_levels() };
                     let post = qs.posterior(&self.scratch);
-                    let (bits_mean, idx_bits) = self.transport(&post.q, i as u64);
-                    let mut update = vec![0.0f32; d];
-                    qs.reconstruct(&post, &bits_mean, &mut update);
-                    (update, idx_bits, qs.side_bits(d))
+                    UlJob {
+                        client: i as u64,
+                        q: Vec::new(),
+                        post: Some(post),
+                        scale: 0.0,
+                        side_bits: qs.side_bits(d),
+                        sel_seed,
+                    }
                 }
             };
-            ul += idx_bits + side_bits;
-            per_client_idx_bits.push(idx_bits + side_bits);
-            tensor::add_assign(&mut agg, &update);
+            jobs.push(job);
+        }
+
+        // -- sharded MRC transport + reconstruction (the hot path) ----------
+        let n_is = self.cfg.n_is;
+        let n_ul = self.cfg.n_ul;
+        let block_size = self.cfg.block_size;
+        let seed = self.cfg.seed;
+        let round = self.round;
+        let results: Vec<(Vec<f32>, u64)> = self.engine.run(&jobs, |_, j| {
+            let q: &[f32] = j.post.as_ref().map_or(&j.q, |p| &p.q);
+            let (bits_mean, idx_bits) =
+                transport_at(q, j.client, round, seed, n_is, n_ul, block_size, j.sel_seed);
+            let update: Vec<f32> = match &j.post {
+                None => bits_mean.iter().map(|&b| j.scale * (2.0 * b - 1.0)).collect(),
+                Some(post) => {
+                    let mut u = vec![0.0f32; d];
+                    qs.reconstruct(post, &bits_mean, &mut u);
+                    u
+                }
+            };
+            (update, idx_bits)
+        });
+
+        // -- aggregation + index-relay accounting ---------------------------
+        let mut agg = vec![0.0f32; d];
+        let mut ul = 0u64;
+        let mut per_client_idx_bits = Vec::with_capacity(n);
+        for (job, (update, idx_bits)) in jobs.iter().zip(&results) {
+            let cost = idx_bits + job.side_bits;
+            ul += cost;
+            per_client_idx_bits.push(cost);
+            tensor::add_assign(&mut agg, update);
         }
         tensor::axpy(&mut self.x, -self.cfg.server_lr / n as f32, &agg);
         // Downlink: index relay (Algorithm 1 step 7) — client j receives all

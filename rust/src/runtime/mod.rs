@@ -7,11 +7,15 @@
 //! * [`artifact`] — compile + execute one HLO module (tuple outputs).
 //! * [`oracle`]   — [`crate::coordinator::MaskOracle`] and
 //!   [`crate::algorithms::GradOracle`] implementations backed by artifacts.
+//! * [`engine`]   — [`ParallelRoundEngine`]: sharded, bit-deterministic
+//!   execution of per-round client work (the L3 concurrency substrate).
 
 pub mod manifest;
 pub mod artifact;
 pub mod oracle;
+pub mod engine;
 
 pub use artifact::Artifact;
+pub use engine::ParallelRoundEngine;
 pub use manifest::{ArchInfo, Manifest};
 pub use oracle::RuntimeOracle;

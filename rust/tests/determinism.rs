@@ -1,0 +1,189 @@
+//! Engine determinism and bit-accounting invariants.
+//!
+//! The sharded [`ParallelRoundEngine`] must be *bit-identical* to serial
+//! execution — same `RoundRecord` stream, same uplink/downlink bit totals,
+//! same models — for every BiCompFL variant, otherwise no experiment that
+//! ran on a many-core box is comparable to one that ran on a laptop. These
+//! tests pin that contract end-to-end, plus the PR-SplitDL invariant that
+//! the disjoint per-client block groups sum to the unpartitioned PR
+//! downlink cost.
+
+use bicompfl::algorithms::runner::RoundRecord;
+use bicompfl::algorithms::{CflAlgorithm, QuadraticOracle, RoundBits};
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, MaskRoundBits, Variant};
+use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::AllocationStrategy;
+use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::util::rng::Xoshiro256;
+
+fn cfg(variant: Variant) -> BiCompFlConfig {
+    BiCompFlConfig {
+        variant,
+        n_is: 64,
+        allocation: AllocationStrategy::fixed(32),
+        local_iters: 2,
+        local_lr: 0.2,
+        ..Default::default()
+    }
+}
+
+/// Run a variant with the given engine; return everything observable.
+fn run_mask_variant(
+    variant: Variant,
+    engine: ParallelRoundEngine,
+    rounds: usize,
+) -> (Vec<RoundRecord>, Vec<f32>, Vec<Vec<f32>>) {
+    let d = 256;
+    let n = 4;
+    let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
+    let mut alg = BiCompFl::new(d, n, cfg(variant)).with_engine(engine);
+    let recs = alg.run(&mut oracle, rounds, 1);
+    let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+    (recs, alg.global_model().to_vec(), clients)
+}
+
+#[test]
+fn sharded_equals_serial_for_every_variant() {
+    for variant in [
+        Variant::Gr,
+        Variant::GrReconst,
+        Variant::Pr,
+        Variant::PrSplitDl,
+    ] {
+        let (serial_recs, serial_theta, serial_clients) =
+            run_mask_variant(variant, ParallelRoundEngine::serial(), 4);
+        for shards in [2usize, 3, 8] {
+            let (recs, theta, clients) =
+                run_mask_variant(variant, ParallelRoundEngine::with_shards(shards), 4);
+            assert_eq!(
+                serial_recs, recs,
+                "{}: RoundRecords diverged at {shards} shards",
+                variant.label()
+            );
+            assert_eq!(
+                serial_theta, theta,
+                "{}: global model diverged at {shards} shards",
+                variant.label()
+            );
+            assert_eq!(
+                serial_clients, clients,
+                "{}: client models diverged at {shards} shards",
+                variant.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_equals_serial_under_partial_participation() {
+    let run = |engine: ParallelRoundEngine| {
+        let d = 192;
+        let n = 5;
+        let mut c = cfg(Variant::Pr);
+        c.participation = 0.6;
+        let mut oracle = SyntheticMaskOracle::new(d, n, 11, 0.2);
+        let mut alg = BiCompFl::new(d, n, c).with_engine(engine);
+        alg.run(&mut oracle, 6, 1)
+    };
+    let serial = run(ParallelRoundEngine::serial());
+    let sharded = run(ParallelRoundEngine::with_shards(4));
+    assert_eq!(serial, sharded);
+}
+
+#[test]
+fn sharded_equals_serial_with_adaptive_allocation() {
+    // Adaptive-Avg renegotiation is stateful federator-side logic; it must
+    // stay on the serial path and not perturb engine determinism.
+    let run = |engine: ParallelRoundEngine| {
+        let d = 256;
+        let n = 3;
+        let mut c = cfg(Variant::Gr);
+        c.allocation = AllocationStrategy::adaptive_avg(64, 1024);
+        let mut oracle = SyntheticMaskOracle::new(d, n, 17, 0.1);
+        let mut alg = BiCompFl::new(d, n, c).with_engine(engine);
+        alg.run(&mut oracle, 5, 1)
+    };
+    assert_eq!(
+        run(ParallelRoundEngine::serial()),
+        run(ParallelRoundEngine::with_shards(3))
+    );
+}
+
+#[test]
+fn cfl_sharded_equals_serial_for_both_quantizers() {
+    for quantizer in [Quantizer::StochasticSign, Quantizer::Qs] {
+        let run = |engine: ParallelRoundEngine| -> (Vec<RoundBits>, Vec<f32>) {
+            let d = 128;
+            let n = 5;
+            let mut oracle = QuadraticOracle::new(d, n, 7);
+            let mut alg = BiCompFlCfl::new(
+                d,
+                CflConfig {
+                    quantizer,
+                    n_is: 32,
+                    block_size: 32,
+                    server_lr: 0.2,
+                    ..Default::default()
+                },
+            );
+            alg.set_engine(engine);
+            let mut rng = Xoshiro256::new(3);
+            let bits: Vec<RoundBits> =
+                (0..5).map(|_| alg.round(&mut oracle, &mut rng)).collect();
+            (bits, alg.params().to_vec())
+        };
+        let (serial_bits, serial_x) = run(ParallelRoundEngine::serial());
+        let (sharded_bits, sharded_x) = run(ParallelRoundEngine::with_shards(4));
+        assert_eq!(serial_bits, sharded_bits, "{quantizer:?}: bits diverged");
+        assert_eq!(serial_x, sharded_x, "{quantizer:?}: params diverged");
+    }
+}
+
+/// PR-SplitDL partitions the downlink block set into disjoint per-client
+/// groups; under Fixed allocation the group sizes must therefore sum to the
+/// unpartitioned PR downlink cost *every round* — including ragged block
+/// counts not divisible by n.
+#[test]
+fn splitdl_block_groups_sum_to_unpartitioned_pr_downlink() {
+    // d = 544, bs = 32 -> 17 blocks, deliberately not divisible by n = 4.
+    let (d, n, rounds) = (544usize, 4usize, 6usize);
+    let run = |variant: Variant| -> Vec<MaskRoundBits> {
+        let mut c = cfg(variant);
+        c.n_is = 64;
+        c.allocation = AllocationStrategy::fixed(32);
+        let mut oracle = SyntheticMaskOracle::new(d, n, 23, 0.1);
+        let mut alg = BiCompFl::new(d, n, c);
+        (0..rounds).map(|_| alg.round(&mut oracle)).collect()
+    };
+    let pr = run(Variant::Pr);
+    let split = run(Variant::PrSplitDl);
+    for (t, (full, part)) in pr.iter().zip(&split).enumerate() {
+        assert_eq!(
+            full.dl,
+            part.dl * n as u64,
+            "round {t}: disjoint groups must cover 1/n of the PR downlink"
+        );
+        // Private randomness: broadcast cannot compress either variant.
+        assert_eq!(full.dl_bc, full.dl);
+        assert_eq!(part.dl_bc, part.dl);
+    }
+    // Before the trajectories diverge (round 0 shares the same priors),
+    // downlink partitioning must leave the uplink untouched.
+    assert_eq!(pr[0].ul, split[0].ul);
+}
+
+/// The same invariant holds cumulatively: over n consecutive rounds the
+/// rotating shares cover every (client, block) pair exactly once.
+#[test]
+fn splitdl_rotation_is_exhaustive_over_n_rounds() {
+    let (d, n) = (512usize, 4usize);
+    let dl_total = |variant: Variant, rounds: usize| -> u64 {
+        let mut c = cfg(variant);
+        c.local_lr = 0.0;
+        let mut oracle = SyntheticMaskOracle::new(d, n, 29, 0.0);
+        let mut alg = BiCompFl::new(d, n, c);
+        (0..rounds).map(|_| alg.round(&mut oracle).dl).sum()
+    };
+    assert_eq!(dl_total(Variant::PrSplitDl, n), dl_total(Variant::Pr, 1));
+}

@@ -1,0 +1,166 @@
+//! Property tests for the MRC block codec (`mrc/codec.rs`), driven by the
+//! in-tree `util::prop` harness: round-trip determinism under shared seeds,
+//! the index-bits formula, and invariance of the Gumbel-max index selection
+//! to the constant softmax offset B that the encoder drops.
+
+use bicompfl::mrc::codec::BlockCodec;
+use bicompfl::mrc::kl::clamp_param;
+use bicompfl::util::prop::{bern_param, len_in, run_prop};
+use bicompfl::util::rng::{Philox, Xoshiro256};
+
+/// Encode/decode round-trip is a pure function of (q, p, stream, sample_idx,
+/// selector seed): re-running any stage with the same seeds reproduces it
+/// bit-for-bit, and decoding on an independently constructed codec (the
+/// other party) regenerates exactly the encoder's selected candidate.
+#[test]
+fn prop_roundtrip_deterministic_under_shared_seeds() {
+    run_prop("codec-roundtrip-determinism", 40, |rng, case| {
+        let m = len_in(rng, 300);
+        let n_is = [2usize, 16, 64, 100, 256][case % 5];
+        let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let stream_seed = rng.next_u64();
+        let sel_seed = rng.next_u64();
+        let sample_idx = rng.next_below(7) as u64;
+
+        let encoder = BlockCodec::new(n_is);
+        let st = Philox::keyed(stream_seed, 1);
+        let a = encoder.encode(&q, &p, &st, sample_idx, &mut Xoshiro256::new(sel_seed));
+        let b = encoder.encode(&q, &p, &st, sample_idx, &mut Xoshiro256::new(sel_seed));
+        assert_eq!(a.index, b.index, "encode must be seed-deterministic");
+        assert_eq!(a.bits, b.bits);
+
+        // The decoding party holds only (n_is, p, stream) — no encoder state.
+        let decoder = BlockCodec::new(n_is);
+        let st_remote = Philox::keyed(stream_seed, 1);
+        let mut dec1 = vec![0.0f32; m];
+        let mut dec2 = vec![0.0f32; m];
+        decoder.decode(&p, &st_remote, sample_idx, a.index, &mut dec1);
+        decoder.decode(&p, &st_remote, sample_idx, a.index, &mut dec2);
+        assert_eq!(dec1, dec2, "decode must be seed-deterministic");
+
+        // And it is exactly the candidate the encoder scored.
+        let mut expect = vec![0.0f32; m];
+        encoder.candidate_bits(&p, &st, sample_idx, a.index, &mut expect);
+        assert_eq!(dec1, expect);
+        assert!(dec1.iter().all(|&x| x == 0.0 || x == 1.0));
+    });
+}
+
+/// `index_bits` must equal ceil(log2(n_is)) — checked against the defining
+/// property (smallest b with 2^b >= n_is), for powers of two and non-powers.
+#[test]
+fn index_bits_is_ceil_log2_for_all_small_n() {
+    for n_is in 2usize..=1025 {
+        let expect = (0u64..)
+            .find(|b| (1u128 << b) >= n_is as u128)
+            .unwrap();
+        let codec = BlockCodec::new(n_is);
+        assert_eq!(
+            codec.index_bits(),
+            expect,
+            "n_is={n_is}: index_bits != ceil(log2)"
+        );
+    }
+    // Spot values pinned explicitly (powers and non-powers).
+    assert_eq!(BlockCodec::new(2).index_bits(), 1);
+    assert_eq!(BlockCodec::new(3).index_bits(), 2);
+    assert_eq!(BlockCodec::new(256).index_bits(), 8);
+    assert_eq!(BlockCodec::new(257).index_bits(), 9);
+    assert_eq!(BlockCodec::new(1 << 20).index_bits(), 20);
+    assert_eq!(BlockCodec::new((1 << 20) + 1).index_bits(), 21);
+}
+
+/// Every encode's transmitted cost equals the codec's index_bits.
+#[test]
+fn prop_encode_cost_matches_index_bits() {
+    run_prop("codec-cost", 30, |rng, case| {
+        let n_is = 2 + rng.next_below(500);
+        let m = len_in(rng, 128);
+        let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let codec = BlockCodec::new(n_is);
+        let st = Philox::keyed(0xC057 ^ case as u64, 0);
+        let out = codec.encode(&q, &p, &st, 0, &mut Xoshiro256::new(case as u64));
+        assert_eq!(out.bits, codec.index_bits());
+        assert!((out.index as usize) < n_is);
+    });
+}
+
+/// Reference re-implementation of the encoder's candidate scoring, matching
+/// its 4-lane f32 accumulation exactly, with the softmax offset B optionally
+/// added back. Returns the Gumbel-max index.
+fn reference_encode(
+    q: &[f32],
+    p: &[f32],
+    stream: &Philox,
+    sample_idx: u64,
+    n_is: usize,
+    sel_seed: u64,
+    add_offset_b: bool,
+) -> u32 {
+    let m = q.len();
+    let codec = BlockCodec::new(n_is);
+    let mut delta = vec![0.0f32; m];
+    let mut b_offset = 0.0f64;
+    for e in 0..m {
+        let qe = clamp_param(q[e]);
+        let pe = clamp_param(p[e]);
+        delta[e] = (qe / pe).ln() - ((1.0 - qe) / (1.0 - pe)).ln();
+        b_offset += (((1.0 - qe) / (1.0 - pe)) as f64).ln();
+    }
+    let mut sel = Xoshiro256::new(sel_seed);
+    let mut best_idx = 0u32;
+    let mut best_val = f64::NEG_INFINITY;
+    let mut bits = vec![0.0f32; m];
+    for i in 0..n_is {
+        codec.candidate_bits(p, stream, sample_idx, i as u32, &mut bits);
+        // Same lane-strided f32 accumulation as the encoder's hot loop.
+        let mut acc = [0.0f32; 4];
+        for e in 0..m {
+            acc[e % 4] += delta[e] * bits[e];
+        }
+        let mut logw = (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
+        if add_offset_b {
+            logw += b_offset;
+        }
+        let g = -(-(sel.next_f64().max(1e-300)).ln()).ln();
+        let val = logw + g;
+        if val > best_val {
+            best_val = val;
+            best_idx = i as u32;
+        }
+    }
+    best_idx
+}
+
+/// The encoder drops the candidate-independent offset B = Σ_e ln((1−q)/(1−p))
+/// from every log-weight. Dropping it must not change the selected index:
+/// the codec's choice equals a reference scorer without B *and* a reference
+/// scorer with B added back, for the same selector stream.
+#[test]
+fn prop_index_selection_invariant_to_softmax_offset_b() {
+    run_prop("codec-offset-invariance", 30, |rng, case| {
+        let m = len_in(rng, 96);
+        let n_is = [8usize, 32, 64][case % 3];
+        let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+        let st = Philox::keyed(rng.next_u64(), 2);
+        let sel_seed = rng.next_u64();
+
+        let codec = BlockCodec::new(n_is);
+        let picked = codec
+            .encode(&q, &p, &st, 0, &mut Xoshiro256::new(sel_seed))
+            .index;
+        let without_b = reference_encode(&q, &p, &st, 0, n_is, sel_seed, false);
+        let with_b = reference_encode(&q, &p, &st, 0, n_is, sel_seed, true);
+        assert_eq!(
+            picked, without_b,
+            "codec must match the reference delta-only scorer"
+        );
+        assert_eq!(
+            without_b, with_b,
+            "adding the constant offset B must not change the argmax"
+        );
+    });
+}

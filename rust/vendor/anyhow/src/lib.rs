@@ -1,0 +1,140 @@
+//! Offline, dependency-free subset of the `anyhow` API.
+//!
+//! The build must work with no network access, so this vendored crate
+//! provides exactly the surface the codebase uses: [`Error`] (a
+//! context-chained message type), [`Result`], the [`anyhow!`] macro, and the
+//! [`Context`] extension trait. Like upstream `anyhow`, [`Error`] does *not*
+//! implement `std::error::Error` itself, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion for `?` coherent.
+
+use std::fmt;
+
+/// A context-chained error. `frames[0]` is the outermost context; the last
+/// frame is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context frame (outermost-first ordering).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.join(": "))
+    }
+}
+
+/// `?`-conversion from any standard error type (mirrors upstream anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error::msg(err)
+    }
+}
+
+/// `anyhow::Result<T>` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error arm of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, a displayable value, or a
+/// format string with arguments — the three upstream `anyhow!` forms.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let x = 7;
+        let b = anyhow!("inline {x}");
+        assert_eq!(format!("{b}"), "inline 7");
+        let c = anyhow!("args {} {}", 1, "two");
+        assert_eq!(format!("{c}"), "args 1 two");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{d}"), "owned");
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let _ = std::fs::metadata("/definitely/not/a/path/abcxyz")?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real bindings link against `xla_extension`, which is not available in
+//! the offline build environment. This stub mirrors the API surface used by
+//! `rust/src/runtime/` so the crate compiles and tests run everywhere; every
+//! entry point that would touch PJRT returns [`Error`] at runtime. The
+//! artifact-backed paths are only reached when `artifacts/manifest.json`
+//! exists, so the synthetic-oracle test suite never hits these errors.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only — the types and
+//! signatures here match the subset of xla-rs the runtime consumes.
+
+use std::fmt;
+
+/// Error raised by every stubbed PJRT entry point.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline `xla` stub; install \
+         xla_extension and point Cargo at the real bindings to run artifacts)"
+    ))
+}
+
+/// PJRT client handle (stub).
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub).
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: ?Sized>(_data: &T) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_not_panics() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let _ = comp; // constructing metadata is allowed
+        assert!(Literal::vec1(&[1.0f32, 2.0][..]).reshape(&[2]).is_err());
+        assert!(Literal::scalar(1.0).to_tuple().is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+
+    #[test]
+    fn error_message_names_the_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
