@@ -19,7 +19,7 @@ pub mod liec;
 pub mod m3;
 pub mod runner;
 
-pub use oracle::{GradOracle, QuadraticOracle};
+pub use oracle::{GradOracle, QuadraticOracle, ShardedGradOracle};
 pub use runner::{run_algorithm, run_algorithm_sharded, RoundRecord};
 
 use crate::util::rng::Xoshiro256;
@@ -37,7 +37,11 @@ pub struct RoundBits {
 }
 
 /// A conventional-FL training algorithm with bi-directional compression.
-pub trait CflAlgorithm {
+///
+/// `Send` is a supertrait so the pipelined runner can drive an algorithm on
+/// the caller thread while the worker pool evaluates the previous round's
+/// model; every implementation is plain owned data, so the bound is free.
+pub trait CflAlgorithm: Send {
     fn name(&self) -> &'static str;
     /// Current global model (server copy).
     fn params(&self) -> &[f32];
@@ -52,6 +56,23 @@ pub trait CflAlgorithm {
     fn set_engine(&mut self, _engine: crate::runtime::ParallelRoundEngine) {}
     /// Execute one communication round; returns the traffic it cost.
     fn round(&mut self, oracle: &mut dyn GradOracle, rng: &mut Xoshiro256) -> RoundBits;
+    /// True when [`CflAlgorithm::round_sharded`] is implemented; lets the
+    /// runner pick the pipelined path before touching any state.
+    fn supports_sharded_round(&self) -> bool {
+        false
+    }
+    /// Execute one round against a pure sharded-oracle view (no `&mut`
+    /// oracle access), bit-identical to [`CflAlgorithm::round`] on the same
+    /// oracle. Required for cross-round pipelining: the runner can overlap
+    /// round r's evaluation with round r+1 only if rounds never need the
+    /// oracle exclusively. Default: `None` (sequential baselines).
+    fn round_sharded(
+        &mut self,
+        _oracle: &dyn ShardedGradOracle,
+        _rng: &mut Xoshiro256,
+    ) -> Option<RoundBits> {
+        None
+    }
 }
 
 pub fn make_baseline(

@@ -14,6 +14,26 @@ pub trait GradOracle {
     fn grad(&mut self, client: usize, params: &[f32], out: &mut [f32]);
     /// Global (test) loss and accuracy at `params`.
     fn eval(&mut self, params: &[f32]) -> (f64, f64);
+    /// Pure, `Sync` view of this oracle for engine-sharded gradient work and
+    /// pipelined evaluation, or `None` when the oracle is inherently
+    /// sequential (shared noise RNG, thread-local PJRT state, ...). When
+    /// `Some`, `grad_at`/`eval_at` must be bit-identical to `grad`/`eval`
+    /// regardless of call order — the equivalence the determinism suite pins.
+    fn sharded(&self) -> Option<&dyn ShardedGradOracle> {
+        None
+    }
+}
+
+/// Concurrent (shared-reference) gradient interface: every method is a pure
+/// function of its arguments, so calls may run on any thread in any order.
+/// See [`GradOracle::sharded`].
+pub trait ShardedGradOracle: Sync {
+    fn dim(&self) -> usize;
+    fn n_clients(&self) -> usize;
+    /// Same contract as [`GradOracle::grad`], callable concurrently.
+    fn grad_at(&self, client: usize, params: &[f32], out: &mut [f32]);
+    /// Same contract as [`GradOracle::eval`], callable concurrently.
+    fn eval_at(&self, params: &[f32]) -> (f64, f64);
 }
 
 /// Heterogeneous quadratic: client i's loss is 0.5 Σ_e a_e (x_e − c_{i,e})².
@@ -78,6 +98,28 @@ impl QuadraticOracle {
         let (l, _) = self.eval(params);
         l - floor
     }
+
+    /// Noise-free gradient, shared by the sequential and sharded entry
+    /// points (the sequential path layers its shared-RNG noise on top).
+    fn grad_core(&self, client: usize, params: &[f32], out: &mut [f32]) {
+        let ci = &self.c[client];
+        for e in 0..self.d {
+            out[e] = self.a[e] * (params[e] - ci[e]);
+        }
+    }
+
+    fn eval_core(&self, params: &[f32]) -> (f64, f64) {
+        // Average loss over clients == quadratic around c_mean + constant.
+        let mut loss = 0.0f64;
+        for ci in &self.c {
+            for e in 0..self.d {
+                let diff = (params[e] - ci[e]) as f64;
+                loss += 0.5 * self.a[e] as f64 * diff * diff;
+            }
+        }
+        loss /= (self.n * self.d) as f64;
+        (loss, 1.0 / (1.0 + loss))
+    }
 }
 
 impl GradOracle for QuadraticOracle {
@@ -90,27 +132,44 @@ impl GradOracle for QuadraticOracle {
     }
 
     fn grad(&mut self, client: usize, params: &[f32], out: &mut [f32]) {
-        let ci = &self.c[client];
-        for e in 0..self.d {
-            let mut g = self.a[e] * (params[e] - ci[e]);
-            if self.grad_noise > 0.0 {
-                g += self.grad_noise * self.noise_rng.next_normal();
+        self.grad_core(client, params, out);
+        if self.grad_noise > 0.0 {
+            for g in out.iter_mut().take(self.d) {
+                *g += self.grad_noise * self.noise_rng.next_normal();
             }
-            out[e] = g;
         }
     }
 
     fn eval(&mut self, params: &[f32]) -> (f64, f64) {
-        // Average loss over clients == quadratic around c_mean + constant.
-        let mut loss = 0.0f64;
-        for ci in &self.c {
-            for e in 0..self.d {
-                let diff = (params[e] - ci[e]) as f64;
-                loss += 0.5 * self.a[e] as f64 * diff * diff;
-            }
+        self.eval_core(params)
+    }
+
+    fn sharded(&self) -> Option<&dyn ShardedGradOracle> {
+        // The gradient-noise stream is a single shared RNG consumed in call
+        // order; only the noise-free oracle is order-independent.
+        if self.grad_noise == 0.0 {
+            Some(self)
+        } else {
+            None
         }
-        loss /= (self.n * self.d) as f64;
-        (loss, 1.0 / (1.0 + loss))
+    }
+}
+
+impl ShardedGradOracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+
+    fn grad_at(&self, client: usize, params: &[f32], out: &mut [f32]) {
+        self.grad_core(client, params, out);
+    }
+
+    fn eval_at(&self, params: &[f32]) -> (f64, f64) {
+        self.eval_core(params)
     }
 }
 
@@ -177,6 +236,24 @@ mod tests {
         };
         assert!(spread(&o_homo) < 1e-9);
         assert!(spread(&o_hetero) > 1.0);
+    }
+
+    #[test]
+    fn sharded_view_is_bit_identical_to_sequential() {
+        let mut o = QuadraticOracle::new(12, 3, 4);
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.1 - 0.5).collect();
+        let mut g_seq = vec![0.0f32; 12];
+        o.grad(2, &x, &mut g_seq);
+        let eval_seq = o.eval(&x);
+        let sh = o.sharded().expect("noise-free oracle must be shardable");
+        let mut g_sh = vec![0.0f32; 12];
+        sh.grad_at(2, &x, &mut g_sh);
+        assert_eq!(g_seq, g_sh);
+        assert_eq!(sh.eval_at(&x), eval_seq);
+        assert_eq!(ShardedGradOracle::dim(sh), 12);
+        assert_eq!(ShardedGradOracle::n_clients(sh), 3);
+        o.grad_noise = 0.1;
+        assert!(o.sharded().is_none());
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Uniform experiment loop over any [`CflAlgorithm`]: run rounds, evaluate,
 //! and collect the per-round record stream the experiment harness consumes.
 
-use super::{CflAlgorithm, GradOracle};
-use crate::runtime::ParallelRoundEngine;
+use super::{CflAlgorithm, GradOracle, ShardedGradOracle};
+use crate::runtime::{pool, ParallelRoundEngine};
 use crate::util::rng::Xoshiro256;
 
 /// One evaluated round of any algorithm (baseline or BiCompFL).
@@ -31,6 +31,13 @@ impl RoundRecord {
 
 /// Run `rounds` rounds with an explicit round engine installed on the
 /// algorithm (sharded per-client work; bit-identical to serial execution).
+///
+/// With a parallel engine, an algorithm that supports sharded rounds, and an
+/// oracle that exposes a pure concurrent view, the rounds are *pipelined*:
+/// round t's trailing evaluation runs on the worker pool while round t+1's
+/// encode work executes on this thread, so evaluation leaves the critical
+/// path. The record stream is bit-identical to [`run_algorithm`] — pinned by
+/// `rust/tests/determinism.rs`.
 pub fn run_algorithm_sharded(
     alg: &mut dyn CflAlgorithm,
     oracle: &mut dyn GradOracle,
@@ -40,7 +47,120 @@ pub fn run_algorithm_sharded(
     engine: ParallelRoundEngine,
 ) -> Vec<RoundRecord> {
     alg.set_engine(engine);
+    if engine.is_parallel() && alg.supports_sharded_round() {
+        let has_sharded_oracle = oracle.sharded().is_some();
+        if has_sharded_oracle {
+            let sh = oracle.sharded().expect("sharded view vanished");
+            return run_pipelined(alg, sh, rounds, eval_every, seed);
+        }
+    }
     run_algorithm(alg, oracle, rounds, eval_every, seed)
+}
+
+/// The pipelined CFL inner loop: rounds come from
+/// [`CflAlgorithm::round_sharded`] (which never needs the oracle
+/// exclusively); the shared [`drive_pipelined`] state machine overlaps each
+/// scheduled evaluation with the next round.
+fn run_pipelined(
+    alg: &mut dyn CflAlgorithm,
+    sh: &dyn ShardedGradOracle,
+    rounds: usize,
+    eval_every: usize,
+    seed: u64,
+) -> Vec<RoundRecord> {
+    let mut rng = Xoshiro256::new(seed);
+    let init_eval = sh.eval_at(alg.params());
+    drive_pipelined(
+        rounds,
+        eval_every,
+        init_eval,
+        |snap| {
+            let b = alg
+                .round_sharded(sh, &mut rng)
+                .expect("supports_sharded_round contract violated");
+            (b, snap.then(|| alg.params().to_vec()))
+        },
+        |params| sh.eval_at(params),
+        |b| (b.ul, b.dl, b.dl_bc),
+    )
+}
+
+/// The cross-round pipelined driver shared by the CFL runner above and
+/// `BiCompFl::run`: round t's scheduled evaluation runs on the worker pool
+/// ([`pool::WorkerPool::run_pair`]) against the model snapshot taken right
+/// after that round, while round t+1 executes on the caller thread (which
+/// keeps dispatching its own shard batches — permitted by `run_pair`).
+/// Evaluation is a pure function of the snapshot, so the overlap cannot
+/// change a single record; the determinism suite compares this driver
+/// against the sequential ones record-for-record.
+///
+/// `round_fn(snapshot_wanted)` executes one round and returns its bits plus,
+/// when asked, a snapshot of the post-round model. `eval_fn` must be pure.
+pub(crate) fn drive_pipelined<B, FR, FE>(
+    rounds: usize,
+    eval_every: usize,
+    init_eval: (f64, f64),
+    mut round_fn: FR,
+    eval_fn: FE,
+    to_bits: impl Fn(&B) -> (u64, u64, u64),
+) -> Vec<RoundRecord>
+where
+    B: Send,
+    FR: FnMut(bool) -> (B, Option<Vec<f32>>) + Send,
+    FE: Fn(&[f32]) -> (f64, f64) + Sync,
+{
+    let ee = eval_every.max(1);
+    let scheduled = |t: usize| t % ee == 0 || t + 1 == rounds;
+    let (mut loss, mut acc) = init_eval;
+    let mut out = Vec::with_capacity(rounds);
+    if rounds == 0 {
+        return out;
+    }
+    // Rolling one-deep pipeline: at the top of iteration t, round t has
+    // already executed (`b_cur`, plus its snapshot when its evaluation is
+    // scheduled); the overlap arm scores that snapshot on the pool while
+    // round t+1 runs here. Every scheduled evaluation except the final
+    // round's therefore leaves the critical path, even at eval_every=1.
+    let (mut b_cur, mut snap_cur) = round_fn(scheduled(0));
+    for t in 0..rounds {
+        let (ul_bits, dl_bits, dl_bc_bits) = to_bits(&b_cur);
+        let has_next = t + 1 < rounds;
+        match snap_cur.take() {
+            Some(snap) if has_next => {
+                let want_next = scheduled(t + 1);
+                let eval_ref = &eval_fn;
+                let round_ref = &mut round_fn;
+                let ((l, a), (b_next, snap_next)) = pool::global()
+                    .run_pair(move || eval_ref(&snap), move || round_ref(want_next));
+                loss = l;
+                acc = a;
+                b_cur = b_next;
+                snap_cur = snap_next;
+            }
+            Some(snap) => {
+                // Final round: nothing to overlap with.
+                let (l, a) = eval_fn(&snap);
+                loss = l;
+                acc = a;
+            }
+            None => {
+                if has_next {
+                    let (b_next, snap_next) = round_fn(scheduled(t + 1));
+                    b_cur = b_next;
+                    snap_cur = snap_next;
+                }
+            }
+        }
+        out.push(RoundRecord {
+            round: t,
+            loss,
+            acc,
+            ul_bits,
+            dl_bits,
+            dl_bc_bits,
+        });
+    }
+    out
 }
 
 /// Run `rounds` rounds, evaluating every `eval_every` rounds (and on the

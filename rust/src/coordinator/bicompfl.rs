@@ -6,7 +6,7 @@
 //! is metered exactly (index bits + allocation signalling), with separate
 //! point-to-point and broadcast downlink accounting (Appendix I).
 
-use super::oracle::MaskOracle;
+use super::oracle::{MaskOracle, ShardedMaskOracle};
 use super::shared_rand::{mrc_stream, private_seed, Direction};
 use crate::algorithms::runner::RoundRecord;
 use crate::mrc::block::{AllocationStrategy, BlockPlan};
@@ -14,6 +14,15 @@ use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
 use crate::runtime::ParallelRoundEngine;
 use crate::util::rng::Xoshiro256;
+
+/// How a round sources Layer-2 local training: exclusively through the
+/// sequential [`MaskOracle`], or concurrently through its pure sharded view
+/// (engine-parallel local training). Both paths execute the identical
+/// float-op sequence per client, so the choice never changes a result.
+enum LocalTrainer<'a> {
+    Serial(&'a mut dyn MaskOracle),
+    Sharded(&'a dyn ShardedMaskOracle),
+}
 
 /// Which BiCompFL variant to run (§3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -249,8 +258,21 @@ impl BiCompFl {
         }
     }
 
-    /// Execute one full BiCompFL round against the oracle.
+    /// Execute one full BiCompFL round against the oracle. Local training is
+    /// sharded across the engine whenever the oracle exposes a pure
+    /// concurrent view (and the engine is parallel); otherwise it runs
+    /// serially — either way the results are bit-identical.
     pub fn round(&mut self, oracle: &mut dyn MaskOracle) -> MaskRoundBits {
+        let use_sharded = self.engine.is_parallel() && oracle.sharded().is_some();
+        if use_sharded {
+            let sh = oracle.sharded().expect("sharded view vanished");
+            self.round_via(LocalTrainer::Sharded(sh))
+        } else {
+            self.round_via(LocalTrainer::Serial(oracle))
+        }
+    }
+
+    fn round_via(&mut self, mut trainer: LocalTrainer) -> MaskRoundBits {
         let n = self.n;
         // -- participation (PR only; GR requires all clients in sync) -------
         let participating: Vec<usize> = match self.cfg.variant {
@@ -265,8 +287,64 @@ impl BiCompFl {
             _ => (0..n).collect(),
         };
 
-        // -- local training (serial: PJRT execution is thread-local) --------
         let mut bits = MaskRoundBits::default();
+
+        // -- uplink priors (federator-side state reads; cheap, sequential) --
+        let priors: Vec<Vec<f32>> = participating
+            .iter()
+            .map(|&i| self.uplink_prior(i))
+            .collect();
+
+        // -- local training: the formerly-serial stage, sharded across the
+        //    engine when the oracle is pure; the posterior clamp and the
+        //    KL-ball projection ride along on the worker ------------------
+        let local_iters = self.cfg.local_iters;
+        let local_lr = self.cfg.local_lr;
+        let kl_budget = self.cfg.kl_budget;
+        let round = self.round;
+        let posteriors: Vec<Vec<f32>> = match &mut trainer {
+            LocalTrainer::Serial(oracle) => participating
+                .iter()
+                .zip(&priors)
+                .map(|(&i, prior)| {
+                    let (mut q, _loss, _acc) = oracle.local_train(
+                        i,
+                        &self.client_theta[i],
+                        local_iters,
+                        local_lr,
+                        round,
+                    );
+                    crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+                    if let Some(budget) = kl_budget {
+                        kl::project_kl_ball_vec(&mut q, prior, budget);
+                    }
+                    q
+                })
+                .collect(),
+            LocalTrainer::Sharded(sh) => {
+                let sh = *sh;
+                let client_theta = &self.client_theta;
+                let priors = &priors;
+                self.engine.run(&participating, |slot, &i| {
+                    let (mut q, _loss, _acc) =
+                        sh.local_train_at(i, &client_theta[i], local_iters, local_lr, round);
+                    crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+                    if let Some(budget) = kl_budget {
+                        kl::project_kl_ball_vec(&mut q, &priors[slot], budget);
+                    }
+                    q
+                })
+            }
+        };
+
+        // -- block planning: Adaptive-Avg renegotiation is stateful
+        //    federator logic, so plans stay sequenced in participation order
+        let plans: Vec<BlockPlan> = posteriors
+            .iter()
+            .zip(&priors)
+            .map(|(q, prior)| self.plan_for(q, prior))
+            .collect();
+
         struct UlJob {
             client: usize,
             q: Vec<f32>,
@@ -276,15 +354,11 @@ impl BiCompFl {
             sel_seed: u64,
         }
         let mut jobs: Vec<UlJob> = Vec::with_capacity(participating.len());
-        for &i in &participating {
-            let prior = self.uplink_prior(i);
-            let (mut q, _loss, _acc) =
-                oracle.local_train(i, &self.client_theta[i], self.cfg.local_iters, self.cfg.local_lr, self.round);
-            crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
-            if let Some(budget) = self.cfg.kl_budget {
-                kl::project_kl_ball_vec(&mut q, &prior, budget);
-            }
-            let plan = self.plan_for(&q, &prior);
+        for ((&i, q), (prior, plan)) in participating
+            .iter()
+            .zip(posteriors)
+            .zip(priors.into_iter().zip(plans))
+        {
             jobs.push(UlJob {
                 client: i,
                 q,
@@ -499,12 +573,24 @@ impl BiCompFl {
     }
 
     /// Run `rounds` rounds, evaluating the federator's global model.
+    ///
+    /// With a parallel engine and a pure (sharded) oracle the driver
+    /// pipelines across rounds: round t's evaluation runs on the worker pool
+    /// while round t+1 executes on this thread, so evaluation latency leaves
+    /// the critical path. Records are bit-identical to the sequential driver
+    /// — evaluation is a pure function of the θ snapshot taken right after
+    /// the round it scores.
     pub fn run(
         &mut self,
         oracle: &mut dyn MaskOracle,
         rounds: usize,
         eval_every: usize,
     ) -> Vec<RoundRecord> {
+        let pipelined = self.engine.is_parallel() && oracle.sharded().is_some();
+        if pipelined {
+            let sh = oracle.sharded().expect("sharded view vanished");
+            return self.run_pipelined(sh, rounds, eval_every);
+        }
         let mut out = Vec::with_capacity(rounds);
         let (mut loss, mut acc) = oracle.eval(&self.theta);
         for t in 0..rounds {
@@ -524,6 +610,29 @@ impl BiCompFl {
             });
         }
         out
+    }
+
+    /// The mask-training form of the shared pipelined driver: rounds run via
+    /// [`BiCompFl::round_via`] with the pure oracle view; scheduled
+    /// evaluations of round t overlap round t+1 on the worker pool.
+    fn run_pipelined(
+        &mut self,
+        sh: &dyn ShardedMaskOracle,
+        rounds: usize,
+        eval_every: usize,
+    ) -> Vec<RoundRecord> {
+        let init_eval = sh.eval_at(&self.theta);
+        crate::algorithms::runner::drive_pipelined(
+            rounds,
+            eval_every,
+            init_eval,
+            |snap| {
+                let b = self.round_via(LocalTrainer::Sharded(sh));
+                (b, snap.then(|| self.theta.clone()))
+            },
+            |theta| sh.eval_at(theta),
+            |b| (b.ul, b.dl, b.dl_bc),
+        )
     }
 }
 

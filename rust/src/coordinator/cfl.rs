@@ -14,7 +14,7 @@
 //! baselines.
 
 use super::shared_rand::{mrc_stream, selector_seed, Direction};
-use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits};
+use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits, ShardedGradOracle};
 use crate::compressors::qsgd::{Qs, QsPosterior};
 use crate::compressors::sign::stochastic_sign_posterior;
 use crate::mrc::block::BlockPlan;
@@ -22,6 +22,16 @@ use crate::mrc::codec::BlockCodec;
 use crate::runtime::ParallelRoundEngine;
 use crate::tensor;
 use crate::util::rng::Xoshiro256;
+
+/// How a round sources gradients: exclusively through the sequential
+/// [`GradOracle`], or concurrently through its pure sharded view. With the
+/// sharded view the gradient front-end fuses with the MRC transport into one
+/// engine batch per round; both paths execute the identical per-client
+/// float-op sequence, so the choice never changes a result.
+enum GradSource<'a> {
+    Serial(&'a mut dyn GradOracle),
+    Sharded(&'a dyn ShardedGradOracle),
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Quantizer {
@@ -87,6 +97,170 @@ impl BiCompFlCfl {
             self.cfg.s_levels
         }
     }
+
+    fn round_via(&mut self, mut grads: GradSource) -> RoundBits {
+        let d = self.x.len();
+        let n = match &grads {
+            GradSource::Serial(oracle) => oracle.n_clients(),
+            GradSource::Sharded(sh) => sh.n_clients(),
+        };
+        let x_snapshot = self.x.clone();
+        let qs = Qs { s: self.s_levels() };
+        let n_is = self.cfg.n_is;
+        let n_ul = self.cfg.n_ul;
+        let block_size = self.cfg.block_size;
+        let seed = self.cfg.seed;
+        let round = self.round;
+        let temperature = self.cfg.temperature;
+        let quantizer = self.cfg.quantizer;
+
+        // Per-client (reconstructed update, uplink cost incl. side info).
+        // Both arms go through the same quantize_gradient/transport_payload
+        // helpers, so serial and fused rounds cannot drift apart.
+        let results: Vec<(Vec<f32>, u64)> = match &mut grads {
+            GradSource::Serial(oracle) => {
+                // -- serial front-end (gradients are oracle-stateful), then
+                //    sharded MRC transport + reconstruction -----------------
+                let mut jobs: Vec<ClientPayload> = Vec::with_capacity(n);
+                for i in 0..n {
+                    oracle.grad(i, &x_snapshot, &mut self.scratch);
+                    let sel_seed = selector_seed(seed, round, i as u64, Direction::Uplink);
+                    jobs.push(quantize_gradient(
+                        &self.scratch,
+                        i as u64,
+                        quantizer,
+                        temperature,
+                        &qs,
+                        sel_seed,
+                    ));
+                }
+                self.engine.run(&jobs, |_, j| {
+                    transport_payload(j, d, round, seed, n_is, n_ul, block_size, &qs)
+                })
+            }
+            GradSource::Sharded(sh) => {
+                // -- fused: gradient, quantization, MRC transport, and
+                //    reconstruction run as one job per client ---------------
+                let sh = *sh;
+                let clients: Vec<u64> = (0..n as u64).collect();
+                let x_ref = &x_snapshot;
+                let qs_ref = &qs;
+                self.engine.run(&clients, |_, &i| {
+                    let mut g = vec![0.0f32; d];
+                    sh.grad_at(i as usize, x_ref, &mut g);
+                    let sel_seed = selector_seed(seed, round, i, Direction::Uplink);
+                    let payload = quantize_gradient(&g, i, quantizer, temperature, qs_ref, sel_seed);
+                    transport_payload(&payload, d, round, seed, n_is, n_ul, block_size, qs_ref)
+                })
+            }
+        };
+
+        // -- aggregation + index-relay accounting ---------------------------
+        let mut agg = vec![0.0f32; d];
+        let mut ul = 0u64;
+        let mut per_client_bits = Vec::with_capacity(n);
+        for (update, cost) in &results {
+            ul += cost;
+            per_client_bits.push(*cost);
+            tensor::add_assign(&mut agg, update);
+        }
+        tensor::axpy(&mut self.x, -self.cfg.server_lr / n as f32, &agg);
+        // Downlink: index relay (Algorithm 1 step 7) — client j receives all
+        // other clients' indices (+ side info under Q_s) and reconstructs the
+        // same aggregate via the global randomness.
+        let total: u64 = per_client_bits.iter().sum();
+        let dl: u64 = per_client_bits.iter().map(|&own| total - own).sum();
+        self.round += 1;
+        RoundBits {
+            ul,
+            dl,
+            dl_bc: total,
+        }
+    }
+}
+
+/// One client's quantized gradient, ready for MRC transport.
+struct ClientPayload {
+    client: u64,
+    /// Bernoulli posterior carried by MRC (empty under Q_s, whose posterior
+    /// lives in `post.q` — no duplicate d-length copy).
+    q: Vec<f32>,
+    /// Q_s side information (None under stochastic sign).
+    post: Option<QsPosterior>,
+    /// ±1 update scale under stochastic sign.
+    scale: f32,
+    side_bits: u64,
+    sel_seed: u64,
+}
+
+/// Quantizer front-end: turn one client's gradient into the Bernoulli
+/// posterior (+ side info) MRC will carry. Pure — called from both the
+/// serial and the fused sharded paths so they execute identical float ops.
+fn quantize_gradient(
+    g: &[f32],
+    client: u64,
+    quantizer: Quantizer,
+    temperature: f32,
+    qs: &Qs,
+    sel_seed: u64,
+) -> ClientPayload {
+    let d = g.len();
+    match quantizer {
+        Quantizer::StochasticSign => {
+            let mut q = vec![0.0f32; d];
+            stochastic_sign_posterior(g, temperature, &mut q);
+            // A decoded bit b becomes the ±1 update 2b − 1, scaled by the
+            // mean gradient magnitude (the usual scaled-sign step).
+            let scale = (tensor::norm1(g) / d as f64) as f32;
+            ClientPayload {
+                client,
+                q,
+                post: None,
+                scale,
+                side_bits: 0,
+                sel_seed,
+            }
+        }
+        Quantizer::Qs => {
+            let post = qs.posterior(g);
+            ClientPayload {
+                client,
+                q: Vec::new(),
+                post: Some(post),
+                scale: 0.0,
+                side_bits: qs.side_bits(d),
+                sel_seed,
+            }
+        }
+    }
+}
+
+/// MRC-transport one payload and reconstruct the update; returns the update
+/// plus its uplink cost including side information. Pure; the other half of
+/// the shared serial/fused code path.
+#[allow(clippy::too_many_arguments)]
+fn transport_payload(
+    j: &ClientPayload,
+    d: usize,
+    round: u64,
+    seed: u64,
+    n_is: usize,
+    n_ul: usize,
+    block_size: usize,
+    qs: &Qs,
+) -> (Vec<f32>, u64) {
+    let q: &[f32] = j.post.as_ref().map_or(&j.q, |p| &p.q);
+    let (bits_mean, idx_bits) =
+        transport_at(q, j.client, round, seed, n_is, n_ul, block_size, j.sel_seed);
+    let update: Vec<f32> = match &j.post {
+        None => bits_mean.iter().map(|&b| j.scale * (2.0 * b - 1.0)).collect(),
+        Some(post) => {
+            let mut u = vec![0.0f32; d];
+            qs.reconstruct(post, &bits_mean, &mut u);
+            u
+        }
+    };
+    (update, idx_bits + j.side_bits)
 }
 
 /// MRC-transport one client's Bernoulli posterior with the Ber(0.5) prior
@@ -154,102 +328,25 @@ impl CflAlgorithm for BiCompFlCfl {
     }
 
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
-        let d = self.x.len();
-        let n = oracle.n_clients();
-        let x_snapshot = self.x.clone();
-        let qs = Qs { s: self.s_levels() };
+        let use_sharded = self.engine.is_parallel() && oracle.sharded().is_some();
+        if use_sharded {
+            let sh = oracle.sharded().expect("sharded view vanished");
+            self.round_via(GradSource::Sharded(sh))
+        } else {
+            self.round_via(GradSource::Serial(oracle))
+        }
+    }
 
-        // -- serial front-end: gradients are oracle-stateful ----------------
-        struct UlJob {
-            client: u64,
-            /// Bernoulli posterior carried by MRC (empty under Q_s, whose
-            /// posterior lives in `post.q` — no duplicate d-length copy).
-            q: Vec<f32>,
-            /// Q_s side information (None under stochastic sign).
-            post: Option<QsPosterior>,
-            /// ±1 update scale under stochastic sign.
-            scale: f32,
-            side_bits: u64,
-            sel_seed: u64,
-        }
-        let mut jobs: Vec<UlJob> = Vec::with_capacity(n);
-        for i in 0..n {
-            oracle.grad(i, &x_snapshot, &mut self.scratch);
-            let sel_seed = selector_seed(self.cfg.seed, self.round, i as u64, Direction::Uplink);
-            let job = match self.cfg.quantizer {
-                Quantizer::StochasticSign => {
-                    let mut q = vec![0.0f32; d];
-                    stochastic_sign_posterior(&self.scratch, self.cfg.temperature, &mut q);
-                    // A decoded bit b becomes the ±1 update 2b − 1, scaled by
-                    // the mean gradient magnitude (the usual scaled-sign step).
-                    let scale = (tensor::norm1(&self.scratch) / d as f64) as f32;
-                    UlJob {
-                        client: i as u64,
-                        q,
-                        post: None,
-                        scale,
-                        side_bits: 0,
-                        sel_seed,
-                    }
-                }
-                Quantizer::Qs => {
-                    let post = qs.posterior(&self.scratch);
-                    UlJob {
-                        client: i as u64,
-                        q: Vec::new(),
-                        post: Some(post),
-                        scale: 0.0,
-                        side_bits: qs.side_bits(d),
-                        sel_seed,
-                    }
-                }
-            };
-            jobs.push(job);
-        }
+    fn supports_sharded_round(&self) -> bool {
+        true
+    }
 
-        // -- sharded MRC transport + reconstruction (the hot path) ----------
-        let n_is = self.cfg.n_is;
-        let n_ul = self.cfg.n_ul;
-        let block_size = self.cfg.block_size;
-        let seed = self.cfg.seed;
-        let round = self.round;
-        let results: Vec<(Vec<f32>, u64)> = self.engine.run(&jobs, |_, j| {
-            let q: &[f32] = j.post.as_ref().map_or(&j.q, |p| &p.q);
-            let (bits_mean, idx_bits) =
-                transport_at(q, j.client, round, seed, n_is, n_ul, block_size, j.sel_seed);
-            let update: Vec<f32> = match &j.post {
-                None => bits_mean.iter().map(|&b| j.scale * (2.0 * b - 1.0)).collect(),
-                Some(post) => {
-                    let mut u = vec![0.0f32; d];
-                    qs.reconstruct(post, &bits_mean, &mut u);
-                    u
-                }
-            };
-            (update, idx_bits)
-        });
-
-        // -- aggregation + index-relay accounting ---------------------------
-        let mut agg = vec![0.0f32; d];
-        let mut ul = 0u64;
-        let mut per_client_idx_bits = Vec::with_capacity(n);
-        for (job, (update, idx_bits)) in jobs.iter().zip(&results) {
-            let cost = idx_bits + job.side_bits;
-            ul += cost;
-            per_client_idx_bits.push(cost);
-            tensor::add_assign(&mut agg, update);
-        }
-        tensor::axpy(&mut self.x, -self.cfg.server_lr / n as f32, &agg);
-        // Downlink: index relay (Algorithm 1 step 7) — client j receives all
-        // other clients' indices (+ side info under Q_s) and reconstructs the
-        // same aggregate via the global randomness.
-        let total: u64 = per_client_idx_bits.iter().sum();
-        let dl: u64 = per_client_idx_bits.iter().map(|&own| total - own).sum();
-        self.round += 1;
-        RoundBits {
-            ul,
-            dl,
-            dl_bc: total,
-        }
+    fn round_sharded(
+        &mut self,
+        oracle: &dyn ShardedGradOracle,
+        _rng: &mut Xoshiro256,
+    ) -> Option<RoundBits> {
+        Some(self.round_via(GradSource::Sharded(oracle)))
     }
 }
 

@@ -22,4 +22,4 @@ pub mod cfl;
 pub mod topology;
 
 pub use bicompfl::{BiCompFl, BiCompFlConfig, Variant};
-pub use oracle::{MaskOracle, SyntheticMaskOracle};
+pub use oracle::{MaskOracle, ShardedMaskOracle, SyntheticMaskOracle};

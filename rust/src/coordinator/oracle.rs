@@ -27,6 +27,33 @@ pub trait MaskOracle {
     ) -> (Vec<f32>, f64, f64);
     /// Test loss/accuracy of the model induced by Bernoulli parameters theta.
     fn eval(&mut self, theta: &[f32]) -> (f64, f64);
+    /// Pure, `Sync` view of this oracle for engine-sharded local training and
+    /// pipelined evaluation, or `None` when the oracle is inherently
+    /// sequential (shared mutable RNG, thread-local PJRT state, ...). When
+    /// `Some`, `local_train_at`/`eval_at` must be bit-identical to
+    /// `local_train`/`eval` regardless of call order — that equivalence is
+    /// what lets the coordinator parallelize and pipeline without changing a
+    /// single result (`rust/tests/determinism.rs`).
+    fn sharded(&self) -> Option<&dyn ShardedMaskOracle> {
+        None
+    }
+}
+
+/// Concurrent (shared-reference) mask-training interface: every method is a
+/// pure function of its arguments, so calls may run on any thread in any
+/// order. See [`MaskOracle::sharded`].
+pub trait ShardedMaskOracle: Sync {
+    /// Same contract as [`MaskOracle::local_train`], callable concurrently.
+    fn local_train_at(
+        &self,
+        client: usize,
+        theta: &[f32],
+        local_iters: usize,
+        lr: f32,
+        round: u64,
+    ) -> (Vec<f32>, f64, f64);
+    /// Same contract as [`MaskOracle::eval`], callable concurrently.
+    fn eval_at(&self, theta: &[f32]) -> (f64, f64);
 }
 
 /// Closed-form stand-in for mask training: each client pulls scores toward a
@@ -90,6 +117,48 @@ impl SyntheticMaskOracle {
             .sum::<f64>()
             / self.d as f64
     }
+
+}
+
+/// The mirror-descent stand-in, shared by the sequential and the sharded
+/// entry points (free function so the sequential path can borrow the noise
+/// RNG and the targets disjointly). `noise_rng` is `Some` only on the
+/// sequential path (the shared-RNG noise stream is consumed in call order);
+/// with `noise == 0` both paths execute the identical float-op sequence.
+fn train_core(
+    target: &[f32],
+    noise: f32,
+    theta: &[f32],
+    local_iters: usize,
+    lr: f32,
+    mut noise_rng: Option<&mut Xoshiro256>,
+) -> (Vec<f32>, f64, f64) {
+    let d = target.len();
+    // The closed-form dynamics interpret lr directly as the contraction
+    // factor of the dual-space quadratic; clamp so artifact-scale
+    // learning rates (e.g. 5.0) do not oscillate the stand-in.
+    let lr = lr.clamp(0.0, 0.6);
+    let mut s: Vec<f32> = theta.iter().map(|&t| logit(t)).collect();
+    for _ in 0..local_iters {
+        for e in 0..d {
+            let mut g = s[e] - target[e]; // dual-space quadratic gradient
+            if noise > 0.0 {
+                if let Some(rng) = noise_rng.as_deref_mut() {
+                    g += noise * rng.next_normal();
+                }
+            }
+            s[e] -= lr * g;
+        }
+    }
+    let q: Vec<f32> = s.iter().map(|&x| sigmoid(x)).collect();
+    // Loss proxy: dual-space distance to the client target.
+    let loss = s
+        .iter()
+        .zip(target)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / d as f64;
+    (q, loss, 1.0 / (1.0 + loss))
 }
 
 impl MaskOracle for SyntheticMaskOracle {
@@ -109,33 +178,52 @@ impl MaskOracle for SyntheticMaskOracle {
         lr: f32,
         _round: u64,
     ) -> (Vec<f32>, f64, f64) {
-        let target = &self.client_targets[client];
-        // The closed-form dynamics interpret lr directly as the contraction
-        // factor of the dual-space quadratic; clamp so artifact-scale
-        // learning rates (e.g. 5.0) do not oscillate the stand-in.
-        let lr = lr.clamp(0.0, 0.6);
-        let mut s: Vec<f32> = theta.iter().map(|&t| logit(t)).collect();
-        for _ in 0..local_iters {
-            for e in 0..self.d {
-                let mut g = s[e] - target[e]; // dual-space quadratic gradient
-                if self.noise > 0.0 {
-                    g += self.noise * self.rng.next_normal();
-                }
-                s[e] -= lr * g;
-            }
-        }
-        let q: Vec<f32> = s.iter().map(|&x| sigmoid(x)).collect();
-        // Loss proxy: dual-space distance to the client target.
-        let loss = s
-            .iter()
-            .zip(target)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            / self.d as f64;
-        (q, loss, 1.0 / (1.0 + loss))
+        train_core(
+            &self.client_targets[client],
+            self.noise,
+            theta,
+            local_iters,
+            lr,
+            Some(&mut self.rng),
+        )
     }
 
     fn eval(&mut self, theta: &[f32]) -> (f64, f64) {
+        let err = self.theta_error(theta);
+        (err, 1.0 - err)
+    }
+
+    fn sharded(&self) -> Option<&dyn ShardedMaskOracle> {
+        // The gradient-noise stream is a single shared RNG consumed in call
+        // order; only the noise-free oracle is order-independent.
+        if self.noise == 0.0 {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl ShardedMaskOracle for SyntheticMaskOracle {
+    fn local_train_at(
+        &self,
+        client: usize,
+        theta: &[f32],
+        local_iters: usize,
+        lr: f32,
+        _round: u64,
+    ) -> (Vec<f32>, f64, f64) {
+        train_core(
+            &self.client_targets[client],
+            self.noise,
+            theta,
+            local_iters,
+            lr,
+            None,
+        )
+    }
+
+    fn eval_at(&self, theta: &[f32]) -> (f64, f64) {
         let err = self.theta_error(theta);
         (err, 1.0 - err)
     }
@@ -179,6 +267,29 @@ mod tests {
             .sum::<f64>()
             / 32.0;
         assert!(diff > 0.05, "clients should disagree: {diff}");
+    }
+
+    #[test]
+    fn sharded_view_is_bit_identical_to_sequential() {
+        let mut o = SyntheticMaskOracle::new(48, 3, 9, 0.2);
+        let theta = vec![0.4f32; 48];
+        let eval_seq = o.eval(&theta);
+        let train_seq = o.local_train(1, &theta, 4, 0.3, 2);
+        let sh = o.sharded().expect("noise-free oracle must be shardable");
+        assert_eq!(sh.local_train_at(1, &theta, 4, 0.3, 2), train_seq);
+        assert_eq!(sh.eval_at(&theta), eval_seq);
+    }
+
+    #[test]
+    fn noisy_oracle_refuses_sharding() {
+        let mut o = SyntheticMaskOracle::new(8, 1, 1, 0.0);
+        assert!(o.sharded().is_some());
+        o.noise = 0.5;
+        assert!(o.sharded().is_none());
+        // The noisy sequential path still works (and consumes the stream).
+        let theta = vec![0.5f32; 8];
+        let (q, _, _) = o.local_train(0, &theta, 2, 0.3, 0);
+        assert_eq!(q.len(), 8);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! state and its (seed, round, client, block, direction)-keyed randomness
 //! streams from [`crate::coordinator::shared_rand`]. The
 //! [`ParallelRoundEngine`] exploits that independence by sharding a slice of
-//! per-client jobs across a scoped `std::thread` pool.
+//! per-client jobs across the persistent [`crate::runtime::WorkerPool`]
+//! (earlier revisions spawned scoped threads every round; the policy struct
+//! and its `run(jobs, f)` contract survived that replacement unchanged).
 //!
 //! ## Determinism contract
 //!
@@ -16,10 +18,14 @@
 //! come from counter-based Philox streams and selector randomness from
 //! per-client seeds carried in the job), parallel execution is bit-identical
 //! to serial execution. `rust/tests/determinism.rs` pins this end-to-end for
-//! every BiCompFL variant.
+//! every BiCompFL variant, including pool reuse across rounds and the
+//! pipelined cross-round paths.
 
-/// A scoped thread pool that shards job slices into contiguous chunks, one
-/// worker thread per chunk. Cheap to copy; holds no threads between calls.
+use super::pool;
+
+/// A copyable sharding *policy*: how many contiguous chunks to split a job
+/// slice into. Holds no threads itself — parallel runs are dispatched to the
+/// process-wide persistent [`pool::WorkerPool`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelRoundEngine {
     shards: usize,
@@ -32,7 +38,7 @@ impl Default for ParallelRoundEngine {
 }
 
 impl ParallelRoundEngine {
-    /// One shard per available hardware thread.
+    /// One shard per available hardware thread (the global pool's width).
     pub fn auto() -> Self {
         let shards = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -57,10 +63,17 @@ impl ParallelRoundEngine {
         self.shards
     }
 
+    /// Whether runs are dispatched to the worker pool (more than one shard).
+    /// Coordinators use this to decide if sharded local training and
+    /// cross-round pipelining are worth engaging.
+    pub fn is_parallel(&self) -> bool {
+        self.shards > 1
+    }
+
     /// Run `f(index, &job)` for every job and collect results in job order.
     ///
-    /// Jobs are split into at most `shards` contiguous chunks; each chunk is
-    /// processed by its own scoped thread writing into a disjoint region of
+    /// Jobs are split into at most `shards` contiguous chunks on the
+    /// persistent worker pool, each chunk writing into a disjoint region of
     /// the output, so no ordering- or scheduling-dependent state exists.
     pub fn run<J, R, F>(&self, jobs: &[J], f: F) -> Vec<R>
     where
@@ -68,35 +81,10 @@ impl ParallelRoundEngine {
         R: Send,
         F: Fn(usize, &J) -> R + Sync,
     {
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let shards = self.shards.min(n);
-        if shards == 1 {
+        if self.shards <= 1 || jobs.len() <= 1 {
             return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
         }
-        let chunk = n.div_ceil(shards);
-        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
-        out.resize_with(n, || None);
-        let f = &f;
-        std::thread::scope(|scope| {
-            for (ci, (job_chunk, out_chunk)) in
-                jobs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
-            {
-                let base = ci * chunk;
-                scope.spawn(move || {
-                    for (k, (job, slot)) in
-                        job_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
-                    {
-                        *slot = Some(f(base + k, job));
-                    }
-                });
-            }
-        });
-        out.into_iter()
-            .map(|r| r.expect("engine worker left a job slot unfilled"))
-            .collect()
+        pool::global().run(self.shards, jobs, f)
     }
 }
 
@@ -148,5 +136,26 @@ mod tests {
         assert_eq!(ParallelRoundEngine::with_shards(0).shards(), 1);
         assert!(ParallelRoundEngine::auto().shards() >= 1);
         assert_eq!(ParallelRoundEngine::serial().shards(), 1);
+        assert!(!ParallelRoundEngine::serial().is_parallel());
+        assert!(ParallelRoundEngine::with_shards(2).is_parallel());
+    }
+
+    #[test]
+    fn engine_reuse_across_many_rounds_is_stable() {
+        // The engine is Copy and dispatches to the same global pool every
+        // round; repeated batches must stay bit-identical.
+        let eng = ParallelRoundEngine::with_shards(4);
+        let jobs: Vec<u64> = (0..40).map(|i| i * 31 + 5).collect();
+        let reference = ParallelRoundEngine::serial().run(&jobs, |_, &j| {
+            let mut rng = Xoshiro256::new(j);
+            rng.next_u64()
+        });
+        for _ in 0..32 {
+            let got = eng.run(&jobs, |_, &j| {
+                let mut rng = Xoshiro256::new(j);
+                rng.next_u64()
+            });
+            assert_eq!(reference, got);
+        }
     }
 }

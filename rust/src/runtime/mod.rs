@@ -9,13 +9,17 @@
 //!   [`crate::algorithms::GradOracle`] implementations backed by artifacts.
 //! * [`engine`]   — [`ParallelRoundEngine`]: sharded, bit-deterministic
 //!   execution of per-round client work (the L3 concurrency substrate).
+//! * [`pool`]     — [`WorkerPool`]: the persistent channel-fed worker pool
+//!   the engine dispatches to, plus the `run_pair` pipelining primitive.
 
 pub mod manifest;
 pub mod artifact;
 pub mod oracle;
 pub mod engine;
+pub mod pool;
 
 pub use artifact::Artifact;
 pub use engine::ParallelRoundEngine;
+pub use pool::WorkerPool;
 pub use manifest::{ArchInfo, Manifest};
 pub use oracle::RuntimeOracle;

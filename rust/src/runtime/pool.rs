@@ -1,0 +1,444 @@
+//! Persistent worker pool: long-lived threads fed job batches over a channel.
+//!
+//! [`super::engine::ParallelRoundEngine`] used to spawn scoped threads every
+//! round; at BiCompFL round rates (hundreds of rounds/sec on the synthetic
+//! oracle) the spawn/join cost is a measurable fraction of the round. The
+//! [`WorkerPool`] keeps one OS thread per hardware thread alive for the whole
+//! process, and `run` feeds it contiguous job chunks through an injector
+//! channel (a condvar-guarded deque — MPMC by construction).
+//!
+//! ## Determinism contract
+//!
+//! Identical to the scoped engine it replaces: `run(shards, jobs, f)` returns
+//! exactly `jobs.iter().enumerate().map(f).collect()` for any shard count.
+//! Jobs are split into contiguous chunks and every chunk writes into a
+//! disjoint region of the output at the index of its job, so no ordering- or
+//! scheduling-dependent state can exist. Which *thread* runs a chunk is
+//! scheduler-dependent; which *result lands where* is not.
+//! `rust/tests/determinism.rs` pins this end-to-end, including pool reuse
+//! across many rounds and the cross-round pipelined paths.
+//!
+//! ## Lifecycle
+//!
+//! * [`WorkerPool::new`] spawns the workers; [`Drop`] closes the channel and
+//!   joins them (pending batches drain first).
+//! * [`global`] returns the lazily-initialized process-wide pool (one worker
+//!   per available hardware thread) that `ParallelRoundEngine` dispatches to.
+//!   It lives for the lifetime of the process.
+//! * A batch panics? The panic is caught on the worker, carried back, and
+//!   re-raised on the caller of `run` after the whole batch has settled —
+//!   workers themselves never die, so one poisoned round cannot take the
+//!   runtime down with it.
+//!
+//! ## Constraints
+//!
+//! Batch jobs must not dispatch *nested* batches onto the same pool: a worker
+//! blocked waiting for a sub-batch could deadlock the pool. The coordinators
+//! never nest — `run` is only called from coordinator threads, and the
+//! pipelining primitive [`WorkerPool::run_pair`] runs its second closure on
+//! the *caller* thread precisely so that closure may itself call `run`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A type-erased unit of work queued on the injector channel.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Injector {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Injector>,
+    available: Condvar,
+}
+
+/// Completion latch for one dispatched batch, plus the first captured panic.
+struct Batch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl Batch {
+    fn new(remaining: usize) -> Arc<Self> {
+        Arc::new(Self {
+            remaining: Mutex::new(remaining),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        })
+    }
+
+    /// Mark one task finished (with its panic payload, if it unwound).
+    fn complete(&self, payload: Option<Box<dyn std::any::Any + Send + 'static>>) {
+        if let Some(p) = payload {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send + 'static>> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// Blocks on the batch even if the caller's inline chunk panics, so borrows
+/// captured by dispatched tasks stay alive until every worker is done with
+/// them (the soundness requirement of the lifetime extension in `run`).
+struct WaitGuard<'a> {
+    batch: &'a Batch,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.batch.wait();
+    }
+}
+
+/// SAFETY: the caller must not return before the task has finished executing
+/// (enforced in this module by `WaitGuard` + `Batch::wait`), so every borrow
+/// captured by the closure strictly outlives its execution. Lifetimes are
+/// erased through a raw-pointer round trip; the Box's allocation and vtable
+/// are untouched.
+unsafe fn extend_task<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    let raw: *mut (dyn FnOnce() + Send + 'a) = Box::into_raw(task);
+    Box::from_raw(raw as *mut (dyn FnOnce() + Send + 'static))
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // Batch wrappers already catch panics; this outer catch only shields
+        // the worker from a hypothetical future task kind that does not.
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+/// A persistent pool of worker threads fed by an injector channel.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` long-lived workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Injector {
+                tasks: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bicompfl-pool-{w}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn inject(&self, tasks: Vec<Task>) {
+        let notify = tasks.len();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.tasks.extend(tasks);
+        }
+        if notify == 1 {
+            self.shared.available.notify_one();
+        } else {
+            self.shared.available.notify_all();
+        }
+    }
+
+    /// Run `f(index, &job)` for every job and collect results in job order.
+    ///
+    /// Jobs are split into at most `shards` contiguous chunks. The first
+    /// chunk runs inline on the caller (which therefore always makes
+    /// progress); the rest are fed to the workers. Blocks until the whole
+    /// batch has settled; a panicking job is re-raised here after the batch
+    /// completes.
+    pub fn run<J, R, F>(&self, shards: usize, jobs: &[J], f: F) -> Vec<R>
+    where
+        J: Sync,
+        R: Send,
+        F: Fn(usize, &J) -> R + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let shards = shards.max(1).min(n);
+        if shards == 1 {
+            return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+        }
+        let chunk = n.div_ceil(shards);
+        let n_chunks = n.div_ceil(chunk);
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let batch = Batch::new(n_chunks - 1);
+        let f = &f;
+        {
+            let mut inline_chunk: Option<(&[J], &mut [Option<R>])> = None;
+            let mut remote: Vec<Task> = Vec::with_capacity(n_chunks - 1);
+            for (ci, (job_chunk, out_chunk)) in
+                jobs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+            {
+                if ci == 0 {
+                    inline_chunk = Some((job_chunk, out_chunk));
+                    continue;
+                }
+                let base = ci * chunk;
+                let batch = Arc::clone(&batch);
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        for (k, (job, slot)) in
+                            job_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                        {
+                            *slot = Some(f(base + k, job));
+                        }
+                    }));
+                    batch.complete(outcome.err());
+                });
+                // SAFETY: `run` waits for the batch (WaitGuard below, even on
+                // panic) before any captured borrow can die.
+                remote.push(unsafe { extend_task(task) });
+            }
+            self.inject(remote);
+            let _guard = WaitGuard { batch: batch.as_ref() };
+            if let Some((job_chunk, out_chunk)) = inline_chunk {
+                for (k, (job, slot)) in job_chunk.iter().zip(out_chunk.iter_mut()).enumerate() {
+                    *slot = Some(f(k, job));
+                }
+            }
+            // _guard drops here: waits for the remote chunks.
+        }
+        if let Some(p) = batch.take_panic() {
+            resume_unwind(p);
+        }
+        out.into_iter()
+            .map(|r| r.expect("pool worker left a job slot unfilled"))
+            .collect()
+    }
+
+    /// Run `fa` on a pool worker while `fb` runs on the caller thread; return
+    /// both results. This is the cross-round pipelining primitive: the
+    /// trailing stage of round r (e.g. evaluating the just-aggregated model)
+    /// overlaps the leading stage of round r+1. `fb` runs on the caller, so
+    /// it may itself dispatch batches onto this pool; `fa` must not.
+    pub fn run_pair<A, B, FA, FB>(&self, fa: FA, fb: FB) -> (A, B)
+    where
+        A: Send,
+        B: Send,
+        FA: FnOnce() -> A + Send,
+        FB: FnOnce() -> B + Send,
+    {
+        let batch = Batch::new(1);
+        let mut a_slot: Option<A> = None;
+        let b;
+        {
+            let a_ref = &mut a_slot;
+            let batch_w = Arc::clone(&batch);
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    *a_ref = Some(fa());
+                }));
+                batch_w.complete(outcome.err());
+            });
+            // SAFETY: the WaitGuard below blocks until the task has settled,
+            // even if `fb` panics on the caller thread.
+            self.inject(vec![unsafe { extend_task(task) }]);
+            let _guard = WaitGuard { batch: batch.as_ref() };
+            b = fb();
+            // _guard drops here: waits for fa.
+        }
+        if let Some(p) = batch.take_panic() {
+            resume_unwind(p);
+        }
+        (a_slot.expect("pool worker dropped the paired job"), b)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool every [`super::engine::ParallelRoundEngine`]
+/// dispatches to: one worker per available hardware thread, spawned on first
+/// use, alive for the rest of the process.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn preserves_job_order_for_any_shard_count() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<usize> = (0..97).collect();
+        for shards in [1, 2, 3, 8, 64, 200] {
+            let out = pool.run(shards, &jobs, |i, &j| {
+                assert_eq!(i, j);
+                j * 3 + 1
+            });
+            let expect: Vec<usize> = jobs.iter().map(|j| j * 3 + 1).collect();
+            assert_eq!(out, expect, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn reused_pool_matches_serial_on_seeded_work() {
+        // The pool is reused across many batches (the per-round shape);
+        // every batch must equal serial execution exactly.
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<u64> = (0..33).map(|i| 0xBEEF ^ (i * 7919)).collect();
+        let work = |_: usize, &seed: &u64| -> Vec<u64> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..16).map(|_| rng.next_u64()).collect()
+        };
+        let serial = pool.run(1, &jobs, work);
+        for round in 0..50 {
+            let par = pool.run(4, &jobs, work);
+            assert_eq!(serial, par, "round={round}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job_edge_cases() {
+        let pool = WorkerPool::new(2);
+        let empty: Vec<u32> = Vec::new();
+        assert!(pool.run(8, &empty, |_, &j| j).is_empty());
+        assert_eq!(pool.run(8, &[5u32], |i, &j| (i, j)), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn concurrent_batches_from_many_threads() {
+        // The global pool is shared by every engine in the process (tests run
+        // threaded); interleaved batches must not cross-contaminate.
+        let pool = WorkerPool::new(4);
+        std::thread::scope(|scope| {
+            for t in 0..6u64 {
+                let pool = &pool;
+                scope.spawn(move || {
+                    let jobs: Vec<u64> = (0..40).map(|i| i + 1000 * t).collect();
+                    for _ in 0..20 {
+                        let out = pool.run(4, &jobs, |_, &j| j * 2 + t);
+                        let expect: Vec<u64> = jobs.iter().map(|&j| j * 2 + t).collect();
+                        assert_eq!(out, expect);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn run_pair_overlaps_and_returns_both() {
+        let pool = WorkerPool::new(2);
+        let xs: Vec<u64> = (0..100).collect();
+        let (a, b) = pool.run_pair(
+            || xs.iter().sum::<u64>(),
+            || pool.run(2, &xs, |_, &x| x * x).iter().sum::<u64>(),
+        );
+        assert_eq!(a, 4950);
+        assert_eq!(b, (0..100u64).map(|x| x * x).sum::<u64>());
+    }
+
+    #[test]
+    fn panicking_job_propagates_after_batch_settles() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<u32> = (0..16).collect();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &jobs, |_, &j| {
+                assert!(j != 11, "engineered failure");
+                j
+            })
+        }));
+        assert!(boom.is_err());
+        // The pool survives the poisoned batch and keeps serving.
+        let out = pool.run(4, &jobs, |_, &j| j + 1);
+        assert_eq!(out.len(), 16);
+    }
+
+    #[test]
+    fn global_pool_is_initialized_once_and_sized() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn drop_drains_pending_work() {
+        let counter = Arc::new(Mutex::new(0usize));
+        {
+            let pool = WorkerPool::new(2);
+            let jobs: Vec<usize> = (0..64).collect();
+            let c = Arc::clone(&counter);
+            let out = pool.run(8, &jobs, move |_, &j| {
+                *c.lock().unwrap() += 1;
+                j
+            });
+            assert_eq!(out.len(), 64);
+        } // pool dropped: workers joined
+        assert_eq!(*counter.lock().unwrap(), 64);
+    }
+}

@@ -1,20 +1,22 @@
 //! Engine determinism and bit-accounting invariants.
 //!
-//! The sharded [`ParallelRoundEngine`] must be *bit-identical* to serial
+//! The pooled [`ParallelRoundEngine`] must be *bit-identical* to serial
 //! execution — same `RoundRecord` stream, same uplink/downlink bit totals,
 //! same models — for every BiCompFL variant, otherwise no experiment that
 //! ran on a many-core box is comparable to one that ran on a laptop. These
-//! tests pin that contract end-to-end, plus the PR-SplitDL invariant that
-//! the disjoint per-client block groups sum to the unpartitioned PR
-//! downlink cost.
+//! tests pin that contract end-to-end: the persistent [`WorkerPool`] reused
+//! across many rounds, the engine-sharded local-training stage, the
+//! cross-round pipelined drivers (`BiCompFl::run` and
+//! `run_algorithm_sharded`), and the PR-SplitDL invariant that the disjoint
+//! per-client block groups sum to the unpartitioned PR downlink cost.
 
-use bicompfl::algorithms::runner::RoundRecord;
+use bicompfl::algorithms::runner::{run_algorithm, run_algorithm_sharded, RoundRecord};
 use bicompfl::algorithms::{CflAlgorithm, QuadraticOracle, RoundBits};
 use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, MaskRoundBits, Variant};
 use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::AllocationStrategy;
-use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::runtime::{ParallelRoundEngine, WorkerPool};
 use bicompfl::util::rng::Xoshiro256;
 
 fn cfg(variant: Variant) -> BiCompFlConfig {
@@ -137,6 +139,115 @@ fn cfl_sharded_equals_serial_for_both_quantizers() {
         let (sharded_bits, sharded_x) = run(ParallelRoundEngine::with_shards(4));
         assert_eq!(serial_bits, sharded_bits, "{quantizer:?}: bits diverged");
         assert_eq!(serial_x, sharded_x, "{quantizer:?}: params diverged");
+    }
+}
+
+/// A single [`WorkerPool`] reused across many rounds of MRC-shaped seeded
+/// work must keep matching the serial engine batch-for-batch — the direct
+/// pool-lifecycle form of the contract the coordinator tests pin end-to-end.
+#[test]
+fn reused_worker_pool_matches_serial_engine_reference() {
+    let pool = WorkerPool::new(3);
+    let serial = ParallelRoundEngine::serial();
+    let work = |_: usize, &seed: &u64| -> Vec<u64> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..24).map(|_| rng.next_u64()).collect()
+    };
+    for round in 0..30u64 {
+        let jobs: Vec<u64> = (0..17).map(|c| round * 1009 + c * 31).collect();
+        assert_eq!(
+            serial.run(&jobs, work),
+            pool.run(4, &jobs, work),
+            "round {round}: reused pool diverged from serial"
+        );
+    }
+}
+
+/// The pipelined mask driver (eval of round t overlapped with round t+1 on
+/// the pool) must reproduce the sequential driver record-for-record — for
+/// every variant, at eval cadences that exercise the overlapped, the
+/// inline-tail, and the skipped-eval branches, and at round counts hitting
+/// the odd/even pipeline boundaries.
+#[test]
+fn pipelined_mask_run_matches_sequential_driver() {
+    for variant in [
+        Variant::Gr,
+        Variant::GrReconst,
+        Variant::Pr,
+        Variant::PrSplitDl,
+    ] {
+        for (rounds, eval_every) in [(1, 1), (2, 1), (5, 1), (6, 3), (7, 3)] {
+            let run = |engine: ParallelRoundEngine| {
+                let d = 192;
+                let n = 4;
+                let mut oracle = SyntheticMaskOracle::new(d, n, 31, 0.15);
+                let mut alg = BiCompFl::new(d, n, cfg(variant)).with_engine(engine);
+                alg.run(&mut oracle, rounds, eval_every)
+            };
+            assert_eq!(
+                run(ParallelRoundEngine::serial()),
+                run(ParallelRoundEngine::with_shards(4)),
+                "{}: pipelined diverged (rounds={rounds}, eval_every={eval_every})",
+                variant.label()
+            );
+        }
+    }
+}
+
+/// Same run twice through the (reused, process-global) pool: nothing about
+/// pool state may leak between runs.
+#[test]
+fn repeated_pooled_runs_are_stable() {
+    let run = || {
+        let d = 160;
+        let n = 4;
+        let mut oracle = SyntheticMaskOracle::new(d, n, 5, 0.1);
+        let mut alg =
+            BiCompFl::new(d, n, cfg(Variant::Pr)).with_engine(ParallelRoundEngine::with_shards(3));
+        alg.run(&mut oracle, 5, 2)
+    };
+    assert_eq!(run(), run());
+}
+
+/// The pipelined CFL runner (`run_algorithm_sharded` with a pooled engine, a
+/// sharded-round algorithm, and a pure oracle) must reproduce the plain
+/// runner record-for-record for both quantizer front-ends.
+#[test]
+fn cfl_pipelined_runner_matches_plain_runner() {
+    for quantizer in [Quantizer::StochasticSign, Quantizer::Qs] {
+        let make = || {
+            (
+                QuadraticOracle::new(96, 5, 13),
+                BiCompFlCfl::new(
+                    96,
+                    CflConfig {
+                        quantizer,
+                        n_is: 32,
+                        block_size: 32,
+                        server_lr: 0.2,
+                        ..Default::default()
+                    },
+                ),
+            )
+        };
+        for (rounds, eval_every) in [(1, 1), (6, 1), (7, 2), (8, 3)] {
+            let (mut o1, mut a1) = make();
+            a1.set_engine(ParallelRoundEngine::serial());
+            let plain = run_algorithm(&mut a1, &mut o1, rounds, eval_every, 9);
+            let (mut o2, mut a2) = make();
+            let pipelined = run_algorithm_sharded(
+                &mut a2,
+                &mut o2,
+                rounds,
+                eval_every,
+                9,
+                ParallelRoundEngine::with_shards(4),
+            );
+            assert_eq!(
+                plain, pipelined,
+                "{quantizer:?}: pipelined runner diverged (rounds={rounds}, eval_every={eval_every})"
+            );
+        }
     }
 }
 
