@@ -1,15 +1,17 @@
 //! End-to-end round latency on the synthetic oracles: the full coordinator
 //! cost (local train stand-in + MRC both directions + aggregation) per
-//! variant, serial vs pooled, plus the parallel-uplink topology speedup.
+//! variant, serial vs pooled, the staged multi-round PR driver vs the
+//! barrier-separated pooled loop, plus the parallel-uplink topology speedup.
 //!
 //! Run: `cargo bench --bench bench_round [-- flags]`
 //!
 //! Flags:
 //!   --json         also write a machine-readable `BENCH_<date>.json` record
 //!                  (schema documented in README "Benchmark trajectory") and
-//!                  exit non-zero if any variant's pooled speedup falls below
-//!                  the 0.9x noise margin (skipped on single-thread machines,
-//!                  where pooled == serial by construction)
+//!                  exit non-zero if any comparison's speedup falls below
+//!                  the 0.9x noise margin; the record's `"gate"` field says
+//!                  "passed", "failed", or "skipped (1 core)" so trend
+//!                  tooling can tell a pass from a not-run
 //!   --quick        short warm/measure durations and a smaller problem — the
 //!                  CI bench-smoke configuration
 //!   --out <path>   override the JSON output path
@@ -20,17 +22,17 @@ use bicompfl::algorithms::{CflAlgorithm, QuadraticOracle};
 use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
 use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::topology::parallel_uplink;
-use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
 use bicompfl::util::json::{arr, num, obj, s, Json};
 use bicompfl::util::rng::Xoshiro256;
 use bicompfl::util::timer::{bench, BenchStats};
 
-/// One measured (variant, engine) cell of the serial-vs-pooled comparison.
+/// One measured cell of a baseline-vs-contender comparison.
 struct Case {
     name: &'static str,
-    engine: &'static str,
+    engine: String,
     shards: usize,
     stats: BenchStats,
 }
@@ -43,7 +45,7 @@ impl Case {
     fn to_json(&self) -> Json {
         obj(vec![
             ("name", s(self.name)),
-            ("engine", s(self.engine)),
+            ("engine", s(&self.engine)),
             ("shards", num(self.shards as f64)),
             ("mean_ns", num(self.stats.mean_ns)),
             ("p50_ns", num(self.stats.p50_ns)),
@@ -51,6 +53,24 @@ impl Case {
             ("rounds_per_sec", num(self.rounds_per_sec())),
         ])
     }
+}
+
+type MeasureFn = Box<dyn Fn(Duration, Duration) -> BenchStats>;
+
+/// One side (baseline or contender) of a comparison.
+struct Side {
+    label: &'static str,
+    shards: usize,
+    run: MeasureFn,
+}
+
+/// A named speedup measurement: `baseline.mean / contender.mean` (≥ 1.0
+/// expected). Every comparison goes through the same measure → gate → retry
+/// machinery so no case can dodge the regression check.
+struct Comparison {
+    name: &'static str,
+    baseline: Side,
+    contender: Side,
 }
 
 fn bench_mask_round(
@@ -103,6 +123,47 @@ fn bench_cfl_round(
     })
 }
 
+/// Rounds per multi-round measurement of the staged PR driver.
+const STAGED_ROUNDS: usize = 4;
+
+/// The staged-driver comparison: `staged == true` drives `BiCompFl::run`
+/// (downlink(r) ∥ train(r+1) fused per client, eval overlapped); `false`
+/// drives the same pooled engine through the barrier-separated
+/// round-then-eval loop — every stage still sharded, but downlink, eval,
+/// and the next round's training serialized against each other.
+fn bench_pr_multi_round(
+    staged: bool,
+    engine: ParallelRoundEngine,
+    d: usize,
+    n: usize,
+    warm: Duration,
+    target: Duration,
+) -> BenchStats {
+    bench(warm, target, || {
+        let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
+        let mut alg = BiCompFl::new(
+            d,
+            n,
+            BiCompFlConfig {
+                variant: Variant::Pr,
+                n_is: 256,
+                allocation: AllocationStrategy::fixed(128),
+                ..Default::default()
+            },
+        )
+        .with_engine(engine);
+        if staged {
+            std::hint::black_box(alg.run(&mut oracle, STAGED_ROUNDS, 1));
+        } else {
+            for _ in 0..STAGED_ROUNDS {
+                let b = alg.round(&mut oracle);
+                let e = oracle.eval(alg.global_model());
+                std::hint::black_box((b, e));
+            }
+        }
+    })
+}
+
 /// Proleptic-Gregorian date from days since the Unix epoch (Hinnant's
 /// civil-from-days), so the JSON record is self-dating without a clock crate.
 fn civil_from_days(days: i64) -> (i64, u32, u32) {
@@ -145,64 +206,97 @@ fn main() {
     };
     let pooled = ParallelRoundEngine::auto();
     let threads = pool::global().threads();
-    let engines = [("serial", ParallelRoundEngine::serial()), ("pooled", pooled)];
 
     println!(
         "== end-to-end round benchmarks (synthetic L2, d={d}, n={n}, {threads} pool threads) =="
     );
-    println!("== serial vs pooled engine (identical rounds; only wall clock differs) ==");
+    println!("== identical rounds on both sides of every comparison; only wall clock differs ==");
 
-    // Every (variant, engine) cell measured through one named entry point so
-    // the regression retry below can re-measure exactly the flagged variant.
-    type BenchFn = Box<dyn Fn(ParallelRoundEngine, Duration, Duration) -> BenchStats>;
-    let mut benchmarks: Vec<(&'static str, BenchFn)> = Vec::new();
+    let mut comparisons: Vec<Comparison> = Vec::new();
     for variant in [
         Variant::Gr,
         Variant::GrReconst,
         Variant::Pr,
         Variant::PrSplitDl,
     ] {
-        benchmarks.push((
-            variant.label(),
-            Box::new(move |engine, w, t| bench_mask_round(variant, engine, d, n, w, t)),
-        ));
+        comparisons.push(Comparison {
+            name: variant.label(),
+            baseline: Side {
+                label: "serial",
+                shards: 1,
+                run: Box::new(move |w, t| {
+                    bench_mask_round(variant, ParallelRoundEngine::serial(), d, n, w, t)
+                }),
+            },
+            contender: Side {
+                label: "pooled",
+                shards: pooled.shards(),
+                run: Box::new(move |w, t| bench_mask_round(variant, pooled, d, n, w, t)),
+            },
+        });
     }
     for (name, quantizer) in [
         ("BiCompFL-GR-CFL", Quantizer::StochasticSign),
         ("BiCompFL-GR-CFL-Qs", Quantizer::Qs),
     ] {
-        benchmarks.push((
+        comparisons.push(Comparison {
             name,
-            Box::new(move |engine, w, t| bench_cfl_round(quantizer, engine, d, n, w, t)),
-        ));
+            baseline: Side {
+                label: "serial",
+                shards: 1,
+                run: Box::new(move |w, t| {
+                    bench_cfl_round(quantizer, ParallelRoundEngine::serial(), d, n, w, t)
+                }),
+            },
+            contender: Side {
+                label: "pooled",
+                shards: pooled.shards(),
+                run: Box::new(move |w, t| bench_cfl_round(quantizer, pooled, d, n, w, t)),
+            },
+        });
     }
+    // The staged multi-round driver vs the same pooled engine with barriers:
+    // the downlink(r) ∥ train(r+1) payoff, gated like every other case.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [staged run]",
+        baseline: Side {
+            label: "pooled-seq",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_multi_round(false, pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "staged",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_multi_round(true, pooled, d, n, w, t)),
+        },
+    });
 
     let mut cases: Vec<Case> = Vec::new();
     let mut speedups: Vec<(&'static str, f64)> = Vec::new();
-    for (name, bench_fn) in &benchmarks {
+    for c in &comparisons {
         let mut mean = [0.0f64; 2];
-        for (slot, &(engine_label, engine)) in engines.iter().enumerate() {
-            let stats = bench_fn(engine, warm, target);
+        for (slot, side) in [&c.baseline, &c.contender].into_iter().enumerate() {
+            let stats = (side.run)(warm, target);
             println!(
                 "{}",
                 stats.throughput_line(
-                    &format!("round {name} [{engine_label} x{}]", engine.shards()),
+                    &format!("round {} [{} x{}]", c.name, side.label, side.shards),
                     d as f64,
                 )
             );
             mean[slot] = stats.mean_ns;
             cases.push(Case {
-                name: *name,
-                engine: engine_label,
-                shards: engine.shards(),
+                name: c.name,
+                engine: side.label.to_string(),
+                shards: side.shards,
                 stats,
             });
         }
-        speedups.push((*name, mean[0] / mean[1]));
+        speedups.push((c.name, mean[0] / mean[1]));
     }
 
-    // Per-variant speedup: serial mean / pooled mean (≥ 1.0 expected).
-    println!("\n== pooled speedup over serial ==");
+    // Per-comparison speedup: baseline mean / contender mean (≥ 1.0 expected).
+    println!("\n== contender speedup over baseline ==");
     for (name, speedup) in &speedups {
         println!("{name:<44} {speedup:>6.2}x");
     }
@@ -223,16 +317,16 @@ fn main() {
         println!("\n{line}");
     }
 
-    // Regression gate: on a multi-core box the pooled engine must not fall
-    // below serial beyond measurement noise. True pooled wins on this
-    // workload are well above 1x, and a real pooling regression (dispatch
-    // overhead dominating, accidental serialization) lands well below the
-    // margin; the margin absorbs timer jitter in the short --quick windows.
-    // A variant that still trips the margin is re-measured once with 3x the
-    // window before being declared a regression, so a single noisy-neighbor
-    // stall on a shared CI runner cannot fail the job. (On one hardware
-    // thread the pooled engine degenerates to the serial inline path, so
-    // there is nothing to gate.)
+    // Regression gate: on a multi-core box the contender must not fall below
+    // its baseline beyond measurement noise. True wins on this workload are
+    // well above 1x, and a real regression (dispatch overhead dominating,
+    // accidental serialization, a barrier sneaking back in) lands well below
+    // the margin; the margin absorbs timer jitter in the short --quick
+    // windows. A comparison that still trips the margin is re-measured once
+    // with 3x the window before being declared a regression, so a single
+    // noisy-neighbor stall on a shared CI runner cannot fail the job. (On
+    // one hardware thread every pooled path degenerates to serial inline
+    // execution, so there is nothing to gate.)
     const NOISE_MARGIN: f64 = 0.9;
     let mut regressed: Vec<(&str, f64)> = Vec::new();
     if threads >= 2 {
@@ -241,14 +335,13 @@ fn main() {
             if sp >= NOISE_MARGIN {
                 continue;
             }
-            let bench_fn = &benchmarks
+            let c = comparisons
                 .iter()
-                .find(|(n2, _)| *n2 == name)
-                .expect("flagged variant missing from benchmark list")
-                .1;
-            let serial = bench_fn(ParallelRoundEngine::serial(), warm, target * 3);
-            let pooled_stats = bench_fn(pooled, warm, target * 3);
-            let sp2 = serial.mean_ns / pooled_stats.mean_ns;
+                .find(|c| c.name == name)
+                .expect("flagged comparison missing from benchmark list");
+            let base = (c.baseline.run)(warm, target * 3);
+            let cont = (c.contender.run)(warm, target * 3);
+            let sp2 = base.mean_ns / cont.mean_ns;
             println!("retry {name} with 3x window: {sp2:.2}x (was {sp:.2}x)");
             // The retry is the authoritative measurement: it replaces the
             // noisy first pass in the JSON record so `speedup` and
@@ -256,21 +349,33 @@ fn main() {
             speedups[idx] = (name, sp2);
             cases.push(Case {
                 name,
-                engine: "serial-retry",
-                shards: 1,
-                stats: serial,
+                engine: format!("{}-retry", c.baseline.label),
+                shards: c.baseline.shards,
+                stats: base,
             });
             cases.push(Case {
                 name,
-                engine: "pooled-retry",
-                shards: pooled.shards(),
-                stats: pooled_stats,
+                engine: format!("{}-retry", c.contender.label),
+                shards: c.contender.shards,
+                stats: cont,
             });
             if sp2 < NOISE_MARGIN {
                 regressed.push((name, sp2));
             }
         }
     }
+
+    // Trend tooling needs to tell "passed" from "not run": a single-core
+    // runner skips the gate entirely (pooled == serial by construction) and
+    // says so in the record instead of looking like a pass.
+    let gate = if threads < 2 {
+        "skipped (1 core)".to_string()
+    } else if regressed.is_empty() {
+        "passed".to_string()
+    } else {
+        "failed".to_string()
+    };
+    println!("\nregression gate: {gate}");
 
     if json_mode {
         let date = today();
@@ -282,6 +387,7 @@ fn main() {
             ("d", num(d as f64)),
             ("n_clients", num(n as f64)),
             ("pool_threads", num(threads as f64)),
+            ("gate", s(&gate)),
             ("cases", arr(cases.iter().map(Case::to_json).collect())),
             (
                 "speedup",
@@ -297,11 +403,11 @@ fn main() {
         let mut body = record.emit();
         body.push('\n');
         std::fs::write(&path, body).unwrap_or_else(|e| panic!("writing {path}: {e}"));
-        println!("\nwrote {path}");
+        println!("wrote {path}");
     }
 
     if !regressed.is_empty() {
-        eprintln!("\nREGRESSION: pooled engine slower than serial (margin {NOISE_MARGIN}) on:");
+        eprintln!("\nREGRESSION: contender slower than baseline (margin {NOISE_MARGIN}) on:");
         for (name, sp) in &regressed {
             eprintln!("  {name}: {sp:.3}x");
         }

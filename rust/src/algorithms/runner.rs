@@ -2,7 +2,7 @@
 //! and collect the per-round record stream the experiment harness consumes.
 
 use super::{CflAlgorithm, GradOracle, ShardedGradOracle};
-use crate::runtime::{pool, ParallelRoundEngine};
+use crate::runtime::ParallelRoundEngine;
 use crate::util::rng::Xoshiro256;
 
 /// One evaluated round of any algorithm (baseline or BiCompFL).
@@ -51,7 +51,7 @@ pub fn run_algorithm_sharded(
         let has_sharded_oracle = oracle.sharded().is_some();
         if has_sharded_oracle {
             let sh = oracle.sharded().expect("sharded view vanished");
-            return run_pipelined(alg, sh, rounds, eval_every, seed);
+            return run_pipelined(alg, sh, rounds, eval_every, seed, engine);
         }
     }
     run_algorithm(alg, oracle, rounds, eval_every, seed)
@@ -67,10 +67,12 @@ fn run_pipelined(
     rounds: usize,
     eval_every: usize,
     seed: u64,
+    engine: ParallelRoundEngine,
 ) -> Vec<RoundRecord> {
     let mut rng = Xoshiro256::new(seed);
     let init_eval = sh.eval_at(alg.params());
     drive_pipelined(
+        engine,
         rounds,
         eval_every,
         init_eval,
@@ -86,17 +88,19 @@ fn run_pipelined(
 }
 
 /// The cross-round pipelined driver shared by the CFL runner above and
-/// `BiCompFl::run`: round t's scheduled evaluation runs on the worker pool
-/// ([`pool::WorkerPool::run_pair`]) against the model snapshot taken right
-/// after that round, while round t+1 executes on the caller thread (which
-/// keeps dispatching its own shard batches — permitted by `run_pair`).
-/// Evaluation is a pure function of the snapshot, so the overlap cannot
-/// change a single record; the determinism suite compares this driver
-/// against the sequential ones record-for-record.
+/// `BiCompFl::run`: round t's scheduled evaluation is overlapped
+/// ([`ParallelRoundEngine::overlap`] — a pool worker when the engine is
+/// parallel, strict sequential order when it is not) against the model
+/// snapshot taken right after that round, while round t+1 executes on the
+/// caller thread (which keeps dispatching its own shard batches — permitted
+/// by the pool's `run_pair`). Evaluation is a pure function of the snapshot,
+/// so the overlap cannot change a single record; the determinism suite
+/// compares this driver against the sequential ones record-for-record.
 ///
 /// `round_fn(snapshot_wanted)` executes one round and returns its bits plus,
 /// when asked, a snapshot of the post-round model. `eval_fn` must be pure.
 pub(crate) fn drive_pipelined<B, FR, FE>(
+    engine: ParallelRoundEngine,
     rounds: usize,
     eval_every: usize,
     init_eval: (f64, f64),
@@ -130,8 +134,8 @@ where
                 let want_next = scheduled(t + 1);
                 let eval_ref = &eval_fn;
                 let round_ref = &mut round_fn;
-                let ((l, a), (b_next, snap_next)) = pool::global()
-                    .run_pair(move || eval_ref(&snap), move || round_ref(want_next));
+                let ((l, a), (b_next, snap_next)) =
+                    engine.overlap(move || eval_ref(&snap), move || round_ref(want_next));
                 loss = l;
                 acc = a;
                 b_cur = b_next;

@@ -6,6 +6,8 @@
 //! is metered exactly (index bits + allocation signalling), with separate
 //! point-to-point and broadcast downlink accounting (Appendix I).
 
+use std::sync::Arc;
+
 use super::oracle::{MaskOracle, ShardedMaskOracle};
 use super::shared_rand::{mrc_stream, private_seed, Direction};
 use crate::algorithms::runner::RoundRecord;
@@ -22,6 +24,74 @@ use crate::util::rng::Xoshiro256;
 enum LocalTrainer<'a> {
     Serial(&'a mut dyn MaskOracle),
     Sharded(&'a dyn ShardedMaskOracle),
+}
+
+/// A participating client's (uplink prior, trained posterior) pair produced
+/// by the local-training stage.
+type TrainOut = (Vec<f32>, Vec<f32>);
+
+/// A movable per-client downlink MRC job (PR family). It owns everything the
+/// encode needs — prior, plan, block share, θ_{t+1}, seeds — detached from
+/// `&self`, so the staged multi-round driver can carry round r's downlink
+/// into iteration r+1 and fuse it, per client, with round r+1's local
+/// training on the worker pool.
+struct DlJob {
+    client: usize,
+    /// The client's current model estimate θ̂_i (the downlink MRC prior).
+    prior: Vec<f32>,
+    plan: BlockPlan,
+    /// Blocks this client receives (SplitDL: its rotating 1/n share).
+    blocks: Vec<usize>,
+    /// The aggregated θ_{t+1} every downlink encodes (shared across jobs).
+    theta: Arc<Vec<f32>>,
+    seed: u64,
+    sel_seed: u64,
+    round: u64,
+    n_is: usize,
+    n_dl: usize,
+    theta_clamp: f32,
+}
+
+impl DlJob {
+    /// Encode + decode this client's downlink MRC; returns the client's next
+    /// model estimate (clamped) and the exact index bits spent. A pure
+    /// function of the job, callable on any thread in any order — the
+    /// RNG streams are keyed by (seed, round, client, block, direction) and
+    /// the Gumbel selector by the per-(round, client, direction) `sel_seed`.
+    fn execute(&self) -> (Vec<f32>, u64) {
+        let codec = BlockCodec::new(self.n_is);
+        let mut sel = Xoshiro256::new(self.sel_seed);
+        let mut est = self.prior.clone();
+        let mut idx_bits = 0u64;
+        for &b in &self.blocks {
+            let r = self.plan.block(b);
+            let stream = mrc_stream(
+                self.seed,
+                self.round,
+                self.client as u64,
+                b as u64,
+                Direction::Downlink,
+            );
+            let mut mean = vec![0.0f32; r.len()];
+            let mut buf = vec![0.0f32; r.len()];
+            for ell in 0..self.n_dl {
+                let out = codec.encode(
+                    &self.theta[r.clone()],
+                    &self.prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    &mut sel,
+                );
+                idx_bits += out.bits;
+                codec.decode(&self.prior[r.clone()], &stream, ell as u64, out.index, &mut buf);
+                crate::tensor::add_assign(&mut mean, &buf);
+            }
+            crate::tensor::scale(&mut mean, 1.0 / self.n_dl as f32);
+            est[r].copy_from_slice(&mean);
+        }
+        crate::tensor::clamp(&mut est, self.theta_clamp, 1.0 - self.theta_clamp);
+        (est, idx_bits)
+    }
 }
 
 /// Which BiCompFL variant to run (§3).
@@ -196,7 +266,8 @@ impl BiCompFl {
             let r = plan.block(b);
             let stream = mrc_stream(seed, round, client, b as u64, dir);
             for (ell, row) in indices.iter_mut().enumerate() {
-                let out = codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
+                let out =
+                    codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
                 row[b] = out.index;
                 bits += out.bits;
             }
@@ -245,17 +316,29 @@ impl BiCompFl {
         self.cfg.allocation.plan(&kl_each)
     }
 
-    /// The uplink prior for client i (Appendix J.2's λ-mix; λ=1 ⇒ θ̂_i).
-    fn uplink_prior(&self, i: usize) -> Vec<f32> {
-        let lam = self.cfg.lambda;
-        match (&self.prev_qhat[i], lam < 1.0) {
-            (Some(qprev), true) => self.client_theta[i]
+    /// The λ-mixed uplink prior (Appendix J.2): λ·θ̂ + (1−λ)·q̂_prev, clamped
+    /// (λ=1 or no previous decode ⇒ θ̂ itself). One formula shared by the
+    /// state-reading form ([`BiCompFl::uplink_prior`]) and the staged fused
+    /// stage, which feeds it the just-decoded estimate instead — the two
+    /// drivers stay bit-identical by construction.
+    fn mix_prior(theta_hat: &[f32], prev_qhat: Option<&Vec<f32>>, lam: f32) -> Vec<f32> {
+        match (prev_qhat, lam < 1.0) {
+            (Some(qprev), true) => theta_hat
                 .iter()
                 .zip(qprev)
-                .map(|(&t, &qp)| kl::clamp_param(lam * t + (1.0 - lam) * qp))
+                .map(|(&th, &qp)| kl::clamp_param(lam * th + (1.0 - lam) * qp))
                 .collect(),
-            _ => self.client_theta[i].clone(),
+            _ => theta_hat.to_vec(),
         }
+    }
+
+    /// The uplink prior for client i (Appendix J.2's λ-mix; λ=1 ⇒ θ̂_i).
+    fn uplink_prior(&self, i: usize) -> Vec<f32> {
+        Self::mix_prior(
+            &self.client_theta[i],
+            self.prev_qhat[i].as_ref(),
+            self.cfg.lambda,
+        )
     }
 
     /// Execute one full BiCompFL round against the oracle. Local training is
@@ -272,10 +355,13 @@ impl BiCompFl {
         }
     }
 
-    fn round_via(&mut self, mut trainer: LocalTrainer) -> MaskRoundBits {
+    /// Round stage 1 (federator): draw the participating client set. PR
+    /// variants with partial participation consume the shared participation
+    /// RNG — one draw per round, in round order, on the caller thread — so
+    /// every driver (serial, fused, staged) sees the identical sequence.
+    fn draw_participation(&mut self) -> Vec<usize> {
         let n = self.n;
-        // -- participation (PR only; GR requires all clients in sync) -------
-        let participating: Vec<usize> = match self.cfg.variant {
+        match self.cfg.variant {
             Variant::Pr | Variant::PrSplitDl if self.cfg.participation < 1.0 => {
                 let k = ((n as f32 * self.cfg.participation).round() as usize).max(1);
                 let mut ids: Vec<usize> = (0..n).collect();
@@ -285,27 +371,27 @@ impl BiCompFl {
                 ids
             }
             _ => (0..n).collect(),
-        };
+        }
+    }
 
-        let mut bits = MaskRoundBits::default();
-
-        // -- uplink priors (federator-side state reads; cheap, sequential) --
-        let priors: Vec<Vec<f32>> = participating
-            .iter()
-            .map(|&i| self.uplink_prior(i))
-            .collect();
-
-        // -- local training: the formerly-serial stage, sharded across the
-        //    engine when the oracle is pure; the posterior clamp and the
-        //    KL-ball projection ride along on the worker ------------------
+    /// Round stage 2 (clients): local training, sharded across the engine
+    /// when the oracle exposes a pure view; the posterior clamp and the
+    /// KL-ball projection ride along on the worker. Returns the posteriors
+    /// in participation order.
+    fn train_stage(
+        &self,
+        trainer: &mut LocalTrainer,
+        participating: &[usize],
+        priors: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
         let local_iters = self.cfg.local_iters;
         let local_lr = self.cfg.local_lr;
         let kl_budget = self.cfg.kl_budget;
         let round = self.round;
-        let posteriors: Vec<Vec<f32>> = match &mut trainer {
+        match trainer {
             LocalTrainer::Serial(oracle) => participating
                 .iter()
-                .zip(&priors)
+                .zip(priors)
                 .map(|(&i, prior)| {
                     let (mut q, _loss, _acc) = oracle.local_train(
                         i,
@@ -322,10 +408,9 @@ impl BiCompFl {
                 })
                 .collect(),
             LocalTrainer::Sharded(sh) => {
-                let sh = *sh;
+                let sh: &dyn ShardedMaskOracle = *sh;
                 let client_theta = &self.client_theta;
-                let priors = &priors;
-                self.engine.run(&participating, |slot, &i| {
+                self.engine.run(participating, |slot, &i| {
                     let (mut q, _loss, _acc) =
                         sh.local_train_at(i, &client_theta[i], local_iters, local_lr, round);
                     crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
@@ -335,10 +420,25 @@ impl BiCompFl {
                     q
                 })
             }
-        };
+        }
+    }
 
-        // -- block planning: Adaptive-Avg renegotiation is stateful
-        //    federator logic, so plans stay sequenced in participation order
+    /// Round stage 3: block planning (stateful — Adaptive-Avg renegotiation —
+    /// hence sequenced in participation order on the caller thread) followed
+    /// by the uplink MRC encode+decode sharded across the engine (the L3 hot
+    /// path; results come back in job order by construction). Consumes the
+    /// posteriors and priors into movable jobs, meters the uplink leg into
+    /// `bits`, and returns the decoded posterior means (participation order)
+    /// plus the `(client, plan, index_bits)` relay payloads the GR downlink
+    /// accounts from.
+    #[allow(clippy::type_complexity)]
+    fn uplink_stage(
+        &mut self,
+        participating: &[usize],
+        posteriors: Vec<Vec<f32>>,
+        priors: Vec<Vec<f32>>,
+        bits: &mut MaskRoundBits,
+    ) -> (Vec<Vec<f32>>, Vec<(usize, BlockPlan, u64)>) {
         let plans: Vec<BlockPlan> = posteriors
             .iter()
             .zip(&priors)
@@ -369,8 +469,6 @@ impl BiCompFl {
             });
         }
 
-        // -- uplink MRC: sharded across the round engine (the L3 hot path);
-        //    results come back in job (= client) order by construction ------
         let n_is = self.cfg.n_is;
         let n_ul = self.cfg.n_ul;
         let round = self.round;
@@ -401,24 +499,94 @@ impl BiCompFl {
                 (j.client, indices, idx_bits, qhat)
             });
         let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(encoded.len());
-        let mut ul_payloads: Vec<(usize, BlockPlan, Vec<Vec<u32>>, u64)> = Vec::new();
-        for ((client, indices, idx_bits, qhat), job) in encoded.into_iter().zip(jobs) {
+        let mut ul_payloads: Vec<(usize, BlockPlan, u64)> = Vec::with_capacity(encoded.len());
+        for ((client, _indices, idx_bits, qhat), job) in encoded.into_iter().zip(jobs) {
             debug_assert_eq!(client, job.client);
             bits.ul += idx_bits + job.plan.overhead_bits;
             qhats.push(qhat);
-            ul_payloads.push((client, job.plan, indices, idx_bits));
+            ul_payloads.push((client, job.plan, idx_bits));
         }
+        (qhats, ul_payloads)
+    }
 
-        // -- aggregation -----------------------------------------------------
+    /// Round stage 4 (federator): average the decoded posteriors into
+    /// θ_{t+1} (clamped) and remember them for next round's λ-mixed priors.
+    fn aggregate(&mut self, participating: &[usize], qhats: &[Vec<f32>]) -> Vec<f32> {
         let refs: Vec<&[f32]> = qhats.iter().map(|v| v.as_slice()).collect();
         let mut theta_next = crate::tensor::mean_of(&refs);
         let tc = self.cfg.theta_clamp;
         crate::tensor::clamp(&mut theta_next, tc, 1.0 - tc);
-
-        // Remember decoded posteriors for λ-mixed priors next round.
         for (slot, &i) in participating.iter().enumerate() {
             self.prev_qhat[i] = Some(qhats[slot].clone());
         }
+        theta_next
+    }
+
+    /// Round stage 5 (PR family): capture the per-client downlink round as
+    /// movable [`DlJob`]s against the just-aggregated θ_{t+1}. Plans are
+    /// sequenced in client order here (Adaptive-Avg renegotiation is
+    /// stateful federator logic); execution is free-threaded *and
+    /// deferrable* — the staged multi-round driver runs these fused with the
+    /// next round's local training.
+    fn make_dl_jobs(&mut self, theta_next: &Arc<Vec<f32>>) -> Vec<DlJob> {
+        let split = self.cfg.variant == Variant::PrSplitDl;
+        let n = self.n;
+        let n_dl = self.n_dl();
+        let mut jobs = Vec::with_capacity(n);
+        for i in 0..n {
+            let prior = self.client_theta[i].clone();
+            let plan = self.plan_for(theta_next.as_slice(), &prior);
+            // SplitDL: client i receives only its rotating share of the
+            // blocks; other blocks keep the prior value.
+            let blocks: Vec<usize> = (0..plan.n_blocks())
+                .filter(|b| !split || (b + self.round as usize) % n == i)
+                .collect();
+            jobs.push(DlJob {
+                client: i,
+                prior,
+                plan,
+                blocks,
+                theta: Arc::clone(theta_next),
+                seed: self.seed_for(i),
+                sel_seed: self.sel_seed(i as u64, Direction::Downlink),
+                round: self.round,
+                n_is: self.cfg.n_is,
+                n_dl,
+                theta_clamp: self.cfg.theta_clamp,
+            });
+        }
+        jobs
+    }
+
+    /// Install executed downlink results: each client's new model estimate
+    /// plus the exact bit metering. Returns the downlink leg's total bits.
+    fn apply_dl_results(&mut self, jobs: &[DlJob], results: Vec<(Vec<f32>, u64)>) -> u64 {
+        let mut dl = 0u64;
+        for (job, (est, idx_bits)) in jobs.iter().zip(results) {
+            dl += idx_bits + job.plan.overhead_bits;
+            self.client_theta[job.client] = est;
+        }
+        dl
+    }
+
+    /// One full round as the composition of the resumable stages above —
+    /// the reference execution order every pipelined driver reproduces
+    /// bit-for-bit.
+    fn round_via(&mut self, mut trainer: LocalTrainer) -> MaskRoundBits {
+        let n = self.n;
+        let participating = self.draw_participation();
+        let mut bits = MaskRoundBits::default();
+
+        // -- uplink priors (federator-side state reads; cheap, sequential) --
+        let priors: Vec<Vec<f32>> = participating
+            .iter()
+            .map(|&i| self.uplink_prior(i))
+            .collect();
+
+        let posteriors = self.train_stage(&mut trainer, &participating, &priors);
+        let (qhats, ul_payloads) =
+            self.uplink_stage(&participating, posteriors, priors, &mut bits);
+        let theta_next = self.aggregate(&participating, &qhats);
 
         // -- downlink ---------------------------------------------------------
         match self.cfg.variant {
@@ -426,12 +594,12 @@ impl BiCompFl {
                 // Relay: client j receives every other client's indices and
                 // reconstructs the identical average (it already knows its
                 // own samples). Per-client DL = Σ_{i≠j} (bits_i).
-                let total_idx_bits: u64 = ul_payloads.iter().map(|p| p.3).sum();
+                let total_idx_bits: u64 = ul_payloads.iter().map(|p| p.2).sum();
                 let total_overhead: u64 =
                     ul_payloads.iter().map(|p| p.1.overhead_bits).sum();
                 for p in &ul_payloads {
                     // Client j already knows its own indices and plan.
-                    bits.dl += (total_idx_bits - p.3) + (total_overhead - p.1.overhead_bits);
+                    bits.dl += (total_idx_bits - p.2) + (total_overhead - p.1.overhead_bits);
                 }
                 // Broadcast: the concatenation goes out once.
                 bits.dl_bc += total_idx_bits + total_overhead;
@@ -482,87 +650,14 @@ impl BiCompFl {
                 }
             }
             Variant::Pr | Variant::PrSplitDl => {
-                let split = self.cfg.variant == Variant::PrSplitDl;
-                let n_dl = self.n_dl();
-                self.theta = theta_next.clone();
-                // Per-client plans are sequenced (Adaptive-Avg negotiation is
-                // stateful), then the per-client downlink MRC is sharded on
-                // the round engine: each (client, block) stream is independent.
-                struct DlJob {
-                    client: usize,
-                    prior: Vec<f32>,
-                    plan: BlockPlan,
-                    blocks: Vec<usize>,
-                    seed: u64,
-                    sel_seed: u64,
-                }
-                let mut jobs: Vec<DlJob> = Vec::with_capacity(n);
-                for i in 0..n {
-                    let prior = self.client_theta[i].clone();
-                    let plan = self.plan_for(&theta_next, &prior);
-                    // SplitDL: client i receives only its rotating share of
-                    // the blocks; other blocks keep the prior value.
-                    let blocks: Vec<usize> = (0..plan.n_blocks())
-                        .filter(|b| !split || (b + self.round as usize) % n == i)
-                        .collect();
-                    jobs.push(DlJob {
-                        client: i,
-                        prior,
-                        plan,
-                        blocks,
-                        seed: self.seed_for(i),
-                        sel_seed: self.sel_seed(i as u64, Direction::Downlink),
-                    });
-                }
-                let n_is = self.cfg.n_is;
-                let round = self.round;
-                let theta_ref = &theta_next;
-                let results: Vec<(usize, Vec<f32>, u64, u64)> =
-                    self.engine.run(&jobs, |_, j| {
-                        let codec = BlockCodec::new(n_is);
-                        let mut sel = Xoshiro256::new(j.sel_seed);
-                        let mut est = j.prior.clone();
-                        let mut idx_bits = 0u64;
-                        for &b in &j.blocks {
-                            let r = j.plan.block(b);
-                            let stream = mrc_stream(
-                                j.seed,
-                                round,
-                                j.client as u64,
-                                b as u64,
-                                Direction::Downlink,
-                            );
-                            let mut mean = vec![0.0f32; r.len()];
-                            let mut buf = vec![0.0f32; r.len()];
-                            for ell in 0..n_dl {
-                                let out = codec.encode(
-                                    &theta_ref[r.clone()],
-                                    &j.prior[r.clone()],
-                                    &stream,
-                                    ell as u64,
-                                    &mut sel,
-                                );
-                                idx_bits += out.bits;
-                                codec.decode(
-                                    &j.prior[r.clone()],
-                                    &stream,
-                                    ell as u64,
-                                    out.index,
-                                    &mut buf,
-                                );
-                                crate::tensor::add_assign(&mut mean, &buf);
-                            }
-                            crate::tensor::scale(&mut mean, 1.0 / n_dl as f32);
-                            est[r].copy_from_slice(&mean);
-                        }
-                        (j.client, est, idx_bits, j.plan.overhead_bits)
-                    });
-                let tc = self.cfg.theta_clamp;
-                for (i, mut est, idx_bits, overhead) in results {
-                    crate::tensor::clamp(&mut est, tc, 1.0 - tc);
-                    bits.dl += idx_bits + overhead;
-                    self.client_theta[i] = est;
-                }
+                let theta_next = Arc::new(theta_next);
+                self.theta = theta_next.as_ref().clone();
+                // The downlink stage as movable jobs (plans sequenced, MRC
+                // sharded); the fused single-round form runs them here, the
+                // staged driver defers them into the next round instead.
+                let jobs = self.make_dl_jobs(&theta_next);
+                let results = self.engine.run(&jobs, |_, j| j.execute());
+                bits.dl = self.apply_dl_results(&jobs, results);
                 // No broadcast gain: messages are client-specific.
                 bits.dl_bc = bits.dl;
             }
@@ -589,7 +684,15 @@ impl BiCompFl {
         let pipelined = self.engine.is_parallel() && oracle.sharded().is_some();
         if pipelined {
             let sh = oracle.sharded().expect("sharded view vanished");
-            return self.run_pipelined(sh, rounds, eval_every);
+            return match self.cfg.variant {
+                // PR-family rounds end in per-client downlink *compute*: the
+                // staged driver takes that leg off the critical path by
+                // fusing it with the next round's local training.
+                Variant::Pr | Variant::PrSplitDl => self.run_staged(sh, rounds, eval_every),
+                // GR downlink is relay accounting (no compute): the one-deep
+                // eval-overlap driver already pipelines everything there is.
+                Variant::Gr | Variant::GrReconst => self.run_pipelined(sh, rounds, eval_every),
+            };
         }
         let mut out = Vec::with_capacity(rounds);
         let (mut loss, mut acc) = oracle.eval(&self.theta);
@@ -621,8 +724,10 @@ impl BiCompFl {
         rounds: usize,
         eval_every: usize,
     ) -> Vec<RoundRecord> {
+        let engine = self.engine;
         let init_eval = sh.eval_at(&self.theta);
         crate::algorithms::runner::drive_pipelined(
+            engine,
             rounds,
             eval_every,
             init_eval,
@@ -633,6 +738,195 @@ impl BiCompFl {
             |theta| sh.eval_at(theta),
             |b| (b.ul, b.dl, b.dl_bc),
         )
+    }
+
+    /// The staged PR driver — the generalized, per-client form of
+    /// [`BiCompFl::run_pipelined`]'s one-deep overlap. A rolling pipeline
+    /// over rounds where round r's per-client downlink MRC encode (captured
+    /// as movable [`DlJob`]s at the end of iteration r) and round r+1's
+    /// local training run as ONE fused stage batch on the worker pool: the
+    /// moment client i's downlink blocks are decoded, the same worker starts
+    /// client i's next-round training — no waiting on the slowest peer.
+    /// Round r's scheduled evaluation runs on another worker overlapping the
+    /// *entire* step — fused batch, uplink MRC, aggregation, and downlink
+    /// planning — so a slow evaluation stays off the critical path exactly
+    /// as it did under the one-deep driver. The final round's downlink
+    /// drains after the loop, overlapped with the final evaluation.
+    ///
+    /// Every randomness stream is keyed by (round, client, direction)
+    /// (`shared_rand`), the participation RNG is consumed once per round on
+    /// the caller thread, and stage outputs land at their client's index, so
+    /// the overlap cannot change a single emitted index or bit count. The
+    /// determinism suite pins this driver against the sequential one
+    /// record-for-record, including at 1/2/odd client counts and under
+    /// partial participation.
+    fn run_staged(
+        &mut self,
+        sh: &dyn ShardedMaskOracle,
+        rounds: usize,
+        eval_every: usize,
+    ) -> Vec<RoundRecord> {
+        let mut out: Vec<RoundRecord> = Vec::with_capacity(rounds);
+        if rounds == 0 {
+            return out;
+        }
+        let ee = eval_every.max(1);
+        let scheduled = |t: usize| t % ee == 0 || t + 1 == rounds;
+        let n = self.n;
+        let engine = self.engine;
+        // Work carried between iterations: round t-1's downlink jobs (fused
+        // with round t's training) and its evaluation snapshot (scored on a
+        // pool worker while iteration t runs on this thread).
+        let mut pending_dl: Option<(usize, Vec<DlJob>)> = None;
+        let mut pending_eval: Option<(usize, Arc<Vec<f32>>)> = None;
+        let mut evals: Vec<Option<(f64, f64)>> = vec![None; rounds];
+
+        for t in 0..rounds {
+            let participating = self.draw_participation();
+            let mut part_flags = vec![false; n];
+            for &i in &participating {
+                part_flags[i] = true;
+            }
+            let dl_prev = pending_dl.take();
+
+            // One full iteration step, run on this thread (under the eval
+            // overlap when an evaluation is pending): the fused
+            // downlink(t-1) ∥ train(t) batch, then plans + uplink MRC +
+            // aggregation, then capturing round t's downlink jobs. Returns
+            // the work to carry into iteration t+1.
+            let this = &mut *self;
+            let out_ref = &mut out;
+            let participating_ref = &participating;
+            let part_flags_ref = &part_flags;
+            type Carry = (Option<(usize, Vec<DlJob>)>, Option<(usize, Arc<Vec<f32>>)>);
+            let step = || -> Carry {
+                let (priors, posteriors) = if let Some((dl_round, jobs)) = dl_prev {
+                    let lam = this.cfg.lambda;
+                    let local_iters = this.cfg.local_iters;
+                    let local_lr = this.cfg.local_lr;
+                    let kl_budget = this.cfg.kl_budget;
+                    let round = this.round;
+                    let prev_qhat = &this.prev_qhat;
+                    // -- fused batch: downlink(t-1) ∥ train(t), per client --
+                    let results = engine.run_stages(
+                        &jobs,
+                        |_, j: &DlJob| j.execute(),
+                        |i, _, dl_out: &(Vec<f32>, u64)| -> Option<TrainOut> {
+                            if !part_flags_ref[i] {
+                                return None;
+                            }
+                            let est = &dl_out.0;
+                            // The uplink prior from the just-decoded
+                            // estimate — identical values to `uplink_prior`
+                            // once the estimate is installed.
+                            let prior = Self::mix_prior(est, prev_qhat[i].as_ref(), lam);
+                            let (mut q, _loss, _acc) =
+                                sh.local_train_at(i, est, local_iters, local_lr, round);
+                            crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+                            if let Some(budget) = kl_budget {
+                                kl::project_kl_ball_vec(&mut q, &prior, budget);
+                            }
+                            Some((prior, q))
+                        },
+                    );
+                    // Install round t-1's downlink and patch its record —
+                    // through the same metering helper the single-round and
+                    // drain paths use, so the bit formula exists once.
+                    let mut dl_outs: Vec<(Vec<f32>, u64)> = Vec::with_capacity(n);
+                    let mut trains: Vec<Option<TrainOut>> = Vec::with_capacity(n);
+                    for (dl_out, train) in results {
+                        dl_outs.push(dl_out);
+                        trains.push(train);
+                    }
+                    let dl_bits = this.apply_dl_results(&jobs, dl_outs);
+                    out_ref[dl_round].dl_bits = dl_bits;
+                    out_ref[dl_round].dl_bc_bits = dl_bits; // client-specific: no bc gain
+                    let mut priors = Vec::with_capacity(participating_ref.len());
+                    let mut posteriors = Vec::with_capacity(participating_ref.len());
+                    for &i in participating_ref {
+                        let (prior, q) = trains[i]
+                            .take()
+                            .expect("participating client skipped the fused train stage");
+                        priors.push(prior);
+                        posteriors.push(q);
+                    }
+                    (priors, posteriors)
+                } else {
+                    // Round 0: nothing to fuse with yet.
+                    let priors: Vec<Vec<f32>> = participating_ref
+                        .iter()
+                        .map(|&i| this.uplink_prior(i))
+                        .collect();
+                    let posteriors = this.train_stage(
+                        &mut LocalTrainer::Sharded(sh),
+                        participating_ref,
+                        &priors,
+                    );
+                    (priors, posteriors)
+                };
+
+                // -- plans + uplink + aggregation (federator) ---------------
+                let mut bits = MaskRoundBits::default();
+                let (qhats, _payloads) =
+                    this.uplink_stage(participating_ref, posteriors, priors, &mut bits);
+                let theta_next = Arc::new(this.aggregate(participating_ref, &qhats));
+                this.theta = theta_next.as_ref().clone();
+                // Downlink bits are patched when the deferred jobs execute.
+                out_ref.push(RoundRecord {
+                    round: t,
+                    loss: f64::NAN,
+                    acc: f64::NAN,
+                    ul_bits: bits.ul,
+                    dl_bits: 0,
+                    dl_bc_bits: 0,
+                });
+                let next_eval = scheduled(t).then(|| (t, Arc::clone(&theta_next)));
+                let next_dl = Some((t, this.make_dl_jobs(&theta_next)));
+                this.round += 1;
+                (next_dl, next_eval)
+            };
+
+            let (next_dl, next_eval) = if let Some((er, snap)) = pending_eval.take() {
+                let (e, carry) = engine.overlap(|| sh.eval_at(snap.as_slice()), step);
+                evals[er] = Some(e);
+                carry
+            } else {
+                step()
+            };
+            pending_dl = next_dl;
+            pending_eval = next_eval;
+        }
+
+        // -- drain the pipeline: final downlink ∥ final evaluation ----------
+        if let Some((dl_round, jobs)) = pending_dl.take() {
+            let exec = || engine.run(&jobs, |_, j| j.execute());
+            let results = if let Some((er, snap)) = pending_eval.take() {
+                let (e, res) = engine.overlap(|| sh.eval_at(snap.as_slice()), exec);
+                evals[er] = Some(e);
+                res
+            } else {
+                exec()
+            };
+            let dl_bits = self.apply_dl_results(&jobs, results);
+            out[dl_round].dl_bits = dl_bits;
+            out[dl_round].dl_bc_bits = dl_bits;
+        }
+        // Every snapshot is consumed by the drain above (each iteration left
+        // pending downlink jobs behind, and rounds == 0 returned early).
+        debug_assert!(pending_eval.is_none(), "evaluation snapshot left behind");
+
+        // Loss/acc carry forward from the last scheduled evaluation, exactly
+        // as the sequential driver records them.
+        let (mut loss, mut acc) = (f64::NAN, f64::NAN);
+        for (t, rec) in out.iter_mut().enumerate() {
+            if let Some((l, a)) = evals[t] {
+                loss = l;
+                acc = a;
+            }
+            rec.loss = loss;
+            rec.acc = acc;
+        }
+        out
     }
 }
 
@@ -652,7 +946,10 @@ mod tests {
         }
     }
 
-    fn run_variant(variant: Variant, rounds: usize) -> (BiCompFl, SyntheticMaskOracle, Vec<RoundRecord>) {
+    fn run_variant(
+        variant: Variant,
+        rounds: usize,
+    ) -> (BiCompFl, SyntheticMaskOracle, Vec<RoundRecord>) {
         let d = 256;
         let n = 4;
         let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);

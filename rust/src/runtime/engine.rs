@@ -38,12 +38,13 @@ impl Default for ParallelRoundEngine {
 }
 
 impl ParallelRoundEngine {
-    /// One shard per available hardware thread (the global pool's width).
+    /// One shard per configured thread (the global pool's width): honors
+    /// `BICOMPFL_THREADS` via [`pool::configured_threads`], else one per
+    /// available hardware thread.
     pub fn auto() -> Self {
-        let shards = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Self { shards }
+        Self {
+            shards: pool::configured_threads(),
+        }
     }
 
     /// Single-shard engine: runs jobs inline on the calling thread. The
@@ -85,6 +86,59 @@ impl ParallelRoundEngine {
             return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
         }
         pool::global().run(self.shards, jobs, f)
+    }
+
+    /// Run the two-stage per-job pipeline `s2(i, &job, &s1(i, &job))` for
+    /// every job, collecting `(A, B)` pairs in job order — the policy form
+    /// of [`pool::WorkerPool::run_stages`].
+    ///
+    /// The serial engine executes the stages strictly in item order (stage 2
+    /// of item i immediately after its stage 1) — the reference semantics
+    /// every sharded run reproduces bit-for-bit when both stages are pure.
+    /// The parallel engine dispatches to the persistent pool, where item i's
+    /// stage 2 starts as soon as *its own* stage 1 finished: per-item
+    /// chaining with no batch-wide barrier between the stages. This is the
+    /// staged driver under the PR downlink(r) ∥ train(r+1) overlap.
+    pub fn run_stages<J, A, B, F1, F2>(&self, jobs: &[J], s1: F1, s2: F2) -> Vec<(A, B)>
+    where
+        J: Sync,
+        A: Send,
+        B: Send,
+        F1: Fn(usize, &J) -> A + Sync,
+        F2: Fn(usize, &J, &A) -> B + Sync,
+    {
+        if self.shards <= 1 || jobs.len() <= 1 {
+            return jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let a = s1(i, j);
+                    let b = s2(i, j, &a);
+                    (a, b)
+                })
+                .collect();
+        }
+        pool::global().run_stages(self.shards, jobs, s1, s2)
+    }
+
+    /// Run `fa` and `fb` concurrently when parallel (`fa` on a pool worker,
+    /// `fb` on the caller, which may itself dispatch batches), or strictly in
+    /// `(fa, fb)` order when serial. The policy form of
+    /// [`pool::WorkerPool::run_pair`]: pipelined drivers use this so a
+    /// single-thread configuration (`BICOMPFL_THREADS=1`) degrades to the
+    /// sequential reference execution instead of bouncing through the pool.
+    pub fn overlap<A, B, FA, FB>(&self, fa: FA, fb: FB) -> (A, B)
+    where
+        A: Send,
+        B: Send,
+        FA: FnOnce() -> A + Send,
+        FB: FnOnce() -> B + Send,
+    {
+        if self.is_parallel() {
+            pool::global().run_pair(fa, fb)
+        } else {
+            (fa(), fb())
+        }
     }
 }
 
@@ -138,6 +192,44 @@ mod tests {
         assert_eq!(ParallelRoundEngine::serial().shards(), 1);
         assert!(!ParallelRoundEngine::serial().is_parallel());
         assert!(ParallelRoundEngine::with_shards(2).is_parallel());
+    }
+
+    #[test]
+    fn run_stages_sharded_matches_serial_reference() {
+        let jobs: Vec<u64> = (0..41).map(|i| 0xF1 ^ (i * 2693)).collect();
+        let s1 = |_: usize, &seed: &u64| -> Vec<u64> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..12).map(|_| rng.next_u64()).collect()
+        };
+        let s2 = |i: usize, &seed: &u64, a: &Vec<u64>| -> u64 {
+            let mut rng = Xoshiro256::new(seed ^ a[i % a.len()]);
+            rng.next_u64()
+        };
+        let reference = ParallelRoundEngine::serial().run_stages(&jobs, s1, s2);
+        for shards in [2, 3, 8, 64] {
+            assert_eq!(
+                reference,
+                ParallelRoundEngine::with_shards(shards).run_stages(&jobs, s1, s2),
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_returns_both_for_serial_and_parallel() {
+        let xs: Vec<u64> = (0..64).collect();
+        for engine in [
+            ParallelRoundEngine::serial(),
+            ParallelRoundEngine::with_shards(4),
+        ] {
+            let (a, b) = engine.overlap(
+                || xs.iter().sum::<u64>(),
+                // The caller-side arm may itself dispatch engine batches.
+                || engine.run(&xs, |_, &x| x * x).iter().sum::<u64>(),
+            );
+            assert_eq!(a, 2016);
+            assert_eq!(b, (0..64u64).map(|x| x * x).sum::<u64>());
+        }
     }
 
     #[test]

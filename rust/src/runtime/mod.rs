@@ -8,9 +8,13 @@
 //! * [`oracle`]   — [`crate::coordinator::MaskOracle`] and
 //!   [`crate::algorithms::GradOracle`] implementations backed by artifacts.
 //! * [`engine`]   — [`ParallelRoundEngine`]: sharded, bit-deterministic
-//!   execution of per-round client work (the L3 concurrency substrate).
+//!   execution of per-round client work (the L3 concurrency substrate),
+//!   including the `run_stages`/`overlap` stage-pipeline policy surface.
 //! * [`pool`]     — [`WorkerPool`]: the persistent channel-fed worker pool
-//!   the engine dispatches to, plus the `run_pair` pipelining primitive.
+//!   the engine dispatches to, plus the pipelining primitives: `run_pair`
+//!   (caller/worker overlap) and `run_stages` (per-item two-stage chaining,
+//!   the fused downlink(r) ∥ train(r+1) batch). Pool width honors
+//!   `BICOMPFL_THREADS` (`pool::configured_threads`).
 
 pub mod manifest;
 pub mod artifact;

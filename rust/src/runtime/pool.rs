@@ -262,6 +262,46 @@ impl WorkerPool {
             .collect()
     }
 
+    /// Run the two-stage per-job pipeline `s2(i, &job, &s1(i, &job))` for
+    /// every job and collect `(A, B)` pairs in job order.
+    ///
+    /// This is the *fused stage batch* behind cross-round downlink/train
+    /// pipelining: stage 2 of job i becomes eligible the moment *its own*
+    /// stage 1 finishes — per-item granularity, never a batch-wide barrier —
+    /// so a client whose downlink blocks are already encoded (stage 1)
+    /// starts its next-round local training (stage 2) immediately instead
+    /// of waiting on the slowest peer. Contrast with two back-to-back
+    /// [`WorkerPool::run`] calls, which put a full barrier between the
+    /// stages.
+    ///
+    /// Determinism contract: identical to `run` with the composed closure —
+    /// the result is exactly
+    /// `jobs.iter().enumerate().map(|(i, j)| { let a = s1(i, j); let b = s2(i, j, &a); (a, b) })`
+    /// for any shard count, provided both stages are pure functions of their
+    /// arguments. A panic in either stage poisons only this batch: it is
+    /// caught on the worker, the batch settles, and the payload is re-raised
+    /// here; the pool itself keeps serving.
+    pub fn run_stages<J, A, B, F1, F2>(
+        &self,
+        shards: usize,
+        jobs: &[J],
+        s1: F1,
+        s2: F2,
+    ) -> Vec<(A, B)>
+    where
+        J: Sync,
+        A: Send,
+        B: Send,
+        F1: Fn(usize, &J) -> A + Sync,
+        F2: Fn(usize, &J, &A) -> B + Sync,
+    {
+        self.run(shards, jobs, |i, j| {
+            let a = s1(i, j);
+            let b = s2(i, j, &a);
+            (a, b)
+        })
+    }
+
     /// Run `fa` on a pool worker while `fb` runs on the caller thread; return
     /// both results. This is the cross-round pipelining primitive: the
     /// trailing stage of round r (e.g. evaluating the just-aggregated model)
@@ -313,17 +353,29 @@ impl Drop for WorkerPool {
     }
 }
 
+/// The configured pool/engine width: the `BICOMPFL_THREADS` environment
+/// variable when set to a positive integer, else one per available hardware
+/// thread. The CI `threads=1` matrix job sets `BICOMPFL_THREADS=1` to prove
+/// every pipelined driver degrades to the serial reference semantics; the
+/// variable is read live (the global pool samples it once, at first use).
+pub fn configured_threads() -> usize {
+    std::env::var("BICOMPFL_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
 /// The process-wide pool every [`super::engine::ParallelRoundEngine`]
-/// dispatches to: one worker per available hardware thread, spawned on first
-/// use, alive for the rest of the process.
+/// dispatches to: [`configured_threads`] workers, spawned on first use,
+/// alive for the rest of the process.
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(|| {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        WorkerPool::new(threads)
-    })
+    POOL.get_or_init(|| WorkerPool::new(configured_threads()))
 }
 
 #[cfg(test)]
@@ -400,6 +452,93 @@ mod tests {
         );
         assert_eq!(a, 4950);
         assert_eq!(b, (0..100u64).map(|x| x * x).sum::<u64>());
+    }
+
+    #[test]
+    fn run_stages_chains_per_item_and_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u64> = (0..57).collect();
+        for shards in [1, 2, 5, 16, 100] {
+            let out = pool.run_stages(
+                shards,
+                &jobs,
+                |i, &j| {
+                    assert_eq!(i as u64, j);
+                    j * 2 + 1
+                },
+                // Stage 2 must see exactly its own item's stage-1 output.
+                |i, &j, &a| {
+                    assert_eq!(a, j * 2 + 1);
+                    a + i as u64
+                },
+            );
+            let expect: Vec<(u64, u64)> =
+                jobs.iter().map(|&j| (j * 2 + 1, j * 3 + 1)).collect();
+            assert_eq!(out, expect, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn run_stages_matches_serial_composition_on_seeded_work() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<u64> = (0..29).map(|i| 0xD01D ^ (i * 6151)).collect();
+        let s1 = |_: usize, &seed: &u64| -> Vec<u64> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..8).map(|_| rng.next_u64()).collect()
+        };
+        let s2 = |_: usize, &seed: &u64, a: &Vec<u64>| -> u64 {
+            let mut rng = Xoshiro256::new(seed ^ a[0]);
+            rng.next_u64()
+        };
+        let serial = pool.run_stages(1, &jobs, s1, s2);
+        for shards in [2, 4, 9] {
+            assert_eq!(serial, pool.run_stages(shards, &jobs, s1, s2), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn run_stages_panic_in_stage1_poisons_batch_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<u32> = (0..24).collect();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_stages(
+                6,
+                &jobs,
+                |_, &j| {
+                    assert!(j != 13, "engineered stage-1 failure");
+                    j
+                },
+                |_, _, &a| a + 1,
+            )
+        }));
+        assert!(boom.is_err());
+        // The pool keeps serving staged batches after the poisoned one.
+        let out = pool.run_stages(6, &jobs, |_, &j| j, |_, _, &a| a * 2);
+        assert_eq!(out.len(), 24);
+    }
+
+    #[test]
+    fn run_stages_panic_in_stage2_propagates() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<u32> = (0..16).collect();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_stages(
+                4,
+                &jobs,
+                |_, &j| j,
+                |_, _, &a| {
+                    assert!(a != 9, "engineered stage-2 failure");
+                    a
+                },
+            )
+        }));
+        assert!(boom.is_err());
+        assert_eq!(pool.run(4, &jobs, |_, &j| j).len(), 16);
+    }
+
+    #[test]
+    fn configured_threads_is_positive() {
+        assert!(configured_threads() >= 1);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use bicompfl::algorithms::runner::{run_algorithm, run_algorithm_sharded, RoundRe
 use bicompfl::algorithms::{CflAlgorithm, QuadraticOracle, RoundBits};
 use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, MaskRoundBits, Variant};
 use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
-use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::coordinator::{MaskOracle, ShardedMaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::AllocationStrategy;
 use bicompfl::runtime::{ParallelRoundEngine, WorkerPool};
 use bicompfl::util::rng::Xoshiro256;
@@ -192,6 +192,177 @@ fn pipelined_mask_run_matches_sequential_driver() {
             );
         }
     }
+}
+
+/// The staged PR driver (round r's per-client downlink fused with round
+/// r+1's training, evaluation overlapped) must be bit-identical to the
+/// serial driver at degenerate and odd client counts — 1 client (a pipeline
+/// of one), 2, and 5 (ragged shard boundaries) — across eval cadences that
+/// exercise the overlapped, drain, and skipped-eval branches.
+#[test]
+fn staged_pr_driver_matches_serial_at_small_and_odd_client_counts() {
+    for variant in [Variant::Pr, Variant::PrSplitDl] {
+        for n in [1usize, 2, 5] {
+            for (rounds, eval_every) in [(1usize, 1usize), (4, 1), (5, 2)] {
+                let run = |engine: ParallelRoundEngine| {
+                    let d = 160;
+                    let mut oracle = SyntheticMaskOracle::new(d, n, 37, 0.1);
+                    let mut alg = BiCompFl::new(d, n, cfg(variant)).with_engine(engine);
+                    let recs = alg.run(&mut oracle, rounds, eval_every);
+                    let clients: Vec<Vec<f32>> =
+                        (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+                    (recs, alg.global_model().to_vec(), clients)
+                };
+                let serial = run(ParallelRoundEngine::serial());
+                let staged = run(ParallelRoundEngine::with_shards(4));
+                assert_eq!(
+                    serial, staged,
+                    "{}: staged driver diverged (n={n}, rounds={rounds}, eval_every={eval_every})",
+                    variant.label()
+                );
+            }
+        }
+    }
+}
+
+/// Partial participation is the one configuration that exercises the fused
+/// stage's skip machinery: downlink jobs exist for every client each round,
+/// but only the drawn subset trains (the stage-2 `None` branch) and the
+/// participation sets differ round to round. The staged driver must still
+/// be bit-identical to serial — records, global model, and every client
+/// estimate.
+#[test]
+fn staged_pr_driver_matches_serial_under_partial_participation() {
+    for variant in [Variant::Pr, Variant::PrSplitDl] {
+        let run = |engine: ParallelRoundEngine| {
+            let d = 192;
+            let n = 5;
+            let mut c = cfg(variant);
+            c.participation = 0.6;
+            // λ < 1 routes the fused stage through the λ-mix prior branch
+            // (prev_qhat present only for clients that participated before).
+            c.lambda = 0.7;
+            let mut oracle = SyntheticMaskOracle::new(d, n, 11, 0.2);
+            let mut alg = BiCompFl::new(d, n, c).with_engine(engine);
+            let recs = alg.run(&mut oracle, 6, 2);
+            let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+            (recs, alg.global_model().to_vec(), clients)
+        };
+        assert_eq!(
+            run(ParallelRoundEngine::serial()),
+            run(ParallelRoundEngine::with_shards(4)),
+            "{}: staged driver diverged under partial participation",
+            variant.label()
+        );
+    }
+}
+
+/// Mixing drivers over one algorithm instance must not skew state: rounds
+/// driven one-by-one (`round`, the fused single-round path) followed by a
+/// staged `run` must land exactly where the all-serial trajectory lands.
+#[test]
+fn staged_driver_resumes_from_single_round_state() {
+    let make = || {
+        (
+            SyntheticMaskOracle::new(128, 3, 19, 0.1),
+            BiCompFl::new(128, 3, cfg(Variant::Pr)),
+        )
+    };
+    let (mut o1, mut a1) = make();
+    a1.set_engine(ParallelRoundEngine::serial());
+    for _ in 0..2 {
+        a1.round(&mut o1);
+    }
+    let serial_tail = a1.run(&mut o1, 3, 1);
+    let (mut o2, mut a2) = make();
+    a2.set_engine(ParallelRoundEngine::with_shards(4));
+    for _ in 0..2 {
+        a2.round(&mut o2);
+    }
+    let staged_tail = a2.run(&mut o2, 3, 1);
+    assert_eq!(serial_tail, staged_tail);
+    assert_eq!(a1.global_model(), a2.global_model());
+}
+
+/// A panic inside the fused mid-pipeline stage (a client's training chained
+/// onto its downlink job) must propagate to the driver's caller after the
+/// batch settles — and leave the process-global pool healthy enough to run
+/// the identical workload to completion afterwards.
+#[test]
+fn staged_driver_panic_poisons_run_but_not_the_pool() {
+    struct PoisonedOracle {
+        inner: SyntheticMaskOracle,
+        panic_round: u64,
+    }
+    impl MaskOracle for PoisonedOracle {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn n_clients(&self) -> usize {
+            self.inner.n_clients()
+        }
+        fn local_train(
+            &mut self,
+            client: usize,
+            theta: &[f32],
+            local_iters: usize,
+            lr: f32,
+            round: u64,
+        ) -> (Vec<f32>, f64, f64) {
+            self.inner.local_train(client, theta, local_iters, lr, round)
+        }
+        fn eval(&mut self, theta: &[f32]) -> (f64, f64) {
+            self.inner.eval(theta)
+        }
+        fn sharded(&self) -> Option<&dyn ShardedMaskOracle> {
+            Some(self)
+        }
+    }
+    impl ShardedMaskOracle for PoisonedOracle {
+        fn local_train_at(
+            &self,
+            client: usize,
+            theta: &[f32],
+            local_iters: usize,
+            lr: f32,
+            round: u64,
+        ) -> (Vec<f32>, f64, f64) {
+            assert!(
+                !(round == self.panic_round && client == 1),
+                "engineered mid-pipeline failure"
+            );
+            self.inner
+                .sharded()
+                .expect("inner oracle must stay pure")
+                .local_train_at(client, theta, local_iters, lr, round)
+        }
+        fn eval_at(&self, theta: &[f32]) -> (f64, f64) {
+            self.inner
+                .sharded()
+                .expect("inner oracle must stay pure")
+                .eval_at(theta)
+        }
+    }
+
+    let run = |panic_round: u64| {
+        let mut oracle = PoisonedOracle {
+            inner: SyntheticMaskOracle::new(128, 3, 23, 0.1),
+            panic_round,
+        };
+        let mut alg = BiCompFl::new(128, 3, cfg(Variant::Pr))
+            .with_engine(ParallelRoundEngine::with_shards(4));
+        alg.run(&mut oracle, 3, 1)
+    };
+    // Round 1's training runs inside the fused downlink(0) ∥ train(1) batch.
+    let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(1)));
+    assert!(boom.is_err(), "mid-pipeline panic must reach the caller");
+    // The global pool survives the poisoned batch: the same staged workload
+    // (panic disarmed) runs to completion and matches the serial reference.
+    let healthy = run(u64::MAX);
+    let mut serial_oracle = SyntheticMaskOracle::new(128, 3, 23, 0.1);
+    let mut serial_alg =
+        BiCompFl::new(128, 3, cfg(Variant::Pr)).with_engine(ParallelRoundEngine::serial());
+    assert_eq!(healthy, serial_alg.run(&mut serial_oracle, 3, 1));
 }
 
 /// Same run twice through the (reused, process-global) pool: nothing about

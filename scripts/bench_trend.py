@@ -1,0 +1,216 @@
+#!/usr/bin/env python3
+"""Cross-PR benchmark trend gate over `bicompfl-bench-round/v1` records.
+
+Compares the fresh `BENCH_<date>.json` written by `cargo bench --bench
+bench_round -- --json` against a baseline record — preferably the previous
+successful main-branch run's `bench-round-json` artifact, falling back to the
+committed `bench/baseline.json` — and fails on a >threshold (default 10%)
+regression of any comparison's *median-derived* speedup.
+
+Why speedups, not raw nanoseconds: CI runners differ between runs (and the
+committed fallback baseline may come from different hardware entirely), so
+absolute medians are not comparable across records. The per-comparison
+speedup — baseline-side p50 over contender-side p50, e.g. serial/pooled or
+pooled-seq/staged — is dimensionless and machine-invariant, which makes it
+the signal that can be trended across PRs. Raw medians are still rendered in
+the table for the human eye.
+
+A rendered markdown trend table is always written to `--summary` (defaulting
+to `$GITHUB_STEP_SUMMARY` when set), even when the gate fails, so every CI
+run leaves a readable trajectory point.
+
+Exit codes: 0 = ok (including "no baseline yet" and "gate skipped"),
+1 = regression beyond threshold, 2 = malformed input.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "bicompfl-bench-round/v1"
+
+# Engine labels of the two sides of each comparison, as bench_round emits
+# them; "-retry" entries (the authoritative 3x-window re-measurements)
+# override the first pass.
+BASELINE_ENGINES = ("serial", "pooled-seq")
+CONTENDER_ENGINES = ("pooled", "staged")
+
+
+def load_record(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if rec.get("schema") != SCHEMA:
+        print(
+            f"error: {path}: schema {rec.get('schema')!r} != {SCHEMA!r}",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+    return rec
+
+
+def p50_speedups(rec):
+    """Per-comparison speedup derived from case medians: baseline-side p50 /
+    contender-side p50, preferring the retry re-measurements."""
+    sides = {}  # name -> {"base": p50, "cont": p50}
+    for case in rec.get("cases", []):
+        name, engine, p50 = case.get("name"), case.get("engine", ""), case.get("p50_ns")
+        if name is None or p50 is None:
+            continue
+        retry = engine.endswith("-retry")
+        stem = engine[: -len("-retry")] if retry else engine
+        if stem in BASELINE_ENGINES:
+            side = "base"
+        elif stem in CONTENDER_ENGINES:
+            side = "cont"
+        else:
+            continue
+        slot = sides.setdefault(name, {})
+        # Retry entries (appended after the first pass) always win.
+        if retry or side not in slot:
+            slot[side] = p50
+    return {
+        name: slot["base"] / slot["cont"]
+        for name, slot in sides.items()
+        if slot.get("base") and slot.get("cont")
+    }
+
+
+def p50_of(rec, side_engines):
+    out = {}
+    for case in rec.get("cases", []):
+        name, engine = case.get("name"), case.get("engine", "")
+        stem = engine[: -len("-retry")] if engine.endswith("-retry") else engine
+        if stem in side_engines and case.get("p50_ns") is not None:
+            # Retries are appended after first passes; last write wins.
+            out[name] = case["p50_ns"]
+    return out
+
+
+def fmt_ms(ns):
+    return f"{ns / 1e6:.2f}" if ns is not None else "–"
+
+
+def render(rows, cur, base, notes):
+    lines = ["## bench-trend: round speedups across PRs", ""]
+    lines += [f"> {n}" for n in notes]
+    if notes:
+        lines.append("")
+    lines.append(
+        f"fresh record: `{cur.get('date', '?')}` (quick={cur.get('quick')}, "
+        f"{int(cur.get('pool_threads', 0))} pool threads, gate: {cur.get('gate', '?')})"
+        + (f" · baseline: `{base.get('date', '?')}`" if base else "")
+    )
+    lines.append("")
+    lines.append(
+        "| comparison | baseline speedup | current speedup | Δ | current p50 (ms) | status |"
+    )
+    lines.append("|---|---|---|---|---|---|")
+    for name, b_sp, c_sp, p50, status in rows:
+        delta = (
+            f"{(c_sp / b_sp - 1) * 100:+.1f}%"
+            if (b_sp is not None and c_sp is not None)
+            else "–"
+        )
+        lines.append(
+            f"| {name} | {f'{b_sp:.2f}x' if b_sp is not None else '–'} "
+            f"| {f'{c_sp:.2f}x' if c_sp is not None else '–'} "
+            f"| {delta} | {fmt_ms(p50)} | {status} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="fresh BENCH_<date>.json")
+    ap.add_argument(
+        "--baseline",
+        default="bench/baseline.json",
+        help="previous record (artifact or committed fallback)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="max tolerated fractional speedup regression per comparison",
+    )
+    ap.add_argument(
+        "--summary",
+        default=os.environ.get("GITHUB_STEP_SUMMARY"),
+        help="markdown summary sink (default: $GITHUB_STEP_SUMMARY)",
+    )
+    args = ap.parse_args()
+
+    cur = load_record(args.current)
+    cur_sp = p50_speedups(cur)
+    cur_p50 = p50_of(cur, CONTENDER_ENGINES)
+    notes, base, base_sp = [], None, {}
+
+    if not os.path.isfile(args.baseline):
+        notes.append(f"no baseline at `{args.baseline}` — trajectory starts here.")
+    else:
+        base = load_record(args.baseline)
+        if str(base.get("gate", "")).startswith("skipped"):
+            # A gate-skipped baseline (single-thread runner) carries ~1.0x
+            # speedups that would silently lower the bar for every later
+            # run; refuse to gate against it.
+            notes.append(
+                f"baseline record's own gate was not run ({base.get('gate')}) — "
+                "its speedups are degenerate; comparison is informational only."
+            )
+            base_sp = {}
+        else:
+            base_sp = p50_speedups(base)
+            if base.get("seed") or not base_sp:
+                notes.append(
+                    "baseline has no usable timing data (seed record) — "
+                    "trajectory starts here."
+                )
+    gate_skipped = str(cur.get("gate", "")).startswith("skipped")
+    if gate_skipped:
+        notes.append(
+            f"in-run regression gate was **not run** ({cur.get('gate')}); "
+            "trend comparison is informational only."
+        )
+
+    rows, failures = [], []
+    for name in sorted(set(cur_sp) | set(base_sp)):
+        c_sp, b_sp = cur_sp.get(name), base_sp.get(name)
+        if c_sp is None:
+            status = "dropped"
+        elif b_sp is None:
+            status = "new"
+        elif gate_skipped:
+            status = "not gated"
+        elif c_sp < b_sp * (1.0 - args.threshold):
+            status = f"**regressed** (>{args.threshold:.0%})"
+            failures.append((name, b_sp, c_sp))
+        else:
+            status = "ok"
+        rows.append((name, b_sp, c_sp, cur_p50.get(name), status))
+
+    table = render(rows, cur, base, notes)
+    print(table)
+    if args.summary:
+        # Append (never truncate): other steps share $GITHUB_STEP_SUMMARY.
+        with open(args.summary, "a", encoding="utf-8") as f:
+            f.write(table + "\n")
+
+    if failures:
+        for name, b_sp, c_sp in failures:
+            print(
+                f"REGRESSION: {name}: speedup {b_sp:.2f}x -> {c_sp:.2f}x "
+                f"(> {args.threshold:.0%} median regression)",
+                file=sys.stderr,
+            )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
