@@ -1,7 +1,8 @@
 //! End-to-end round latency on the synthetic oracles: the full coordinator
 //! cost (local train stand-in + MRC both directions + aggregation) per
 //! variant, serial vs pooled, the staged multi-round PR driver vs the
-//! barrier-separated pooled loop, plus the parallel-uplink topology speedup.
+//! barrier-separated pooled loop, the zero-copy loopback transport vs the
+//! byte-exact framed wire path, plus the parallel-uplink topology speedup.
 //!
 //! Run: `cargo bench --bench bench_round [-- flags]`
 //!
@@ -16,6 +17,7 @@
 //!                  CI bench-smoke configuration
 //!   --out <path>   override the JSON output path
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use bicompfl::algorithms::{CflAlgorithm, QuadraticOracle};
@@ -25,6 +27,7 @@ use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
+use bicompfl::transport::{FramedLoopback, Loopback, Transport};
 use bicompfl::util::json::{arr, num, obj, s, Json};
 use bicompfl::util::rng::Xoshiro256;
 use bicompfl::util::timer::{bench, BenchStats};
@@ -120,6 +123,42 @@ fn bench_cfl_round(
     let mut rng = Xoshiro256::new(0);
     bench(warm, target, || {
         std::hint::black_box(alg.round(&mut oracle, &mut rng));
+    })
+}
+
+/// The transport comparison: identical PR rounds where every frame either
+/// passes through zero-copy ([`Loopback`]) or is serialized to its
+/// byte-exact wire form and deserialized again ([`FramedLoopback`]). The
+/// gate tracks the serialization overhead: MRC candidate streaming
+/// dominates the round, so the framed path must stay within noise.
+fn bench_pr_round_transport(
+    framed: bool,
+    engine: ParallelRoundEngine,
+    d: usize,
+    n: usize,
+    warm: Duration,
+    target: Duration,
+) -> BenchStats {
+    let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
+    let transport: Arc<dyn Transport> = if framed {
+        Arc::new(FramedLoopback::new())
+    } else {
+        Arc::new(Loopback::new())
+    };
+    let mut alg = BiCompFl::new(
+        d,
+        n,
+        BiCompFlConfig {
+            variant: Variant::Pr,
+            n_is: 256,
+            allocation: AllocationStrategy::fixed(128),
+            ..Default::default()
+        },
+    )
+    .with_engine(engine)
+    .with_transport(transport);
+    bench(warm, target, || {
+        std::hint::black_box(alg.round(&mut oracle));
     })
 }
 
@@ -270,6 +309,22 @@ fn main() {
             run: Box::new(move |w, t| bench_pr_multi_round(true, pooled, d, n, w, t)),
         },
     });
+    // The byte-exact wire path vs zero-copy loopback on identical PR rounds:
+    // tracks serialization overhead under the same gate/retry, so a codec
+    // change that makes framing expensive shows up in the trend.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [framed wire]",
+        baseline: Side {
+            label: "loopback",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport(false, pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "framed",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport(true, pooled, d, n, w, t)),
+        },
+    });
 
     let mut cases: Vec<Case> = Vec::new();
     let mut speedups: Vec<(&'static str, f64)> = Vec::new();
@@ -302,7 +357,7 @@ fn main() {
     }
 
     if !quick {
-        // Parallel vs serial uplink encode (the topology win).
+        // Engine-sharded vs serial uplink frame encode (the topology win).
         let mut rng = Xoshiro256::new(2);
         let qs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..d).map(|_| 0.3 + 0.4 * rng.next_f32()).collect())
@@ -310,8 +365,11 @@ fn main() {
         let prior = vec![0.5f32; d];
         let plan = BlockPlan::fixed(d, 128);
         let seeds = vec![7u64; n];
+        let transport = Loopback::new();
         let stats = bench(warm, target, || {
-            std::hint::black_box(parallel_uplink(&qs, &prior, &plan, &seeds, 0, 256, 1, 3));
+            std::hint::black_box(parallel_uplink(
+                &pooled, &transport, &qs, &prior, &plan, &seeds, 0, 256, 1, 3,
+            ));
         });
         let line = stats.throughput_line(&format!("parallel_uplink n={n}"), (d * n) as f64);
         println!("\n{line}");

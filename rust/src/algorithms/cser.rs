@@ -6,9 +6,12 @@
 //! (the partial-sync signal), matching the paper's Appendix-I accounting
 //! (UL 1.0 / DL 33).
 
+use std::sync::Arc;
+
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::{sign_compress, Memory};
+use crate::compressors::Memory;
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, ModelFrame, ModelPayload, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 pub struct Cser {
@@ -19,6 +22,7 @@ pub struct Cser {
     t: usize,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    transport: Arc<dyn Transport>,
 }
 
 impl Cser {
@@ -31,6 +35,7 @@ impl Cser {
             t: 0,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            transport: transport::from_env(),
         }
     }
 }
@@ -48,15 +53,24 @@ impl CflAlgorithm for Cser {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
-        let d = self.x.len() as u64;
         let n = self.mems.len();
+        let round = self.t as u64;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             oracle.grad(i, &self.x, &mut self.scratch);
             let p = self.mems[i].compensate(&self.scratch);
-            let (c, bits) = sign_compress(&p);
+            let (c, bits, _) = channel::sign_over(tr.as_ref(), Leg::Uplink, i as u64, round, &p);
             self.mems[i].update(&p, &c);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
@@ -69,13 +83,31 @@ impl CflAlgorithm for Cser {
                 m.reset();
             }
         }
-        // Downlink: full model (32 bpp) + sign of aggregate (1 bpp).
-        let per_client_dl = 32 * d + (d + 32);
-        RoundBits {
-            ul,
-            dl: per_client_dl * n as u64,
-            dl_bc: per_client_dl,
+        // Downlink per client: full model (32 bpp) + sign of the aggregate
+        // (1 bpp, the partial-sync signal); identical payloads, so broadcast
+        // sends one copy of each.
+        let model = Frame::Model(ModelFrame {
+            client: FEDERATOR,
+            round,
+            payload: ModelPayload::Dense(self.x.clone()),
+        });
+        let denom = self.agg.len().max(1) as f64;
+        let scale = (self.agg.iter().map(|x| x.abs() as f64).sum::<f64>() / denom) as f32;
+        let sync = Frame::Model(ModelFrame {
+            client: FEDERATOR,
+            round,
+            payload: ModelPayload::Signs {
+                signs: self.agg.iter().map(|&x| x >= 0.0).collect(),
+                scale,
+            },
+        });
+        let mut dl = 0u64;
+        let mut dl_bc = 0u64;
+        for f in [&model, &sync] {
+            dl += channel::fan_out(tr.as_ref(), Leg::Downlink, f, n);
+            dl_bc += tr.relay(Leg::DownlinkBroadcast, f);
         }
+        RoundBits { ul, dl, dl_bc }
     }
 }
 

@@ -1,11 +1,15 @@
 //! DoubleSqueeze (Tang et al. 2019): error-compensated compression at *both*
 //! ends. Clients EF-sign their gradients (1 bpp up); the server aggregates
-//! the decompressed messages, EF-signs the aggregate, and broadcasts it
-//! (1 bpp down). Paper accounting: UL 1.0 / DL 1.0.
+//! the delivered messages, EF-signs the aggregate, and broadcasts it
+//! (1 bpp down). Paper accounting: UL 1.0 / DL 1.0. Both directions travel
+//! as sign-bit [`crate::transport::ModelFrame`]s.
+
+use std::sync::Arc;
 
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::{sign_compress, Memory};
+use crate::compressors::Memory;
 use crate::tensor;
+use crate::transport::{self, channel, Leg, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 pub struct DoubleSqueeze {
@@ -15,6 +19,8 @@ pub struct DoubleSqueeze {
     lr: f32,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    t: u64,
+    transport: Arc<dyn Transport>,
 }
 
 impl DoubleSqueeze {
@@ -26,6 +32,8 @@ impl DoubleSqueeze {
             lr: server_lr,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            t: 0,
+            transport: transport::from_env(),
         }
     }
 }
@@ -43,30 +51,43 @@ impl CflAlgorithm for DoubleSqueeze {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
         let n = self.client_mems.len();
+        let round = self.t;
+        self.t += 1;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             oracle.grad(i, &self.x, &mut self.scratch);
             let p = self.client_mems[i].compensate(&self.scratch);
-            let (c, bits) = sign_compress(&p);
+            let (c, bits, _) = channel::sign_over(tr.as_ref(), Leg::Uplink, i as u64, round, &p);
             self.client_mems[i].update(&p, &c);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
         }
         tensor::scale(&mut self.agg, 1.0 / n as f32);
-        // Server-side squeeze: compress the aggregate with its own memory.
+        // Server-side squeeze: compress the aggregate with its own memory
+        // and send one copy per client (broadcastable: one frame).
         let v = self.server_mem.compensate(&self.agg);
-        let (cs, dl_bits) = sign_compress(&v);
+        let (cs, dl_bits, frame) =
+            channel::sign_over(tr.as_ref(), Leg::Downlink, FEDERATOR, round, &v);
         self.server_mem.update(&v, &cs);
-        // Every client (and the server) applies the same compressed update.
+        // Every client (and the server) applies the same delivered update.
         tensor::axpy(&mut self.x, -self.lr, &cs);
-        RoundBits {
-            ul,
-            dl: dl_bits * n as u64,
-            dl_bc: dl_bits,
-        }
+        // The send above already metered client 1's copy: n - 1 more.
+        let dl =
+            dl_bits + channel::fan_out(tr.as_ref(), Leg::Downlink, &frame, n.saturating_sub(1));
+        let dl_bc = tr.relay(Leg::DownlinkBroadcast, &frame);
+        RoundBits { ul, dl, dl_bc }
     }
 }
 

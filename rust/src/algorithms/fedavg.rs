@@ -1,10 +1,15 @@
 //! FedAvg / PSGD (McMahan et al. 2017): the uncompressed reference point.
 //!
-//! Clients send full-precision gradients (32 bpp up); the federator averages
-//! and returns the full-precision model (32 bpp down; broadcastable).
+//! Clients send full-precision gradients (32 bpp up) as dense
+//! [`crate::transport::ModelFrame`]s; the federator averages the *delivered*
+//! copies and returns the full-precision model (32 bpp down; broadcastable)
+//! the same way — every counted bit crosses the transport.
+
+use std::sync::Arc;
 
 use super::{CflAlgorithm, GradOracle, RoundBits};
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, ModelFrame, ModelPayload, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 pub struct FedAvg {
@@ -13,6 +18,8 @@ pub struct FedAvg {
     lr: f32,
     scratch: Vec<f32>,
     gsum: Vec<f32>,
+    t: u64,
+    transport: Arc<dyn Transport>,
 }
 
 impl FedAvg {
@@ -23,6 +30,8 @@ impl FedAvg {
             lr: server_lr,
             scratch: vec![0.0; d],
             gsum: vec![0.0; d],
+            t: 0,
+            transport: transport::from_env(),
         }
     }
 }
@@ -40,19 +49,43 @@ impl CflAlgorithm for FedAvg {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
-        let d = self.x.len() as u64;
+        let round = self.t;
+        self.t += 1;
+        let tr = Arc::clone(&self.transport);
         self.gsum.iter_mut().for_each(|v| *v = 0.0);
+        let mut ul = 0u64;
         for i in 0..self.n {
             oracle.grad(i, &self.x, &mut self.scratch);
-            tensor::add_assign(&mut self.gsum, &self.scratch);
+            let (g_rx, bits, _) = channel::dense_over(
+                tr.as_ref(),
+                Leg::Uplink,
+                i as u64,
+                round,
+                self.scratch.clone(),
+            );
+            ul += bits;
+            tensor::add_assign(&mut self.gsum, &g_rx);
         }
         tensor::axpy(&mut self.x, -self.lr / self.n as f32, &self.gsum);
-        RoundBits {
-            ul: 32 * d * self.n as u64,
-            dl: 32 * d * self.n as u64,
-            dl_bc: 32 * d, // identical payload -> broadcast once
-        }
+        // Downlink: the full-precision model to every client; identical
+        // payload, so a broadcast channel sends it once.
+        let model = Frame::Model(ModelFrame {
+            client: FEDERATOR,
+            round,
+            payload: ModelPayload::Dense(self.x.clone()),
+        });
+        let dl = channel::fan_out(tr.as_ref(), Leg::Downlink, &model, self.n);
+        let dl_bc = tr.relay(Leg::DownlinkBroadcast, &model);
+        RoundBits { ul, dl, dl_bc }
     }
 }
 

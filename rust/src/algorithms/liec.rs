@@ -7,9 +7,12 @@
 //! cost per direction is 1 + 64/period ≈ 2.3 bpp, the paper's Appendix-I
 //! value.
 
+use std::sync::Arc;
+
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::{sign_compress, Memory};
+use crate::compressors::Memory;
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, ModelFrame, ModelPayload, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 pub struct Liec {
@@ -21,6 +24,7 @@ pub struct Liec {
     t: usize,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    transport: Arc<dyn Transport>,
 }
 
 impl Liec {
@@ -34,6 +38,7 @@ impl Liec {
             t: 0,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            transport: transport::from_env(),
         }
     }
 }
@@ -51,9 +56,18 @@ impl CflAlgorithm for Liec {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
-        let d = self.x.len() as u64;
         let n = self.client_mems.len();
+        let round = self.t as u64;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
@@ -61,37 +75,50 @@ impl CflAlgorithm for Liec {
             // Immediate compensation: the *current* residual is folded in
             // before compression and the new residual replaces it.
             let p = self.client_mems[i].compensate(&self.scratch);
-            let (c, bits) = sign_compress(&p);
+            let (c, bits, _) = channel::sign_over(tr.as_ref(), Leg::Uplink, i as u64, round, &p);
             self.client_mems[i].update(&p, &c);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
         }
         tensor::scale(&mut self.agg, 1.0 / n as f32);
         let v = self.server_mem.compensate(&self.agg);
-        let (cs, dl_sign_bits) = sign_compress(&v);
+        let (cs, dl_sign_bits, sign_frame) =
+            channel::sign_over(tr.as_ref(), Leg::Downlink, FEDERATOR, round, &v);
         self.server_mem.update(&v, &cs);
         tensor::axpy(&mut self.x, -self.lr, &cs);
+        // The send above already metered client 1's copy: n - 1 more.
+        let mut dl = dl_sign_bits;
+        dl += channel::fan_out(tr.as_ref(), Leg::Downlink, &sign_frame, n.saturating_sub(1));
+        let mut dl_bc = tr.relay(Leg::DownlinkBroadcast, &sign_frame);
 
         self.t += 1;
-        let mut ul_extra = 0u64;
-        let mut dl_extra = 0u64;
         if self.t % self.period == 0 {
             // Full-precision residual synchronization both ways: residuals
             // are flushed into the model so all replicas re-align exactly.
-            tensor::axpy(&mut self.x, -self.lr, &self.server_mem.e.clone());
+            let comp = self.server_mem.e.clone();
+            tensor::axpy(&mut self.x, -self.lr, &comp);
             self.server_mem.reset();
             for m in self.client_mems.iter_mut() {
                 m.reset();
             }
-            // Model + compensation vector in each direction.
-            ul_extra = 2 * 32 * d * n as u64;
-            dl_extra = 2 * 32 * d * n as u64;
+            // Model + compensation vector in each direction, full precision.
+            let model = Frame::Model(ModelFrame {
+                client: FEDERATOR,
+                round,
+                payload: ModelPayload::Dense(self.x.clone()),
+            });
+            let comp = Frame::Model(ModelFrame {
+                client: FEDERATOR,
+                round,
+                payload: ModelPayload::Dense(comp),
+            });
+            for f in [&model, &comp] {
+                ul += channel::fan_out(tr.as_ref(), Leg::Uplink, f, n);
+                dl += channel::fan_out(tr.as_ref(), Leg::Downlink, f, n);
+                dl_bc += tr.relay(Leg::DownlinkBroadcast, f);
+            }
         }
-        RoundBits {
-            ul: ul + ul_extra,
-            dl: dl_sign_bits * n as u64 + dl_extra,
-            dl_bc: dl_sign_bits + dl_extra / n as u64,
-        }
+        RoundBits { ul, dl, dl_bc }
     }
 }
 

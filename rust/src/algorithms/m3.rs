@@ -5,9 +5,11 @@
 //! Uplink: TopK with K = ⌊d/n⌋ (the paper found TopK more stable than the
 //! original RandK; §4).
 
+use std::sync::Arc;
+
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::{Compressor, TopK};
 use crate::tensor;
+use crate::transport::{self, channel, Leg, Transport};
 use crate::util::rng::Xoshiro256;
 
 pub struct M3 {
@@ -20,6 +22,7 @@ pub struct M3 {
     t: usize,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    transport: Arc<dyn Transport>,
 }
 
 impl M3 {
@@ -32,6 +35,7 @@ impl M3 {
             t: 0,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            transport: transport::from_env(),
         }
     }
 
@@ -66,29 +70,49 @@ impl CflAlgorithm for M3 {
         }
     }
 
-    fn round(&mut self, oracle: &mut dyn GradOracle, rng: &mut Xoshiro256) -> RoundBits {
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
+    fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
         let d = self.x.len();
         let k = (d / self.n).max(1);
-        let mut topk = TopK { k };
+        let round = self.t as u64;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
-        // Clients compute gradients at their (stale) replicas.
+        // Clients compute gradients at their (stale) replicas; the TopK
+        // selection travels as a sparse (index, value) frame.
         for i in 0..self.n {
             let replica = self.replicas[i].clone();
             oracle.grad(i, &replica, &mut self.scratch);
-            let (c, bits) = topk.compress(&self.scratch, rng);
+            let (c, bits, _) =
+                channel::topk_over(tr.as_ref(), Leg::Uplink, i as u64, round, k, &self.scratch);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
         }
         tensor::axpy(&mut self.x, -self.lr / self.n as f32, &self.agg);
-        // Downlink: each client gets a different full-precision part.
+        // Downlink: each client gets a *different* full-precision part, so
+        // broadcast cannot reduce the cost; the replica installs the
+        // delivered copy.
         let t = self.t_bump();
         let mut dl = 0u64;
         for i in 0..self.n {
             let range = self.part(i, t, d);
             let (s, e) = (range.start, range.end);
-            self.replicas[i][s..e].copy_from_slice(&self.x[s..e]);
-            dl += 32 * (e - s) as u64;
+            let (part_rx, bits, _) = channel::dense_over(
+                tr.as_ref(),
+                Leg::Downlink,
+                i as u64,
+                round,
+                self.x[s..e].to_vec(),
+            );
+            self.replicas[i][s..e].copy_from_slice(&part_rx);
+            dl += bits;
         }
         RoundBits {
             ul,

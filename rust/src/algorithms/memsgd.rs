@@ -1,11 +1,15 @@
 //! MemSGD — sparsified/compressed SGD with client-side memory (Stich et al.
-//! 2018). Uplink: error-compensated sign compression (1 bpp + scale);
-//! downlink: the uncompressed global model (32 bpp), matching the paper's
-//! Appendix-I accounting (UL 1.0 / DL 32).
+//! 2018). Uplink: error-compensated sign compression (1 bpp + scale) as
+//! sign-bit [`crate::transport::ModelFrame`]s; downlink: the uncompressed
+//! global model (32 bpp), matching the paper's Appendix-I accounting
+//! (UL 1.0 / DL 32). Every counted bit crosses the transport.
+
+use std::sync::Arc;
 
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::{sign_compress, Memory};
+use crate::compressors::Memory;
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, ModelFrame, ModelPayload, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 pub struct MemSgd {
@@ -14,6 +18,8 @@ pub struct MemSgd {
     lr: f32,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    t: u64,
+    transport: Arc<dyn Transport>,
 }
 
 impl MemSgd {
@@ -24,6 +30,8 @@ impl MemSgd {
             lr: server_lr,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            t: 0,
+            transport: transport::from_env(),
         }
     }
 }
@@ -41,25 +49,39 @@ impl CflAlgorithm for MemSgd {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
-        let d = self.x.len() as u64;
         let n = self.mems.len();
+        let round = self.t;
+        self.t += 1;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             oracle.grad(i, &self.x, &mut self.scratch);
             let p = self.mems[i].compensate(&self.scratch);
-            let (c, bits) = sign_compress(&p);
+            let (c, bits, _) = channel::sign_over(tr.as_ref(), Leg::Uplink, i as u64, round, &p);
             self.mems[i].update(&p, &c);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
         }
         tensor::axpy(&mut self.x, -self.lr / n as f32, &self.agg);
-        RoundBits {
-            ul,
-            dl: 32 * d * n as u64,
-            dl_bc: 32 * d,
-        }
+        // Downlink: the uncompressed model to every client (broadcastable).
+        let model = Frame::Model(ModelFrame {
+            client: FEDERATOR,
+            round,
+            payload: ModelPayload::Dense(self.x.clone()),
+        });
+        let dl = channel::fan_out(tr.as_ref(), Leg::Downlink, &model, n);
+        let dl_bc = tr.relay(Leg::DownlinkBroadcast, &model);
+        RoundBits { ul, dl, dl_bc }
     }
 }
 

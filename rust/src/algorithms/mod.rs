@@ -54,6 +54,16 @@ pub trait CflAlgorithm: Send {
     /// see `runtime::engine`'s determinism contract. Default: no-op, for
     /// baselines whose rounds are inherently sequential accumulations.
     fn set_engine(&mut self, _engine: crate::runtime::ParallelRoundEngine) {}
+    /// Install the transport every counted bit of this algorithm travels
+    /// through. Loopback vs framed never changes a record — pinned by the
+    /// determinism suite. Default: no-op (an algorithm that carries no
+    /// payloads, if one ever existed, meters nothing).
+    fn set_transport(&mut self, _transport: std::sync::Arc<dyn crate::transport::Transport>) {}
+    /// The algorithm's transport, for meter reads (stats, consistency
+    /// checks). `None` only for algorithms that bypass `set_transport`.
+    fn transport(&self) -> Option<std::sync::Arc<dyn crate::transport::Transport>> {
+        None
+    }
     /// Execute one communication round; returns the traffic it cost.
     fn round(&mut self, oracle: &mut dyn GradOracle, rng: &mut Xoshiro256) -> RoundBits;
     /// True when [`CflAlgorithm::round_sharded`] is implemented; lets the

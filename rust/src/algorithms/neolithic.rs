@@ -4,26 +4,41 @@
 //! compression error at R× the bit cost. We use R = 2 sign passes in each
 //! direction, matching the paper's Appendix-I accounting (UL 2.0 / DL 2.0).
 
+use std::sync::Arc;
+
 use super::{CflAlgorithm, GradOracle, RoundBits};
-use crate::compressors::sign_compress;
 use crate::compressors::Memory;
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, Transport, FEDERATOR};
 use crate::util::rng::Xoshiro256;
 
 const PASSES: usize = 2;
 
-/// R-pass sign compression: c = Σ_r C(residual_r). Returns (approx, bits).
-fn multi_pass_sign(v: &[f32]) -> (Vec<f32>, u64) {
+/// R-pass sign compression over the transport: c = Σ_r C(residual_r), one
+/// sign-bit frame per pass, reconstruction from the delivered frames
+/// (bit-identical to composing [`crate::compressors::sign_compress`]
+/// locally — the sign codec is lossless; the test module keeps that
+/// reference form and pins the error-tightening property on it). Returns
+/// (approx, bits, per-pass frames).
+fn multi_pass_sign_over(
+    t: &dyn Transport,
+    leg: Leg,
+    client: u64,
+    round: u64,
+    v: &[f32],
+) -> (Vec<f32>, u64, Vec<Frame>) {
     let mut approx = vec![0.0f32; v.len()];
     let mut resid = v.to_vec();
     let mut bits = 0u64;
+    let mut frames = Vec::with_capacity(PASSES);
     for _ in 0..PASSES {
-        let (c, b) = sign_compress(&resid);
+        let (c, b, f) = channel::sign_over(t, leg, client, round, &resid);
         bits += b;
+        frames.push(f);
         tensor::add_assign(&mut approx, &c);
         tensor::sub_assign(&mut resid, &c);
     }
-    (approx, bits)
+    (approx, bits, frames)
 }
 
 pub struct Neolithic {
@@ -33,6 +48,8 @@ pub struct Neolithic {
     lr: f32,
     scratch: Vec<f32>,
     agg: Vec<f32>,
+    t: u64,
+    transport: Arc<dyn Transport>,
 }
 
 impl Neolithic {
@@ -44,6 +61,8 @@ impl Neolithic {
             lr: server_lr,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
+            t: 0,
+            transport: transport::from_env(),
         }
     }
 }
@@ -61,28 +80,44 @@ impl CflAlgorithm for Neolithic {
         self.x.copy_from_slice(x0);
     }
 
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
+    }
+
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {
         let n = self.client_mems.len();
+        let round = self.t;
+        self.t += 1;
+        let tr = Arc::clone(&self.transport);
         let mut ul = 0u64;
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             oracle.grad(i, &self.x, &mut self.scratch);
             let p = self.client_mems[i].compensate(&self.scratch);
-            let (c, bits) = multi_pass_sign(&p);
+            let (c, bits, _) = multi_pass_sign_over(tr.as_ref(), Leg::Uplink, i as u64, round, &p);
             self.client_mems[i].update(&p, &c);
             ul += bits;
             tensor::add_assign(&mut self.agg, &c);
         }
         tensor::scale(&mut self.agg, 1.0 / n as f32);
         let v = self.server_mem.compensate(&self.agg);
-        let (cs, dl_bits) = multi_pass_sign(&v);
+        let (cs, dl_bits, frames) =
+            multi_pass_sign_over(tr.as_ref(), Leg::Downlink, FEDERATOR, round, &v);
         self.server_mem.update(&v, &cs);
         tensor::axpy(&mut self.x, -self.lr, &cs);
-        RoundBits {
-            ul,
-            dl: dl_bits * n as u64,
-            dl_bc: dl_bits,
+        // Both passes go to every client (the sends above already metered
+        // client 1's copies); broadcast sends each pass once.
+        let mut dl = dl_bits;
+        let mut dl_bc = 0u64;
+        for f in &frames {
+            dl += channel::fan_out(tr.as_ref(), Leg::Downlink, f, n.saturating_sub(1));
+            dl_bc += tr.relay(Leg::DownlinkBroadcast, f);
         }
+        RoundBits { ul, dl, dl_bc }
     }
 }
 
@@ -90,6 +125,21 @@ impl CflAlgorithm for Neolithic {
 mod tests {
     use super::*;
     use crate::algorithms::QuadraticOracle;
+    use crate::compressors::sign_compress;
+
+    /// The local-arithmetic reference form of [`multi_pass_sign_over`].
+    fn multi_pass_sign(v: &[f32]) -> (Vec<f32>, u64) {
+        let mut approx = vec![0.0f32; v.len()];
+        let mut resid = v.to_vec();
+        let mut bits = 0u64;
+        for _ in 0..PASSES {
+            let (c, b) = sign_compress(&resid);
+            bits += b;
+            tensor::add_assign(&mut approx, &c);
+            tensor::sub_assign(&mut resid, &c);
+        }
+        (approx, bits)
+    }
 
     #[test]
     fn multi_pass_tightens_error() {

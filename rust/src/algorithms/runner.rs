@@ -47,14 +47,35 @@ pub fn run_algorithm_sharded(
     engine: ParallelRoundEngine,
 ) -> Vec<RoundRecord> {
     alg.set_engine(engine);
-    if engine.is_parallel() && alg.supports_sharded_round() {
-        let has_sharded_oracle = oracle.sharded().is_some();
-        if has_sharded_oracle {
-            let sh = oracle.sharded().expect("sharded view vanished");
-            return run_pipelined(alg, sh, rounds, eval_every, seed, engine);
-        }
+    let meter_start = alg.transport().map(|t| t.stats());
+    let out = if engine.is_parallel()
+        && alg.supports_sharded_round()
+        && oracle.sharded().is_some()
+    {
+        let sh = oracle.sharded().expect("sharded view vanished");
+        run_pipelined(alg, sh, rounds, eval_every, seed, engine)
+    } else {
+        run_algorithm(alg, oracle, rounds, eval_every, seed)
+    };
+    debug_check_records(alg, meter_start, &out);
+    out
+}
+
+/// Debug-time guard that every counted bit of a run crossed the algorithm's
+/// transport: the meter delta must reproduce the record totals exactly.
+fn debug_check_records(
+    alg: &dyn CflAlgorithm,
+    meter_start: Option<crate::transport::TransportStats>,
+    records: &[RoundRecord],
+) {
+    if let (Some(start), Some(t)) = (meter_start, alg.transport()) {
+        crate::transport::debug_check_run_bits(
+            &t.stats().since(&start),
+            records.iter().map(|r| r.ul_bits).sum(),
+            records.iter().map(|r| r.dl_bits).sum(),
+            records.iter().map(|r| r.dl_bc_bits).sum(),
+        );
     }
-    run_algorithm(alg, oracle, rounds, eval_every, seed)
 }
 
 /// The pipelined CFL inner loop: rounds come from
@@ -176,6 +197,7 @@ pub fn run_algorithm(
     eval_every: usize,
     seed: u64,
 ) -> Vec<RoundRecord> {
+    let meter_start = alg.transport().map(|t| t.stats());
     let mut rng = Xoshiro256::new(seed);
     let mut out = Vec::with_capacity(rounds);
     let (mut loss, mut acc) = oracle.eval(alg.params());
@@ -195,6 +217,7 @@ pub fn run_algorithm(
             dl_bc_bits: bits.dl_bc,
         });
     }
+    debug_check_records(alg, meter_start, &out);
     out
 }
 

@@ -65,12 +65,19 @@ impl Qs {
         }
     }
 
+    /// Plain-binary width of one τ value: ceil(log2 s) bits. The single
+    /// source of truth for τ coding — the transport layer's Q_s side-info
+    /// frames use the same width, so wire and compressor accounting cannot
+    /// drift apart.
+    pub fn tau_bits(&self) -> u8 {
+        (usize::BITS - self.s.saturating_sub(1).leading_zeros()) as u8
+    }
+
     /// Bits for the side information (‖g‖, signs, τ) assuming plain binary
     /// coding of τ (the paper notes Elias coding applies; binary is an upper
     /// bound and keeps accounting deterministic).
     pub fn side_bits(&self, d: usize) -> u64 {
-        let tau_bits = (usize::BITS - self.s.saturating_sub(1).leading_zeros()) as u64;
-        32 + d as u64 * (1 + tau_bits)
+        32 + d as u64 * (1 + self.tau_bits() as u64)
     }
 }
 

@@ -14,6 +14,25 @@ pub struct TopK {
     pub k: usize,
 }
 
+impl TopK {
+    /// The indices of the k largest-magnitude entries (partial-sort order —
+    /// deterministic for a given input, not sorted). This is the message
+    /// content a sparse transmission carries; `compress` and the transport
+    /// layer's sparse frames share it so their payloads cannot drift apart.
+    pub fn select(&self, g: &[f32]) -> Vec<u32> {
+        let d = g.len();
+        let k = self.k.min(d);
+        if k == 0 || d == 0 {
+            return Vec::new();
+        }
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1).min(d - 1), |&a, &b| {
+            g[b].abs().partial_cmp(&g[a].abs()).unwrap()
+        });
+        idx[..k].iter().map(|&i| i as u32).collect()
+    }
+}
+
 impl Compressor for TopK {
     fn name(&self) -> &'static str {
         "topk"
@@ -21,17 +40,12 @@ impl Compressor for TopK {
 
     fn compress(&mut self, g: &[f32], _rng: &mut Xoshiro256) -> (Vec<f32>, u64) {
         let d = g.len();
-        let k = self.k.min(d);
-        // Select the k-th largest magnitude via partial sort of indices.
-        let mut idx: Vec<usize> = (0..d).collect();
-        idx.select_nth_unstable_by(k.saturating_sub(1).min(d - 1), |&a, &b| {
-            g[b].abs().partial_cmp(&g[a].abs()).unwrap()
-        });
+        let idx = self.select(g);
         let mut out = vec![0.0f32; d];
-        for &i in &idx[..k] {
-            out[i] = g[i];
+        for &i in &idx {
+            out[i as usize] = g[i as usize];
         }
-        (out, k as u64 * (32 + index_bits(d)))
+        (out, idx.len() as u64 * (32 + index_bits(d)))
     }
 }
 

@@ -3,8 +3,10 @@
 //!
 //! One [`BiCompFl`] instance owns the federator state and all client model
 //! estimates; the [`MaskOracle`] supplies Layer-2 compute. All communication
-//! is metered exactly (index bits + allocation signalling), with separate
-//! point-to-point and broadcast downlink accounting (Appendix I).
+//! travels as typed [`crate::transport`] frames through one serialized
+//! chokepoint and is metered exactly off the wire (index bits + allocation
+//! signalling), with separate point-to-point and broadcast downlink
+//! accounting (Appendix I).
 
 use std::sync::Arc;
 
@@ -15,6 +17,10 @@ use crate::mrc::block::{AllocationStrategy, BlockPlan};
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
 use crate::runtime::ParallelRoundEngine;
+use crate::transport::{
+    self, channel, DownlinkFrame, Frame, Leg, PlanFrame, SideInfo, Transport, TransportStats,
+    UplinkFrame, FEDERATOR,
+};
 use crate::util::rng::Xoshiro256;
 
 /// How a round sources Layer-2 local training: exclusively through the
@@ -50,21 +56,66 @@ struct DlJob {
     n_is: usize,
     n_dl: usize,
     theta_clamp: f32,
+    /// The leg this job's frames travel on (shared with the coordinator).
+    transport: Arc<dyn Transport>,
 }
 
 impl DlJob {
-    /// Encode + decode this client's downlink MRC; returns the client's next
-    /// model estimate (clamped) and the exact index bits spent. A pure
-    /// function of the job, callable on any thread in any order — the
-    /// RNG streams are keyed by (seed, round, client, block, direction) and
-    /// the Gumbel selector by the per-(round, client, direction) `sel_seed`.
+    /// One client's downlink leg: the federator encodes every (block,
+    /// sample) MRC index, the plan signalling and the indices travel as
+    /// frames through the transport, and the *client* decodes the delivered
+    /// frames into its next model estimate (clamped). Returns the estimate
+    /// and the exact wire bits spent. A pure function of the job, callable
+    /// on any thread in any order — the RNG streams are keyed by (seed,
+    /// round, client, block, direction), the Gumbel selector by the
+    /// per-(round, client, direction) `sel_seed`, and the transport meter is
+    /// order-independent.
     fn execute(&self) -> (Vec<f32>, u64) {
         let codec = BlockCodec::new(self.n_is);
         let mut sel = Xoshiro256::new(self.sel_seed);
-        let mut est = self.prior.clone();
-        let mut idx_bits = 0u64;
-        for &b in &self.blocks {
+        // -- federator side: encode (selector order: block-major) ----------
+        let mut indices = vec![vec![0u32; self.blocks.len()]; self.n_dl];
+        for (slot, &b) in self.blocks.iter().enumerate() {
             let r = self.plan.block(b);
+            let stream = mrc_stream(
+                self.seed,
+                self.round,
+                self.client as u64,
+                b as u64,
+                Direction::Downlink,
+            );
+            for (ell, row) in indices.iter_mut().enumerate() {
+                let out = codec.encode(
+                    &self.theta[r.clone()],
+                    &self.prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    &mut sel,
+                );
+                row[slot] = out.index;
+            }
+        }
+        // -- the wire: plan signalling, then this client's indices ---------
+        let plan_sent = self.transport.send(
+            Leg::Downlink,
+            Frame::Plan(PlanFrame::from_plan(self.client as u64, self.round, &self.plan)),
+        );
+        let dl_sent = self.transport.send(
+            Leg::Downlink,
+            Frame::Downlink(DownlinkFrame {
+                client: self.client as u64,
+                round: self.round,
+                bits_per_index: codec.index_bits() as u8,
+                blocks: self.blocks.iter().map(|&b| b as u32).collect(),
+                indices,
+            }),
+        );
+        let plan_rx = plan_sent.frame.into_plan().to_block_plan();
+        let dl_rx = dl_sent.frame.into_downlink();
+        // -- client side: decode the delivered frames ----------------------
+        let mut est = self.prior.clone();
+        for (slot, &b) in dl_rx.blocks.iter().enumerate() {
+            let r = plan_rx.block(b as usize);
             let stream = mrc_stream(
                 self.seed,
                 self.round,
@@ -74,24 +125,28 @@ impl DlJob {
             );
             let mut mean = vec![0.0f32; r.len()];
             let mut buf = vec![0.0f32; r.len()];
-            for ell in 0..self.n_dl {
-                let out = codec.encode(
-                    &self.theta[r.clone()],
-                    &self.prior[r.clone()],
-                    &stream,
-                    ell as u64,
-                    &mut sel,
-                );
-                idx_bits += out.bits;
-                codec.decode(&self.prior[r.clone()], &stream, ell as u64, out.index, &mut buf);
+            for (ell, row) in dl_rx.indices.iter().enumerate() {
+                codec.decode(&self.prior[r.clone()], &stream, ell as u64, row[slot], &mut buf);
                 crate::tensor::add_assign(&mut mean, &buf);
             }
             crate::tensor::scale(&mut mean, 1.0 / self.n_dl as f32);
             est[r].copy_from_slice(&mean);
         }
         crate::tensor::clamp(&mut est, self.theta_clamp, 1.0 - self.theta_clamp);
-        (est, idx_bits)
+        (est, plan_sent.bits + dl_sent.bits)
     }
+}
+
+/// One client's completed uplink leg: the delivered wire frames (relayed
+/// verbatim by the GR downlink), the exact wire bits they cost, and the
+/// federator's decoded posterior mean.
+struct UlPayload {
+    client: usize,
+    plan_wire: Frame,
+    ul_wire: Frame,
+    /// Plan signalling + MRC index bits, off the wire.
+    bits: u64,
+    qhat: Vec<f32>,
 }
 
 /// Which BiCompFL variant to run (§3).
@@ -190,6 +245,9 @@ pub struct BiCompFl {
     /// Shards per-client uplink/downlink MRC work; bit-identical for any
     /// shard count (see `runtime::engine`'s determinism contract).
     engine: ParallelRoundEngine,
+    /// The chokepoint every counted bit crosses (`BICOMPFL_TRANSPORT`
+    /// selects loopback or framed; the records are identical either way).
+    transport: Arc<dyn Transport>,
 }
 
 impl BiCompFl {
@@ -204,6 +262,7 @@ impl BiCompFl {
             round: 0,
             part_rng: Xoshiro256::new(cfg.seed ^ 0xAA17),
             engine: ParallelRoundEngine::auto(),
+            transport: transport::from_env(),
             cfg,
         }
     }
@@ -217,6 +276,23 @@ impl BiCompFl {
     pub fn with_engine(mut self, engine: ParallelRoundEngine) -> Self {
         self.engine = engine;
         self
+    }
+
+    /// Replace the transport (e.g. [`crate::transport::FramedLoopback`] to
+    /// run every leg through the serialized wire path; the records are
+    /// bit-identical to loopback — pinned by the determinism suite).
+    pub fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Cumulative traffic metered by this instance's transport.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.transport.stats()
     }
 
     pub fn global_model(&self) -> &[f32] {
@@ -425,20 +501,20 @@ impl BiCompFl {
 
     /// Round stage 3: block planning (stateful — Adaptive-Avg renegotiation —
     /// hence sequenced in participation order on the caller thread) followed
-    /// by the uplink MRC encode+decode sharded across the engine (the L3 hot
-    /// path; results come back in job order by construction). Consumes the
-    /// posteriors and priors into movable jobs, meters the uplink leg into
-    /// `bits`, and returns the decoded posterior means (participation order)
-    /// plus the `(client, plan, index_bits)` relay payloads the GR downlink
-    /// accounts from.
-    #[allow(clippy::type_complexity)]
+    /// by the uplink leg sharded across the engine (the L3 hot path; results
+    /// come back in job order by construction). Each client's plan
+    /// signalling and MRC indices travel as frames through the transport and
+    /// the *federator* decodes the delivered copies. Consumes the posteriors
+    /// and priors into movable jobs, meters the uplink leg into `bits`, and
+    /// returns the decoded posterior means (participation order) plus the
+    /// delivered wire frames the GR downlink relays.
     fn uplink_stage(
         &mut self,
         participating: &[usize],
         posteriors: Vec<Vec<f32>>,
         priors: Vec<Vec<f32>>,
         bits: &mut MaskRoundBits,
-    ) -> (Vec<Vec<f32>>, Vec<(usize, BlockPlan, u64)>) {
+    ) -> (Vec<Vec<f32>>, Vec<UlPayload>) {
         let plans: Vec<BlockPlan> = posteriors
             .iter()
             .zip(&priors)
@@ -472,39 +548,68 @@ impl BiCompFl {
         let n_is = self.cfg.n_is;
         let n_ul = self.cfg.n_ul;
         let round = self.round;
-        let encoded: Vec<(usize, Vec<Vec<u32>>, u64, Vec<f32>)> =
-            self.engine.run(&jobs, |_, j| {
-                let (indices, idx_bits) = Self::encode_vector_at(
-                    n_is,
+        let bpi = BlockCodec::new(n_is).index_bits() as u8;
+        let transport = Arc::clone(&self.transport);
+        let encoded: Vec<UlPayload> = self.engine.run(&jobs, |_, j| {
+            let (indices, _analytic_bits) = Self::encode_vector_at(
+                n_is,
+                round,
+                &j.q,
+                &j.prior,
+                &j.plan,
+                j.seed,
+                j.client as u64,
+                n_ul,
+                Direction::Uplink,
+                j.sel_seed,
+            );
+            let plan_sent = transport.send(
+                Leg::Uplink,
+                Frame::Plan(PlanFrame::from_plan(j.client as u64, round, &j.plan)),
+            );
+            let ul_sent = transport.send(
+                Leg::Uplink,
+                Frame::Uplink(UplinkFrame {
+                    client: j.client as u64,
                     round,
-                    &j.q,
-                    &j.prior,
-                    &j.plan,
-                    j.seed,
-                    j.client as u64,
-                    n_ul,
-                    Direction::Uplink,
-                    j.sel_seed,
-                );
-                let qhat = Self::decode_mean_at(
-                    n_is,
-                    round,
-                    &j.prior,
-                    &j.plan,
-                    j.seed,
-                    j.client as u64,
-                    &indices,
-                    Direction::Uplink,
-                );
-                (j.client, indices, idx_bits, qhat)
-            });
+                    bits_per_index: bpi,
+                    indices,
+                    side: SideInfo::None,
+                }),
+            );
+            let plan_rx = match &plan_sent.frame {
+                Frame::Plan(p) => p.to_block_plan(),
+                f => panic!("uplink leg delivered a {} frame", f.kind_name()),
+            };
+            let indices_rx = match &ul_sent.frame {
+                Frame::Uplink(u) => &u.indices,
+                f => panic!("uplink leg delivered a {} frame", f.kind_name()),
+            };
+            let qhat = Self::decode_mean_at(
+                n_is,
+                round,
+                &j.prior,
+                &plan_rx,
+                j.seed,
+                j.client as u64,
+                indices_rx,
+                Direction::Uplink,
+            );
+            UlPayload {
+                client: j.client,
+                plan_wire: plan_sent.frame,
+                ul_wire: ul_sent.frame,
+                bits: plan_sent.bits + ul_sent.bits,
+                qhat,
+            }
+        });
         let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(encoded.len());
-        let mut ul_payloads: Vec<(usize, BlockPlan, u64)> = Vec::with_capacity(encoded.len());
-        for ((client, _indices, idx_bits, qhat), job) in encoded.into_iter().zip(jobs) {
-            debug_assert_eq!(client, job.client);
-            bits.ul += idx_bits + job.plan.overhead_bits;
-            qhats.push(qhat);
-            ul_payloads.push((client, job.plan, idx_bits));
+        let mut ul_payloads: Vec<UlPayload> = Vec::with_capacity(encoded.len());
+        for (mut p, job) in encoded.into_iter().zip(jobs) {
+            debug_assert_eq!(p.client, job.client);
+            bits.ul += p.bits;
+            qhats.push(std::mem::take(&mut p.qhat));
+            ul_payloads.push(p);
         }
         (qhats, ul_payloads)
     }
@@ -553,17 +658,19 @@ impl BiCompFl {
                 n_is: self.cfg.n_is,
                 n_dl,
                 theta_clamp: self.cfg.theta_clamp,
+                transport: Arc::clone(&self.transport),
             });
         }
         jobs
     }
 
     /// Install executed downlink results: each client's new model estimate
-    /// plus the exact bit metering. Returns the downlink leg's total bits.
+    /// plus the exact wire bits its leg cost (plan signalling included —
+    /// [`DlJob::execute`] meters both frames). Returns the downlink total.
     fn apply_dl_results(&mut self, jobs: &[DlJob], results: Vec<(Vec<f32>, u64)>) -> u64 {
         let mut dl = 0u64;
-        for (job, (est, idx_bits)) in jobs.iter().zip(results) {
-            dl += idx_bits + job.plan.overhead_bits;
+        for (job, (est, leg_bits)) in jobs.iter().zip(results) {
+            dl += leg_bits;
             self.client_theta[job.client] = est;
         }
         dl
@@ -591,18 +698,19 @@ impl BiCompFl {
         // -- downlink ---------------------------------------------------------
         match self.cfg.variant {
             Variant::Gr => {
-                // Relay: client j receives every other client's indices and
-                // reconstructs the identical average (it already knows its
-                // own samples). Per-client DL = Σ_{i≠j} (bits_i).
-                let total_idx_bits: u64 = ul_payloads.iter().map(|p| p.2).sum();
-                let total_overhead: u64 =
-                    ul_payloads.iter().map(|p| p.1.overhead_bits).sum();
+                // Relay: client j receives every other client's plan and
+                // index frames — re-sent verbatim through the transport —
+                // and reconstructs the identical average (it already knows
+                // its own samples, hence n − 1 copies of each payload:
+                // per-client DL = Σ_{i≠j} bits_i). The broadcast channel
+                // carries the concatenation once.
+                let tr = self.transport.as_ref();
                 for p in &ul_payloads {
-                    // Client j already knows its own indices and plan.
-                    bits.dl += (total_idx_bits - p.2) + (total_overhead - p.1.overhead_bits);
+                    for f in [&p.plan_wire, &p.ul_wire] {
+                        bits.dl += channel::fan_out(tr, Leg::Downlink, f, n.saturating_sub(1));
+                        bits.dl_bc += tr.relay(Leg::DownlinkBroadcast, f);
+                    }
                 }
-                // Broadcast: the concatenation goes out once.
-                bits.dl_bc += total_idx_bits + total_overhead;
                 // All parties now hold θ_{t+1} exactly.
                 self.theta = theta_next.clone();
                 for ct in self.client_theta.iter_mut() {
@@ -615,33 +723,49 @@ impl BiCompFl {
                 let prior = self.client_theta[0].clone();
                 let plan = self.plan_for(&theta_next, &prior);
                 let n_dl = self.n_dl();
-                const FED: u64 = u64::MAX; // sentinel party id for the federator
-                let (indices, idx_bits) = Self::encode_vector_at(
+                let (indices, _analytic_bits) = Self::encode_vector_at(
                     self.cfg.n_is,
                     self.round,
                     &theta_next,
                     &prior,
                     &plan,
                     self.cfg.seed,
-                    FED,
+                    FEDERATOR,
                     n_dl,
                     Direction::Downlink,
-                    self.sel_seed(FED, Direction::Downlink),
+                    self.sel_seed(FEDERATOR, Direction::Downlink),
                 );
+                let plan_wire = Frame::Plan(PlanFrame::from_plan(FEDERATOR, self.round, &plan));
+                let dl_wire = Frame::Downlink(DownlinkFrame {
+                    client: FEDERATOR,
+                    round: self.round,
+                    bits_per_index: BlockCodec::new(self.cfg.n_is).index_bits() as u8,
+                    blocks: (0..plan.n_blocks() as u32).collect(),
+                    indices,
+                });
+                // Point-to-point: one copy of both frames per client.
+                for f in [&plan_wire, &dl_wire] {
+                    bits.dl += channel::fan_out(self.transport.as_ref(), Leg::Downlink, f, n);
+                }
+                // Broadcast: one copy total; every client decodes the same
+                // delivered frames via the global randomness.
+                let plan_sent = self.transport.send(Leg::DownlinkBroadcast, plan_wire);
+                let dl_sent = self.transport.send(Leg::DownlinkBroadcast, dl_wire);
+                bits.dl_bc += plan_sent.bits + dl_sent.bits;
+                let plan_rx = plan_sent.frame.into_plan().to_block_plan();
+                let dl_rx = dl_sent.frame.into_downlink();
                 let mut theta_hat = Self::decode_mean_at(
                     self.cfg.n_is,
                     self.round,
                     &prior,
-                    &plan,
+                    &plan_rx,
                     self.cfg.seed,
-                    FED,
-                    &indices,
+                    FEDERATOR,
+                    &dl_rx.indices,
                     Direction::Downlink,
                 );
                 let tc = self.cfg.theta_clamp;
                 crate::tensor::clamp(&mut theta_hat, tc, 1.0 - tc);
-                bits.dl += (idx_bits + plan.overhead_bits) * n as u64;
-                bits.dl_bc += idx_bits + plan.overhead_bits;
                 // Everyone (including the federator's notion of the shared
                 // prior) moves to the *reconstructed* estimate.
                 self.theta = theta_hat.clone();
@@ -681,10 +805,11 @@ impl BiCompFl {
         rounds: usize,
         eval_every: usize,
     ) -> Vec<RoundRecord> {
+        let meter_start = self.transport.stats();
         let pipelined = self.engine.is_parallel() && oracle.sharded().is_some();
-        if pipelined {
+        let out = if pipelined {
             let sh = oracle.sharded().expect("sharded view vanished");
-            return match self.cfg.variant {
+            match self.cfg.variant {
                 // PR-family rounds end in per-client downlink *compute*: the
                 // staged driver takes that leg off the critical path by
                 // fusing it with the next round's local training.
@@ -692,26 +817,36 @@ impl BiCompFl {
                 // GR downlink is relay accounting (no compute): the one-deep
                 // eval-overlap driver already pipelines everything there is.
                 Variant::Gr | Variant::GrReconst => self.run_pipelined(sh, rounds, eval_every),
-            };
-        }
-        let mut out = Vec::with_capacity(rounds);
-        let (mut loss, mut acc) = oracle.eval(&self.theta);
-        for t in 0..rounds {
-            let b = self.round(oracle);
-            if t % eval_every.max(1) == 0 || t + 1 == rounds {
-                let (l, a) = oracle.eval(&self.theta);
-                loss = l;
-                acc = a;
             }
-            out.push(RoundRecord {
-                round: t,
-                loss,
-                acc,
-                ul_bits: b.ul,
-                dl_bits: b.dl,
-                dl_bc_bits: b.dl_bc,
-            });
-        }
+        } else {
+            let mut out = Vec::with_capacity(rounds);
+            let (mut loss, mut acc) = oracle.eval(&self.theta);
+            for t in 0..rounds {
+                let b = self.round(oracle);
+                if t % eval_every.max(1) == 0 || t + 1 == rounds {
+                    let (l, a) = oracle.eval(&self.theta);
+                    loss = l;
+                    acc = a;
+                }
+                out.push(RoundRecord {
+                    round: t,
+                    loss,
+                    acc,
+                    ul_bits: b.ul,
+                    dl_bits: b.dl,
+                    dl_bc_bits: b.dl_bc,
+                });
+            }
+            out
+        };
+        // Every counted bit must have crossed the transport: the meter's
+        // delta over this run has to reproduce the records exactly.
+        transport::debug_check_run_bits(
+            &self.transport.stats().since(&meter_start),
+            out.iter().map(|r| r.ul_bits).sum(),
+            out.iter().map(|r| r.dl_bits).sum(),
+            out.iter().map(|r| r.dl_bc_bits).sum(),
+        );
         out
     }
 

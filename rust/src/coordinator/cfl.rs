@@ -13,6 +13,8 @@
 //! Implements [`CflAlgorithm`] so it appears in the same tables as the
 //! baselines.
 
+use std::sync::Arc;
+
 use super::shared_rand::{mrc_stream, selector_seed, Direction};
 use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits, ShardedGradOracle};
 use crate::compressors::qsgd::{Qs, QsPosterior};
@@ -21,6 +23,7 @@ use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
 use crate::runtime::ParallelRoundEngine;
 use crate::tensor;
+use crate::transport::{self, channel, Frame, Leg, QsSide, SideInfo, Transport, UplinkFrame};
 use crate::util::rng::Xoshiro256;
 
 /// How a round sources gradients: exclusively through the sequential
@@ -77,6 +80,7 @@ pub struct BiCompFlCfl {
     round: u64,
     scratch: Vec<f32>,
     engine: ParallelRoundEngine,
+    transport: Arc<dyn Transport>,
 }
 
 impl BiCompFlCfl {
@@ -86,6 +90,7 @@ impl BiCompFlCfl {
             round: 0,
             scratch: vec![0.0; d],
             engine: ParallelRoundEngine::auto(),
+            transport: transport::from_env(),
             cfg,
         }
     }
@@ -114,10 +119,12 @@ impl BiCompFlCfl {
         let temperature = self.cfg.temperature;
         let quantizer = self.cfg.quantizer;
 
-        // Per-client (reconstructed update, uplink cost incl. side info).
-        // Both arms go through the same quantize_gradient/transport_payload
-        // helpers, so serial and fused rounds cannot drift apart.
-        let results: Vec<(Vec<f32>, u64)> = match &mut grads {
+        // Per-client (reconstructed update, uplink wire cost incl. side
+        // info, delivered frame). Both arms go through the same
+        // quantize_gradient/transport_payload helpers, so serial and fused
+        // rounds cannot drift apart.
+        let transport = Arc::clone(&self.transport);
+        let results: Vec<(Vec<f32>, u64, Frame)> = match &mut grads {
             GradSource::Serial(oracle) => {
                 // -- serial front-end (gradients are oracle-stateful), then
                 //    sharded MRC transport + reconstruction -----------------
@@ -135,7 +142,17 @@ impl BiCompFlCfl {
                     ));
                 }
                 self.engine.run(&jobs, |_, j| {
-                    transport_payload(j, d, round, seed, n_is, n_ul, block_size, &qs)
+                    transport_payload(
+                        j,
+                        d,
+                        round,
+                        seed,
+                        n_is,
+                        n_ul,
+                        block_size,
+                        &qs,
+                        transport.as_ref(),
+                    )
                 })
             }
             GradSource::Sharded(sh) => {
@@ -145,37 +162,50 @@ impl BiCompFlCfl {
                 let clients: Vec<u64> = (0..n as u64).collect();
                 let x_ref = &x_snapshot;
                 let qs_ref = &qs;
+                let transport_ref = &transport;
                 self.engine.run(&clients, |_, &i| {
                     let mut g = vec![0.0f32; d];
                     sh.grad_at(i as usize, x_ref, &mut g);
                     let sel_seed = selector_seed(seed, round, i, Direction::Uplink);
-                    let payload = quantize_gradient(&g, i, quantizer, temperature, qs_ref, sel_seed);
-                    transport_payload(&payload, d, round, seed, n_is, n_ul, block_size, qs_ref)
+                    let payload =
+                        quantize_gradient(&g, i, quantizer, temperature, qs_ref, sel_seed);
+                    transport_payload(
+                        &payload,
+                        d,
+                        round,
+                        seed,
+                        n_is,
+                        n_ul,
+                        block_size,
+                        qs_ref,
+                        transport_ref.as_ref(),
+                    )
                 })
             }
         };
 
-        // -- aggregation + index-relay accounting ---------------------------
+        // -- aggregation + index-relay downlink -----------------------------
         let mut agg = vec![0.0f32; d];
         let mut ul = 0u64;
-        let mut per_client_bits = Vec::with_capacity(n);
-        for (update, cost) in &results {
+        for (update, cost, _) in &results {
             ul += cost;
-            per_client_bits.push(*cost);
             tensor::add_assign(&mut agg, update);
         }
         tensor::axpy(&mut self.x, -self.cfg.server_lr / n as f32, &agg);
         // Downlink: index relay (Algorithm 1 step 7) — client j receives all
-        // other clients' indices (+ side info under Q_s) and reconstructs the
-        // same aggregate via the global randomness.
-        let total: u64 = per_client_bits.iter().sum();
-        let dl: u64 = per_client_bits.iter().map(|&own| total - own).sum();
-        self.round += 1;
-        RoundBits {
-            ul,
-            dl,
-            dl_bc: total,
+        // other clients' frames (indices + side info under Q_s), re-sent
+        // verbatim through the transport (n − 1 copies each: every client
+        // already holds its own), and reconstructs the same aggregate via
+        // the global randomness. The broadcast channel carries the
+        // concatenation once.
+        let mut dl = 0u64;
+        let mut dl_bc = 0u64;
+        for (_, _, frame) in &results {
+            dl += channel::fan_out(transport.as_ref(), Leg::Downlink, frame, n.saturating_sub(1));
+            dl_bc += transport.relay(Leg::DownlinkBroadcast, frame);
         }
+        self.round += 1;
+        RoundBits { ul, dl, dl_bc }
     }
 }
 
@@ -189,7 +219,6 @@ struct ClientPayload {
     post: Option<QsPosterior>,
     /// ±1 update scale under stochastic sign.
     scale: f32,
-    side_bits: u64,
     sel_seed: u64,
 }
 
@@ -217,7 +246,6 @@ fn quantize_gradient(
                 q,
                 post: None,
                 scale,
-                side_bits: 0,
                 sel_seed,
             }
         }
@@ -228,16 +256,23 @@ fn quantize_gradient(
                 q: Vec::new(),
                 post: Some(post),
                 scale: 0.0,
-                side_bits: qs.side_bits(d),
                 sel_seed,
             }
         }
     }
 }
 
-/// MRC-transport one payload and reconstruct the update; returns the update
-/// plus its uplink cost including side information. Pure; the other half of
-/// the shared serial/fused code path.
+/// MRC-transport one payload as a typed wire frame and reconstruct the
+/// update *from the delivered frame* (indices and side information both come
+/// off the wire); returns the update, its exact uplink wire cost, and the
+/// delivered frame for relay metering. Pure apart from the transport's
+/// order-independent meter; the shared serial/fused code path.
+///
+/// The fixed block plan is config both parties know (zero signalling, as
+/// Ber(0.5) priors are), so the uplink frame is the round's entire counted
+/// traffic. The encoder's private Gumbel selector is seeded per (round,
+/// client) via [`selector_seed`], so sharded execution is bit-identical to
+/// serial.
 #[allow(clippy::too_many_arguments)]
 fn transport_payload(
     j: &ClientPayload,
@@ -248,49 +283,19 @@ fn transport_payload(
     n_ul: usize,
     block_size: usize,
     qs: &Qs,
-) -> (Vec<f32>, u64) {
+    transport: &dyn Transport,
+) -> (Vec<f32>, u64, Frame) {
     let q: &[f32] = j.post.as_ref().map_or(&j.q, |p| &p.q);
-    let (bits_mean, idx_bits) =
-        transport_at(q, j.client, round, seed, n_is, n_ul, block_size, j.sel_seed);
-    let update: Vec<f32> = match &j.post {
-        None => bits_mean.iter().map(|&b| j.scale * (2.0 * b - 1.0)).collect(),
-        Some(post) => {
-            let mut u = vec![0.0f32; d];
-            qs.reconstruct(post, &bits_mean, &mut u);
-            u
-        }
-    };
-    (update, idx_bits + j.side_bits)
-}
-
-/// MRC-transport one client's Bernoulli posterior with the Ber(0.5) prior
-/// (free-function form so per-client transports run on engine shards); the
-/// encoder's private Gumbel selector is seeded per (round, client) via
-/// [`selector_seed`], so sharded execution is bit-identical to serial.
-/// Returns (mean decoded bits over n_UL samples, index bits).
-#[allow(clippy::too_many_arguments)]
-fn transport_at(
-    q: &[f32],
-    client: u64,
-    round: u64,
-    seed: u64,
-    n_is: usize,
-    n_ul: usize,
-    block_size: usize,
-    sel_seed: u64,
-) -> (Vec<f32>, u64) {
-    let d = q.len();
     let plan = BlockPlan::fixed(d, block_size);
     let codec = BlockCodec::new(n_is);
     let prior = vec![0.5f32; d];
-    let mut sel = Xoshiro256::new(sel_seed);
-    let mut mean = vec![0.0f32; d];
-    let mut buf = vec![0.0f32; d];
-    let mut bits = 0u64;
-    for ell in 0..n_ul {
-        for b in 0..plan.n_blocks() {
+    let mut sel = Xoshiro256::new(j.sel_seed);
+    // -- client side: encode (selector order: sample-major) ----------------
+    let mut indices = vec![vec![0u32; plan.n_blocks()]; n_ul];
+    for (ell, row) in indices.iter_mut().enumerate() {
+        for (b, slot) in row.iter_mut().enumerate() {
             let r = plan.block(b);
-            let stream = mrc_stream(seed, round, client, b as u64, Direction::Uplink);
+            let stream = mrc_stream(seed, round, j.client, b as u64, Direction::Uplink);
             let out = codec.encode(
                 &q[r.clone()],
                 &prior[r.clone()],
@@ -298,13 +303,62 @@ fn transport_at(
                 ell as u64,
                 &mut sel,
             );
-            bits += out.bits;
-            codec.decode(&prior[r.clone()], &stream, ell as u64, out.index, &mut buf[r.clone()]);
+            *slot = out.index;
+        }
+    }
+    // -- the wire: indices + quantizer side information in one frame -------
+    let side = match &j.post {
+        None => SideInfo::Scale(j.scale),
+        Some(post) => SideInfo::Qs(QsSide {
+            norm: post.norm,
+            signs: post.signs.iter().map(|&s| s >= 0.0).collect(),
+            tau: post.tau.clone(),
+            tau_bits: qs.tau_bits(),
+        }),
+    };
+    let sent = transport.send(
+        Leg::Uplink,
+        Frame::Uplink(UplinkFrame {
+            client: j.client,
+            round,
+            bits_per_index: codec.index_bits() as u8,
+            indices,
+            side,
+        }),
+    );
+    let rx = match &sent.frame {
+        Frame::Uplink(u) => u,
+        f => panic!("CFL uplink delivered a {} frame", f.kind_name()),
+    };
+    // -- federator side: decode the delivered indices into the bit mean ----
+    let mut mean = vec![0.0f32; d];
+    let mut buf = vec![0.0f32; d];
+    for (ell, row) in rx.indices.iter().enumerate() {
+        for (b, &idx) in row.iter().enumerate() {
+            let r = plan.block(b);
+            let stream = mrc_stream(seed, round, j.client, b as u64, Direction::Uplink);
+            codec.decode(&prior[r.clone()], &stream, ell as u64, idx, &mut buf[r.clone()]);
         }
         tensor::add_assign(&mut mean, &buf);
     }
     tensor::scale(&mut mean, 1.0 / n_ul as f32);
-    (mean, bits)
+    // -- reconstruct the update from the *delivered* side information ------
+    let update: Vec<f32> = match &rx.side {
+        SideInfo::Scale(s) => mean.iter().map(|&b| s * (2.0 * b - 1.0)).collect(),
+        SideInfo::Qs(q) => {
+            let post = QsPosterior {
+                norm: q.norm,
+                signs: q.signs.iter().map(|&s| if s { 1.0 } else { -1.0 }).collect(),
+                tau: q.tau.clone(),
+                q: Vec::new(),
+            };
+            let mut u = vec![0.0f32; d];
+            qs.reconstruct(&post, &mean, &mut u);
+            u
+        }
+        SideInfo::None => unreachable!("CFL uplink frames always carry side info"),
+    };
+    (update, sent.bits, sent.frame)
 }
 
 impl CflAlgorithm for BiCompFlCfl {
@@ -325,6 +379,14 @@ impl CflAlgorithm for BiCompFlCfl {
 
     fn set_engine(&mut self, engine: ParallelRoundEngine) {
         self.engine = engine;
+    }
+
+    fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    fn transport(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::clone(&self.transport))
     }
 
     fn round(&mut self, oracle: &mut dyn GradOracle, _rng: &mut Xoshiro256) -> RoundBits {

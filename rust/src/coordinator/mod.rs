@@ -12,8 +12,10 @@
 //! * [`cfl`]         — BiCompFL-GR-CFL (§4/§5): the same machinery applied to
 //!   conventional FL with stochastic SignSGD or the Q_s quantizer; implements
 //!   `CflAlgorithm` so it slots into the baseline tables.
-//! * [`topology`]    — thread-per-client round execution with channels (the
-//!   federator/worker process shape; MRC encoding parallelizes per client).
+//! * [`topology`]    — per-client round execution in the federator/worker
+//!   process shape: uplink frames encoded on engine shards and carried over
+//!   the `crate::transport` chokepoint (MRC encoding parallelizes per
+//!   client; the frames are already the multi-process wire format).
 
 pub mod oracle;
 pub mod shared_rand;

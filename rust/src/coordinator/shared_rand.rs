@@ -54,6 +54,14 @@ pub fn selector_seed(master: u64, round: u64, client: u64, dir: Direction) -> u6
     splitmix64(&mut s)
 }
 
+/// Fan a base selector seed out into one private stream per client — the
+/// derivation the topology layer uses when a single `sel_seed` covers a
+/// whole round of per-client encodes. Lives here (next to [`selector_seed`])
+/// so no call site re-derives the golden-ratio mix by hand.
+pub fn client_selector_seed(sel_seed: u64, client: u64) -> u64 {
+    sel_seed ^ client.wrapping_mul(0x9E37_79B9)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +120,18 @@ mod tests {
             selector_seed(9, 1, 2, Direction::Uplink),
             selector_seed(10, 1, 2, Direction::Uplink)
         );
+    }
+
+    #[test]
+    fn client_selector_seeds_distinct_and_reproducible() {
+        let base = selector_seed(7, 0, 0, Direction::Uplink);
+        let seeds: Vec<u64> = (0..64).map(|c| client_selector_seed(base, c)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 64, "client selector seed collision");
+        assert_eq!(client_selector_seed(base, 9), client_selector_seed(base, 9));
+        assert_ne!(client_selector_seed(base, 9), client_selector_seed(base ^ 1, 9));
     }
 
     #[test]

@@ -1,36 +1,40 @@
-//! Thread-per-client round execution: the federator/worker process shape.
+//! Per-client round execution in the federator/worker process shape.
 //!
 //! The simulation's fidelity lives in the bit accounting and RNG streams;
-//! this module adds the *concurrency* shape of a real deployment: each
-//! client encodes its uplink in its own thread and sends a typed message
-//! over a channel; the federator thread aggregates. Because every MRC stream
-//! is keyed by (round, client, block), parallel execution is bit-identical
-//! to serial execution — asserted by the tests.
+//! this module adds the *concurrency and message* shape of a real
+//! deployment: each client encodes its uplink as a typed
+//! [`crate::transport::UplinkFrame`] on a [`ParallelRoundEngine`] shard and
+//! the frame crosses a [`Transport`] — the same chokepoint every coordinator
+//! meters through — before the federator decodes it. Earlier revisions
+//! spawned one OS thread per client with a private mpsc channel back to the
+//! federator; the persistent engine replaces that spawn-per-round path, and
+//! the channel shape survives as the transport's frame legs (which a future
+//! multi-process topology implements over real sockets).
+//!
+//! Because every MRC stream is keyed by (round, client, block) and each
+//! client's Gumbel selector by [`client_selector_seed`], parallel execution
+//! is bit-identical to serial execution — asserted by the tests.
 //!
 //! This is also where the wall-clock win comes from: MRC candidate-weight
 //! streaming is the L3 hot path and parallelizes embarrassingly per client.
 
-use std::sync::mpsc;
-
-use super::shared_rand::{mrc_stream, Direction};
+use super::shared_rand::{client_selector_seed, mrc_stream, Direction};
 use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
+use crate::runtime::ParallelRoundEngine;
+use crate::transport::{Frame, Leg, SideInfo, Transport, UplinkFrame};
 use crate::util::rng::Xoshiro256;
 
-/// An uplink message from one client: its MRC indices and exact bit cost.
-#[derive(Debug, Clone)]
-pub struct UplinkMsg {
-    pub client: usize,
-    /// indices[sample][block]
-    pub indices: Vec<Vec<u32>>,
-    pub index_bits: u64,
-}
-
-/// Encode `q_i` against `prior` for every client in parallel (one OS thread
-/// per client, mpsc back to the federator) and return messages sorted by
-/// client id. `seeds[i]` is client i's shared-randomness seed.
+/// Encode `q_i` against `prior` for every client on the engine's shards and
+/// carry each message over `transport`'s uplink leg. Returns the frames *as
+/// delivered* (in client order — the engine's determinism contract), so the
+/// caller decodes exactly what crossed the wire. `seeds[i]` is client i's
+/// shared-randomness seed; `sel_seed` fans out into per-client private
+/// selector streams via [`client_selector_seed`].
 #[allow(clippy::too_many_arguments)]
 pub fn parallel_uplink(
+    engine: &ParallelRoundEngine,
+    transport: &dyn Transport,
     qs: &[Vec<f32>],
     prior: &[f32],
     plan: &BlockPlan,
@@ -39,49 +43,43 @@ pub fn parallel_uplink(
     n_is: usize,
     n_ul: usize,
     sel_seed: u64,
-) -> Vec<UplinkMsg> {
-    let (tx, rx) = mpsc::channel::<UplinkMsg>();
-    std::thread::scope(|scope| {
-        for (i, q) in qs.iter().enumerate() {
-            let tx = tx.clone();
-            let prior = &prior[..];
-            let plan = &*plan;
-            let seed = seeds[i];
-            scope.spawn(move || {
-                let codec = BlockCodec::new(n_is);
-                // Private selector randomness per client, derived
-                // deterministically so parallel == serial.
-                let mut sel = Xoshiro256::new(sel_seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
-                let mut indices = vec![vec![0u32; plan.n_blocks()]; n_ul];
-                let mut bits = 0u64;
-                for b in 0..plan.n_blocks() {
-                    let r = plan.block(b);
-                    let stream = mrc_stream(seed, round, i as u64, b as u64, Direction::Uplink);
-                    for (ell, row) in indices.iter_mut().enumerate() {
-                        let out =
-                            codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
-                        row[b] = out.index;
-                        bits += out.bits;
-                    }
-                }
-                tx.send(UplinkMsg {
-                    client: i,
-                    indices,
-                    index_bits: bits,
-                })
-                .expect("federator hung up");
-            });
+) -> Vec<UplinkFrame> {
+    let codec = BlockCodec::new(n_is);
+    let bpi = codec.index_bits() as u8;
+    engine.run(qs, |i, q| {
+        let seed = seeds[i];
+        // Private selector randomness per client, derived deterministically
+        // so parallel == serial.
+        let mut sel = Xoshiro256::new(client_selector_seed(sel_seed, i as u64));
+        let mut indices = vec![vec![0u32; plan.n_blocks()]; n_ul];
+        for b in 0..plan.n_blocks() {
+            let r = plan.block(b);
+            let stream = mrc_stream(seed, round, i as u64, b as u64, Direction::Uplink);
+            for (ell, row) in indices.iter_mut().enumerate() {
+                let out =
+                    codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
+                row[b] = out.index;
+            }
         }
-        drop(tx);
-    });
-    let mut msgs: Vec<UplinkMsg> = rx.into_iter().collect();
-    msgs.sort_by_key(|m| m.client);
-    msgs
+        transport
+            .send(
+                Leg::Uplink,
+                Frame::Uplink(UplinkFrame {
+                    client: i as u64,
+                    round,
+                    bits_per_index: bpi,
+                    indices,
+                    side: SideInfo::None,
+                }),
+            )
+            .frame
+            .into_uplink()
+    })
 }
 
-/// Federator-side decode of one client's message into the sample mean.
+/// Federator-side decode of one delivered frame into the sample mean.
 pub fn decode_uplink(
-    msg: &UplinkMsg,
+    msg: &UplinkFrame,
     prior: &[f32],
     plan: &BlockPlan,
     seed: u64,
@@ -94,7 +92,7 @@ pub fn decode_uplink(
     for (ell, row) in msg.indices.iter().enumerate() {
         for b in 0..plan.n_blocks() {
             let r = plan.block(b);
-            let stream = mrc_stream(seed, round, msg.client as u64, b as u64, Direction::Uplink);
+            let stream = mrc_stream(seed, round, msg.client, b as u64, Direction::Uplink);
             codec.decode(&prior[r.clone()], &stream, ell as u64, row[b], &mut buf[r.clone()]);
         }
         crate::tensor::add_assign(&mut mean, &buf);
@@ -106,6 +104,7 @@ pub fn decode_uplink(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transport::{FramedLoopback, Loopback};
 
     fn setup(n: usize, d: usize) -> (Vec<Vec<f32>>, Vec<f32>, BlockPlan, Vec<u64>) {
         let mut rng = Xoshiro256::new(3);
@@ -121,21 +120,37 @@ mod tests {
     #[test]
     fn parallel_equals_serial_bit_for_bit() {
         let (qs, prior, plan, seeds) = setup(4, 128);
-        let a = parallel_uplink(&qs, &prior, &plan, &seeds, 0, 64, 2, 7);
-        let b = parallel_uplink(&qs, &prior, &plan, &seeds, 0, 64, 2, 7);
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.client, y.client);
-            assert_eq!(x.indices, y.indices);
-            assert_eq!(x.index_bits, y.index_bits);
+        let transport = Loopback::new();
+        let serial = ParallelRoundEngine::serial();
+        let a = parallel_uplink(&serial, &transport, &qs, &prior, &plan, &seeds, 0, 64, 2, 7);
+        for shards in [2usize, 3, 8] {
+            let engine = ParallelRoundEngine::with_shards(shards);
+            let b = parallel_uplink(&engine, &transport, &qs, &prior, &plan, &seeds, 0, 64, 2, 7);
+            assert_eq!(a, b, "shards={shards}");
         }
+    }
+
+    #[test]
+    fn framed_wire_delivers_identical_frames() {
+        let (qs, prior, plan, seeds) = setup(3, 96);
+        let engine = ParallelRoundEngine::with_shards(2);
+        let lo = Loopback::new();
+        let fr = FramedLoopback::new();
+        let a = parallel_uplink(&engine, &lo, &qs, &prior, &plan, &seeds, 2, 64, 1, 5);
+        let b = parallel_uplink(&engine, &fr, &qs, &prior, &plan, &seeds, 2, 64, 1, 5);
+        assert_eq!(a, b, "the serialized path must deliver identical frames");
+        assert_eq!(lo.stats().ul_bits, fr.stats().ul_bits);
+        assert!(fr.stats().wire_bytes > 0);
     }
 
     #[test]
     fn decode_reconstructs_every_client() {
         let (qs, prior, plan, seeds) = setup(3, 96);
-        let msgs = parallel_uplink(&qs, &prior, &plan, &seeds, 5, 64, 1, 9);
+        let engine = ParallelRoundEngine::serial();
+        let transport = Loopback::new();
+        let msgs = parallel_uplink(&engine, &transport, &qs, &prior, &plan, &seeds, 5, 64, 1, 9);
         for m in &msgs {
-            let mean = decode_uplink(&m, &prior, &plan, seeds[m.client], 5, 64);
+            let mean = decode_uplink(m, &prior, &plan, seeds[m.client as usize], 5, 64);
             assert_eq!(mean.len(), 96);
             assert!(mean.iter().all(|&v| (0.0..=1.0).contains(&v)));
         }
@@ -144,9 +159,11 @@ mod tests {
     #[test]
     fn relay_lets_any_party_reconstruct_identically() {
         // Under global randomness, a *client* decoding another client's
-        // message (same seed, same streams) gets the federator's exact bits.
+        // frame (same seed, same streams) gets the federator's exact bits.
         let (qs, prior, plan, seeds) = setup(2, 64);
-        let msgs = parallel_uplink(&qs, &prior, &plan, &seeds, 1, 32, 1, 11);
+        let engine = ParallelRoundEngine::serial();
+        let transport = Loopback::new();
+        let msgs = parallel_uplink(&engine, &transport, &qs, &prior, &plan, &seeds, 1, 32, 1, 11);
         let fed = decode_uplink(&msgs[1], &prior, &plan, seeds[1], 1, 32);
         let client0_view = decode_uplink(&msgs[1], &prior, &plan, seeds[1], 1, 32);
         assert_eq!(fed, client0_view);
@@ -155,9 +172,13 @@ mod tests {
     #[test]
     fn index_bits_scale_with_blocks_and_samples() {
         let (qs, prior, plan, seeds) = setup(1, 128);
-        let m1 = parallel_uplink(&qs, &prior, &plan, &seeds, 0, 256, 1, 1);
-        let m2 = parallel_uplink(&qs, &prior, &plan, &seeds, 0, 256, 3, 1);
-        assert_eq!(m1[0].index_bits, 4 * 8); // 4 blocks x log2(256)
-        assert_eq!(m2[0].index_bits, 3 * 4 * 8);
+        let engine = ParallelRoundEngine::serial();
+        let transport = Loopback::new();
+        let m1 = parallel_uplink(&engine, &transport, &qs, &prior, &plan, &seeds, 0, 256, 1, 1);
+        let m2 = parallel_uplink(&engine, &transport, &qs, &prior, &plan, &seeds, 0, 256, 3, 1);
+        assert_eq!(m1[0].index_bits(), 4 * 8); // 4 blocks x log2(256)
+        assert_eq!(m2[0].index_bits(), 3 * 4 * 8);
+        // The transport metered exactly those bits on the uplink leg.
+        assert_eq!(transport.stats().ul_bits, 4 * 8 + 3 * 4 * 8);
     }
 }

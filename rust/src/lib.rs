@@ -11,6 +11,7 @@ pub mod tensor;
 pub mod data;
 pub mod mrc;
 pub mod compressors;
+pub mod transport;
 pub mod algorithms;
 pub mod coordinator;
 pub mod runtime;

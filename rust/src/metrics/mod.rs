@@ -1,8 +1,12 @@
-//! Results recording: CSV round logs and JSON summaries under `results/`.
+//! Results recording: CSV round logs and JSON summaries under `results/`,
+//! plus wire-level transport reporting.
 //!
 //! Every experiment writes (a) a per-round CSV — one row per (method, round)
 //! with loss/acc/bits — and (b) a summary JSON with the table-level numbers
 //! (max acc, bpp, bpp(BC), UL/DL split) that regenerate the paper's tables.
+//! The bit fields come off the transport chokepoint (`crate::transport`),
+//! and [`render_transport`] / [`transport_json`] surface that meter — frame
+//! counts, per-leg bits, physical wire bytes — next to the tables.
 
 use std::fs;
 use std::io::Write;
@@ -11,6 +15,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::algorithms::runner::{summarize, RoundRecord, RunSummary};
+use crate::transport::TransportStats;
 use crate::util::json::{arr, num, obj, s, Json};
 
 pub struct CsvLog {
@@ -94,6 +99,40 @@ pub fn fmt_bpp(v: f64) -> String {
     format!("{v:.digits$}")
 }
 
+/// Render a transport meter snapshot (or run delta) as a markdown line set:
+/// the wire-level view backing the bit columns of the tables above.
+pub fn render_transport(label: &str, stats: &TransportStats) -> String {
+    let mut out = format!(
+        "### transport [{label}]\n\n\
+         | Frames | UL bits | DL bits | DL bits (BC) | payload bytes | wire bytes |\n\
+         |---|---|---|---|---|---|\n\
+         | {} | {} | {} | {} | {} | {} |\n",
+        stats.frames,
+        stats.ul_bits,
+        stats.dl_bits,
+        stats.dl_bc_bits,
+        stats.payload_bytes,
+        stats.wire_bytes,
+    );
+    if stats.wire_bytes == 0 {
+        out.push_str("\n(loopback transport: bits metered analytically, nothing serialized)\n");
+    }
+    out
+}
+
+/// The JSON form of a transport meter snapshot, for summary records.
+pub fn transport_json(label: &str, stats: &TransportStats) -> Json {
+    obj(vec![
+        ("transport", s(label)),
+        ("frames", num(stats.frames as f64)),
+        ("ul_bits", num(stats.ul_bits as f64)),
+        ("dl_bits", num(stats.dl_bits as f64)),
+        ("dl_bc_bits", num(stats.dl_bc_bits as f64)),
+        ("payload_bytes", num(stats.payload_bytes as f64)),
+        ("wire_bytes", num(stats.wire_bytes as f64)),
+    ])
+}
+
 pub fn write_summary_json(path: &Path, title: &str, rows: &[TableRow]) -> Result<()> {
     if let Some(parent) = path.parent() {
         fs::create_dir_all(parent)?;
@@ -157,6 +196,26 @@ mod tests {
         assert_eq!(fmt_bpp(0.3149), "0.31");
         assert_eq!(fmt_bpp(0.0625), "0.062"); // ties-to-even
         assert_eq!(fmt_bpp(2.28), "2.3");
+    }
+
+    #[test]
+    fn transport_report_renders_and_serializes() {
+        let stats = TransportStats {
+            frames: 12,
+            ul_bits: 640,
+            dl_bits: 1920,
+            dl_bc_bits: 640,
+            wire_bytes: 600,
+            payload_bytes: 400,
+        };
+        let t = render_transport("framed", &stats);
+        assert!(t.contains("| 12 | 640 | 1920 | 640 | 400 | 600 |"));
+        assert!(!t.contains("loopback transport"), "framed is serialized");
+        let lo = render_transport("loopback", &TransportStats::default());
+        assert!(lo.contains("nothing serialized"));
+        let j = transport_json("framed", &stats);
+        assert_eq!(j.req("transport").as_str(), Some("framed"));
+        assert_eq!(j.req("ul_bits").as_f64(), Some(640.0));
     }
 
     #[test]

@@ -1,0 +1,769 @@
+//! Typed federator↔client envelopes and their byte-exact wire codec.
+//!
+//! Four frame kinds cover every counted message in the system:
+//!
+//! * [`PlanFrame`]     — block-allocation signalling (boundary bits).
+//! * [`UplinkFrame`]   — a client's MRC indices (+ quantizer side info).
+//! * [`DownlinkFrame`] — the federator's per-client MRC indices, possibly
+//!   over a block subset (PR-SplitDL's rotating shares).
+//! * [`ModelFrame`]    — baseline payloads: dense f32 vectors, sign bits
+//!   with a scale, or sparse (index, value) pairs (TopK).
+//!
+//! `counted_bits` is the analytic Appendix-I cost of a frame; the wire
+//! payload packs **exactly those bits** (verified by `FramedLoopback` on
+//! every send), with routing/structure metadata in an uncounted header.
+
+use crate::mrc::block::BlockPlan;
+
+use super::wire::{WireReader, WireWriter};
+
+/// Sentinel party id for frames the federator originates (GR-Reconst's
+/// second MRC pass, baseline model broadcasts).
+pub const FEDERATOR: u64 = u64::MAX;
+
+const MAGIC: u16 = 0xB1CF;
+const VERSION: u8 = 1;
+
+const KIND_PLAN: u8 = 1;
+const KIND_UPLINK: u8 = 2;
+const KIND_DOWNLINK: u8 = 3;
+const KIND_MODEL: u8 = 4;
+
+/// ceil(log2(max(d, 2))) — index width for sparse payloads; matches the
+/// TopK/RandK accounting in `compressors::topk`.
+pub fn sparse_index_bits(d: u32) -> u32 {
+    (u32::BITS - d.saturating_sub(1).leading_zeros()).max(1)
+}
+
+/// Quantizer side information riding on an [`UplinkFrame`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SideInfo {
+    None,
+    /// Stochastic-sign update scale. Header metadata: the paper's sign
+    /// front-end accounting counts index bits only, so the scale is carried
+    /// uncounted (as the shared-randomness seeds are).
+    Scale(f32),
+    /// Q_s side information (‖g‖, signs, τ), counted at
+    /// 32 + len·(1 + tau_bits) bits exactly as [`crate::compressors::Qs::side_bits`].
+    Qs(QsSide),
+}
+
+/// The Q_s quantizer's transmitted side information.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QsSide {
+    pub norm: f32,
+    pub signs: Vec<bool>,
+    pub tau: Vec<u32>,
+    pub tau_bits: u8,
+}
+
+impl SideInfo {
+    pub fn counted_bits(&self) -> u64 {
+        match self {
+            SideInfo::None | SideInfo::Scale(_) => 0,
+            SideInfo::Qs(q) => 32 + q.signs.len() as u64 * (1 + q.tau_bits as u64),
+        }
+    }
+}
+
+/// Block-allocation signalling: the receiver must know the block partition
+/// before it can interpret MRC indices. `bounds` mirror
+/// [`BlockPlan::bounds`]; `overhead_bits` is the strategy's negotiated
+/// signalling cost (0 for Fixed — the partition is config, known out of
+/// band — `n_blocks × ceil(log2 b_max)` for Adaptive, one boundary per
+/// renegotiation for Adaptive-Avg).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanFrame {
+    pub client: u64,
+    pub round: u64,
+    pub d: u32,
+    pub bounds: Vec<u32>,
+    pub overhead_bits: u64,
+}
+
+impl PlanFrame {
+    pub fn from_plan(client: u64, round: u64, plan: &BlockPlan) -> Self {
+        Self {
+            client,
+            round,
+            d: *plan.bounds.last().expect("plan has no bounds") as u32,
+            bounds: plan.bounds.iter().map(|&b| b as u32).collect(),
+            overhead_bits: plan.overhead_bits,
+        }
+    }
+
+    pub fn to_block_plan(&self) -> BlockPlan {
+        BlockPlan {
+            bounds: self.bounds.iter().map(|&b| b as usize).collect(),
+            overhead_bits: self.overhead_bits,
+        }
+    }
+}
+
+/// How a plan's counted signalling bits are laid out on the wire.
+enum PlanSignal {
+    /// No negotiated signalling (Fixed, or a held Adaptive-Avg size).
+    None,
+    /// One (size − 1) value per block at `width` bits (Adaptive).
+    PerBlock { width: u32 },
+    /// A single renegotiated (size − 1) at `width` bits (Adaptive-Avg).
+    Single { width: u32 },
+    /// Unrecognized strategy shape: emit `overhead_bits` opaque zero bits so
+    /// the wire cost stays physical even for custom allocators.
+    Opaque,
+}
+
+fn classify_plan(bounds: &[u32], overhead_bits: u64) -> PlanSignal {
+    if overhead_bits == 0 {
+        return PlanSignal::None;
+    }
+    let n_blocks = bounds.len().saturating_sub(1);
+    if n_blocks == 0 {
+        return PlanSignal::Opaque;
+    }
+    if overhead_bits % n_blocks as u64 == 0 {
+        let w = overhead_bits / n_blocks as u64;
+        let fits = bounds
+            .windows(2)
+            .all(|p| ((p[1] - p[0] - 1) as u64) < (1u64 << w.min(63)));
+        if (1..=32).contains(&w) && fits {
+            return PlanSignal::PerBlock { width: w as u32 };
+        }
+    }
+    let size0 = (bounds[1] - bounds[0] - 1) as u64;
+    if overhead_bits <= 64 && (overhead_bits == 64 || size0 < (1u64 << overhead_bits)) {
+        return PlanSignal::Single {
+            width: overhead_bits as u32,
+        };
+    }
+    PlanSignal::Opaque
+}
+
+/// A client's uplink MRC message: `indices[sample][block]`, each index
+/// `bits_per_index` wide, plus optional quantizer side information.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UplinkFrame {
+    pub client: u64,
+    pub round: u64,
+    pub bits_per_index: u8,
+    /// `indices[sample][block]`
+    pub indices: Vec<Vec<u32>>,
+    pub side: SideInfo,
+}
+
+impl UplinkFrame {
+    /// Counted MRC index bits (excludes side information).
+    pub fn index_bits(&self) -> u64 {
+        let n: u64 = self.indices.iter().map(|r| r.len() as u64).sum();
+        n * self.bits_per_index as u64
+    }
+}
+
+/// The federator's downlink MRC message to one client. `blocks` are the
+/// absolute block ids covered — the full range for PR, the client's rotating
+/// 1/n share for PR-SplitDL — and `indices[sample][slot]` aligns with them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DownlinkFrame {
+    pub client: u64,
+    pub round: u64,
+    pub bits_per_index: u8,
+    pub blocks: Vec<u32>,
+    /// `indices[sample][slot]`, slots aligned with `blocks`.
+    pub indices: Vec<Vec<u32>>,
+}
+
+impl DownlinkFrame {
+    pub fn index_bits(&self) -> u64 {
+        let n: u64 = self.indices.iter().map(|r| r.len() as u64).sum();
+        n * self.bits_per_index as u64
+    }
+}
+
+/// A baseline algorithm's payload over either link.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelPayload {
+    /// Full-precision values: 32 bits each.
+    Dense(Vec<f32>),
+    /// One sign bit per entry plus a 32-bit scale (sign compression).
+    Signs { signs: Vec<bool>, scale: f32 },
+    /// Sparse (index, value) pairs over a length-`d` vector:
+    /// `ceil(log2 d) + 32` bits per pair (TopK/RandK).
+    Sparse {
+        d: u32,
+        idx: Vec<u32>,
+        val: Vec<f32>,
+    },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelFrame {
+    pub client: u64,
+    pub round: u64,
+    pub payload: ModelPayload,
+}
+
+impl ModelFrame {
+    /// Materialize the payload as a dense length-`d` vector (the receiver's
+    /// view of the message).
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        match &self.payload {
+            ModelPayload::Dense(v) => {
+                debug_assert_eq!(v.len(), d);
+                v.clone()
+            }
+            ModelPayload::Signs { signs, scale } => {
+                debug_assert_eq!(signs.len(), d);
+                signs
+                    .iter()
+                    .map(|&s| if s { *scale } else { -*scale })
+                    .collect()
+            }
+            ModelPayload::Sparse { idx, val, .. } => {
+                let mut out = vec![0.0f32; d];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// The typed envelope every counted bit travels in.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Plan(PlanFrame),
+    Uplink(UplinkFrame),
+    Downlink(DownlinkFrame),
+    Model(ModelFrame),
+}
+
+impl Frame {
+    /// The analytic Appendix-I bit cost of this frame — what the `Loopback`
+    /// transport meters, and exactly what `FramedLoopback` packs on the wire.
+    pub fn counted_bits(&self) -> u64 {
+        match self {
+            Frame::Plan(p) => p.overhead_bits,
+            Frame::Uplink(u) => u.index_bits() + u.side.counted_bits(),
+            Frame::Downlink(d) => d.index_bits(),
+            Frame::Model(m) => match &m.payload {
+                ModelPayload::Dense(v) => 32 * v.len() as u64,
+                ModelPayload::Signs { signs, .. } => signs.len() as u64 + 32,
+                ModelPayload::Sparse { d, idx, .. } => {
+                    idx.len() as u64 * (32 + sparse_index_bits(*d) as u64)
+                }
+            },
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Plan(_) => "plan",
+            Frame::Uplink(_) => "uplink",
+            Frame::Downlink(_) => "downlink",
+            Frame::Model(_) => "model",
+        }
+    }
+
+    pub fn into_plan(self) -> PlanFrame {
+        match self {
+            Frame::Plan(p) => p,
+            f => panic!("transport delivered a {} frame, expected plan", f.kind_name()),
+        }
+    }
+
+    pub fn into_uplink(self) -> UplinkFrame {
+        match self {
+            Frame::Uplink(u) => u,
+            f => panic!("transport delivered a {} frame, expected uplink", f.kind_name()),
+        }
+    }
+
+    pub fn into_downlink(self) -> DownlinkFrame {
+        match self {
+            Frame::Downlink(d) => d,
+            f => panic!(
+                "transport delivered a {} frame, expected downlink",
+                f.kind_name()
+            ),
+        }
+    }
+
+    pub fn into_model(self) -> ModelFrame {
+        match self {
+            Frame::Model(m) => m,
+            f => panic!("transport delivered a {} frame, expected model", f.kind_name()),
+        }
+    }
+
+    /// Serialize to the byte-exact wire form. Returns `(bytes, payload_bits)`
+    /// where `payload_bits` is the exact counted bit length packed (the
+    /// padding to the trailing byte boundary is not included).
+    pub fn encode(&self) -> (Vec<u8>, u64) {
+        let mut w = WireWriter::new();
+        w.put_u16(MAGIC);
+        w.put_u8(VERSION);
+        let (kind, client, round) = match self {
+            Frame::Plan(p) => (KIND_PLAN, p.client, p.round),
+            Frame::Uplink(u) => (KIND_UPLINK, u.client, u.round),
+            Frame::Downlink(d) => (KIND_DOWNLINK, d.client, d.round),
+            Frame::Model(m) => (KIND_MODEL, m.client, m.round),
+        };
+        w.put_u8(kind);
+        w.put_u64(client);
+        w.put_u64(round);
+        match self {
+            Frame::Plan(p) => {
+                w.put_u32(p.d);
+                w.put_u32(p.bounds.len() as u32);
+                for &b in &p.bounds {
+                    w.put_u32(b);
+                }
+                w.put_u64(p.overhead_bits);
+                w.begin_payload();
+                match classify_plan(&p.bounds, p.overhead_bits) {
+                    PlanSignal::None => {}
+                    PlanSignal::PerBlock { width } => {
+                        for pair in p.bounds.windows(2) {
+                            w.put_bits((pair[1] - pair[0] - 1) as u64, width);
+                        }
+                    }
+                    PlanSignal::Single { width } => {
+                        w.put_bits((p.bounds[1] - p.bounds[0] - 1) as u64, width);
+                    }
+                    PlanSignal::Opaque => {
+                        let mut rem = p.overhead_bits;
+                        while rem > 0 {
+                            let w_now = rem.min(64) as u32;
+                            w.put_bits(0, w_now);
+                            rem -= w_now as u64;
+                        }
+                    }
+                }
+                w.end_payload();
+            }
+            Frame::Uplink(u) => {
+                w.put_u8(u.bits_per_index);
+                w.put_u32(u.indices.len() as u32);
+                w.put_u32(u.indices.first().map_or(0, |r| r.len()) as u32);
+                match &u.side {
+                    SideInfo::None => w.put_u8(0),
+                    SideInfo::Scale(s) => {
+                        w.put_u8(1);
+                        w.put_f32(*s);
+                    }
+                    SideInfo::Qs(q) => {
+                        w.put_u8(2);
+                        w.put_u8(q.tau_bits);
+                        w.put_u32(q.signs.len() as u32);
+                    }
+                }
+                w.begin_payload();
+                for row in &u.indices {
+                    for &idx in row {
+                        w.put_bits(idx as u64, u.bits_per_index as u32);
+                    }
+                }
+                if let SideInfo::Qs(q) = &u.side {
+                    w.put_bits(q.norm.to_bits() as u64, 32);
+                    for &s in &q.signs {
+                        w.put_bits(s as u64, 1);
+                    }
+                    for &t in &q.tau {
+                        w.put_bits(t as u64, q.tau_bits as u32);
+                    }
+                }
+                w.end_payload();
+            }
+            Frame::Downlink(dl) => {
+                w.put_u8(dl.bits_per_index);
+                w.put_u32(dl.indices.len() as u32);
+                w.put_u32(dl.blocks.len() as u32);
+                for &b in &dl.blocks {
+                    w.put_u32(b);
+                }
+                w.begin_payload();
+                for row in &dl.indices {
+                    for &idx in row {
+                        w.put_bits(idx as u64, dl.bits_per_index as u32);
+                    }
+                }
+                w.end_payload();
+            }
+            Frame::Model(m) => {
+                match &m.payload {
+                    ModelPayload::Dense(v) => {
+                        w.put_u8(0);
+                        w.put_u32(v.len() as u32);
+                        w.begin_payload();
+                        for &x in v {
+                            w.put_bits(x.to_bits() as u64, 32);
+                        }
+                    }
+                    ModelPayload::Signs { signs, scale } => {
+                        w.put_u8(1);
+                        w.put_u32(signs.len() as u32);
+                        w.begin_payload();
+                        w.put_bits(scale.to_bits() as u64, 32);
+                        for &s in signs {
+                            w.put_bits(s as u64, 1);
+                        }
+                    }
+                    ModelPayload::Sparse { d, idx, val } => {
+                        w.put_u8(2);
+                        w.put_u32(*d);
+                        w.put_u32(idx.len() as u32);
+                        w.begin_payload();
+                        let ib = sparse_index_bits(*d);
+                        for (&i, &v) in idx.iter().zip(val) {
+                            w.put_bits(i as u64, ib);
+                            w.put_bits(v.to_bits() as u64, 32);
+                        }
+                    }
+                }
+                w.end_payload();
+            }
+        }
+        let bits = w.payload_bits();
+        (w.finish(), bits)
+    }
+
+    /// Deserialize a frame from its wire form.
+    pub fn decode(buf: &[u8]) -> Frame {
+        let mut r = WireReader::new(buf);
+        assert_eq!(r.get_u16(), MAGIC, "bad frame magic");
+        assert_eq!(r.get_u8(), VERSION, "unsupported frame version");
+        let kind = r.get_u8();
+        let client = r.get_u64();
+        let round = r.get_u64();
+        let frame = match kind {
+            KIND_PLAN => {
+                let d = r.get_u32();
+                let n_bounds = r.get_u32() as usize;
+                let bounds: Vec<u32> = (0..n_bounds).map(|_| r.get_u32()).collect();
+                let overhead_bits = r.get_u64();
+                r.begin_payload();
+                match classify_plan(&bounds, overhead_bits) {
+                    PlanSignal::None => {}
+                    PlanSignal::PerBlock { width } => {
+                        for pair in bounds.windows(2) {
+                            let size = r.get_bits(width) + 1;
+                            debug_assert_eq!(size, (pair[1] - pair[0]) as u64);
+                        }
+                    }
+                    PlanSignal::Single { width } => {
+                        let size = r.get_bits(width) + 1;
+                        debug_assert_eq!(size, (bounds[1] - bounds[0]) as u64);
+                    }
+                    PlanSignal::Opaque => {
+                        let mut rem = overhead_bits;
+                        while rem > 0 {
+                            let w_now = rem.min(64) as u32;
+                            r.get_bits(w_now);
+                            rem -= w_now as u64;
+                        }
+                    }
+                }
+                r.end_payload();
+                Frame::Plan(PlanFrame {
+                    client,
+                    round,
+                    d,
+                    bounds,
+                    overhead_bits,
+                })
+            }
+            KIND_UPLINK => {
+                let bits_per_index = r.get_u8();
+                let n_samples = r.get_u32() as usize;
+                let n_blocks = r.get_u32() as usize;
+                let side_kind = r.get_u8();
+                let (scale, tau_bits, side_len) = match side_kind {
+                    0 => (0.0, 0, 0),
+                    1 => (r.get_f32(), 0, 0),
+                    2 => {
+                        let tb = r.get_u8();
+                        let len = r.get_u32() as usize;
+                        (0.0, tb, len)
+                    }
+                    k => panic!("unknown side-info kind {k}"),
+                };
+                r.begin_payload();
+                let indices: Vec<Vec<u32>> = (0..n_samples)
+                    .map(|_| {
+                        (0..n_blocks)
+                            .map(|_| r.get_bits(bits_per_index as u32) as u32)
+                            .collect()
+                    })
+                    .collect();
+                let side = match side_kind {
+                    0 => SideInfo::None,
+                    1 => SideInfo::Scale(scale),
+                    _ => {
+                        let norm = f32::from_bits(r.get_bits(32) as u32);
+                        let signs: Vec<bool> =
+                            (0..side_len).map(|_| r.get_bits(1) == 1).collect();
+                        let tau: Vec<u32> = (0..side_len)
+                            .map(|_| r.get_bits(tau_bits as u32) as u32)
+                            .collect();
+                        SideInfo::Qs(QsSide {
+                            norm,
+                            signs,
+                            tau,
+                            tau_bits,
+                        })
+                    }
+                };
+                r.end_payload();
+                Frame::Uplink(UplinkFrame {
+                    client,
+                    round,
+                    bits_per_index,
+                    indices,
+                    side,
+                })
+            }
+            KIND_DOWNLINK => {
+                let bits_per_index = r.get_u8();
+                let n_samples = r.get_u32() as usize;
+                let n_slots = r.get_u32() as usize;
+                let blocks: Vec<u32> = (0..n_slots).map(|_| r.get_u32()).collect();
+                r.begin_payload();
+                let indices: Vec<Vec<u32>> = (0..n_samples)
+                    .map(|_| {
+                        (0..n_slots)
+                            .map(|_| r.get_bits(bits_per_index as u32) as u32)
+                            .collect()
+                    })
+                    .collect();
+                r.end_payload();
+                Frame::Downlink(DownlinkFrame {
+                    client,
+                    round,
+                    bits_per_index,
+                    blocks,
+                    indices,
+                })
+            }
+            KIND_MODEL => {
+                let payload_kind = r.get_u8();
+                let payload = match payload_kind {
+                    0 => {
+                        let len = r.get_u32() as usize;
+                        r.begin_payload();
+                        let v: Vec<f32> = (0..len)
+                            .map(|_| f32::from_bits(r.get_bits(32) as u32))
+                            .collect();
+                        r.end_payload();
+                        ModelPayload::Dense(v)
+                    }
+                    1 => {
+                        let len = r.get_u32() as usize;
+                        r.begin_payload();
+                        let scale = f32::from_bits(r.get_bits(32) as u32);
+                        let signs: Vec<bool> = (0..len).map(|_| r.get_bits(1) == 1).collect();
+                        r.end_payload();
+                        ModelPayload::Signs { signs, scale }
+                    }
+                    2 => {
+                        let d = r.get_u32();
+                        let k = r.get_u32() as usize;
+                        r.begin_payload();
+                        let ib = sparse_index_bits(d);
+                        let mut idx = Vec::with_capacity(k);
+                        let mut val = Vec::with_capacity(k);
+                        for _ in 0..k {
+                            idx.push(r.get_bits(ib) as u32);
+                            val.push(f32::from_bits(r.get_bits(32) as u32));
+                        }
+                        r.end_payload();
+                        ModelPayload::Sparse { d, idx, val }
+                    }
+                    k => panic!("unknown model payload kind {k}"),
+                };
+                Frame::Model(ModelFrame {
+                    client,
+                    round,
+                    payload,
+                })
+            }
+            k => panic!("unknown frame kind {k}"),
+        };
+        assert_eq!(r.consumed(), buf.len(), "trailing bytes after frame");
+        frame
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256;
+
+    fn roundtrip(f: Frame) {
+        let analytic = f.counted_bits();
+        let (buf, payload_bits) = f.encode();
+        assert_eq!(
+            payload_bits, analytic,
+            "{}: wire payload bits != analytic counted bits",
+            f.kind_name()
+        );
+        // Header + padded payload bound the total byte length.
+        assert!(buf.len() as u64 * 8 >= payload_bits);
+        let back = Frame::decode(&buf);
+        assert_eq!(back, f, "{}: lossy round trip", f.kind_name());
+    }
+
+    #[test]
+    fn plan_frames_round_trip_for_every_strategy_shape() {
+        use crate::mrc::block::AllocationStrategy;
+        // Fixed: zero signalling.
+        let fixed = BlockPlan::fixed(1000, 128);
+        roundtrip(Frame::Plan(PlanFrame::from_plan(3, 7, &fixed)));
+        // Adaptive: per-block boundary signalling.
+        let mut strat = AllocationStrategy::adaptive(256, 4096);
+        let kl: Vec<f64> = (0..2000).map(|i| 0.001 + (i % 97) as f64 * 1e-4).collect();
+        let adaptive = strat.plan(&kl);
+        assert!(adaptive.overhead_bits > 0);
+        roundtrip(Frame::Plan(PlanFrame::from_plan(0, 1, &adaptive)));
+        // Adaptive-Avg: single renegotiated size, then a held (free) plan.
+        let mut avg = AllocationStrategy::adaptive_avg(256, 4096);
+        let flat = vec![0.02f64; 5000];
+        let first = avg.plan(&flat);
+        assert!(first.overhead_bits > 0);
+        roundtrip(Frame::Plan(PlanFrame::from_plan(1, 2, &first)));
+        let drifted = vec![0.021f64; 5000];
+        let held = avg.plan(&drifted);
+        assert_eq!(held.overhead_bits, 0);
+        roundtrip(Frame::Plan(PlanFrame::from_plan(1, 3, &held)));
+    }
+
+    #[test]
+    fn mrc_frames_round_trip_bit_exactly() {
+        run_prop("frame-mrc", 40, |rng, case| {
+            let bpi = 1 + rng.next_below(16) as u8;
+            let n_samples = rng.next_below(4);
+            let n_blocks = 1 + rng.next_below(12);
+            let max = if bpi >= 32 { u32::MAX } else { (1u32 << bpi) - 1 };
+            let indices: Vec<Vec<u32>> = (0..n_samples)
+                .map(|_| {
+                    (0..n_blocks)
+                        .map(|_| (rng.next_u64() as u32) & max)
+                        .collect()
+                })
+                .collect();
+            if case % 2 == 0 {
+                let side = match case % 3 {
+                    0 => SideInfo::None,
+                    1 => SideInfo::Scale(rng.next_f32()),
+                    _ => {
+                        let len = 1 + rng.next_below(20);
+                        let tau_bits = 1 + rng.next_below(8) as u8;
+                        SideInfo::Qs(QsSide {
+                            norm: rng.next_f32(),
+                            signs: (0..len).map(|_| rng.next_u64() & 1 == 1).collect(),
+                            tau: (0..len)
+                                .map(|_| (rng.next_u64() as u32) & ((1 << tau_bits) - 1))
+                                .collect(),
+                            tau_bits,
+                        })
+                    }
+                };
+                roundtrip(Frame::Uplink(UplinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    indices,
+                    side,
+                }));
+            } else {
+                let blocks: Vec<u32> = (0..n_blocks).map(|b| b as u32 * 3).collect();
+                roundtrip(Frame::Downlink(DownlinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    blocks,
+                    indices,
+                }));
+            }
+        });
+    }
+
+    #[test]
+    fn model_frames_round_trip_and_count_like_the_compressors() {
+        let mut rng = Xoshiro256::new(5);
+        let vals: Vec<f32> = (0..37).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let dense = Frame::Model(ModelFrame {
+            client: 1,
+            round: 2,
+            payload: ModelPayload::Dense(vals.clone()),
+        });
+        assert_eq!(dense.counted_bits(), 32 * 37);
+        roundtrip(dense);
+
+        let signs = Frame::Model(ModelFrame {
+            client: 1,
+            round: 2,
+            payload: ModelPayload::Signs {
+                signs: vals.iter().map(|&v| v >= 0.0).collect(),
+                scale: 0.25,
+            },
+        });
+        assert_eq!(signs.counted_bits(), 37 + 32); // sign_compress: d + 32
+        roundtrip(signs);
+
+        let sparse = Frame::Model(ModelFrame {
+            client: 1,
+            round: 2,
+            payload: ModelPayload::Sparse {
+                d: 100,
+                idx: vec![0, 17, 99],
+                val: vec![1.0, -2.5, 0.0],
+            },
+        });
+        assert_eq!(sparse.counted_bits(), 3 * (32 + 7)); // ceil(log2 100) = 7
+        roundtrip(sparse);
+    }
+
+    #[test]
+    fn to_dense_reconstructs_each_payload_kind() {
+        let m = ModelFrame {
+            client: 0,
+            round: 0,
+            payload: ModelPayload::Signs {
+                signs: vec![true, false, true],
+                scale: 0.5,
+            },
+        };
+        assert_eq!(m.to_dense(3), vec![0.5, -0.5, 0.5]);
+        let s = ModelFrame {
+            client: 0,
+            round: 0,
+            payload: ModelPayload::Sparse {
+                d: 4,
+                idx: vec![2],
+                val: vec![7.0],
+            },
+        };
+        assert_eq!(s.to_dense(4), vec![0.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn nan_and_negative_zero_survive_the_wire() {
+        let v = vec![f32::NAN, -0.0, f32::INFINITY, -f32::MIN_POSITIVE];
+        let frame = Frame::Model(ModelFrame {
+            client: 0,
+            round: 0,
+            payload: ModelPayload::Dense(v.clone()),
+        });
+        let (buf, _) = frame.encode();
+        match Frame::decode(&buf).into_model().payload {
+            ModelPayload::Dense(back) => {
+                for (a, b) in v.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("payload kind changed"),
+        }
+    }
+}

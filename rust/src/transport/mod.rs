@@ -1,0 +1,545 @@
+//! The federator↔client transport layer: one serialized chokepoint through
+//! which **every counted bit** in the system travels.
+//!
+//! BiCompFL's claims are about communication cost, so the uplink and
+//! downlink must flow through a place where that cost is *measured on the
+//! wire*, not inferred by side arithmetic. The [`Transport`] trait carries
+//! typed envelopes ([`Frame`]: plan / uplink / downlink / model) over three
+//! legs and reports the exact bit cost of every delivery. Two
+//! implementations ship:
+//!
+//! * [`Loopback`] — the zero-copy in-process path: frames pass through
+//!   untouched and are metered analytically ([`Frame::counted_bits`], the
+//!   Appendix-I formulas). This is the default and preserves the historical
+//!   behavior bit-identically at zero serialization cost.
+//! * [`FramedLoopback`] — every frame is serialized to its byte-exact
+//!   little-endian wire form, deserialized again, and metered from the
+//!   bytes actually written (`payload bits`, with physical `wire/payload`
+//!   byte counts in [`TransportStats`]). Downstream computation consumes
+//!   the *deserialized* frame, so a lossy codec cannot hide: the
+//!   determinism suite pins Loopback and FramedLoopback to bit-identical
+//!   `RoundRecord`s, and a debug assertion checks metered wire bits ==
+//!   analytic counted bits on every send.
+//!
+//! `BICOMPFL_TRANSPORT=framed` routes every coordinator and baseline
+//! through the serialized path (CI runs the full suite that way); unset or
+//! `loopback` selects the zero-copy path. A future multi-process topology
+//! implements [`Transport`] over real sockets without touching any
+//! coordinator: the frames are already the wire format.
+
+pub mod frame;
+pub mod wire;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub use frame::{
+    DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide, SideInfo, UplinkFrame,
+    FEDERATOR,
+};
+
+/// Which link a frame travels on. Point-to-point downlink and broadcast
+/// downlink are metered separately (Appendix I's two downlink conventions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Leg {
+    Uplink,
+    Downlink,
+    DownlinkBroadcast,
+}
+
+/// The receiver's view of one carried frame plus its exact wire cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delivery {
+    pub frame: Frame,
+    pub bits: u64,
+}
+
+/// Cumulative meter snapshot. Counters are process-order-independent sums,
+/// so sharded execution meters deterministically.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frames carried (sends + relays).
+    pub frames: u64,
+    /// Counted bits per leg — the Appendix-I accounting, off the wire.
+    pub ul_bits: u64,
+    pub dl_bits: u64,
+    pub dl_bc_bits: u64,
+    /// Physical bytes serialized (header + padded payload); 0 on `Loopback`.
+    pub wire_bytes: u64,
+    /// Payload bytes serialized (padded counted bits); 0 on `Loopback`.
+    pub payload_bytes: u64,
+}
+
+impl TransportStats {
+    pub fn total_bits(&self) -> u64 {
+        self.ul_bits + self.dl_bits + self.dl_bc_bits
+    }
+
+    /// The traffic between an earlier snapshot and this one.
+    pub fn since(&self, earlier: &TransportStats) -> TransportStats {
+        TransportStats {
+            frames: self.frames - earlier.frames,
+            ul_bits: self.ul_bits - earlier.ul_bits,
+            dl_bits: self.dl_bits - earlier.dl_bits,
+            dl_bc_bits: self.dl_bc_bits - earlier.dl_bc_bits,
+            wire_bytes: self.wire_bytes - earlier.wire_bytes,
+            payload_bytes: self.payload_bytes - earlier.payload_bytes,
+        }
+    }
+}
+
+/// Thread-safe cumulative meter shared by both transport implementations.
+#[derive(Default)]
+struct Meter {
+    frames: AtomicU64,
+    ul_bits: AtomicU64,
+    dl_bits: AtomicU64,
+    dl_bc_bits: AtomicU64,
+    wire_bytes: AtomicU64,
+    payload_bytes: AtomicU64,
+}
+
+impl Meter {
+    fn record(&self, leg: Leg, bits: u64, wire_bytes: u64, payload_bytes: u64) {
+        self.record_many(leg, 1, bits, wire_bytes, payload_bytes);
+    }
+
+    /// Record `copies` identical frames in one pass (per-copy quantities).
+    fn record_many(&self, leg: Leg, copies: u64, bits: u64, wire_bytes: u64, payload_bytes: u64) {
+        self.frames.fetch_add(copies, Ordering::Relaxed);
+        let ctr = match leg {
+            Leg::Uplink => &self.ul_bits,
+            Leg::Downlink => &self.dl_bits,
+            Leg::DownlinkBroadcast => &self.dl_bc_bits,
+        };
+        ctr.fetch_add(bits * copies, Ordering::Relaxed);
+        self.wire_bytes.fetch_add(wire_bytes * copies, Ordering::Relaxed);
+        self.payload_bytes.fetch_add(payload_bytes * copies, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            frames: self.frames.load(Ordering::Relaxed),
+            ul_bits: self.ul_bits.load(Ordering::Relaxed),
+            dl_bits: self.dl_bits.load(Ordering::Relaxed),
+            dl_bc_bits: self.dl_bc_bits.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The chokepoint every counted bit crosses. `send` is called from engine
+/// worker threads (per-client MRC jobs), hence `Send + Sync`; the meter is
+/// atomic and order-independent, so sharding never changes a statistic.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Carry one frame over `leg`. Returns the frame *as the receiver sees
+    /// it* plus the exact counted bit cost of the delivery — callers must
+    /// decode from the returned frame, never from their pre-send copy.
+    fn send(&self, leg: Leg, frame: Frame) -> Delivery;
+
+    /// Meter a retransmission of an already-delivered frame to one more
+    /// recipient (GR's index-relay downlink, baseline model fan-out,
+    /// broadcast legs). Framed transports re-serialize to keep the cost
+    /// physical; the frame contents are already known to be deliverable.
+    fn relay(&self, leg: Leg, frame: &Frame) -> u64;
+
+    /// Meter `copies` identical retransmissions in one call — semantically
+    /// `copies` × [`Transport::relay`], but a framed implementation
+    /// serializes once and multiplies, so relay-heavy rounds (GR's index
+    /// relay fans every payload to n−1 peers) cost O(n) encodes, not O(n²).
+    /// Returns the summed bits.
+    fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64;
+
+    fn stats(&self) -> TransportStats;
+}
+
+/// Zero-copy in-process transport: frames pass through untouched, metered by
+/// the analytic [`Frame::counted_bits`]. The default.
+#[derive(Default)]
+pub struct Loopback {
+    meter: Meter,
+}
+
+impl Loopback {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for Loopback {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn send(&self, leg: Leg, frame: Frame) -> Delivery {
+        let bits = frame.counted_bits();
+        self.meter.record(leg, bits, 0, 0);
+        Delivery { frame, bits }
+    }
+
+    fn relay(&self, leg: Leg, frame: &Frame) -> u64 {
+        self.relay_copies(leg, frame, 1)
+    }
+
+    fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64 {
+        let bits = frame.counted_bits();
+        self.meter.record_many(leg, copies, bits, 0, 0);
+        bits * copies
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.meter.snapshot()
+    }
+}
+
+/// In-process transport that actually serializes every frame to its
+/// byte-exact wire form and hands the receiver the *deserialized* copy.
+/// Metered bits come off the wire (`8 × payload bytes` modulo the final
+/// byte's padding — exactly the packed payload bit count), with a debug
+/// assertion that they equal the analytic accounting.
+#[derive(Default)]
+pub struct FramedLoopback {
+    meter: Meter,
+}
+
+impl FramedLoopback {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for FramedLoopback {
+    fn name(&self) -> &'static str {
+        "framed"
+    }
+
+    fn send(&self, leg: Leg, frame: Frame) -> Delivery {
+        let (buf, payload_bits) = frame.encode();
+        debug_assert_eq!(
+            payload_bits,
+            frame.counted_bits(),
+            "{} frame: wire bits != analytic counted bits",
+            frame.kind_name()
+        );
+        let delivered = Frame::decode(&buf);
+        // Bit-pattern comparison (re-encode and diff the bytes), not frame
+        // PartialEq: NaN payloads round-trip exactly but NaN != NaN would
+        // misreport the lossless codec as lossy.
+        debug_assert_eq!(delivered.encode().0, buf, "lossy wire round trip");
+        let payload_bytes = payload_bits.div_ceil(8);
+        self.meter.record(leg, payload_bits, buf.len() as u64, payload_bytes);
+        Delivery {
+            frame: delivered,
+            bits: payload_bits,
+        }
+    }
+
+    fn relay(&self, leg: Leg, frame: &Frame) -> u64 {
+        self.relay_copies(leg, frame, 1)
+    }
+
+    fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64 {
+        // One serialization covers every copy: the bytes are identical.
+        let (buf, payload_bits) = frame.encode();
+        debug_assert_eq!(
+            payload_bits,
+            frame.counted_bits(),
+            "{} frame: wire bits != analytic counted bits",
+            frame.kind_name()
+        );
+        let payload_bytes = payload_bits.div_ceil(8);
+        self.meter
+            .record_many(leg, copies, payload_bits, buf.len() as u64, payload_bytes);
+        payload_bits * copies
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.meter.snapshot()
+    }
+}
+
+/// Construct the configured transport: `BICOMPFL_TRANSPORT=framed` selects
+/// [`FramedLoopback`], unset/empty/`loopback` selects [`Loopback`]. Each
+/// call returns a fresh instance with its own meter, so concurrent
+/// algorithms never share counters.
+pub fn from_env() -> Arc<dyn Transport> {
+    match std::env::var("BICOMPFL_TRANSPORT").as_deref() {
+        Ok("framed") => Arc::new(FramedLoopback::new()),
+        Ok("") | Ok("loopback") | Err(_) => Arc::new(Loopback::new()),
+        Ok(other) => panic!("BICOMPFL_TRANSPORT={other:?}: expected \"loopback\" or \"framed\""),
+    }
+}
+
+/// Debug-time consistency check between a run's meter delta and the bit
+/// totals its `RoundRecord`s report: uplink and point-to-point downlink must
+/// match exactly, and the broadcast totals must either match or reduce to
+/// the point-to-point convention (variants whose per-client payloads cannot
+/// profit from broadcast send nothing on the broadcast leg and report
+/// `dl_bc == dl`). Catches any counted bit that bypassed the transport.
+pub fn debug_check_run_bits(delta: &TransportStats, ul: u64, dl: u64, dl_bc: u64) {
+    debug_assert_eq!(
+        delta.ul_bits, ul,
+        "uplink bits bypassed the transport: meter {} != records {}",
+        delta.ul_bits, ul
+    );
+    debug_assert_eq!(
+        delta.dl_bits, dl,
+        "downlink bits bypassed the transport: meter {} != records {}",
+        delta.dl_bits, dl
+    );
+    debug_assert!(
+        delta.dl_bc_bits == dl_bc || (delta.dl_bc_bits == 0 && dl_bc == dl),
+        "broadcast bits bypassed the transport: meter {} != records {dl_bc} (dl {dl})",
+        delta.dl_bc_bits
+    );
+    let _ = (ul, dl, dl_bc);
+}
+
+/// Typed helpers that carry baseline compressor payloads as [`ModelFrame`]s
+/// so QSGD/TopK/sign bit counts come off the wire. Each returns the
+/// *receiver-side* dense reconstruction plus the wire bits plus the carried
+/// frame (for fan-out metering via [`Transport::relay`]).
+pub mod channel {
+    use super::*;
+
+    /// Meter `copies` retransmissions of one frame over `leg` — the
+    /// point-to-point fan-out of an identical payload to several clients.
+    /// Pass `n` when nothing was metered yet, `n - 1` when one copy was
+    /// already metered by the send that delivered the frame; the count is
+    /// explicit at the call site so the off-by-one convention lives here,
+    /// not in hand-rolled loops. Returns the summed wire bits.
+    pub fn fan_out(t: &dyn Transport, leg: Leg, frame: &Frame, copies: usize) -> u64 {
+        t.relay_copies(leg, frame, copies as u64)
+    }
+
+    /// Full-precision vector: 32 bits per entry.
+    pub fn dense_over(
+        t: &dyn Transport,
+        leg: Leg,
+        client: u64,
+        round: u64,
+        v: Vec<f32>,
+    ) -> (Vec<f32>, u64, Frame) {
+        let d = v.len();
+        let sent = t.send(
+            leg,
+            Frame::Model(ModelFrame {
+                client,
+                round,
+                payload: ModelPayload::Dense(v),
+            }),
+        );
+        let model = sent.frame.into_model();
+        let out = model.to_dense(d);
+        (out, sent.bits, Frame::Model(model))
+    }
+
+    /// Sign compression: one bit per entry plus the 32-bit mean-magnitude
+    /// scale — the wire form of [`crate::compressors::sign_compress`],
+    /// reconstructing the identical ±scale vector from the delivered frame.
+    pub fn sign_over(
+        t: &dyn Transport,
+        leg: Leg,
+        client: u64,
+        round: u64,
+        g: &[f32],
+    ) -> (Vec<f32>, u64, Frame) {
+        let d = g.len();
+        let scale = (g.iter().map(|x| x.abs() as f64).sum::<f64>() / d.max(1) as f64) as f32;
+        let signs: Vec<bool> = g.iter().map(|&x| x >= 0.0).collect();
+        let sent = t.send(
+            leg,
+            Frame::Model(ModelFrame {
+                client,
+                round,
+                payload: ModelPayload::Signs { signs, scale },
+            }),
+        );
+        let model = sent.frame.into_model();
+        let out = model.to_dense(d);
+        (out, sent.bits, Frame::Model(model))
+    }
+
+    /// TopK sparsification: k (index, value) pairs at ceil(log2 d) + 32 bits
+    /// each — the wire form of [`crate::compressors::TopK`].
+    pub fn topk_over(
+        t: &dyn Transport,
+        leg: Leg,
+        client: u64,
+        round: u64,
+        k: usize,
+        g: &[f32],
+    ) -> (Vec<f32>, u64, Frame) {
+        let d = g.len();
+        let idx = crate::compressors::TopK { k }.select(g);
+        let val: Vec<f32> = idx.iter().map(|&i| g[i as usize]).collect();
+        let sent = t.send(
+            leg,
+            Frame::Model(ModelFrame {
+                client,
+                round,
+                payload: ModelPayload::Sparse {
+                    d: d as u32,
+                    idx,
+                    val,
+                },
+            }),
+        );
+        let model = sent.frame.into_model();
+        let out = model.to_dense(d);
+        (out, sent.bits, Frame::Model(model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::sign_compress;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample_frames() -> Vec<Frame> {
+        let plan = crate::mrc::block::BlockPlan::fixed(96, 32);
+        vec![
+            Frame::Plan(PlanFrame::from_plan(0, 1, &plan)),
+            Frame::Uplink(UplinkFrame {
+                client: 2,
+                round: 1,
+                bits_per_index: 8,
+                indices: vec![vec![1, 255, 7], vec![0, 128, 64]],
+                side: SideInfo::None,
+            }),
+            Frame::Downlink(DownlinkFrame {
+                client: 3,
+                round: 4,
+                bits_per_index: 6,
+                blocks: vec![0, 2],
+                indices: vec![vec![63, 0], vec![5, 9]],
+            }),
+            Frame::Model(ModelFrame {
+                client: 1,
+                round: 0,
+                payload: ModelPayload::Dense(vec![1.0, -2.0, 3.5]),
+            }),
+        ]
+    }
+
+    #[test]
+    fn loopback_and_framed_meter_identically() {
+        let lo = Loopback::new();
+        let fr = FramedLoopback::new();
+        for (i, f) in sample_frames().into_iter().enumerate() {
+            let leg = match i % 3 {
+                0 => Leg::Uplink,
+                1 => Leg::Downlink,
+                _ => Leg::DownlinkBroadcast,
+            };
+            let a = lo.send(leg, f.clone());
+            let b = fr.send(leg, f.clone());
+            assert_eq!(a.bits, b.bits, "frame {i}: metered bits diverged");
+            assert_eq!(a.frame, b.frame, "frame {i}: delivered content diverged");
+            assert_eq!(lo.relay(leg, &f), fr.relay(leg, &f));
+        }
+        let (sl, sf) = (lo.stats(), fr.stats());
+        assert_eq!(sl.frames, sf.frames);
+        assert_eq!(sl.ul_bits, sf.ul_bits);
+        assert_eq!(sl.dl_bits, sf.dl_bits);
+        assert_eq!(sl.dl_bc_bits, sf.dl_bc_bits);
+        assert_eq!(sl.wire_bytes, 0);
+        assert!(sf.wire_bytes > sf.payload_bytes, "headers must cost bytes");
+    }
+
+    #[test]
+    fn framed_payload_bytes_are_exact_for_byte_aligned_frames() {
+        // 8-bit indices (n_IS = 256): the counted payload is byte-aligned,
+        // so payload bytes × 8 must equal the metered bits exactly.
+        let fr = FramedLoopback::new();
+        let sent = fr.send(
+            Leg::Uplink,
+            Frame::Uplink(UplinkFrame {
+                client: 0,
+                round: 0,
+                bits_per_index: 8,
+                indices: vec![vec![9, 200, 31, 4]],
+                side: SideInfo::None,
+            }),
+        );
+        assert_eq!(sent.bits, 32);
+        let s = fr.stats();
+        assert_eq!(s.payload_bytes * 8, s.total_bits());
+    }
+
+    #[test]
+    fn relay_copies_equals_repeated_relays() {
+        for frame in sample_frames() {
+            let one = Loopback::new();
+            let many = Loopback::new();
+            let fr_one = FramedLoopback::new();
+            let fr_many = FramedLoopback::new();
+            let reference: u64 = (0..5).map(|_| one.relay(Leg::Downlink, &frame)).sum();
+            assert_eq!(many.relay_copies(Leg::Downlink, &frame, 5), reference);
+            assert_eq!(one.stats(), many.stats(), "loopback meters diverged");
+            let fr_ref: u64 = (0..5).map(|_| fr_one.relay(Leg::Downlink, &frame)).sum();
+            assert_eq!(fr_many.relay_copies(Leg::Downlink, &frame, 5), fr_ref);
+            assert_eq!(fr_one.stats(), fr_many.stats(), "framed meters diverged");
+            assert_eq!(fr_many.relay_copies(Leg::Uplink, &frame, 0), 0);
+        }
+    }
+
+    #[test]
+    fn stats_since_subtracts() {
+        let t = Loopback::new();
+        let f = &sample_frames()[1];
+        t.relay(Leg::Uplink, f);
+        let snap = t.stats();
+        t.relay(Leg::Uplink, f);
+        t.relay(Leg::Downlink, f);
+        let delta = t.stats().since(&snap);
+        assert_eq!(delta.frames, 2);
+        assert_eq!(delta.ul_bits, f.counted_bits());
+        assert_eq!(delta.dl_bits, f.counted_bits());
+        assert_eq!(delta.dl_bc_bits, 0);
+    }
+
+    #[test]
+    fn sign_over_matches_sign_compress_exactly() {
+        let mut rng = Xoshiro256::new(11);
+        let (lo, fr) = (Loopback::new(), FramedLoopback::new());
+        for t in [&lo as &dyn Transport, &fr as &dyn Transport] {
+            let g: Vec<f32> = (0..129).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let (expect, expect_bits) = sign_compress(&g);
+            let (got, bits, _) = channel::sign_over(t, Leg::Uplink, 0, 0, &g);
+            assert_eq!(got, expect, "{}", t.name());
+            assert_eq!(bits, expect_bits, "{}", t.name());
+        }
+    }
+
+    #[test]
+    fn topk_over_matches_topk_compress_exactly() {
+        use crate::compressors::{Compressor, TopK};
+        let mut rng = Xoshiro256::new(13);
+        let (lo, fr) = (Loopback::new(), FramedLoopback::new());
+        for t in [&lo as &dyn Transport, &fr as &dyn Transport] {
+            let g: Vec<f32> = (0..100).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let (expect, expect_bits) = TopK { k: 25 }.compress(&g, &mut Xoshiro256::new(0));
+            let (got, bits, _) = channel::topk_over(t, Leg::Uplink, 0, 0, 25, &g);
+            assert_eq!(got, expect, "{}", t.name());
+            assert_eq!(bits, expect_bits, "{}", t.name());
+        }
+    }
+
+    #[test]
+    fn dense_over_is_lossless_both_ways() {
+        let v = vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1e30];
+        let (lo, fr) = (Loopback::new(), FramedLoopback::new());
+        for t in [&lo as &dyn Transport, &fr as &dyn Transport] {
+            let (got, bits, _) = channel::dense_over(t, Leg::Downlink, 0, 0, v.clone());
+            assert_eq!(bits, 32 * 4);
+            for (a, b) in v.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", t.name());
+            }
+        }
+    }
+}

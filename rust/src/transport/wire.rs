@@ -1,0 +1,275 @@
+//! Little-endian byte and bit primitives for the frame codec.
+//!
+//! A frame on the wire is a plain-byte *header* (routing and structure
+//! metadata the simulation treats as out-of-band) followed by a bit-packed
+//! *payload* holding exactly the bits the paper's accounting counts: MRC
+//! indices at ceil(log2 n_IS) bits each, allocation signalling, quantizer
+//! side information, sign bits, and 32-bit values. The payload's exact bit
+//! length is declared in the header and the packed bytes are padded to a
+//! byte boundary, so `payload bytes × 8 == counted bits` whenever the
+//! counted content is byte-aligned and never undershoots otherwise.
+//!
+//! Bits are packed LSB-first within bytes; multi-byte header fields are
+//! little-endian. Both choices are fixed by this module — the codec must be
+//! byte-exact across platforms or `FramedLoopback` runs would not be
+//! reproducible.
+
+/// Serializer: header bytes first, then one bit-packed payload section.
+pub struct WireWriter {
+    buf: Vec<u8>,
+    acc: u128,
+    nacc: u32,
+    payload_bits: u64,
+    in_payload: bool,
+}
+
+impl Default for WireWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            acc: 0,
+            nacc: 0,
+            payload_bits: 0,
+            in_payload: false,
+        }
+    }
+
+    fn header_only(&self) {
+        debug_assert!(!self.in_payload, "header write inside the payload section");
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.header_only();
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.header_only();
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.header_only();
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.header_only();
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.header_only();
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Enter the bit-packed payload section (at most one per frame).
+    pub fn begin_payload(&mut self) {
+        self.header_only();
+        self.in_payload = true;
+    }
+
+    /// Append `width` bits of `v` (LSB-first). `width` ≤ 64; `v` must fit.
+    pub fn put_bits(&mut self, v: u64, width: u32) {
+        debug_assert!(self.in_payload, "put_bits outside the payload section");
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || v < (1u64 << width), "{v} overflows {width} bits");
+        self.acc |= (v as u128) << self.nacc;
+        self.nacc += width;
+        self.payload_bits += width as u64;
+        while self.nacc >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nacc -= 8;
+        }
+    }
+
+    /// Close the payload: flush the partial byte (zero-padded).
+    pub fn end_payload(&mut self) {
+        debug_assert!(self.in_payload);
+        if self.nacc > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nacc = 0;
+        }
+        self.in_payload = false;
+    }
+
+    /// Exact payload bits written so far (excludes the byte padding).
+    pub fn payload_bits(&self) -> u64 {
+        self.payload_bits
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        debug_assert!(!self.in_payload, "unterminated payload section");
+        self.buf
+    }
+}
+
+/// Deserializer mirroring [`WireWriter`]'s layout.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u128,
+    nacc: u32,
+    in_payload: bool,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self {
+            buf,
+            pos: 0,
+            acc: 0,
+            nacc: 0,
+            in_payload: false,
+        }
+    }
+
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        debug_assert!(!self.in_payload, "header read inside the payload section");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    pub fn get_u8(&mut self) -> u8 {
+        self.take(1)[0]
+    }
+
+    pub fn get_u16(&mut self) -> u16 {
+        u16::from_le_bytes(self.take(2).try_into().unwrap())
+    }
+
+    pub fn get_u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn get_u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    pub fn get_f32(&mut self) -> f32 {
+        f32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn begin_payload(&mut self) {
+        debug_assert!(!self.in_payload);
+        self.in_payload = true;
+    }
+
+    pub fn get_bits(&mut self, width: u32) -> u64 {
+        debug_assert!(self.in_payload, "get_bits outside the payload section");
+        debug_assert!(width <= 64);
+        while self.nacc < width {
+            self.acc |= (self.buf[self.pos] as u128) << self.nacc;
+            self.pos += 1;
+            self.nacc += 8;
+        }
+        let v = if width == 64 {
+            self.acc as u64
+        } else {
+            (self.acc & ((1u128 << width) - 1)) as u64
+        };
+        self.acc >>= width;
+        self.nacc -= width;
+        v
+    }
+
+    /// Close the payload: discard the padding bits of the trailing byte.
+    pub fn end_payload(&mut self) {
+        debug_assert!(self.in_payload);
+        self.acc = 0;
+        self.nacc = 0;
+        self.in_payload = false;
+    }
+
+    /// Bytes consumed so far (after `end_payload`, includes the padding).
+    pub fn consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn header_fields_round_trip_little_endian() {
+        let mut w = WireWriter::new();
+        w.put_u8(0xAB);
+        w.put_u16(0xB1CF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(0x0123_4567_89AB_CDEF);
+        w.put_f32(-1.5e-3);
+        let buf = w.finish();
+        // Spot-check the endianness contract on the raw bytes.
+        assert_eq!(&buf[..3], &[0xAB, 0xCF, 0xB1]);
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_u8(), 0xAB);
+        assert_eq!(r.get_u16(), 0xB1CF);
+        assert_eq!(r.get_u32(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.get_f32(), -1.5e-3);
+        assert_eq!(r.consumed(), buf.len());
+    }
+
+    #[test]
+    fn bit_packing_round_trips_at_every_width() {
+        run_prop("wire-bits", 60, |rng, _| {
+            let n = 1 + rng.next_below(40);
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let width = 1 + rng.next_below(64) as u32;
+                    let v = if width == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << width) - 1)
+                    };
+                    (v, width)
+                })
+                .collect();
+            let mut w = WireWriter::new();
+            w.put_u8(7); // a header byte before the payload
+            w.begin_payload();
+            for &(v, width) in &items {
+                w.put_bits(v, width);
+            }
+            let expect_bits: u64 = items.iter().map(|&(_, w)| w as u64).sum();
+            assert_eq!(w.payload_bits(), expect_bits);
+            w.end_payload();
+            let buf = w.finish();
+            assert_eq!(buf.len(), 1 + expect_bits.div_ceil(8) as usize);
+            let mut r = WireReader::new(&buf);
+            assert_eq!(r.get_u8(), 7);
+            r.begin_payload();
+            for &(v, width) in &items {
+                assert_eq!(r.get_bits(width), v, "width={width}");
+            }
+            r.end_payload();
+            assert_eq!(r.consumed(), buf.len());
+        });
+    }
+
+    #[test]
+    fn payload_padding_is_zero_and_skipped() {
+        let mut w = WireWriter::new();
+        w.begin_payload();
+        w.put_bits(0b101, 3);
+        w.end_payload();
+        let buf = w.finish();
+        assert_eq!(buf, vec![0b0000_0101]);
+        let mut r = WireReader::new(&buf);
+        r.begin_payload();
+        assert_eq!(r.get_bits(3), 0b101);
+        r.end_payload();
+        assert_eq!(r.consumed(), 1);
+    }
+}

@@ -32,9 +32,10 @@ SCHEMA = "bicompfl-bench-round/v1"
 
 # Engine labels of the two sides of each comparison, as bench_round emits
 # them; "-retry" entries (the authoritative 3x-window re-measurements)
-# override the first pass.
-BASELINE_ENGINES = ("serial", "pooled-seq")
-CONTENDER_ENGINES = ("pooled", "staged")
+# override the first pass. "loopback"/"framed" are the transport comparison:
+# zero-copy vs the byte-exact serialized wire path on identical rounds.
+BASELINE_ENGINES = ("serial", "pooled-seq", "loopback")
+CONTENDER_ENGINES = ("pooled", "staged", "framed")
 
 
 def load_record(path):
