@@ -2,7 +2,8 @@
 //! cost (local train stand-in + MRC both directions + aggregation) per
 //! variant, serial vs pooled, the staged multi-round PR driver vs the
 //! barrier-separated pooled loop, the zero-copy loopback transport vs the
-//! byte-exact framed wire path, plus the parallel-uplink topology speedup.
+//! byte-exact framed wire path and vs the kernel-socketpair path, plus the
+//! parallel-uplink topology speedup.
 //!
 //! Run: `cargo bench --bench bench_round [-- flags]`
 //!
@@ -27,7 +28,7 @@ use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
-use bicompfl::transport::{FramedLoopback, Loopback, Transport};
+use bicompfl::transport::{FramedLoopback, Loopback, SocketTransport, Transport};
 use bicompfl::util::json::{arr, num, obj, s, Json};
 use bicompfl::util::rng::Xoshiro256;
 use bicompfl::util::timer::{bench, BenchStats};
@@ -126,13 +127,14 @@ fn bench_cfl_round(
     })
 }
 
-/// The transport comparison: identical PR rounds where every frame either
-/// passes through zero-copy ([`Loopback`]) or is serialized to its
-/// byte-exact wire form and deserialized again ([`FramedLoopback`]). The
-/// gate tracks the serialization overhead: MRC candidate streaming
-/// dominates the round, so the framed path must stay within noise.
+/// The transport comparisons: identical PR rounds where every frame either
+/// passes through zero-copy ([`Loopback`]), is serialized to its byte-exact
+/// wire form in process ([`FramedLoopback`]), or additionally crosses a real
+/// kernel socketpair ([`SocketTransport`]). The gate tracks the
+/// serialization/syscall overhead: MRC candidate streaming dominates the
+/// round, so both wire paths must stay within noise.
 fn bench_pr_round_transport(
-    framed: bool,
+    kind: &str,
     engine: ParallelRoundEngine,
     d: usize,
     n: usize,
@@ -140,10 +142,11 @@ fn bench_pr_round_transport(
     target: Duration,
 ) -> BenchStats {
     let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
-    let transport: Arc<dyn Transport> = if framed {
-        Arc::new(FramedLoopback::new())
-    } else {
-        Arc::new(Loopback::new())
+    let transport: Arc<dyn Transport> = match kind {
+        "loopback" => Arc::new(Loopback::new()),
+        "framed" => Arc::new(FramedLoopback::new()),
+        "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        k => panic!("unknown transport kind {k:?}"),
     };
     let mut alg = BiCompFl::new(
         d,
@@ -317,12 +320,28 @@ fn main() {
         baseline: Side {
             label: "loopback",
             shards: pooled.shards(),
-            run: Box::new(move |w, t| bench_pr_round_transport(false, pooled, d, n, w, t)),
+            run: Box::new(move |w, t| bench_pr_round_transport("loopback", pooled, d, n, w, t)),
         },
         contender: Side {
             label: "framed",
             shards: pooled.shards(),
-            run: Box::new(move |w, t| bench_pr_round_transport(true, pooled, d, n, w, t)),
+            run: Box::new(move |w, t| bench_pr_round_transport("framed", pooled, d, n, w, t)),
+        },
+    });
+    // The socketpair path: the same bytes additionally cross the kernel (two
+    // syscalls per frame under a mutex), so this case gates the syscall +
+    // contention overhead of the real-descriptor transport.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [socket wire]",
+        baseline: Side {
+            label: "loopback",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("loopback", pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "socket",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("socket", pooled, d, n, w, t)),
         },
     });
 

@@ -164,6 +164,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// The paper's display label for this variant.
     pub fn label(&self) -> &'static str {
         match self {
             Variant::Gr => "BiCompFL-GR",
@@ -174,6 +175,8 @@ impl Variant {
     }
 }
 
+/// Full configuration of a BiCompFL mask-training run (the §3 knobs plus
+/// the appendix options each field documents).
 #[derive(Clone, Debug)]
 pub struct BiCompFlConfig {
     pub variant: Variant,
@@ -230,6 +233,8 @@ pub struct MaskRoundBits {
     pub dl_bc: u64,
 }
 
+/// One BiCompFL training instance: the federator's global model, every
+/// client's model estimate, and the round machinery (engine + transport).
 pub struct BiCompFl {
     pub cfg: BiCompFlConfig,
     d: usize,
@@ -251,6 +256,8 @@ pub struct BiCompFl {
 }
 
 impl BiCompFl {
+    /// Build an instance over `d` parameters and `n_clients` clients, with the
+    /// auto-width engine and the `BICOMPFL_TRANSPORT`-selected transport.
     pub fn new(d: usize, n_clients: usize, cfg: BiCompFlConfig) -> Self {
         let theta = vec![cfg.theta0.clamp(cfg.theta_clamp, 1.0 - cfg.theta_clamp); d];
         Self {
@@ -273,6 +280,7 @@ impl BiCompFl {
         self.engine = engine;
     }
 
+    /// Builder form of [`BiCompFl::set_engine`].
     pub fn with_engine(mut self, engine: ParallelRoundEngine) -> Self {
         self.engine = engine;
         self
@@ -285,6 +293,7 @@ impl BiCompFl {
         self.transport = transport;
     }
 
+    /// Builder form of [`BiCompFl::set_transport`].
     pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
         self.transport = transport;
         self
@@ -295,10 +304,12 @@ impl BiCompFl {
         self.transport.stats()
     }
 
+    /// The federator's current global model θ_t.
     pub fn global_model(&self) -> &[f32] {
         &self.theta
     }
 
+    /// Client `i`'s current model estimate θ̂_i.
     pub fn client_model(&self, i: usize) -> &[f32] {
         &self.client_theta[i]
     }
@@ -320,9 +331,11 @@ impl BiCompFl {
 
     /// MRC-encode `q` against `prior` on all blocks of `plan` (free-function
     /// form so per-client encodes run on worker threads); returns (indices
-    /// per (sample, block), index bits).
+    /// per (sample, block), index bits). Crate-visible so the multi-process
+    /// round loop (`coordinator::distributed`) encodes with the *identical*
+    /// float-op sequence and stays bit-identical to the simulation.
     #[allow(clippy::too_many_arguments)]
-    fn encode_vector_at(
+    pub(crate) fn encode_vector_at(
         n_is: usize,
         round: u64,
         q: &[f32],
@@ -359,8 +372,9 @@ impl BiCompFl {
     }
 
     /// Decode `indices` into the mean of the reconstructed samples.
+    /// Crate-visible for the same reason as [`BiCompFl::encode_vector_at`].
     #[allow(clippy::too_many_arguments)]
-    fn decode_mean_at(
+    pub(crate) fn decode_mean_at(
         n_is: usize,
         round: u64,
         prior: &[f32],
@@ -614,13 +628,21 @@ impl BiCompFl {
         (qhats, ul_payloads)
     }
 
+    /// The aggregation core: θ_{t+1} = clamp(mean q̂). Crate-visible so the
+    /// multi-process round loop (`coordinator::distributed`) aggregates with
+    /// the identical float-op sequence and can never drift from the
+    /// simulation it is pinned against.
+    pub(crate) fn clamped_mean(qhats: &[Vec<f32>], theta_clamp: f32) -> Vec<f32> {
+        let refs: Vec<&[f32]> = qhats.iter().map(|v| v.as_slice()).collect();
+        let mut theta_next = crate::tensor::mean_of(&refs);
+        crate::tensor::clamp(&mut theta_next, theta_clamp, 1.0 - theta_clamp);
+        theta_next
+    }
+
     /// Round stage 4 (federator): average the decoded posteriors into
     /// θ_{t+1} (clamped) and remember them for next round's λ-mixed priors.
     fn aggregate(&mut self, participating: &[usize], qhats: &[Vec<f32>]) -> Vec<f32> {
-        let refs: Vec<&[f32]> = qhats.iter().map(|v| v.as_slice()).collect();
-        let mut theta_next = crate::tensor::mean_of(&refs);
-        let tc = self.cfg.theta_clamp;
-        crate::tensor::clamp(&mut theta_next, tc, 1.0 - tc);
+        let theta_next = Self::clamped_mean(qhats, self.cfg.theta_clamp);
         for (slot, &i) in participating.iter().enumerate() {
             self.prev_qhat[i] = Some(qhats[slot].clone());
         }

@@ -36,6 +36,7 @@ enum GradSource<'a> {
     Sharded(&'a dyn ShardedGradOracle),
 }
 
+/// The uplink quantizer front-end (§4): stochastic sign or Q_s.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Quantizer {
     /// Stochastic sign with temperature K.
@@ -44,6 +45,7 @@ pub enum Quantizer {
     Qs,
 }
 
+/// Configuration of the BiCompFL-GR-CFL track.
 #[derive(Clone, Debug)]
 pub struct CflConfig {
     pub quantizer: Quantizer,
@@ -74,6 +76,8 @@ impl Default for CflConfig {
     }
 }
 
+/// BiCompFL-GR applied to conventional FL: quantized gradients carried by
+/// MRC over global shared randomness, relayed on the downlink.
 pub struct BiCompFlCfl {
     cfg: CflConfig,
     x: Vec<f32>,
@@ -84,6 +88,7 @@ pub struct BiCompFlCfl {
 }
 
 impl BiCompFlCfl {
+    /// Build an instance over `d` parameters with the given configuration.
     pub fn new(d: usize, cfg: CflConfig) -> Self {
         Self {
             x: vec![0.0; d],

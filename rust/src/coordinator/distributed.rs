@@ -1,0 +1,576 @@
+//! The multi-process BiCompFL-GR round loop over Unix-domain sockets.
+//!
+//! Everything else in this crate simulates the federator and its clients in
+//! one process; this module runs them as **separate OS processes** connected
+//! by real sockets (`bicompfl federator` / `bicompfl client` in the CLI).
+//! The wire format is unchanged — the frames of [`crate::transport::frame`]
+//! are length-delimited onto the descriptors by
+//! [`crate::transport::socket::FrameStream`] — and the math is *the* math:
+//! both sides call the same MRC encode/decode helpers as the in-process
+//! coordinator, so a distributed run's `RoundRecord`s are bit-identical to
+//! `BiCompFl::run` on the same configuration (pinned by
+//! `rust/tests/socket_transport.rs`).
+//!
+//! ## Protocol (per round, after the HELLO/ACK handshake)
+//!
+//! 1. every client trains locally, MRC-encodes its posterior against the
+//!    shared model θ_t, and sends its `Plan` + `Uplink` frames;
+//! 2. the federator decodes each delivered uplink into q̂_i, aggregates
+//!    θ_{t+1} = clamp(mean q̂), and — this being GR's index-relay downlink —
+//!    re-sends every client's two frames verbatim to the other n−1 clients;
+//! 3. each client decodes all n uplinks (its own from the copy it kept,
+//!    global shared randomness for the rest) and computes the identical
+//!    θ_{t+1}.
+//!
+//! After the final round the federator sends BYE on every stream. The
+//! federator's per-stream [`LinkMeter`]s must reproduce the `RoundRecord`
+//! bit totals exactly — checked with a hard assertion, the multi-process
+//! form of `transport::debug_check_run_bits`.
+//!
+//! Scope: the GR variant under Fixed allocation (the configuration where
+//! plans cost zero signalling and every party derives them locally). PR's
+//! per-client downlink MRC rides the same frames and the same
+//! [`FrameStream`] API; extending this loop is the "add a backend" exercise
+//! in `docs/ARCHITECTURE.md`.
+
+use std::path::Path;
+
+use super::bicompfl::BiCompFl;
+use super::oracle::{MaskOracle, SyntheticMaskOracle};
+use super::shared_rand::{selector_seed, Direction};
+use crate::algorithms::runner::RoundRecord;
+use crate::mrc::block::BlockPlan;
+use crate::mrc::codec::BlockCodec;
+use crate::mrc::kl;
+use crate::transport::socket::{
+    accept_clients, bind, connect_client, FrameStream, LinkMeter, Result, TransportError,
+};
+use crate::transport::{Frame, PlanFrame, SideInfo, UplinkFrame};
+
+/// The run configuration the federator pushes to every client in its
+/// handshake ACK, so the processes cannot drift apart on a flag. Fixed-width
+/// little-endian encoding; see [`RunSpec::encode`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Model dimension.
+    pub d: u32,
+    /// Number of client processes.
+    pub n: u32,
+    /// Global rounds.
+    pub rounds: u32,
+    /// Importance samples per block (indices cost ⌈log2 n_is⌉ bits).
+    pub n_is: u32,
+    /// Fixed block size.
+    pub block_size: u32,
+    /// Uplink samples per client (n_UL).
+    pub n_ul: u32,
+    /// Local training iterations per round.
+    pub local_iters: u32,
+    /// Evaluation cadence (federator-side; clients never evaluate).
+    pub eval_every: u32,
+    /// The GR shared-randomness seed (one seed, all parties).
+    pub seed: u64,
+    /// Seed of the synthetic Layer-2 oracle every process constructs.
+    pub oracle_seed: u64,
+    /// Local learning rate.
+    pub local_lr: f32,
+    /// Initial Bernoulli parameter θ₀.
+    pub theta0: f32,
+    /// Model-estimate clamp (FedPM-style probability clamping).
+    pub theta_clamp: f32,
+    /// Fraction of synthetic-target entries flipped per client (non-iid-ness).
+    pub heterogeneity: f32,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            d: 256,
+            n: 2,
+            rounds: 2,
+            n_is: 64,
+            block_size: 32,
+            n_ul: 1,
+            local_iters: 3,
+            eval_every: 1,
+            seed: 0xB1C0,
+            oracle_seed: 42,
+            local_lr: 0.1,
+            theta0: 0.5,
+            theta_clamp: 0.05,
+            heterogeneity: 0.1,
+        }
+    }
+}
+
+/// Encoded byte length of a [`RunSpec`].
+const SPEC_BYTES: usize = 8 * 4 + 2 * 8 + 4 * 4;
+
+impl RunSpec {
+    /// Serialize to the fixed-width little-endian ACK body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(SPEC_BYTES);
+        for v in [
+            self.d,
+            self.n,
+            self.rounds,
+            self.n_is,
+            self.block_size,
+            self.n_ul,
+            self.local_iters,
+            self.eval_every,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.oracle_seed.to_le_bytes());
+        for v in [self.local_lr, self.theta0, self.theta_clamp, self.heterogeneity] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        debug_assert_eq!(out.len(), SPEC_BYTES);
+        out
+    }
+
+    /// Parse an ACK body; a wrong length or nonsense values are typed
+    /// handshake errors, not panics.
+    pub fn decode(body: &[u8]) -> Result<Self> {
+        if body.len() != SPEC_BYTES {
+            return Err(TransportError::Handshake(format!(
+                "run-spec body is {} bytes, expected {SPEC_BYTES}",
+                body.len()
+            )));
+        }
+        let u32_at = |i: usize| u32::from_le_bytes(body[i..i + 4].try_into().unwrap());
+        let u64_at = |i: usize| u64::from_le_bytes(body[i..i + 8].try_into().unwrap());
+        let f32_at = |i: usize| f32::from_le_bytes(body[i..i + 4].try_into().unwrap());
+        let spec = Self {
+            d: u32_at(0),
+            n: u32_at(4),
+            rounds: u32_at(8),
+            n_is: u32_at(12),
+            block_size: u32_at(16),
+            n_ul: u32_at(20),
+            local_iters: u32_at(24),
+            eval_every: u32_at(28),
+            seed: u64_at(32),
+            oracle_seed: u64_at(40),
+            local_lr: f32_at(48),
+            theta0: f32_at(52),
+            theta_clamp: f32_at(56),
+            heterogeneity: f32_at(60),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let bad = |why: String| Err(TransportError::Handshake(why));
+        if self.d == 0 || self.n == 0 || self.rounds == 0 {
+            return bad(format!(
+                "degenerate run spec: d={} n={} rounds={}",
+                self.d, self.n, self.rounds
+            ));
+        }
+        if self.n_is < 2 || self.block_size == 0 || self.n_ul == 0 {
+            return bad(format!(
+                "degenerate run spec: n_is={} block_size={} n_ul={}",
+                self.n_is, self.block_size, self.n_ul
+            ));
+        }
+        Ok(())
+    }
+
+    fn initial_theta(&self) -> Vec<f32> {
+        let tc = self.theta_clamp;
+        vec![self.theta0.clamp(tc, 1.0 - tc); self.d as usize]
+    }
+
+    fn oracle(&self) -> SyntheticMaskOracle {
+        SyntheticMaskOracle::new(
+            self.d as usize,
+            self.n as usize,
+            self.oracle_seed,
+            self.heterogeneity,
+        )
+    }
+}
+
+/// A completed federator run: the per-round records plus the aggregate
+/// traffic that physically crossed the client descriptors.
+#[derive(Debug)]
+pub struct FederatorRun {
+    pub records: Vec<RoundRecord>,
+    /// Uplink traffic received, summed over every client stream.
+    pub wire_recv: LinkMeter,
+    /// Downlink (relay) traffic sent, summed over every client stream.
+    pub wire_sent: LinkMeter,
+}
+
+/// MRC-encode one client's posterior into its (plan, uplink) frames — the
+/// distributed form of the simulation's uplink stage, calling the identical
+/// [`BiCompFl::encode_vector_at`].
+fn encode_uplink(
+    spec: &RunSpec,
+    round: u64,
+    client: u64,
+    q: &[f32],
+    theta: &[f32],
+) -> (PlanFrame, UplinkFrame) {
+    let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+    let (indices, _bits) = BiCompFl::encode_vector_at(
+        spec.n_is as usize,
+        round,
+        q,
+        theta,
+        &plan,
+        spec.seed,
+        client,
+        spec.n_ul as usize,
+        Direction::Uplink,
+        selector_seed(spec.seed, round, client, Direction::Uplink),
+    );
+    (
+        PlanFrame::from_plan(client, round, &plan),
+        UplinkFrame {
+            client,
+            round,
+            bits_per_index: BlockCodec::new(spec.n_is as usize).index_bits() as u8,
+            indices,
+            side: SideInfo::None,
+        },
+    )
+}
+
+/// Decode one delivered uplink into the posterior mean q̂ — the identical
+/// [`BiCompFl::decode_mean_at`] every party runs under global randomness.
+fn decode_uplink(spec: &RunSpec, plan: &PlanFrame, ul: &UplinkFrame, theta: &[f32]) -> Vec<f32> {
+    BiCompFl::decode_mean_at(
+        spec.n_is as usize,
+        ul.round,
+        theta,
+        &plan.to_block_plan(),
+        spec.seed,
+        ul.client,
+        &ul.indices,
+        Direction::Uplink,
+    )
+}
+
+/// Aggregate the n posterior means (client-id order) into the next global
+/// model — [`BiCompFl::clamped_mean`], the simulation's own aggregation core.
+fn aggregate(spec: &RunSpec, qhats: &[Vec<f32>]) -> Vec<f32> {
+    BiCompFl::clamped_mean(qhats, spec.theta_clamp)
+}
+
+/// Receive the (plan, uplink) frame pair every uplink leg and every relayed
+/// downlink consists of — one decode shared by both sides of the protocol.
+fn recv_frame_pair(stream: &mut FrameStream) -> Result<(PlanFrame, UplinkFrame, u64)> {
+    let (plan_frame, plan_bits) = stream.recv_frame()?;
+    let (ul_frame, ul_bits) = stream.recv_frame()?;
+    match (plan_frame, ul_frame) {
+        (Frame::Plan(p), Frame::Uplink(u)) => Ok((p, u, plan_bits + ul_bits)),
+        (p, u) => Err(TransportError::Handshake(format!(
+            "expected a plan+uplink frame pair, got {}+{}",
+            p.kind_name(),
+            u.kind_name()
+        ))),
+    }
+}
+
+/// Validate a received (plan, uplink) pair against the run spec. Under
+/// GR × Fixed every party derives the one legal plan and index width
+/// locally, so anything else is a protocol violation to refuse *before*
+/// decoding: `decode_mean_at` slices the model by the plan's bounds and
+/// indexes rows by block, so spec-inconsistent shapes would panic instead
+/// of erroring (and a federator must survive a misbehaving client).
+fn validate_uplink_shape(spec: &RunSpec, plan: &PlanFrame, ul: &UplinkFrame) -> Result<()> {
+    let expect = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+    let got = plan.to_block_plan();
+    if got.bounds != expect.bounds || got.overhead_bits != 0 {
+        return Err(TransportError::Handshake(format!(
+            "client {} sent a plan that is not Fixed(d={}, block_size={})",
+            plan.client, spec.d, spec.block_size
+        )));
+    }
+    let bpi = BlockCodec::new(spec.n_is as usize).index_bits() as u8;
+    if ul.bits_per_index != bpi
+        || ul.indices.len() != spec.n_ul as usize
+        || ul.indices.iter().any(|row| row.len() != expect.n_blocks())
+    {
+        return Err(TransportError::Handshake(format!(
+            "client {} sent a malformed uplink: {} samples at {} bits/index \
+             (expected {} samples x {} blocks at {bpi})",
+            ul.client,
+            ul.indices.len(),
+            ul.bits_per_index,
+            spec.n_ul,
+            expect.n_blocks()
+        )));
+    }
+    Ok(())
+}
+
+/// Receive one client's (plan, uplink) pair and validate its routing fields.
+fn recv_uplink(
+    stream: &mut FrameStream,
+    expect_client: u64,
+    expect_round: u64,
+) -> Result<(PlanFrame, UplinkFrame, u64)> {
+    let (plan, ul, bits) = recv_frame_pair(stream)?;
+    if plan.client != expect_client || ul.client != expect_client || ul.round != expect_round {
+        return Err(TransportError::Handshake(format!(
+            "misrouted uplink: client {}/{} round {} (expected client {expect_client} \
+             round {expect_round})",
+            plan.client, ul.client, ul.round
+        )));
+    }
+    Ok((plan, ul, bits))
+}
+
+/// Run the federator: bind `sock`, accept `spec.n` clients, drive
+/// `spec.rounds` GR rounds, shut the clients down with BYE, and return the
+/// records. Every uplink bit is metered off the receiving descriptor and
+/// every downlink bit off the sending one; the totals must reproduce the
+/// records exactly (hard assertion — the multi-process accounting bar).
+pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
+    spec.validate()?;
+    let n = spec.n as usize;
+    let listener = bind(sock)?;
+    let mut streams = accept_clients(&listener, n, &spec.encode())?;
+    crate::info!("federator: {} clients connected", n);
+
+    let mut oracle = spec.oracle();
+    let mut theta = spec.initial_theta();
+    let mut records = Vec::with_capacity(spec.rounds as usize);
+    let ee = (spec.eval_every as usize).max(1);
+    // Round 0 always evaluates (0 % ee == 0), so no pre-loop evaluation is
+    // needed — NaN can never reach a record.
+    let (mut loss, mut acc) = (f64::NAN, f64::NAN);
+
+    for t in 0..spec.rounds as usize {
+        // -- uplink: each client's plan + indices, off the wire ------------
+        let mut ul_bits = 0u64;
+        let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut relays: Vec<(Frame, Frame)> = Vec::with_capacity(n);
+        for (i, stream) in streams.iter_mut().enumerate() {
+            let (plan, ul, bits) = recv_uplink(stream, i as u64, t as u64)?;
+            // Refuse spec-inconsistent shapes before decoding them — and
+            // before relaying them, so one bad client cannot poison the
+            // honest n-1.
+            validate_uplink_shape(spec, &plan, &ul)?;
+            ul_bits += bits;
+            qhats.push(decode_uplink(spec, &plan, &ul, &theta));
+            relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
+        }
+        theta = aggregate(spec, &qhats);
+
+        // -- GR downlink: relay every payload to the other n-1 clients -----
+        // (point-to-point accounting; the broadcast convention is one copy
+        // of the concatenation, metered analytically as in the simulation).
+        // Each frame is serialized once and the bytes fan out — the codec is
+        // deterministic, so per-destination re-encodes would only burn CPU.
+        let mut dl_bits = 0u64;
+        let mut dl_bc_bits = 0u64;
+        for (i, (plan, uplink)) in relays.iter().enumerate() {
+            for frame in [plan, uplink] {
+                let (bytes, bits) = frame.encode();
+                for (j, stream) in streams.iter_mut().enumerate() {
+                    if j != i {
+                        dl_bits += stream.send_frame_encoded(&bytes, bits)?;
+                    }
+                }
+                dl_bc_bits += bits;
+            }
+        }
+
+        if t % ee == 0 || t + 1 == spec.rounds as usize {
+            let (l, a) = oracle.eval(&theta);
+            loss = l;
+            acc = a;
+        }
+        records.push(RoundRecord {
+            round: t,
+            loss,
+            acc,
+            ul_bits,
+            dl_bits,
+            dl_bc_bits,
+        });
+    }
+
+    // -- graceful shutdown ---------------------------------------------------
+    for stream in streams.iter_mut() {
+        stream.send_bye()?;
+    }
+
+    let mut wire_recv = LinkMeter::default();
+    let mut wire_sent = LinkMeter::default();
+    for stream in &streams {
+        let (r, s) = (stream.received(), stream.sent());
+        wire_recv.frames += r.frames;
+        wire_recv.bits += r.bits;
+        wire_recv.wire_bytes += r.wire_bytes;
+        wire_sent.frames += s.frames;
+        wire_sent.bits += s.bits;
+        wire_sent.wire_bytes += s.wire_bytes;
+    }
+    // The multi-process accounting bar: what the descriptors carried is
+    // exactly what the records report.
+    let ul: u64 = records.iter().map(|r| r.ul_bits).sum();
+    let dl: u64 = records.iter().map(|r| r.dl_bits).sum();
+    assert_eq!(
+        wire_recv.bits, ul,
+        "uplink bits bypassed the sockets: meter {} != records {ul}",
+        wire_recv.bits
+    );
+    assert_eq!(
+        wire_sent.bits, dl,
+        "downlink bits bypassed the sockets: meter {} != records {dl}",
+        wire_sent.bits
+    );
+    let _ = std::fs::remove_file(sock);
+    Ok(FederatorRun {
+        records,
+        wire_recv,
+        wire_sent,
+    })
+}
+
+/// Run one client: connect to `sock` as `id`, handshake (the federator's ACK
+/// carries the full [`RunSpec`]), then train/encode/send uplink and decode
+/// the relayed peers each round, tracking the identical global model the
+/// federator holds. Returns after the federator's BYE.
+pub fn run_client(sock: &Path, id: u64) -> Result<()> {
+    let (mut stream, ack) = connect_client(sock, id)?;
+    let spec = RunSpec::decode(&ack)?;
+    if id >= spec.n as u64 {
+        return Err(TransportError::StaleClient { id });
+    }
+    let n = spec.n as usize;
+    let mut oracle = spec.oracle();
+    let mut theta = spec.initial_theta();
+
+    for t in 0..spec.rounds as usize {
+        // -- local training (Algorithm 3 stand-in), clamped as upstream ----
+        let (mut q, _loss, _acc) = oracle.local_train(
+            id as usize,
+            &theta,
+            spec.local_iters as usize,
+            spec.local_lr,
+            t as u64,
+        );
+        crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+
+        // -- uplink --------------------------------------------------------
+        let (own_plan, own_ul) = encode_uplink(&spec, t as u64, id, &q, &theta);
+        stream.send_frame(&Frame::Plan(own_plan.clone()))?;
+        stream.send_frame(&Frame::Uplink(own_ul.clone()))?;
+
+        // -- downlink: the other n-1 uplinks, relayed verbatim -------------
+        // (A client knows its own samples — the sent copy is byte-identical
+        // to the delivered one, the codec being lossless.)
+        let mut qhats: Vec<Option<Vec<f32>>> = vec![None; n];
+        qhats[id as usize] = Some(decode_uplink(&spec, &own_plan, &own_ul, &theta));
+        for _ in 0..n.saturating_sub(1) {
+            let (plan, ul, _bits) = recv_frame_pair(&mut stream)?;
+            // Decoding derives shared randomness from (round, client), so a
+            // stale or mispaired relay must be a typed error here — decoded
+            // with the wrong stream it would silently corrupt θ instead.
+            if plan.client != ul.client || ul.round != t as u64 {
+                return Err(TransportError::Handshake(format!(
+                    "misrouted relay: plan client {} / uplink client {} round {} \
+                     (expected round {t})",
+                    plan.client, ul.client, ul.round
+                )));
+            }
+            let peer = ul.client as usize;
+            if peer >= n {
+                return Err(TransportError::Handshake(format!(
+                    "relay delivered unknown client {peer} (n={n})"
+                )));
+            }
+            if qhats[peer].is_some() {
+                return Err(TransportError::Handshake(format!(
+                    "relay delivered client {peer} twice"
+                )));
+            }
+            validate_uplink_shape(&spec, &plan, &ul)?;
+            qhats[peer] = Some(decode_uplink(&spec, &plan, &ul, &theta));
+        }
+        // Global randomness: every party lands on the identical θ_{t+1}.
+        let all: Vec<Vec<f32>> = qhats
+            .into_iter()
+            .map(|q| q.expect("every client slot filled above"))
+            .collect();
+        theta = aggregate(&spec, &all);
+    }
+
+    stream.recv_bye()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_spec_round_trips() {
+        let spec = RunSpec {
+            d: 384,
+            n: 3,
+            rounds: 5,
+            n_is: 128,
+            block_size: 48,
+            n_ul: 2,
+            local_iters: 4,
+            eval_every: 2,
+            seed: 0xDEAD_BEEF,
+            oracle_seed: 77,
+            local_lr: 0.25,
+            theta0: 0.5,
+            theta_clamp: 0.05,
+            heterogeneity: 0.2,
+        };
+        let body = spec.encode();
+        assert_eq!(body.len(), SPEC_BYTES);
+        assert_eq!(RunSpec::decode(&body).unwrap(), spec);
+    }
+
+    #[test]
+    fn run_spec_rejects_garbage() {
+        assert!(matches!(
+            RunSpec::decode(&[0u8; 7]),
+            Err(TransportError::Handshake(_))
+        ));
+        let degenerate = RunSpec {
+            n: 0,
+            ..RunSpec::default()
+        };
+        assert!(RunSpec::decode(&degenerate.encode()).is_err());
+    }
+
+    #[test]
+    fn encode_decode_uplink_is_a_fixed_point_of_the_simulation_helpers() {
+        // The distributed helpers call the simulation's own encode/decode;
+        // encoding a posterior and decoding the frames must reproduce the
+        // direct BiCompFl helper outputs bit-for-bit.
+        let spec = RunSpec::default();
+        let theta = spec.initial_theta();
+        let q: Vec<f32> = (0..spec.d as usize)
+            .map(|i| (0.2 + 0.6 * ((i * 37 % 100) as f32 / 100.0)).clamp(0.05, 0.95))
+            .collect();
+        let (plan, ul) = encode_uplink(&spec, 1, 0, &q, &theta);
+        let qhat = decode_uplink(&spec, &plan, &ul, &theta);
+        let direct = BiCompFl::decode_mean_at(
+            spec.n_is as usize,
+            1,
+            &theta,
+            &plan.to_block_plan(),
+            spec.seed,
+            0,
+            &ul.indices,
+            Direction::Uplink,
+        );
+        assert_eq!(qhat, direct);
+        assert_eq!(ul.index_bits(), (spec.d / spec.block_size) as u64 * 6);
+    }
+}

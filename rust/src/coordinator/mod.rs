@@ -16,11 +16,16 @@
 //!   process shape: uplink frames encoded on engine shards and carried over
 //!   the `crate::transport` chokepoint (MRC encoding parallelizes per
 //!   client; the frames are already the multi-process wire format).
+//! * [`distributed`] — the real multi-process round loop: `bicompfl
+//!   federator` and `bicompfl client` processes exchanging the same frames
+//!   over Unix-domain sockets (`transport::socket`), bit-identical to the
+//!   in-process simulation and metered off the descriptors.
 
 pub mod oracle;
 pub mod shared_rand;
 pub mod bicompfl;
 pub mod cfl;
+pub mod distributed;
 pub mod topology;
 
 pub use bicompfl::{BiCompFl, BiCompFlConfig, Variant};

@@ -79,6 +79,8 @@ pub struct SyntheticMaskOracle {
 pub const TARGET_SCALE: f32 = 3.0;
 
 impl SyntheticMaskOracle {
+    /// Build a synthetic oracle: client targets are derived from `seed`, with
+    /// a `heterogeneity` fraction of sign flips per client.
     pub fn new(d: usize, n_clients: usize, seed: u64, heterogeneity: f32) -> Self {
         let mut rng = Xoshiro256::new(seed);
         let global_target: Vec<f32> = (0..d)

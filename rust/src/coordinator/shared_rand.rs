@@ -14,6 +14,8 @@
 
 use crate::util::rng::{splitmix64, Philox};
 
+/// Which link a derived stream serves; part of every stream label, so the
+/// uplink and downlink of the same (round, client, block) never collide.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
     Uplink = 1,

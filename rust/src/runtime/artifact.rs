@@ -34,6 +34,7 @@ pub enum Arg<'a> {
     ScalarF32(f32),
 }
 
+/// One compiled HLO module, ready to execute on the PJRT client.
 pub struct Artifact {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,

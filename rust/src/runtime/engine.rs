@@ -60,6 +60,7 @@ impl ParallelRoundEngine {
         }
     }
 
+    /// The configured shard count (1 = serial).
     pub fn shards(&self) -> usize {
         self.shards
     }

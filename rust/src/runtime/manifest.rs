@@ -8,6 +8,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+/// One parameter tensor's layout inside the flat model vector.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
     pub name: String,
@@ -17,15 +18,18 @@ pub struct ParamSpec {
 }
 
 impl ParamSpec {
+    /// Number of scalar entries in this tensor.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor has zero entries.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 }
 
+/// One architecture's shape contract (dimension, input shape, params).
 #[derive(Clone, Debug)]
 pub struct ArchInfo {
     pub name: String,
@@ -36,6 +40,7 @@ pub struct ArchInfo {
     pub params: Vec<ParamSpec>,
 }
 
+/// One compiled HLO module's file and I/O shapes.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
     pub file: PathBuf,
@@ -43,6 +48,8 @@ pub struct ArtifactInfo {
     pub output_shapes: Vec<Vec<usize>>,
 }
 
+/// The parsed `artifacts/manifest.json`: batch sizes, architectures, and
+/// the compiled-module inventory.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -53,6 +60,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -136,10 +144,12 @@ impl Manifest {
         })
     }
 
+    /// Look up an architecture by name.
     pub fn arch(&self, name: &str) -> Option<&ArchInfo> {
         self.archs.iter().find(|a| a.name == name)
     }
 
+    /// Look up a compiled module by name.
     pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
         self.artifacts
             .iter()

@@ -16,6 +16,8 @@ use crate::data::{Batcher, Dataset};
 use crate::tensor::{logit, sigmoid};
 use crate::util::rng::Xoshiro256;
 
+/// Artifact-backed Layer-2 oracle: mask-training, gradient, and eval steps
+/// executed through PJRT on the real compiled model.
 pub struct RuntimeOracle {
     pub arch: ArchInfo,
     mask_train: Artifact,
@@ -38,6 +40,7 @@ pub struct RuntimeOracle {
 }
 
 impl RuntimeOracle {
+    /// Build an oracle for `arch`, loading and compiling its artifacts.
     pub fn new(
         manifest: &Manifest,
         arch_name: &str,

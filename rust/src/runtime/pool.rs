@@ -175,6 +175,7 @@ impl WorkerPool {
         }
     }
 
+    /// The number of worker threads this pool owns.
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -35,6 +35,181 @@ pub fn sparse_index_bits(d: u32) -> u32 {
     (u32::BITS - d.saturating_sub(1).leading_zeros()).max(1)
 }
 
+/// Bytes of the fixed wire header every frame starts with: magic (2),
+/// version (1), kind (1), client (8), round (8).
+pub const WIRE_HEADER_BYTES: usize = 20;
+
+/// Upper bound on an MRC frame's sample-row count accepted off the wire.
+/// Rows whose entries occupy zero payload bits (PR-SplitDL legitimately
+/// sends downlink frames with an empty block share) are otherwise
+/// unconstrained by the length check, so a hostile count could demand
+/// billions of empty `Vec` headers. Legitimate n_UL/n_DL are in the
+/// hundreds; a million rows is far past any real configuration.
+pub const MAX_WIRE_ROWS: u64 = 1 << 20;
+
+/// Validate the fixed wire header of an *untrusted* buffer — length, magic,
+/// version, and kind — without touching the body. The socket layer runs this
+/// on every received frame so garbage on a descriptor becomes a typed error
+/// instead of a decoder panic; [`Frame::decode`] itself stays a trusted,
+/// panicking codec.
+///
+/// # Examples
+///
+/// ```
+/// use bicompfl::transport::frame::{check_wire_header, ModelFrame, ModelPayload};
+/// use bicompfl::transport::Frame;
+///
+/// let (mut buf, _) = Frame::Model(ModelFrame {
+///     client: 0,
+///     round: 0,
+///     payload: ModelPayload::Dense(vec![1.0]),
+/// })
+/// .encode();
+/// assert!(check_wire_header(&buf).is_ok());
+/// buf[0] ^= 0xFF; // clobber the magic
+/// assert!(check_wire_header(&buf).is_err());
+/// ```
+pub fn check_wire_header(buf: &[u8]) -> Result<(), String> {
+    if buf.len() < WIRE_HEADER_BYTES {
+        return Err(format!(
+            "frame too short: {} bytes < {WIRE_HEADER_BYTES}-byte header",
+            buf.len()
+        ));
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC {
+        return Err(format!("bad frame magic {magic:#06x}, expected {MAGIC:#06x}"));
+    }
+    if buf[2] != VERSION {
+        return Err(format!("unsupported frame version {}", buf[2]));
+    }
+    if !(KIND_PLAN..=KIND_MODEL).contains(&buf[3]) {
+        return Err(format!("unknown frame kind {}", buf[3]));
+    }
+    Ok(())
+}
+
+/// Structural validation of an *untrusted* frame buffer beyond
+/// [`check_wire_header`]: every count/width field is read the way
+/// [`Frame::decode`] will read it, the exact total byte length it implies is
+/// recomputed (in wide arithmetic, so hostile counts cannot overflow), and
+/// the buffer must match it precisely. After this passes, `decode` cannot
+/// index out of bounds, and every allocation it sizes is bounded by a small
+/// multiple of the buffer length plus the constant [`MAX_WIRE_ROWS`] row cap
+/// — a malformed body from a peer becomes a typed error, never a panic or
+/// an attacker-sized allocation. (Semantic inconsistencies inside the
+/// bit-packed payload can still trip `debug_assert`s in debug builds —
+/// those are development tripwires, not reachable memory unsafety.)
+pub fn check_wire_counts(buf: &[u8]) -> Result<(), String> {
+    check_wire_header(buf)?;
+    let len = buf.len() as u128;
+    let short = |what: &str| format!("frame body too short for its {what}");
+    let need = |n: u128| -> Result<(), String> {
+        if len < n {
+            Err(format!("frame body too short: {len} < {n} bytes"))
+        } else {
+            Ok(())
+        }
+    };
+    let u32_at = |i: usize| u32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
+    let total: u128 = match buf[3] {
+        KIND_PLAN => {
+            need(36)?;
+            let n_bounds = u32_at(24) as u128;
+            let overhead_at = 28 + 4 * n_bounds;
+            need(overhead_at + 8)?;
+            let bounds_end = overhead_at as usize;
+            let mut prev: Option<u32> = None;
+            for i in (28..bounds_end).step_by(4) {
+                let b = u32_at(i);
+                if prev.is_some_and(|p| p >= b) {
+                    return Err("plan bounds are not strictly increasing".into());
+                }
+                prev = Some(b);
+            }
+            let overhead =
+                u64::from_le_bytes(buf[bounds_end..bounds_end + 8].try_into().unwrap());
+            overhead_at + 8 + (overhead as u128).div_ceil(8)
+        }
+        KIND_UPLINK => {
+            need(30)?;
+            let bpi = buf[20] as u128;
+            if !(1..=64).contains(&bpi) {
+                return Err(format!("uplink bits_per_index {bpi} outside 1..=64"));
+            }
+            let n_samples = u32_at(21) as u128;
+            let n_blocks = u32_at(25) as u128;
+            if n_samples > MAX_WIRE_ROWS as u128 {
+                return Err(format!("uplink sample count {n_samples} exceeds {MAX_WIRE_ROWS}"));
+            }
+            if n_samples > 0 && n_blocks == 0 {
+                return Err("uplink rows carry no blocks".into());
+            }
+            let (side_hdr, side_bits) = match buf[29] {
+                0 => (0u128, 0u128),
+                1 => (4, 0),
+                2 => {
+                    need(35)?;
+                    let tau_bits = buf[30] as u128;
+                    if tau_bits > 64 {
+                        return Err(format!("uplink tau_bits {tau_bits} > 64"));
+                    }
+                    let side_len = u32_at(31) as u128;
+                    (5, 32 + side_len * (1 + tau_bits))
+                }
+                k => return Err(format!("unknown side-info kind {k}")),
+            };
+            let payload_bits = n_samples * n_blocks * bpi + side_bits;
+            30 + side_hdr + payload_bits.div_ceil(8)
+        }
+        KIND_DOWNLINK => {
+            need(29)?;
+            let bpi = buf[20] as u128;
+            if !(1..=64).contains(&bpi) {
+                return Err(format!("downlink bits_per_index {bpi} outside 1..=64"));
+            }
+            let n_samples = u32_at(21) as u128;
+            let n_slots = u32_at(25) as u128;
+            // n_slots == 0 is legal (an empty PR-SplitDL share), so the row
+            // count needs its own cap — zero-entry rows cost no payload bits.
+            if n_samples > MAX_WIRE_ROWS as u128 {
+                return Err(format!(
+                    "downlink sample count {n_samples} exceeds {MAX_WIRE_ROWS}"
+                ));
+            }
+            let payload_bits = n_samples * n_slots * bpi;
+            29 + 4 * n_slots + payload_bits.div_ceil(8)
+        }
+        KIND_MODEL => {
+            need(21).map_err(|_| short("model payload kind"))?;
+            match buf[20] {
+                0 => {
+                    need(25)?;
+                    25 + u32_at(21) as u128 * 4
+                }
+                1 => {
+                    need(25)?;
+                    25 + (32 + u32_at(21) as u128).div_ceil(8)
+                }
+                2 => {
+                    need(29)?;
+                    let d = u32_at(21);
+                    let k = u32_at(25) as u128;
+                    29 + (k * (sparse_index_bits(d) as u128 + 32)).div_ceil(8)
+                }
+                k => return Err(format!("unknown model payload kind {k}")),
+            }
+        }
+        k => return Err(format!("unknown frame kind {k}")),
+    };
+    if len != total {
+        return Err(format!(
+            "frame length {len} does not match its declared structure ({total} bytes)"
+        ));
+    }
+    Ok(())
+}
+
 /// Quantizer side information riding on an [`UplinkFrame`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum SideInfo {
@@ -58,6 +233,7 @@ pub struct QsSide {
 }
 
 impl SideInfo {
+    /// Counted bits of the side information (Scale rides uncounted).
     pub fn counted_bits(&self) -> u64 {
         match self {
             SideInfo::None | SideInfo::Scale(_) => 0,
@@ -82,6 +258,7 @@ pub struct PlanFrame {
 }
 
 impl PlanFrame {
+    /// Package a [`BlockPlan`] for the wire.
     pub fn from_plan(client: u64, round: u64, plan: &BlockPlan) -> Self {
         Self {
             client,
@@ -92,6 +269,7 @@ impl PlanFrame {
         }
     }
 
+    /// Reconstruct the receiver-side [`BlockPlan`].
     pub fn to_block_plan(&self) -> BlockPlan {
         BlockPlan {
             bounds: self.bounds.iter().map(|&b| b as usize).collect(),
@@ -173,6 +351,7 @@ pub struct DownlinkFrame {
 }
 
 impl DownlinkFrame {
+    /// Counted MRC index bits of this downlink message.
     pub fn index_bits(&self) -> u64 {
         let n: u64 = self.indices.iter().map(|r| r.len() as u64).sum();
         n * self.bits_per_index as u64
@@ -195,6 +374,7 @@ pub enum ModelPayload {
     },
 }
 
+/// A baseline payload envelope over either link.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelFrame {
     pub client: u64,
@@ -256,6 +436,7 @@ impl Frame {
         }
     }
 
+    /// The frame kind as a display string.
     pub fn kind_name(&self) -> &'static str {
         match self {
             Frame::Plan(_) => "plan",
@@ -265,6 +446,7 @@ impl Frame {
         }
     }
 
+    /// Unwrap as a plan frame; panics on a misrouted kind.
     pub fn into_plan(self) -> PlanFrame {
         match self {
             Frame::Plan(p) => p,
@@ -272,6 +454,7 @@ impl Frame {
         }
     }
 
+    /// Unwrap as an uplink frame; panics on a misrouted kind.
     pub fn into_uplink(self) -> UplinkFrame {
         match self {
             Frame::Uplink(u) => u,
@@ -279,6 +462,7 @@ impl Frame {
         }
     }
 
+    /// Unwrap as a downlink frame; panics on a misrouted kind.
     pub fn into_downlink(self) -> DownlinkFrame {
         match self {
             Frame::Downlink(d) => d,
@@ -289,6 +473,7 @@ impl Frame {
         }
     }
 
+    /// Unwrap as a model frame; panics on a misrouted kind.
     pub fn into_model(self) -> ModelFrame {
         match self {
             Frame::Model(m) => m,
@@ -299,6 +484,27 @@ impl Frame {
     /// Serialize to the byte-exact wire form. Returns `(bytes, payload_bits)`
     /// where `payload_bits` is the exact counted bit length packed (the
     /// padding to the trailing byte boundary is not included).
+    ///
+    /// # Examples
+    ///
+    /// The wire form round-trips losslessly and packs exactly the counted
+    /// bits:
+    ///
+    /// ```
+    /// use bicompfl::transport::{Frame, SideInfo, UplinkFrame};
+    ///
+    /// let frame = Frame::Uplink(UplinkFrame {
+    ///     client: 3,
+    ///     round: 7,
+    ///     bits_per_index: 6,
+    ///     indices: vec![vec![5, 63, 0]],
+    ///     side: SideInfo::None,
+    /// });
+    /// let (buf, payload_bits) = frame.encode();
+    /// assert_eq!(payload_bits, frame.counted_bits());
+    /// assert_eq!(payload_bits, 18); // 3 indices × 6 bits
+    /// assert_eq!(Frame::decode(&buf), frame);
+    /// ```
     pub fn encode(&self) -> (Vec<u8>, u64) {
         let mut w = WireWriter::new();
         w.put_u16(MAGIC);
@@ -746,6 +952,56 @@ mod tests {
             },
         };
         assert_eq!(s.to_dense(4), vec![0.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn check_wire_counts_accepts_every_encoded_frame_shape() {
+        let mut rng = Xoshiro256::new(21);
+        let frames = vec![
+            Frame::Plan(PlanFrame::from_plan(1, 2, &BlockPlan::fixed(300, 64))),
+            Frame::Uplink(UplinkFrame {
+                client: 0,
+                round: 0,
+                bits_per_index: 7,
+                indices: vec![vec![3, 99, 0], vec![1, 2, 3]],
+                side: SideInfo::Qs(QsSide {
+                    norm: 1.5,
+                    signs: vec![true, false, true],
+                    tau: vec![1, 0, 3],
+                    tau_bits: 2,
+                }),
+            }),
+            Frame::Downlink(DownlinkFrame {
+                client: 1,
+                round: 3,
+                bits_per_index: 5,
+                blocks: vec![0, 4, 7],
+                indices: vec![vec![1, 2, 3]],
+            }),
+            Frame::Model(ModelFrame {
+                client: 2,
+                round: 1,
+                payload: ModelPayload::Sparse {
+                    d: 1000,
+                    idx: vec![0, 999],
+                    val: vec![rng.next_f32(), rng.next_f32()],
+                },
+            }),
+        ];
+        for f in frames {
+            let (buf, _) = f.encode();
+            assert!(
+                check_wire_counts(&buf).is_ok(),
+                "{}: valid frame refused",
+                f.kind_name()
+            );
+            // Truncating the body must be caught structurally.
+            assert!(check_wire_counts(&buf[..buf.len() - 1]).is_err());
+            // Appending a byte must be caught too (decode would assert).
+            let mut longer = buf.clone();
+            longer.push(0);
+            assert!(check_wire_counts(&longer).is_err());
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! downlink must flow through a place where that cost is *measured on the
 //! wire*, not inferred by side arithmetic. The [`Transport`] trait carries
 //! typed envelopes ([`Frame`]: plan / uplink / downlink / model) over three
-//! legs and reports the exact bit cost of every delivery. Two
+//! legs and reports the exact bit cost of every delivery. Three
 //! implementations ship:
 //!
 //! * [`Loopback`] — the zero-copy in-process path: frames pass through
@@ -20,14 +20,22 @@
 //!   determinism suite pins Loopback and FramedLoopback to bit-identical
 //!   `RoundRecord`s, and a debug assertion checks metered wire bits ==
 //!   analytic counted bits on every send.
+//! * [`socket::SocketTransport`] — the same wire form carried across **real
+//!   file descriptors**: every frame is length-delimited, written to one end
+//!   of a Unix socketpair, read back from the other, and decoded; the meter
+//!   counts the payload bits that physically crossed the kernel. The
+//!   [`socket`] module also holds the blocking peer API ([`FrameStream`],
+//!   handshake, typed [`TransportError`]s) that the multi-process
+//!   `bicompfl federator` / `bicompfl client` topology speaks.
 //!
-//! `BICOMPFL_TRANSPORT=framed` routes every coordinator and baseline
-//! through the serialized path (CI runs the full suite that way); unset or
-//! `loopback` selects the zero-copy path. A future multi-process topology
-//! implements [`Transport`] over real sockets without touching any
-//! coordinator: the frames are already the wire format.
+//! `BICOMPFL_TRANSPORT` selects the path for every coordinator and baseline:
+//! unset or `loopback` is zero-copy, `framed` serializes in process, and
+//! `socket` carries every frame through a kernel socketpair (CI runs the
+//! full suite under `framed` and under `socket`). The determinism suite pins
+//! all three bit-identical.
 
 pub mod frame;
+pub mod socket;
 pub mod wire;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,6 +45,7 @@ pub use frame::{
     DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide, SideInfo, UplinkFrame,
     FEDERATOR,
 };
+pub use socket::{FrameStream, SocketTransport, TransportError};
 
 /// Which link a frame travels on. Point-to-point downlink and broadcast
 /// downlink are metered separately (Appendix I's two downlink conventions).
@@ -71,6 +80,7 @@ pub struct TransportStats {
 }
 
 impl TransportStats {
+    /// All counted bits across the three legs.
     pub fn total_bits(&self) -> u64 {
         self.ul_bits + self.dl_bits + self.dl_bc_bits
     }
@@ -88,9 +98,10 @@ impl TransportStats {
     }
 }
 
-/// Thread-safe cumulative meter shared by both transport implementations.
+/// Thread-safe cumulative meter shared by every transport implementation
+/// (loopback, framed, and the socket-backed paths).
 #[derive(Default)]
-struct Meter {
+pub(crate) struct Meter {
     frames: AtomicU64,
     ul_bits: AtomicU64,
     dl_bits: AtomicU64,
@@ -100,12 +111,19 @@ struct Meter {
 }
 
 impl Meter {
-    fn record(&self, leg: Leg, bits: u64, wire_bytes: u64, payload_bytes: u64) {
+    pub(crate) fn record(&self, leg: Leg, bits: u64, wire_bytes: u64, payload_bytes: u64) {
         self.record_many(leg, 1, bits, wire_bytes, payload_bytes);
     }
 
     /// Record `copies` identical frames in one pass (per-copy quantities).
-    fn record_many(&self, leg: Leg, copies: u64, bits: u64, wire_bytes: u64, payload_bytes: u64) {
+    pub(crate) fn record_many(
+        &self,
+        leg: Leg,
+        copies: u64,
+        bits: u64,
+        wire_bytes: u64,
+        payload_bytes: u64,
+    ) {
         self.frames.fetch_add(copies, Ordering::Relaxed);
         let ctr = match leg {
             Leg::Uplink => &self.ul_bits,
@@ -117,7 +135,7 @@ impl Meter {
         self.payload_bytes.fetch_add(payload_bytes * copies, Ordering::Relaxed);
     }
 
-    fn snapshot(&self) -> TransportStats {
+    pub(crate) fn snapshot(&self) -> TransportStats {
         TransportStats {
             frames: self.frames.load(Ordering::Relaxed),
             ul_bits: self.ul_bits.load(Ordering::Relaxed),
@@ -262,14 +280,21 @@ impl Transport for FramedLoopback {
 }
 
 /// Construct the configured transport: `BICOMPFL_TRANSPORT=framed` selects
-/// [`FramedLoopback`], unset/empty/`loopback` selects [`Loopback`]. Each
-/// call returns a fresh instance with its own meter, so concurrent
-/// algorithms never share counters.
+/// [`FramedLoopback`], `socket` selects a fresh duplex-socketpair
+/// [`SocketTransport`] (every frame crosses real file descriptors), and
+/// unset/empty/`loopback` selects [`Loopback`]. Each call returns a fresh
+/// instance with its own meter, so concurrent algorithms never share
+/// counters.
 pub fn from_env() -> Arc<dyn Transport> {
     match std::env::var("BICOMPFL_TRANSPORT").as_deref() {
         Ok("framed") => Arc::new(FramedLoopback::new()),
+        Ok("socket") => Arc::new(
+            SocketTransport::duplex().expect("BICOMPFL_TRANSPORT=socket: socketpair failed"),
+        ),
         Ok("") | Ok("loopback") | Err(_) => Arc::new(Loopback::new()),
-        Ok(other) => panic!("BICOMPFL_TRANSPORT={other:?}: expected \"loopback\" or \"framed\""),
+        Ok(other) => panic!(
+            "BICOMPFL_TRANSPORT={other:?}: expected \"loopback\", \"framed\", or \"socket\""
+        ),
     }
 }
 

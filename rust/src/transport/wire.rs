@@ -13,6 +13,32 @@
 //! little-endian. Both choices are fixed by this module — the codec must be
 //! byte-exact across platforms or `FramedLoopback` runs would not be
 //! reproducible.
+//!
+//! # Examples
+//!
+//! A header write, a bit-packed payload, and the mirrored read:
+//!
+//! ```
+//! use bicompfl::transport::wire::{WireReader, WireWriter};
+//!
+//! let mut w = WireWriter::new();
+//! w.put_u16(0xB1CF); // header: plain little-endian bytes
+//! w.begin_payload();
+//! w.put_bits(0b101, 3); // payload: bit-packed, LSB-first
+//! w.put_bits(19, 5);
+//! w.end_payload();
+//! assert_eq!(w.payload_bits(), 8);
+//! let buf = w.finish();
+//! assert_eq!(buf.len(), 3); // 2 header bytes + 1 payload byte
+//!
+//! let mut r = WireReader::new(&buf);
+//! assert_eq!(r.get_u16(), 0xB1CF);
+//! r.begin_payload();
+//! assert_eq!(r.get_bits(3), 0b101);
+//! assert_eq!(r.get_bits(5), 19);
+//! r.end_payload();
+//! assert_eq!(r.consumed(), buf.len());
+//! ```
 
 /// Serializer: header bytes first, then one bit-packed payload section.
 pub struct WireWriter {
@@ -30,6 +56,7 @@ impl Default for WireWriter {
 }
 
 impl WireWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self {
             buf: Vec::new(),
@@ -44,26 +71,31 @@ impl WireWriter {
         debug_assert!(!self.in_payload, "header write inside the payload section");
     }
 
+    /// Append one header byte.
     pub fn put_u8(&mut self, v: u8) {
         self.header_only();
         self.buf.push(v);
     }
 
+    /// Append a little-endian header u16.
     pub fn put_u16(&mut self, v: u16) {
         self.header_only();
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a little-endian header u32.
     pub fn put_u32(&mut self, v: u32) {
         self.header_only();
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a little-endian header u64.
     pub fn put_u64(&mut self, v: u64) {
         self.header_only();
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a little-endian header f32.
     pub fn put_f32(&mut self, v: f32) {
         self.header_only();
         self.buf.extend_from_slice(&v.to_le_bytes());
@@ -106,6 +138,7 @@ impl WireWriter {
         self.payload_bits
     }
 
+    /// Finish serialization and take the bytes.
     pub fn finish(self) -> Vec<u8> {
         debug_assert!(!self.in_payload, "unterminated payload section");
         self.buf
@@ -122,6 +155,7 @@ pub struct WireReader<'a> {
 }
 
 impl<'a> WireReader<'a> {
+    /// A reader over one serialized frame.
     pub fn new(buf: &'a [u8]) -> Self {
         Self {
             buf,
@@ -139,31 +173,38 @@ impl<'a> WireReader<'a> {
         s
     }
 
+    /// Read one header byte.
     pub fn get_u8(&mut self) -> u8 {
         self.take(1)[0]
     }
 
+    /// Read a little-endian header u16.
     pub fn get_u16(&mut self) -> u16 {
         u16::from_le_bytes(self.take(2).try_into().unwrap())
     }
 
+    /// Read a little-endian header u32.
     pub fn get_u32(&mut self) -> u32 {
         u32::from_le_bytes(self.take(4).try_into().unwrap())
     }
 
+    /// Read a little-endian header u64.
     pub fn get_u64(&mut self) -> u64 {
         u64::from_le_bytes(self.take(8).try_into().unwrap())
     }
 
+    /// Read a little-endian header f32.
     pub fn get_f32(&mut self) -> f32 {
         f32::from_le_bytes(self.take(4).try_into().unwrap())
     }
 
+    /// Enter the bit-packed payload section of the frame being read.
     pub fn begin_payload(&mut self) {
         debug_assert!(!self.in_payload);
         self.in_payload = true;
     }
 
+    /// Read `width` bits of the payload (LSB-first); mirrors `put_bits`.
     pub fn get_bits(&mut self, width: u32) -> u64 {
         debug_assert!(self.in_payload, "get_bits outside the payload section");
         debug_assert!(width <= 64);

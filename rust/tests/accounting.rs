@@ -10,8 +10,15 @@ use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
 use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig};
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::AllocationStrategy;
-use bicompfl::transport::{FramedLoopback, Transport};
+use bicompfl::transport::{FramedLoopback, SocketTransport, Transport};
 use bicompfl::util::rng::Xoshiro256;
+
+/// The serialized transports held to the wire-exactness bar: the in-process
+/// byte codec and the kernel-socketpair carry.
+fn wire_transports() -> Vec<(&'static str, Arc<dyn Transport>)> {
+    let socket = SocketTransport::duplex().expect("socketpair failed");
+    vec![("framed", Arc::new(FramedLoopback::new())), ("socket", Arc::new(socket))]
+}
 
 fn gr_cfg(n_is: usize, bs: usize) -> BiCompFlConfig {
     BiCompFlConfig {
@@ -94,52 +101,56 @@ fn nul_scales_uplink_linearly() {
 
 /// Wire exactness, the transport layer's acceptance bar: with n_IS = 256
 /// (8-bit indices) and Fixed allocation (zero-signalling plans) every
-/// counted payload is byte-aligned, so the `FramedLoopback`'s physically
-/// serialized payload bytes × 8 must equal both the meter's counted bits
-/// and the bits the RoundRecords report — for PR, PR-SplitDL, and GR, at
-/// degenerate/even/odd client counts.
+/// counted payload is byte-aligned, so the physically serialized payload
+/// bytes × 8 must equal both the meter's counted bits and the bits the
+/// RoundRecords report — for PR, PR-SplitDL, and GR, at degenerate/even/odd
+/// client counts, on the in-process byte codec *and* on the socketpair path
+/// where the same bytes cross the kernel.
 #[test]
-fn framed_wire_bytes_times_eight_equal_reported_bits_for_mrc_variants() {
+fn wire_bytes_times_eight_equal_reported_bits_for_mrc_variants() {
     for variant in [Variant::Pr, Variant::PrSplitDl, Variant::Gr] {
         for n in [1usize, 2, 5] {
-            let d = 256;
-            let transport = Arc::new(FramedLoopback::new());
-            let cfg = BiCompFlConfig {
-                variant,
-                n_is: 256, // 8-bit indices: byte-aligned payloads
-                allocation: AllocationStrategy::fixed(64),
-                local_iters: 1,
-                local_lr: 0.2,
-                ..Default::default()
-            };
-            let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.1);
-            let mut alg = BiCompFl::new(d, n, cfg).with_transport(transport.clone());
-            let recs = alg.run(&mut oracle, 2, 1);
-            let stats = transport.stats();
-            // Byte-exactness: what was serialized is exactly what was counted.
-            assert_eq!(
-                stats.payload_bytes * 8,
-                stats.total_bits(),
-                "{}: n={n}: wire bytes × 8 != metered bits",
-                variant.label()
-            );
-            // And what was counted is exactly what the records report.
-            let ul: u64 = recs.iter().map(|r| r.ul_bits).sum();
-            let dl: u64 = recs.iter().map(|r| r.dl_bits).sum();
-            let dl_bc: u64 = recs.iter().map(|r| r.dl_bc_bits).sum();
-            assert_eq!(stats.ul_bits, ul, "{}: n={n}", variant.label());
-            assert_eq!(stats.dl_bits, dl, "{}: n={n}", variant.label());
-            match variant {
-                // Index relay profits from broadcast: one copy on the wire.
-                Variant::Gr => assert_eq!(stats.dl_bc_bits, dl_bc),
-                // Client-specific payloads: nothing crosses the broadcast
-                // leg and the records fall back to the p2p convention.
-                _ => {
-                    assert_eq!(stats.dl_bc_bits, 0);
-                    assert_eq!(dl_bc, dl);
+            for (kind, transport) in wire_transports() {
+                let d = 256;
+                let cfg = BiCompFlConfig {
+                    variant,
+                    n_is: 256, // 8-bit indices: byte-aligned payloads
+                    allocation: AllocationStrategy::fixed(64),
+                    local_iters: 1,
+                    local_lr: 0.2,
+                    ..Default::default()
+                };
+                let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.1);
+                let mut alg = BiCompFl::new(d, n, cfg).with_transport(transport.clone());
+                let recs = alg.run(&mut oracle, 2, 1);
+                let stats = transport.stats();
+                // Byte-exactness: what was serialized is exactly what was
+                // counted.
+                assert_eq!(
+                    stats.payload_bytes * 8,
+                    stats.total_bits(),
+                    "{}: n={n} [{kind}]: wire bytes × 8 != metered bits",
+                    variant.label()
+                );
+                // And what was counted is exactly what the records report.
+                let ul: u64 = recs.iter().map(|r| r.ul_bits).sum();
+                let dl: u64 = recs.iter().map(|r| r.dl_bits).sum();
+                let dl_bc: u64 = recs.iter().map(|r| r.dl_bc_bits).sum();
+                assert_eq!(stats.ul_bits, ul, "{}: n={n} [{kind}]", variant.label());
+                assert_eq!(stats.dl_bits, dl, "{}: n={n} [{kind}]", variant.label());
+                match variant {
+                    // Index relay profits from broadcast: one copy on the
+                    // wire.
+                    Variant::Gr => assert_eq!(stats.dl_bc_bits, dl_bc),
+                    // Client-specific payloads: nothing crosses the broadcast
+                    // leg and the records fall back to the p2p convention.
+                    _ => {
+                        assert_eq!(stats.dl_bc_bits, 0);
+                        assert_eq!(dl_bc, dl);
+                    }
                 }
+                assert!(stats.wire_bytes > stats.payload_bytes, "headers are physical");
             }
-            assert!(stats.wire_bytes > stats.payload_bytes, "headers are physical");
         }
     }
 }

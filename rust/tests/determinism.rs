@@ -21,17 +21,23 @@ use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::{MaskOracle, ShardedMaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::AllocationStrategy;
 use bicompfl::runtime::{ParallelRoundEngine, WorkerPool};
-use bicompfl::transport::{FramedLoopback, Loopback, Transport};
+use bicompfl::transport::{FramedLoopback, Loopback, SocketTransport, Transport};
 use bicompfl::util::rng::Xoshiro256;
 
-/// A fresh transport of either flavor, for loopback-vs-framed comparisons.
-fn make_transport(framed: bool) -> Arc<dyn Transport> {
-    if framed {
-        Arc::new(FramedLoopback::new())
-    } else {
-        Arc::new(Loopback::new())
+/// A fresh transport of any flavor, for loopback-vs-serialized comparisons.
+fn make_transport(kind: &str) -> Arc<dyn Transport> {
+    match kind {
+        "loopback" => Arc::new(Loopback::new()),
+        "framed" => Arc::new(FramedLoopback::new()),
+        "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        k => panic!("unknown transport kind {k:?}"),
     }
 }
+
+/// The serialized wire paths that must stay bit-identical to the zero-copy
+/// loopback: the in-process byte codec, and the same bytes carried across a
+/// real kernel socketpair.
+const WIRE_KINDS: [&str; 2] = ["framed", "socket"];
 
 fn cfg(variant: Variant) -> BiCompFlConfig {
     BiCompFlConfig {
@@ -469,14 +475,15 @@ fn splitdl_block_groups_sum_to_unpartitioned_pr_downlink() {
     assert_eq!(pr[0].ul, split[0].ul);
 }
 
-/// The serialized wire path must be invisible: for every mask variant and
+/// The serialized wire paths must be invisible: for every mask variant and
 /// both driver shapes (serial reference and the pooled/staged drivers), a
-/// run whose every frame crosses the byte-exact `FramedLoopback` must be
+/// run whose every frame crosses the byte-exact `FramedLoopback` — or the
+/// same bytes through a real kernel socketpair (`SocketTransport`) — must be
 /// bit-identical — records, global model, client estimates — to the
 /// zero-copy `Loopback` run. This is the transport layer's core contract:
 /// RoundRecord bits come *off the wire*, and the wire never changes them.
 #[test]
-fn framed_transport_is_bit_identical_for_every_mask_variant() {
+fn wire_transports_are_bit_identical_for_every_mask_variant() {
     for variant in [
         Variant::Gr,
         Variant::GrReconst,
@@ -484,66 +491,72 @@ fn framed_transport_is_bit_identical_for_every_mask_variant() {
         Variant::PrSplitDl,
     ] {
         for shards in [1usize, 4] {
-            let run = |framed: bool| {
+            let run = |kind: &str| {
                 let d = 192;
                 let n = 4;
                 let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
                 let mut alg = BiCompFl::new(d, n, cfg(variant))
                     .with_engine(ParallelRoundEngine::with_shards(shards))
-                    .with_transport(make_transport(framed));
+                    .with_transport(make_transport(kind));
                 let recs = alg.run(&mut oracle, 4, 1);
                 let clients: Vec<Vec<f32>> =
                     (0..n).map(|i| alg.client_model(i).to_vec()).collect();
                 (recs, alg.global_model().to_vec(), clients)
             };
-            assert_eq!(
-                run(false),
-                run(true),
-                "{}: framed wire changed an observable at {shards} shards",
-                variant.label()
-            );
+            let reference = run("loopback");
+            for kind in WIRE_KINDS {
+                assert_eq!(
+                    reference,
+                    run(kind),
+                    "{}: {kind} wire changed an observable at {shards} shards",
+                    variant.label()
+                );
+            }
         }
     }
 }
 
 /// Adaptive allocation puts real signalling bits into the plan frames
 /// (per-block boundaries for Adaptive, single renegotiated sizes for
-/// Adaptive-Avg); the framed path must carry them bit-exactly too.
+/// Adaptive-Avg); the serialized wire paths must carry them bit-exactly too.
 #[test]
-fn framed_transport_bit_identical_with_adaptive_plans() {
+fn wire_transports_bit_identical_with_adaptive_plans() {
     for alloc in [
         AllocationStrategy::adaptive(64, 1024),
         AllocationStrategy::adaptive_avg(64, 1024),
     ] {
         for variant in [Variant::Gr, Variant::Pr] {
             let alloc = alloc.clone();
-            let run = |framed: bool| {
+            let run = |kind: &str| {
                 let mut c = cfg(variant);
                 c.allocation = alloc.clone();
                 let mut oracle = SyntheticMaskOracle::new(256, 3, 17, 0.1);
                 let mut alg = BiCompFl::new(256, 3, c)
                     .with_engine(ParallelRoundEngine::with_shards(3))
-                    .with_transport(make_transport(framed));
+                    .with_transport(make_transport(kind));
                 alg.run(&mut oracle, 5, 1)
             };
-            assert_eq!(
-                run(false),
-                run(true),
-                "{}/{}: framed wire diverged under adaptive plans",
-                variant.label(),
-                alloc.name()
-            );
+            let reference = run("loopback");
+            for kind in WIRE_KINDS {
+                assert_eq!(
+                    reference,
+                    run(kind),
+                    "{}/{}: {kind} wire diverged under adaptive plans",
+                    variant.label(),
+                    alloc.name()
+                );
+            }
         }
     }
 }
 
 /// The staged PR driver under partial participation and λ-mixed priors —
 /// the configuration exercising every fused-stage branch — must stay
-/// bit-identical through the serialized wire.
+/// bit-identical through both serialized wires.
 #[test]
-fn framed_transport_bit_identical_for_staged_partial_participation() {
+fn wire_transports_bit_identical_for_staged_partial_participation() {
     for variant in [Variant::Pr, Variant::PrSplitDl] {
-        let run = |framed: bool| {
+        let run = |kind: &str| {
             let d = 160;
             let n = 5;
             let mut c = cfg(variant);
@@ -552,27 +565,30 @@ fn framed_transport_bit_identical_for_staged_partial_participation() {
             let mut oracle = SyntheticMaskOracle::new(d, n, 11, 0.2);
             let mut alg = BiCompFl::new(d, n, c)
                 .with_engine(ParallelRoundEngine::with_shards(4))
-                .with_transport(make_transport(framed));
+                .with_transport(make_transport(kind));
             let recs = alg.run(&mut oracle, 6, 2);
             let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
             (recs, alg.global_model().to_vec(), clients)
         };
-        assert_eq!(
-            run(false),
-            run(true),
-            "{}: staged driver diverged through the framed wire",
-            variant.label()
-        );
+        let reference = run("loopback");
+        for kind in WIRE_KINDS {
+            assert_eq!(
+                reference,
+                run(kind),
+                "{}: staged driver diverged through the {kind} wire",
+                variant.label()
+            );
+        }
     }
 }
 
 /// CFL rounds carry quantizer side information (the Q_s norm/signs/τ, the
-/// stochastic-sign scale) inside their uplink frames; the framed path must
-/// reconstruct identical updates and meter identical relay bits.
+/// stochastic-sign scale) inside their uplink frames; both serialized wire
+/// paths must reconstruct identical updates and meter identical relay bits.
 #[test]
-fn cfl_framed_transport_matches_loopback() {
+fn cfl_wire_transports_match_loopback() {
     for quantizer in [Quantizer::StochasticSign, Quantizer::Qs] {
-        let run = |framed: bool| {
+        let run = |kind: &str| {
             let mut oracle = QuadraticOracle::new(96, 5, 13);
             let mut alg = BiCompFlCfl::new(
                 96,
@@ -584,7 +600,7 @@ fn cfl_framed_transport_matches_loopback() {
                     ..Default::default()
                 },
             );
-            alg.set_transport(make_transport(framed));
+            alg.set_transport(make_transport(kind));
             run_algorithm_sharded(
                 &mut alg,
                 &mut oracle,
@@ -594,27 +610,29 @@ fn cfl_framed_transport_matches_loopback() {
                 ParallelRoundEngine::with_shards(4),
             )
         };
-        assert_eq!(
-            run(false),
-            run(true),
-            "{quantizer:?}: framed wire diverged"
-        );
+        let reference = run("loopback");
+        for kind in WIRE_KINDS {
+            assert_eq!(reference, run(kind), "{quantizer:?}: {kind} wire diverged");
+        }
     }
 }
 
 /// Every baseline's payloads (dense gradients/models, sign bits + scale,
-/// sparse TopK pairs) now travel as frames; the serialized wire must leave
+/// sparse TopK pairs) now travel as frames; both serialized wires must leave
 /// every baseline's record stream bit-identical.
 #[test]
-fn every_baseline_framed_matches_loopback() {
+fn every_baseline_wire_transport_matches_loopback() {
     for name in BASELINE_NAMES {
-        let run = |framed: bool| {
+        let run = |kind: &str| {
             let mut oracle = QuadraticOracle::new(48, 4, 0xAB);
             let mut alg = make_baseline(name, 48, 4, 0.25).unwrap();
-            alg.set_transport(make_transport(framed));
+            alg.set_transport(make_transport(kind));
             run_algorithm(alg.as_mut(), &mut oracle, 60, 5, 7)
         };
-        assert_eq!(run(false), run(true), "{name}: framed wire diverged");
+        let reference = run("loopback");
+        for kind in WIRE_KINDS {
+            assert_eq!(reference, run(kind), "{name}: {kind} wire diverged");
+        }
     }
 }
 

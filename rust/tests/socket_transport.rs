@@ -1,0 +1,306 @@
+//! The socket transport's end-to-end contracts: the multi-process federator/
+//! client round loop is bit-identical to the in-process simulation, failure
+//! paths (truncated frames, peers dropping mid-round, stale handshake ids)
+//! surface as typed errors that leave the process healthy, and a *real*
+//! multi-process run — `bicompfl federator` plus client processes spawned
+//! from the built binary — completes with its descriptor meters reproducing
+//! the RoundRecord bit totals.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::distributed::{run_client, run_federator, RunSpec};
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::transport::socket::{accept_clients, bind, connect_client, TransportError};
+use bicompfl::transport::{Frame, PlanFrame};
+
+/// A unique, short socket path per test (Unix socket paths are length-capped
+/// and tests run concurrently in one process).
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bicompfl-{tag}-{}.sock", std::process::id()))
+}
+
+fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
+    RunSpec {
+        d: 192,
+        n,
+        rounds,
+        n_is: 64,
+        block_size: 32,
+        n_ul: 1,
+        local_iters: 3,
+        eval_every: 1,
+        seed,
+        oracle_seed: 42,
+        local_lr: 0.1,
+        theta0: 0.5,
+        theta_clamp: 0.05,
+        heterogeneity: 0.1,
+    }
+}
+
+/// The in-process reference run with the configuration a [`RunSpec`] maps to.
+fn reference_records(spec: &RunSpec) -> Vec<bicompfl::algorithms::runner::RoundRecord> {
+    let mut oracle = SyntheticMaskOracle::new(
+        spec.d as usize,
+        spec.n as usize,
+        spec.oracle_seed,
+        spec.heterogeneity,
+    );
+    let mut alg = BiCompFl::new(
+        spec.d as usize,
+        spec.n as usize,
+        BiCompFlConfig {
+            variant: Variant::Gr,
+            n_is: spec.n_is as usize,
+            n_ul: spec.n_ul as usize,
+            allocation: AllocationStrategy::fixed(spec.block_size as usize),
+            local_iters: spec.local_iters as usize,
+            local_lr: spec.local_lr,
+            theta0: spec.theta0,
+            theta_clamp: spec.theta_clamp,
+            seed: spec.seed,
+            ..Default::default()
+        },
+    )
+    .with_engine(ParallelRoundEngine::serial());
+    alg.run(&mut oracle, spec.rounds as usize, spec.eval_every as usize)
+}
+
+/// The core fidelity claim: a federator and n client *threads* exchanging
+/// every frame over real Unix sockets produce the exact `RoundRecord` stream
+/// of the single-process `BiCompFl` GR simulation — same bits, same losses —
+/// and the descriptor meters equal the records (asserted inside
+/// `run_federator`).
+#[test]
+fn distributed_gr_run_is_bit_identical_to_in_process_run() {
+    for n in [2u32, 3] {
+        let spec = small_spec(n, 3, 0xB1C0);
+        let sock = sock_path(&format!("ident{n}"));
+        let fed = {
+            let sock = sock.clone();
+            std::thread::spawn(move || run_federator(&sock, &spec))
+        };
+        let clients: Vec<_> = (0..n as u64)
+            .map(|id| {
+                let sock = sock.clone();
+                std::thread::spawn(move || run_client(&sock, id))
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("client thread").expect("client run");
+        }
+        let run = fed.join().expect("federator thread").expect("federator run");
+        assert_eq!(
+            run.records,
+            reference_records(&spec),
+            "n={n}: distributed records diverged from the simulation"
+        );
+        // GR with Fixed allocation: ul = n * blocks * log2(n_is) per round.
+        let blocks = (spec.d / spec.block_size) as u64;
+        assert_eq!(run.records[0].ul_bits, n as u64 * blocks * 6);
+        assert_eq!(run.records[0].dl_bits, (n as u64 - 1) * run.records[0].ul_bits);
+        let _ = std::fs::remove_file(&sock);
+    }
+}
+
+/// A client that dies mid-round (handshake done, one frame sent, then gone)
+/// must surface as a typed peer-drop error from `run_federator` — not a
+/// panic — and the process (including the global worker pool) stays fully
+/// usable afterwards.
+#[test]
+fn peer_disconnect_mid_round_is_typed_and_leaves_the_pool_usable() {
+    let spec = small_spec(2, 2, 0x5EED);
+    let sock = sock_path("drop");
+    let fed = {
+        let sock = sock.clone();
+        std::thread::spawn(move || run_federator(&sock, &spec))
+    };
+    // Client 0: handshakes, sends only its plan frame, hangs up.
+    let rogue = {
+        let sock = sock.clone();
+        std::thread::spawn(move || -> Result<(), TransportError> {
+            let (mut stream, _ack) = connect_client(&sock, 0)?;
+            let plan = BlockPlan::fixed(192, 32);
+            stream.send_frame(&Frame::Plan(PlanFrame::from_plan(0, 0, &plan)))?;
+            Ok(()) // dropping the stream closes the descriptor
+        })
+    };
+    // Client 1 behaves; it must also get a typed error once the federator
+    // gives up, rather than hanging.
+    let honest = {
+        let sock = sock.clone();
+        std::thread::spawn(move || run_client(&sock, 1))
+    };
+    rogue.join().expect("rogue thread").expect("rogue handshake");
+    let fed_err = fed
+        .join()
+        .expect("federator thread")
+        .expect_err("federator must fail when a client drops mid-round");
+    assert!(
+        matches!(
+            fed_err,
+            TransportError::PeerClosed | TransportError::Truncated { .. }
+        ),
+        "expected a typed peer-drop error, got {fed_err:?}"
+    );
+    assert!(
+        honest.join().expect("honest thread").is_err(),
+        "the surviving client must error out, not hang"
+    );
+    let _ = std::fs::remove_file(&sock);
+
+    // No poisoned workers: the same process can still drive a pooled,
+    // socket-backed run to completion.
+    let mut oracle = SyntheticMaskOracle::new(128, 3, 5, 0.1);
+    let mut alg = BiCompFl::new(
+        128,
+        3,
+        BiCompFlConfig {
+            variant: Variant::Pr,
+            n_is: 64,
+            allocation: AllocationStrategy::fixed(32),
+            ..Default::default()
+        },
+    )
+    .with_engine(ParallelRoundEngine::with_shards(4))
+    .with_transport(std::sync::Arc::new(
+        bicompfl::transport::SocketTransport::duplex().unwrap(),
+    ));
+    let recs = alg.run(&mut oracle, 3, 1);
+    assert_eq!(recs.len(), 3);
+    assert!(recs.iter().all(|r| r.ul_bits > 0));
+}
+
+/// A handshake offering an out-of-range client id is answered with a typed
+/// NACK ([`TransportError::StaleClient`]) and the federator keeps accepting:
+/// the legitimate client set still completes the run.
+#[test]
+fn stale_client_id_is_refused_and_the_run_still_completes() {
+    let spec = small_spec(2, 1, 0xCAFE);
+    let sock = sock_path("stale");
+    let fed = {
+        let sock = sock.clone();
+        std::thread::spawn(move || run_federator(&sock, &spec))
+    };
+    // The stale client connects first and must be turned away by id.
+    {
+        let err = connect_client(&sock, 7).expect_err("id 7 of 2 must be refused");
+        match err {
+            TransportError::StaleClient { id } => assert_eq!(id, 7),
+            other => panic!("expected StaleClient, got {other:?}"),
+        }
+    }
+    let clients: Vec<_> = (0..2u64)
+        .map(|id| {
+            let sock = sock.clone();
+            std::thread::spawn(move || run_client(&sock, id))
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread").expect("client run");
+    }
+    let run = fed.join().expect("federator thread").expect("federator run");
+    assert_eq!(run.records, reference_records(&spec));
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// A *duplicate* id is the same stale-handshake branch: once a slot is
+/// taken, a second claimant gets the NACK while the first keeps its stream.
+#[test]
+fn duplicate_client_id_is_refused() {
+    let sock = sock_path("dup");
+    let listener = bind(&sock).unwrap();
+    let ack_body = vec![7u8; 4];
+    let acceptor = std::thread::spawn(move || accept_clients(&listener, 2, &ack_body));
+    let first = connect_client(&sock, 0).expect("first claim of id 0");
+    match connect_client(&sock, 0) {
+        Err(TransportError::StaleClient { id: 0 }) => {}
+        other => panic!("second claim of id 0 must be StaleClient, got {other:?}"),
+    }
+    let second = connect_client(&sock, 1).expect("id 1");
+    let streams = acceptor.join().expect("acceptor").expect("accept_clients");
+    assert_eq!(streams.len(), 2);
+    assert_eq!(first.1, vec![7u8; 4], "ack body must reach the client");
+    drop(second);
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// The acceptance bar end to end: a real `bicompfl federator` process plus
+/// two real `bicompfl client` processes complete a run over a Unix socket,
+/// the federator's printed records match the in-process simulation, and its
+/// meter == records check passes.
+#[test]
+fn multi_process_smoke_two_client_processes_complete_a_run() {
+    let exe = env!("CARGO_BIN_EXE_bicompfl");
+    let sock = sock_path("proc");
+    let sock_str = sock.to_str().unwrap().to_string();
+    let spec = small_spec(2, 2, 7);
+
+    let mut fed = Command::new(exe)
+        .args([
+            "federator",
+            "--sock",
+            &sock_str,
+            "--clients",
+            "2",
+            "--rounds",
+            "2",
+            "--d",
+            "192",
+            "--nis",
+            "64",
+            "--block-size",
+            "32",
+            "--seed",
+            "7",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn federator process");
+    let clients: Vec<_> = (0..2)
+        .map(|id| {
+            Command::new(exe)
+                .args(["client", "--sock", &sock_str, "--id", &id.to_string()])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn client process")
+        })
+        .collect();
+
+    for mut c in clients {
+        assert!(c.wait().expect("client wait").success(), "client process failed");
+    }
+    let out = fed.wait_with_output().expect("federator wait");
+    assert!(out.status.success(), "federator process failed");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    assert!(
+        stdout.contains("transport check: meter == records ok"),
+        "missing meter check line in:\n{stdout}"
+    );
+
+    // The printed per-round bits must match the in-process reference.
+    let reference = reference_records(&spec);
+    let mut seen = 0usize;
+    for line in stdout.lines().filter(|l| l.starts_with("round")) {
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        let after = |key: &str| -> u64 {
+            let i = tokens.iter().position(|t| *t == key).unwrap();
+            tokens[i + 1].parse().unwrap()
+        };
+        let r = &reference[seen];
+        assert_eq!(after("ul"), r.ul_bits, "line {seen}: {line}");
+        assert_eq!(after("dl"), r.dl_bits, "line {seen}: {line}");
+        assert_eq!(after("dl_bc"), r.dl_bc_bits, "line {seen}: {line}");
+        let i = tokens.iter().position(|t| *t == "loss").unwrap();
+        assert_eq!(tokens[i + 1], format!("{:.4}", r.loss), "line {seen}: {line}");
+        seen += 1;
+    }
+    assert_eq!(seen, reference.len(), "federator printed {seen} round lines");
+    let _ = std::fs::remove_file(&sock);
+}

@@ -32,10 +32,12 @@ SCHEMA = "bicompfl-bench-round/v1"
 
 # Engine labels of the two sides of each comparison, as bench_round emits
 # them; "-retry" entries (the authoritative 3x-window re-measurements)
-# override the first pass. "loopback"/"framed" are the transport comparison:
-# zero-copy vs the byte-exact serialized wire path on identical rounds.
+# override the first pass. "loopback" vs "framed"/"socket" are the transport
+# comparisons: zero-copy vs the byte-exact serialized wire path vs the same
+# bytes carried through a kernel socketpair, on identical rounds (the
+# `BiCompFL-PR [framed wire]` / `BiCompFL-PR [socket wire]` labels).
 BASELINE_ENGINES = ("serial", "pooled-seq", "loopback")
-CONTENDER_ENGINES = ("pooled", "staged", "framed")
+CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket")
 
 
 def load_record(path):
@@ -103,7 +105,8 @@ def render(rows, cur, base, notes):
         lines.append("")
     lines.append(
         f"fresh record: `{cur.get('date', '?')}` (quick={cur.get('quick')}, "
-        f"{int(cur.get('pool_threads', 0))} pool threads, gate: {cur.get('gate', '?')})"
+        f"{int(cur.get('pool_threads', 0))} pool threads, "
+        f"gate: {cur.get('gate') or 'absent (pre-gate record)'})"
         + (f" · baseline: `{base.get('date', '?')}`" if base else "")
     )
     lines.append("")
@@ -156,7 +159,23 @@ def main():
         notes.append(f"no baseline at `{args.baseline}` — trajectory starts here.")
     else:
         base = load_record(args.baseline)
-        if str(base.get("gate", "")).startswith("skipped"):
+        base_sp = p50_speedups(base)
+        if base.get("seed") or not base_sp:
+            notes.append(
+                "baseline has no usable timing data (seed record) — "
+                "trajectory starts here."
+            )
+            base_sp = {}
+        elif "gate" not in base:
+            # Records written before bench_round grew the gate field carry
+            # valid timings but cannot say whether their own gate ran; use
+            # them, say so. (Older BENCH_*.json artifacts must never crash
+            # or confuse the trend job — the trajectory would lose history.)
+            notes.append(
+                "baseline record predates the `gate` field — "
+                "timings used, gate status unknown."
+            )
+        elif str(base.get("gate", "")).startswith("skipped"):
             # A gate-skipped baseline (single-thread runner) carries ~1.0x
             # speedups that would silently lower the bar for every later
             # run; refuse to gate against it.
@@ -165,14 +184,12 @@ def main():
                 "its speedups are degenerate; comparison is informational only."
             )
             base_sp = {}
-        else:
-            base_sp = p50_speedups(base)
-            if base.get("seed") or not base_sp:
-                notes.append(
-                    "baseline has no usable timing data (seed record) — "
-                    "trajectory starts here."
-                )
     gate_skipped = str(cur.get("gate", "")).startswith("skipped")
+    if "gate" not in cur:
+        notes.append(
+            "fresh record predates the `gate` field — gate status unknown, "
+            "trend comparison still applies."
+        )
     if gate_skipped:
         notes.append(
             f"in-run regression gate was **not run** ({cur.get('gate')}); "
