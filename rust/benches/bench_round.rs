@@ -28,7 +28,9 @@ use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
-use bicompfl::transport::{FramedLoopback, Loopback, SocketTransport, Transport};
+use bicompfl::transport::{
+    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, Transport,
+};
 use bicompfl::util::json::{arr, num, obj, s, Json};
 use bicompfl::util::rng::Xoshiro256;
 use bicompfl::util::timer::{bench, BenchStats};
@@ -146,6 +148,10 @@ fn bench_pr_round_transport(
         "loopback" => Arc::new(Loopback::new()),
         "framed" => Arc::new(FramedLoopback::new()),
         "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        "faulty" => Arc::new(FaultyTransport::new(
+            Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+            FaultSpec::none(),
+        )),
         k => panic!("unknown transport kind {k:?}"),
     };
     let mut alg = BiCompFl::new(
@@ -342,6 +348,22 @@ fn main() {
             label: "socket",
             shards: pooled.shards(),
             run: Box::new(move |w, t| bench_pr_round_transport("socket", pooled, d, n, w, t)),
+        },
+    });
+    // The zero-fault injection layer on top of the socketpair path: the
+    // FaultyTransport wrapper must be pure dispatch overhead, so this case
+    // gates the cost of having the fault layer in the chokepoint at all.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [faulty wire]",
+        baseline: Side {
+            label: "loopback",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("loopback", pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "faulty",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("faulty", pooled, d, n, w, t)),
         },
     });
 

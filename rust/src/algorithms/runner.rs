@@ -5,6 +5,51 @@ use super::{CflAlgorithm, GradOracle, ShardedGradOracle};
 use crate::runtime::ParallelRoundEngine;
 use crate::util::rng::Xoshiro256;
 
+/// The set of clients whose contributions actually made it into one round.
+///
+/// `Full` is the healthy case (every client delivered, the historical
+/// behavior — also the representation partial-participation variants use
+/// when their *drawn* cohort is everyone). `Partial(ids)` records a realized
+/// subset: the participation draw of PR/PR-SplitDL, or — under a fault spec
+/// with a round deadline — the survivors whose uplinks arrived in time.
+/// `ids` are sorted, unique client ids.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Cohort {
+    #[default]
+    Full,
+    Partial(Vec<u64>),
+}
+
+impl Cohort {
+    /// Canonical form of a realized id set out of `n` clients: `Full` when
+    /// everyone is present, `Partial` otherwise. `ids` must be sorted and
+    /// unique.
+    pub fn from_ids(ids: &[u64], n: usize) -> Self {
+        debug_assert!(ids.windows(2).all(|p| p[0] < p[1]), "cohort ids unsorted");
+        if ids.len() == n {
+            Cohort::Full
+        } else {
+            Cohort::Partial(ids.to_vec())
+        }
+    }
+
+    /// Whether `id` contributed to the round.
+    pub fn contains(&self, id: u64) -> bool {
+        match self {
+            Cohort::Full => true,
+            Cohort::Partial(ids) => ids.binary_search(&id).is_ok(),
+        }
+    }
+
+    /// The number of contributing clients, out of `n` total.
+    pub fn len(&self, n: usize) -> usize {
+        match self {
+            Cohort::Full => n,
+            Cohort::Partial(ids) => ids.len(),
+        }
+    }
+}
+
 /// One evaluated round of any algorithm (baseline or BiCompFL).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
@@ -14,6 +59,10 @@ pub struct RoundRecord {
     pub ul_bits: u64,
     pub dl_bits: u64,
     pub dl_bc_bits: u64,
+    /// The clients whose contributions this round aggregated: `Full` for
+    /// every-client rounds, the drawn subset under partial participation,
+    /// the surviving subset under a fault deadline.
+    pub cohort: Cohort,
 }
 
 impl RoundRecord {
@@ -183,6 +232,7 @@ where
             ul_bits,
             dl_bits,
             dl_bc_bits,
+            cohort: Cohort::Full,
         });
     }
     out
@@ -215,6 +265,7 @@ pub fn run_algorithm(
             ul_bits: bits.ul,
             dl_bits: bits.dl,
             dl_bc_bits: bits.dl_bc,
+            cohort: Cohort::Full,
         });
     }
     debug_check_records(alg, meter_start, &out);
@@ -298,8 +349,21 @@ mod tests {
             ul_bits: 100,
             dl_bits: 300,
             dl_bc_bits: 30,
+            cohort: Cohort::Full,
         };
         assert_eq!(r.bpp(10, 2), 400.0 / 20.0);
         assert_eq!(r.bpp_bc(10, 2), 130.0 / 20.0);
+    }
+
+    #[test]
+    fn cohort_canonicalizes_and_answers_membership() {
+        assert_eq!(Cohort::from_ids(&[0, 1, 2], 3), Cohort::Full);
+        let partial = Cohort::from_ids(&[0, 2], 3);
+        assert_eq!(partial, Cohort::Partial(vec![0, 2]));
+        assert!(partial.contains(0) && partial.contains(2));
+        assert!(!partial.contains(1));
+        assert_eq!(partial.len(3), 2);
+        assert_eq!(Cohort::Full.len(3), 3);
+        assert!(Cohort::Full.contains(7));
     }
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use super::oracle::{MaskOracle, ShardedMaskOracle};
 use super::shared_rand::{mrc_stream, private_seed, Direction};
-use crate::algorithms::runner::RoundRecord;
+use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::{AllocationStrategy, BlockPlan};
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
@@ -247,6 +247,9 @@ pub struct BiCompFl {
     prev_qhat: Vec<Option<Vec<f32>>>,
     round: u64,
     part_rng: Xoshiro256,
+    /// The realized participation of the most recent round's draw — recorded
+    /// verbatim into that round's [`RoundRecord`].
+    last_cohort: Cohort,
     /// Shards per-client uplink/downlink MRC work; bit-identical for any
     /// shard count (see `runtime::engine`'s determinism contract).
     engine: ParallelRoundEngine,
@@ -268,6 +271,7 @@ impl BiCompFl {
             prev_qhat: vec![None; n_clients],
             round: 0,
             part_rng: Xoshiro256::new(cfg.seed ^ 0xAA17),
+            last_cohort: Cohort::Full,
             engine: ParallelRoundEngine::auto(),
             transport: transport::from_env(),
             cfg,
@@ -451,7 +455,7 @@ impl BiCompFl {
     /// every driver (serial, fused, staged) sees the identical sequence.
     fn draw_participation(&mut self) -> Vec<usize> {
         let n = self.n;
-        match self.cfg.variant {
+        let ids = match self.cfg.variant {
             Variant::Pr | Variant::PrSplitDl if self.cfg.participation < 1.0 => {
                 let k = ((n as f32 * self.cfg.participation).round() as usize).max(1);
                 let mut ids: Vec<usize> = (0..n).collect();
@@ -461,7 +465,10 @@ impl BiCompFl {
                 ids
             }
             _ => (0..n).collect(),
-        }
+        };
+        let ids64: Vec<u64> = ids.iter().map(|&i| i as u64).collect();
+        self.last_cohort = Cohort::from_ids(&ids64, n);
+        ids
     }
 
     /// Round stage 2 (clients): local training, sharded across the engine
@@ -857,6 +864,7 @@ impl BiCompFl {
                     ul_bits: b.ul,
                     dl_bits: b.dl,
                     dl_bc_bits: b.dl_bc,
+                    cohort: self.last_cohort.clone(),
                 });
             }
             out
@@ -1036,6 +1044,7 @@ impl BiCompFl {
                     ul_bits: bits.ul,
                     dl_bits: 0,
                     dl_bc_bits: 0,
+                    cohort: this.last_cohort.clone(),
                 });
                 let next_eval = scheduled(t).then(|| (t, Arc::clone(&theta_next)));
                 let next_dl = Some((t, this.make_dl_jobs(&theta_next)));

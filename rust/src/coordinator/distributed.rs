@@ -32,20 +32,36 @@
 //! per-client downlink MRC rides the same frames and the same
 //! [`FrameStream`] API; extending this loop is the "add a backend" exercise
 //! in `docs/ARCHITECTURE.md`.
+//!
+//! ## Fault tolerance
+//!
+//! The strict pair above fails the whole run on the first fault — the right
+//! bar for the determinism suite, the wrong one for a deployment. Under a
+//! [`FaultSpec`] (CLI `--faults`, env `BICOMPFL_FAULTS`),
+//! [`run_federator_with`] closes each round with the subset of clients that
+//! delivered before the per-round deadline (the *realized cohort*, broadcast
+//! as a MSG_COHORT control message and recorded in the [`RoundRecord`]), and
+//! [`run_client_with`] decodes exactly that subset's relays. See the "Fault
+//! model" section of `docs/ARCHITECTURE.md`.
 
 use std::path::Path;
+use std::time::{Duration, Instant};
 
 use super::bicompfl::BiCompFl;
 use super::oracle::{MaskOracle, SyntheticMaskOracle};
 use super::shared_rand::{selector_seed, Direction};
-use crate::algorithms::runner::RoundRecord;
+use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
 use crate::transport::socket::{
-    accept_clients, bind, connect_client, FrameStream, LinkMeter, Result, TransportError,
+    accept_clients, accept_clients_deadline, bind, connect_client, FrameStream, LinkMeter, Result,
+    TransportError,
 };
-use crate::transport::{Frame, PlanFrame, SideInfo, UplinkFrame};
+use crate::transport::{
+    FaultReport, FaultSpec, FaultyStream, Frame, PlanFrame, SideInfo, UplinkFrame,
+};
+use crate::util::rng::Xoshiro256;
 
 /// The run configuration the federator pushes to every client in its
 /// handshake ACK, so the processes cannot drift apart on a flag. Fixed-width
@@ -204,6 +220,10 @@ pub struct FederatorRun {
     pub wire_recv: LinkMeter,
     /// Downlink (relay) traffic sent, summed over every client stream.
     pub wire_sent: LinkMeter,
+    /// Per-client delivery/straggler/dropout/retry counters. The strict loop
+    /// reports every client as fully delivered (it fails the whole run on the
+    /// first fault instead); [`run_federator_with`] reports realized counts.
+    pub faults: FaultReport,
 }
 
 /// MRC-encode one client's posterior into its (plan, uplink) frames — the
@@ -264,17 +284,14 @@ fn aggregate(spec: &RunSpec, qhats: &[Vec<f32>]) -> Vec<f32> {
 
 /// Receive the (plan, uplink) frame pair every uplink leg and every relayed
 /// downlink consists of — one decode shared by both sides of the protocol.
+/// A mis-kinded frame is a typed [`TransportError::BadFrame`], never a panic:
+/// this path reads bytes a misbehaving peer controls.
 fn recv_frame_pair(stream: &mut FrameStream) -> Result<(PlanFrame, UplinkFrame, u64)> {
     let (plan_frame, plan_bits) = stream.recv_frame()?;
     let (ul_frame, ul_bits) = stream.recv_frame()?;
-    match (plan_frame, ul_frame) {
-        (Frame::Plan(p), Frame::Uplink(u)) => Ok((p, u, plan_bits + ul_bits)),
-        (p, u) => Err(TransportError::Handshake(format!(
-            "expected a plan+uplink frame pair, got {}+{}",
-            p.kind_name(),
-            u.kind_name()
-        ))),
-    }
+    let plan = plan_frame.try_into_plan()?;
+    let ul = ul_frame.try_into_uplink()?;
+    Ok((plan, ul, plan_bits + ul_bits))
 }
 
 /// Validate a received (plan, uplink) pair against the run spec. Under
@@ -395,6 +412,7 @@ pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
             ul_bits,
             dl_bits,
             dl_bc_bits,
+            cohort: Cohort::Full,
         });
     }
 
@@ -433,6 +451,7 @@ pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
         records,
         wire_recv,
         wire_sent,
+        faults: FaultReport::all_delivered(n, spec.rounds as u64),
     })
 }
 
@@ -506,6 +525,339 @@ pub fn run_client(sock: &Path, id: u64) -> Result<()> {
     }
 
     stream.recv_bye()
+}
+
+/// Flag byte the fault-tolerant federator appends to its [`RunSpec`] ACK:
+/// every round closes with a MSG_COHORT broadcast of the realized
+/// participant set, and the relay fans out cohort payloads only. A strict
+/// client rejects the lengthened ACK with a typed handshake error
+/// ([`RunSpec::decode`] requires exactly `SPEC_BYTES`), so the two protocols
+/// can never silently interoperate.
+const PROTO_COHORT: u8 = 1;
+
+/// Whether an I/O error is the read-timeout signal (the kind is
+/// platform-dependent: `SO_RCVTIMEO` surfaces as either).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// [`run_federator`] with deadline tolerance and bounded retries: each round
+/// closes with whichever subset of clients delivered a valid uplink before
+/// the per-round deadline — the *realized cohort*, broadcast to the
+/// survivors and recorded in the round's [`RoundRecord`] — instead of
+/// failing the whole run on the first straggler or protocol violation.
+/// Transient I/O errors are retried up to `faults.max_retries` times with
+/// linear backoff while the stream still sits at a frame boundary.
+///
+/// Stragglers and violators are shut down but their streams (and meters) are
+/// kept, so the accounting bar still holds under faults: the received bits
+/// split exactly into the bits the records count plus the orphaned bits of
+/// refused uplinks, and every sent bit is a successful relay the records
+/// count.
+pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Result<FederatorRun> {
+    spec.validate()?;
+    let n = spec.n as usize;
+    let listener = bind(sock)?;
+    let mut ack = spec.encode();
+    ack.push(PROTO_COHORT);
+    let accept_total =
+        (faults.accept_deadline_ms > 0).then(|| Duration::from_millis(faults.accept_deadline_ms));
+    let mut streams = accept_clients_deadline(&listener, n, &ack, accept_total)?;
+    crate::info!("federator: {} clients connected", n);
+
+    let mut report = FaultReport::new(n);
+    let mut alive = vec![true; n];
+    // Bits that crossed the descriptors inside uplinks the round refused
+    // (straggled mid-pair, or failed validation). The records never count
+    // them; the closing assertion does.
+    let mut orphan_ul_bits = 0u64;
+
+    let mut oracle = spec.oracle();
+    let mut theta = spec.initial_theta();
+    let mut records = Vec::with_capacity(spec.rounds as usize);
+    let ee = (spec.eval_every as usize).max(1);
+    let (mut loss, mut acc) = (f64::NAN, f64::NAN);
+
+    for t in 0..spec.rounds as usize {
+        let deadline = (faults.deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(faults.deadline_ms));
+
+        // -- uplink: poll the alive clients in id order --------------------
+        let mut ul_bits = 0u64;
+        let mut ids: Vec<u64> = Vec::with_capacity(n);
+        let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut relays: Vec<(Frame, Frame)> = Vec::with_capacity(n);
+        for (i, stream) in streams.iter_mut().enumerate() {
+            if !alive[i] {
+                continue;
+            }
+            let meter_before = stream.received();
+            if let Some(d) = deadline {
+                let remaining = d.saturating_duration_since(Instant::now());
+                let _ = stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))));
+            }
+            let mut attempts = 0u32;
+            let outcome = loop {
+                match recv_uplink(stream, i as u64, t as u64) {
+                    // Transient I/O (not a timeout) with the stream still at
+                    // a frame boundary: bounded retry with linear backoff.
+                    Err(TransportError::Io(e))
+                        if !is_timeout(&e)
+                            && attempts < faults.max_retries
+                            && stream.received().frames == meter_before.frames =>
+                    {
+                        attempts += 1;
+                        report.clients[i].retries += 1;
+                        std::thread::sleep(Duration::from_millis(
+                            faults.backoff_ms * u64::from(attempts),
+                        ));
+                    }
+                    other => break other,
+                }
+            };
+            match outcome {
+                Ok((plan, ul, bits)) => match validate_uplink_shape(spec, &plan, &ul) {
+                    Ok(()) => {
+                        ul_bits += bits;
+                        report.clients[i].delivered += 1;
+                        ids.push(i as u64);
+                        qhats.push(decode_uplink(spec, &plan, &ul, &theta));
+                        relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
+                    }
+                    Err(why) => {
+                        crate::info!("federator: round {t}: dropping client {i}: {why}");
+                        report.clients[i].dropped += 1;
+                        alive[i] = false;
+                        stream.shutdown();
+                        orphan_ul_bits += stream.received().bits - meter_before.bits;
+                    }
+                },
+                Err(TransportError::Io(e)) if is_timeout(&e) => {
+                    crate::info!("federator: round {t}: client {i} straggled past the deadline");
+                    report.clients[i].straggled += 1;
+                    alive[i] = false;
+                    stream.shutdown();
+                    orphan_ul_bits += stream.received().bits - meter_before.bits;
+                }
+                Err(why) => {
+                    crate::info!("federator: round {t}: dropping client {i}: {why}");
+                    report.clients[i].dropped += 1;
+                    alive[i] = false;
+                    stream.shutdown();
+                    orphan_ul_bits += stream.received().bits - meter_before.bits;
+                }
+            }
+        }
+        if deadline.is_some() {
+            for (i, stream) in streams.iter_mut().enumerate() {
+                if alive[i] {
+                    let _ = stream.set_read_timeout(None);
+                }
+            }
+        }
+        if ids.is_empty() {
+            return Err(TransportError::Handshake(format!(
+                "round {t}: no client delivered an uplink before the deadline"
+            )));
+        }
+
+        // -- aggregate over the realized cohort ----------------------------
+        theta = aggregate(spec, &qhats);
+        let cohort = Cohort::from_ids(&ids, n);
+
+        // -- close the round: cohort broadcast, then the GR relay ----------
+        for (i, stream) in streams.iter_mut().enumerate() {
+            if !alive[i] {
+                continue;
+            }
+            if let Err(why) = stream.send_cohort(t as u64, &ids) {
+                crate::info!("federator: round {t}: client {i} lost on cohort send: {why}");
+                report.clients[i].dropped += 1;
+                alive[i] = false;
+                stream.shutdown();
+            }
+        }
+        let mut dl_bits = 0u64;
+        let mut dl_bc_bits = 0u64;
+        for (&ci, (plan, uplink)) in ids.iter().zip(&relays) {
+            for frame in [plan, uplink] {
+                let (bytes, bits) = frame.encode();
+                for (j, stream) in streams.iter_mut().enumerate() {
+                    if j as u64 == ci || !alive[j] {
+                        continue;
+                    }
+                    match stream.send_frame_encoded(&bytes, bits) {
+                        Ok(b) => dl_bits += b,
+                        Err(why) => {
+                            crate::info!("federator: round {t}: client {j} lost on relay: {why}");
+                            report.clients[j].dropped += 1;
+                            alive[j] = false;
+                            stream.shutdown();
+                        }
+                    }
+                }
+                dl_bc_bits += bits;
+            }
+        }
+
+        if t % ee == 0 || t + 1 == spec.rounds as usize {
+            let (l, a) = oracle.eval(&theta);
+            loss = l;
+            acc = a;
+        }
+        records.push(RoundRecord {
+            round: t,
+            loss,
+            acc,
+            ul_bits,
+            dl_bits,
+            dl_bc_bits,
+            cohort,
+        });
+    }
+
+    // -- graceful shutdown of the survivors ----------------------------------
+    for (i, stream) in streams.iter_mut().enumerate() {
+        if alive[i] {
+            let _ = stream.send_bye();
+        }
+    }
+
+    let mut wire_recv = LinkMeter::default();
+    let mut wire_sent = LinkMeter::default();
+    for stream in &streams {
+        let (r, s) = (stream.received(), stream.sent());
+        wire_recv.frames += r.frames;
+        wire_recv.bits += r.bits;
+        wire_recv.wire_bytes += r.wire_bytes;
+        wire_sent.frames += s.frames;
+        wire_sent.bits += s.bits;
+        wire_sent.wire_bytes += s.wire_bytes;
+    }
+    // The accounting bar under faults: every received bit is either counted
+    // by a record (a delivered uplink) or known-orphaned (a refused one);
+    // every sent bit is a successful relay a record counts.
+    let ul: u64 = records.iter().map(|r| r.ul_bits).sum();
+    let dl: u64 = records.iter().map(|r| r.dl_bits).sum();
+    assert_eq!(
+        wire_recv.bits,
+        ul + orphan_ul_bits,
+        "uplink bits bypassed the sockets: meter {} != records {ul} + orphaned {orphan_ul_bits}",
+        wire_recv.bits
+    );
+    assert_eq!(
+        wire_sent.bits, dl,
+        "downlink bits bypassed the sockets: meter {} != records {dl}",
+        wire_sent.bits
+    );
+    let _ = std::fs::remove_file(sock);
+    Ok(FederatorRun {
+        records,
+        wire_recv,
+        wire_sent,
+        faults: report,
+    })
+}
+
+/// [`run_client`] against a fault-tolerant federator, with this client's own
+/// link faults injected on the send side through [`FaultyStream`]. The round
+/// no longer assumes all n peers: after the uplink, the client receives the
+/// round's realized cohort and decodes exactly that subset's relays,
+/// aggregating θ_{t+1} over the cohort in id order — the same order the
+/// federator uses, so every survivor lands on the identical model.
+pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
+    let (stream, ack) = connect_client(sock, id)?;
+    if ack.len() != SPEC_BYTES + 1 || ack[SPEC_BYTES] != PROTO_COHORT {
+        return Err(TransportError::Handshake(format!(
+            "federator ACK is {} bytes without the cohort-protocol flag; is the \
+             federator running without --faults?",
+            ack.len()
+        )));
+    }
+    let spec = RunSpec::decode(&ack[..SPEC_BYTES])?;
+    if id >= spec.n as u64 {
+        return Err(TransportError::StaleClient { id });
+    }
+    let n = spec.n as usize;
+    let mut fstream =
+        FaultyStream::new(stream, faults.client(id), Xoshiro256::new(faults.seed ^ id));
+    let mut oracle = spec.oracle();
+    let mut theta = spec.initial_theta();
+
+    for t in 0..spec.rounds as usize {
+        // -- local training, clamped as upstream ---------------------------
+        let (mut q, _loss, _acc) = oracle.local_train(
+            id as usize,
+            &theta,
+            spec.local_iters as usize,
+            spec.local_lr,
+            t as u64,
+        );
+        crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
+
+        // -- uplink, through the fault gauntlet -----------------------------
+        let (own_plan, own_ul) = encode_uplink(&spec, t as u64, id, &q, &theta);
+        fstream.send_frame(&Frame::Plan(own_plan.clone()))?;
+        fstream.send_frame(&Frame::Uplink(own_ul.clone()))?;
+
+        // -- the realized cohort closes the round ---------------------------
+        let (c_round, ids) = fstream.inner_mut().recv_cohort()?;
+        if c_round != t as u64 {
+            return Err(TransportError::Handshake(format!(
+                "cohort for round {c_round}, expected round {t}"
+            )));
+        }
+        if ids.is_empty()
+            || ids.windows(2).any(|p| p[0] >= p[1])
+            || ids.last().is_some_and(|&last| last >= n as u64)
+        {
+            return Err(TransportError::Handshake(format!(
+                "malformed cohort ids {ids:?} (n={n})"
+            )));
+        }
+        let me_in = ids.binary_search(&id).is_ok();
+        let mut qhats: Vec<Option<Vec<f32>>> = vec![None; n];
+        if me_in {
+            qhats[id as usize] = Some(decode_uplink(&spec, &own_plan, &own_ul, &theta));
+        }
+
+        // -- downlink: the other cohort members' uplinks, relayed verbatim --
+        for _ in 0..ids.len() - usize::from(me_in) {
+            let (plan, ul, _bits) = recv_frame_pair(fstream.inner_mut())?;
+            if plan.client != ul.client || ul.round != t as u64 {
+                return Err(TransportError::Handshake(format!(
+                    "misrouted relay: plan client {} / uplink client {} round {} \
+                     (expected round {t})",
+                    plan.client, ul.client, ul.round
+                )));
+            }
+            let peer = ul.client as usize;
+            if ids.binary_search(&ul.client).is_err() {
+                return Err(TransportError::Handshake(format!(
+                    "relay delivered client {peer}, not in cohort {ids:?}"
+                )));
+            }
+            if qhats[peer].is_some() {
+                return Err(TransportError::Handshake(format!(
+                    "relay delivered client {peer} twice"
+                )));
+            }
+            validate_uplink_shape(&spec, &plan, &ul)?;
+            qhats[peer] = Some(decode_uplink(&spec, &plan, &ul, &theta));
+        }
+        // Aggregate the cohort's q̂s in id order — the order the federator
+        // pushed them, so the clamped mean is the identical float sequence.
+        let all: Vec<Vec<f32>> = ids
+            .iter()
+            .map(|&i| qhats[i as usize].take().expect("cohort slot filled above"))
+            .collect();
+        theta = aggregate(&spec, &all);
+    }
+
+    fstream.inner_mut().recv_bye()
 }
 
 #[cfg(test)]

@@ -51,6 +51,12 @@ fn cli() -> Cli {
     )
     .flag("sock", "/tmp/bicompfl.sock", "federator/client: Unix socket path")
     .flag("id", "0", "client: this client's id in 0..clients")
+    .flag(
+        "faults",
+        "",
+        "fault-injection spec, e.g. 'deadline_ms=200;1:delay_us=50000' \
+         (docs/ARCHITECTURE.md, Fault model); overrides BICOMPFL_FAULTS",
+    )
     .flag("d", "0", "federator: synthetic model dimension (0 = default 256)")
     .flag("preset", "quick", "experiment preset (see `bicompfl presets`)")
     .flag("arch", "", "model architecture (mlp|lenet5|cnn4|cnn6); overrides preset")
@@ -71,6 +77,21 @@ fn cli() -> Cli {
     .switch("noniid", "force Dirichlet(0.1) data allocation")
     .switch("no-baselines", "exp table: skip non-stochastic baselines")
     .switch("no-cfl", "exp table: skip BiCompFL-GR-CFL")
+}
+
+/// The fault spec governing a federator/client process: the `--faults` flag
+/// when given, else `BICOMPFL_FAULTS` (both sides read the same environment,
+/// so launching a process group under one env var keeps them in agreement).
+/// `None` — including an explicit all-zero spec — selects the strict
+/// protocol.
+fn fault_spec(c: &Cli) -> Result<Option<bicompfl::transport::FaultSpec>> {
+    let flag = c.get("faults");
+    let spec = if flag.is_empty() {
+        bicompfl::transport::FaultSpec::from_env().map_err(|e| anyhow!(e))?
+    } else {
+        Some(bicompfl::transport::FaultSpec::parse(&flag).map_err(|e| anyhow!(e))?)
+    };
+    Ok(spec.filter(|s| !s.is_none()))
 }
 
 fn build_cfg(c: &Cli) -> Result<ExpConfig> {
@@ -153,7 +174,14 @@ fn real_main() -> Result<()> {
                 spec.n,
                 sock.display()
             );
-            let run = distributed::run_federator(&sock, &spec)?;
+            let faults = fault_spec(&c)?;
+            let run = match &faults {
+                Some(f) => {
+                    info!("federator: deadline-tolerant protocol under faults {f:?}");
+                    distributed::run_federator_with(&sock, &spec, f)?
+                }
+                None => distributed::run_federator(&sock, &spec)?,
+            };
             for r in &run.records {
                 println!(
                     "round {:>4}: loss {:.4} acc {:.4} ul {} dl {} dl_bc {}",
@@ -164,13 +192,25 @@ fn real_main() -> Result<()> {
                 "wire: recv {} bits in {} frames, sent {} bits in {} frames",
                 run.wire_recv.bits, run.wire_recv.frames, run.wire_sent.bits, run.wire_sent.frames
             );
-            // run_federator hard-asserts meter == records before returning.
+            // Both federator loops hard-assert meter == records (the
+            // tolerant one splitting out orphaned bits) before returning.
             println!("transport check: meter == records ok");
+            if faults.is_some() {
+                for f in &run.faults.clients {
+                    println!(
+                        "faults: client {}: delivered {} straggled {} dropped {} retries {}",
+                        f.client, f.delivered, f.straggled, f.dropped, f.retries
+                    );
+                }
+            }
         }
         "client" => {
             let sock = PathBuf::from(c.get("sock"));
             let id = c.get_u64("id");
-            distributed::run_client(&sock, id)?;
+            match fault_spec(&c)? {
+                Some(f) => distributed::run_client_with(&sock, id, &f)?,
+                None => distributed::run_client(&sock, id)?,
+            }
             println!("client {id}: run complete, federator said bye");
         }
         "train" => {

@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::algorithms::runner::{summarize, RoundRecord, RunSummary};
-use crate::transport::TransportStats;
+use crate::transport::{FaultReport, TransportStats};
 use crate::util::json::{arr, num, obj, s, Json};
 
 pub struct CsvLog {
@@ -133,6 +133,42 @@ pub fn transport_json(label: &str, stats: &TransportStats) -> Json {
     ])
 }
 
+/// Render a fault report as a markdown table — the per-client
+/// delivery/straggler/dropout/retry counters of a tolerant federator run,
+/// surfaced next to [`render_transport`]'s wire view.
+pub fn render_faults(label: &str, report: &FaultReport) -> String {
+    let mut out = format!(
+        "### faults [{label}]\n\n\
+         | Client | delivered | straggled | dropped | retries |\n\
+         |---|---|---|---|---|\n"
+    );
+    for c in &report.clients {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            c.client, c.delivered, c.straggled, c.dropped, c.retries
+        ));
+    }
+    out
+}
+
+/// The JSON form of a fault report, for summary records.
+pub fn faults_json(label: &str, report: &FaultReport) -> Json {
+    let clients: Vec<Json> = report
+        .clients
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("client", num(c.client as f64)),
+                ("delivered", num(c.delivered as f64)),
+                ("straggled", num(c.straggled as f64)),
+                ("dropped", num(c.dropped as f64)),
+                ("retries", num(c.retries as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![("faults", s(label)), ("clients", arr(clients))])
+}
+
 pub fn write_summary_json(path: &Path, title: &str, rows: &[TableRow]) -> Result<()> {
     if let Some(parent) = path.parent() {
         fs::create_dir_all(parent)?;
@@ -168,6 +204,7 @@ mod tests {
             ul_bits: 100,
             dl_bits: 300,
             dl_bc_bits: 100,
+            cohort: crate::algorithms::runner::Cohort::Full,
         }
     }
 
@@ -216,6 +253,23 @@ mod tests {
         let j = transport_json("framed", &stats);
         assert_eq!(j.req("transport").as_str(), Some("framed"));
         assert_eq!(j.req("ul_bits").as_f64(), Some(640.0));
+    }
+
+    #[test]
+    fn fault_report_renders_and_serializes() {
+        let mut report = FaultReport::all_delivered(3, 5);
+        report.clients[1].straggled = 2;
+        report.clients[2].dropped = 1;
+        report.clients[2].retries = 4;
+        let t = render_faults("socket", &report);
+        assert!(t.contains("### faults [socket]"));
+        assert!(t.contains("| 1 | 5 | 2 | 0 | 0 |"));
+        assert!(t.contains("| 2 | 5 | 0 | 1 | 4 |"));
+        let j = faults_json("socket", &report);
+        assert_eq!(j.req("faults").as_str(), Some("socket"));
+        let clients = j.req("clients").as_arr().unwrap();
+        assert_eq!(clients.len(), 3);
+        assert_eq!(clients[1].req("straggled").as_f64(), Some(2.0));
     }
 
     #[test]

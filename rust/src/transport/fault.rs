@@ -1,0 +1,514 @@
+//! Seeded, deterministic fault and latency injection behind the
+//! [`Transport`] trait and the peer-to-peer [`FrameStream`] layer.
+//!
+//! The paper's comparison only matters if rounds survive imperfect links:
+//! stragglers, churn, and partial participation are the regimes the
+//! cross-device baselines live in, and a robustness ablation needs faults
+//! that *reproduce*. Everything here is driven by a [`FaultSpec`] — parsed
+//! from `--faults` / `BICOMPFL_FAULTS` — and a seed, so a given spec injects
+//! the identical fault sequence on every run.
+//!
+//! Two injection points ship:
+//!
+//! * [`FaultyStream`] wraps a [`FrameStream`] on the **multi-process** path
+//!   (`bicompfl client` under a fault spec): per-frame artificial delay,
+//!   bytes-per-millisecond bandwidth pacing, mid-round dropout (the peer
+//!   closes after N frames), and truncated writes (a partial message on the
+//!   wire, then EOF). The federator sees exactly what a real flaky client
+//!   produces: late frames, short reads, closed descriptors.
+//! * [`FaultyTransport`] wraps any in-process [`Transport`] (selected by
+//!   `BICOMPFL_FAULTS` alongside `BICOMPFL_TRANSPORT`): it paces sends by
+//!   the per-client delay/bandwidth spec but never alters content — the
+//!   in-process simulation stays bit-identical under latency, which is what
+//!   pins `FaultSpec::none()` (and any pure-latency spec) to today's
+//!   accounting in the determinism suite.
+//!
+//! The federator's tolerance to these faults — deadline-based cohort
+//! completion, bounded retry, per-client counters — lives in
+//! [`crate::coordinator::distributed`]; the counters it fills are the
+//! [`FaultReport`] defined here.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+use super::socket::{encode_msg, FrameStream, MSG_FRAME, MSG_HEADER};
+use super::{Delivery, Frame, Leg, Result, Transport, TransportError, TransportStats};
+
+/// The faults injected on one client's link.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientFaults {
+    /// Artificial latency added before every frame send, in microseconds.
+    pub delay_us: u64,
+    /// Bandwidth cap in bytes per millisecond (0 = uncapped): each frame
+    /// send additionally sleeps `message_bytes / bytes_per_ms` ms.
+    pub bytes_per_ms: u64,
+    /// Mid-round dropout: after this many frames have been sent, the stream
+    /// shuts down and every further send fails like a dead peer.
+    pub drop_after_frames: Option<u64>,
+    /// Truncated write: the frame with this 0-based send index is cut short
+    /// on the wire (a seeded prefix of its message bytes), then the stream
+    /// shuts down — the receiver sees a short read, never a full frame.
+    pub truncate_frame: Option<u64>,
+}
+
+impl ClientFaults {
+    fn parse_kv(&mut self, key: &str, val: &str) -> std::result::Result<(), String> {
+        let num = |v: &str| -> std::result::Result<u64, String> {
+            v.parse::<u64>()
+                .map_err(|_| format!("fault value {v:?} for key {key:?} is not a number"))
+        };
+        match key {
+            "delay_us" => self.delay_us = num(val)?,
+            "cap" => self.bytes_per_ms = num(val)?,
+            "drop_after" => self.drop_after_frames = Some(num(val)?),
+            "trunc_at" => self.truncate_frame = Some(num(val)?),
+            k => {
+                return Err(format!(
+                    "unknown per-client fault key {k:?} (expected delay_us, cap, \
+                     drop_after, or trunc_at)"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Sleep out this link's artificial latency and bandwidth cost for one
+    /// `bytes`-sized message.
+    fn pace(&self, bytes: u64) {
+        if self.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+        }
+        if self.bytes_per_ms > 0 {
+            std::thread::sleep(Duration::from_millis(bytes / self.bytes_per_ms));
+        }
+    }
+}
+
+/// A full fault-injection configuration: global deadline/retry policy plus
+/// per-client (or default) link faults. Parsed from `--faults` or
+/// `BICOMPFL_FAULTS` via [`FaultSpec::parse`].
+///
+/// ## Spec grammar
+///
+/// `;`-separated clauses. A clause with a bare `key=value` sets a global;
+/// a clause `target:key=value,key=value` sets link faults for one client id
+/// (or `*` for the default applied to every client without its own entry):
+///
+/// ```text
+/// deadline_ms=200;retries=2;backoff_ms=10;1:delay_us=50000;2:drop_after=3;*:cap=4096
+/// ```
+///
+/// Globals: `deadline_ms` (per-round uplink deadline, 0 = wait forever),
+/// `accept_deadline_ms` (total accept-phase deadline, 0 = wait forever),
+/// `retries` (bounded retry attempts on transient I/O errors), `backoff_ms`
+/// (linear backoff unit between attempts), `seed` (drives every seeded
+/// injection choice). Per-client keys: `delay_us`, `cap` (bytes/ms),
+/// `drop_after` (frames), `trunc_at` (0-based frame index).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed for every randomized injection choice (truncation cut points).
+    pub seed: u64,
+    /// Per-round uplink deadline in milliseconds (0 = wait forever — the
+    /// strict protocol's behavior).
+    pub deadline_ms: u64,
+    /// Total deadline on the federator's accept phase in milliseconds
+    /// (0 = wait forever).
+    pub accept_deadline_ms: u64,
+    /// Bounded retry attempts on transient I/O errors while receiving.
+    pub max_retries: u32,
+    /// Linear backoff unit between retry attempts, in milliseconds.
+    pub backoff_ms: u64,
+    /// Link faults applied to clients without their own entry.
+    pub default: ClientFaults,
+    /// Per-client link-fault overrides.
+    pub clients: BTreeMap<u64, ClientFaults>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultSpec {
+    /// The zero-fault spec: no injected faults, no deadlines, no retries.
+    /// The determinism suite pins runs under this spec bit-identical to the
+    /// un-wrapped socket path.
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            deadline_ms: 0,
+            accept_deadline_ms: 0,
+            max_retries: 0,
+            backoff_ms: 0,
+            default: ClientFaults::default(),
+            clients: BTreeMap::new(),
+        }
+    }
+
+    /// True when this spec changes nothing: no deadlines, no retries, and
+    /// every link (default and per-client) carries zero faults. The seed is
+    /// ignored — it only matters once a fault draws on it.
+    pub fn is_none(&self) -> bool {
+        self.deadline_ms == 0
+            && self.accept_deadline_ms == 0
+            && self.max_retries == 0
+            && self.default == ClientFaults::default()
+            && self.clients.values().all(|c| *c == ClientFaults::default())
+    }
+
+    /// The link faults applying to `id`: its own entry, else the default.
+    pub fn client(&self, id: u64) -> ClientFaults {
+        self.clients.get(&id).copied().unwrap_or(self.default)
+    }
+
+    /// Parse the `--faults` / `BICOMPFL_FAULTS` grammar (see the type-level
+    /// docs). Unknown keys and malformed numbers are errors — a typo'd fault
+    /// spec must not silently mean "no faults".
+    pub fn parse(s: &str) -> std::result::Result<Self, String> {
+        let mut spec = Self::none();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some((target, body)) = clause.split_once(':') {
+                let mut faults = ClientFaults::default();
+                for kv in body.split(',') {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("fault clause {kv:?} is not key=value"))?;
+                    faults.parse_kv(k.trim(), v.trim())?;
+                }
+                if target.trim() == "*" {
+                    spec.default = faults;
+                } else {
+                    let id: u64 = target
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("fault target {target:?} is not a client id or *"))?;
+                    spec.clients.insert(id, faults);
+                }
+            } else {
+                let (k, v) = clause
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault clause {clause:?} is not key=value"))?;
+                let num = |v: &str| -> std::result::Result<u64, String> {
+                    v.parse::<u64>()
+                        .map_err(|_| format!("fault value {v:?} for key {k:?} is not a number"))
+                };
+                match k.trim() {
+                    "deadline_ms" => spec.deadline_ms = num(v.trim())?,
+                    "accept_deadline_ms" => spec.accept_deadline_ms = num(v.trim())?,
+                    "retries" => spec.max_retries = num(v.trim())? as u32,
+                    "backoff_ms" => spec.backoff_ms = num(v.trim())?,
+                    "seed" => spec.seed = num(v.trim())?,
+                    k => {
+                        return Err(format!(
+                            "unknown global fault key {k:?} (expected deadline_ms, \
+                             accept_deadline_ms, retries, backoff_ms, or seed)"
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Read `BICOMPFL_FAULTS`. Unset or empty means no fault layer
+    /// (`Ok(None)`); a malformed value is an error the caller must surface —
+    /// the same contract as `BICOMPFL_TRANSPORT`'s unknown-value panic.
+    pub fn from_env() -> std::result::Result<Option<Self>, String> {
+        match std::env::var("BICOMPFL_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Self::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Per-client fault counters a tolerant federator run fills in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientFaultCounters {
+    /// Client id.
+    pub client: u64,
+    /// Rounds where this client's uplink made the realized cohort.
+    pub delivered: u64,
+    /// Rounds lost to the deadline (the uplink did not arrive in time).
+    pub straggled: u64,
+    /// Rounds lost to a hard failure (dropout, truncation, bad frame).
+    pub dropped: u64,
+    /// Transient-I/O retry attempts spent on this client.
+    pub retries: u64,
+}
+
+/// The federator's per-client fault accounting for one run, rendered by
+/// [`crate::metrics::render_faults`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// One entry per client, in id order.
+    pub clients: Vec<ClientFaultCounters>,
+}
+
+impl FaultReport {
+    /// An all-zero report for `n` clients.
+    pub fn new(n: usize) -> Self {
+        Self {
+            clients: (0..n)
+                .map(|i| ClientFaultCounters {
+                    client: i as u64,
+                    ..Default::default()
+                })
+                .collect(),
+        }
+    }
+
+    /// The report of a fully healthy run: every client delivered every
+    /// round, nothing straggled, dropped, or retried.
+    pub fn all_delivered(n: usize, rounds: u64) -> Self {
+        let mut rep = Self::new(n);
+        for c in &mut rep.clients {
+            c.delivered = rounds;
+        }
+        rep
+    }
+}
+
+/// A [`FrameStream`] with seeded link faults injected on the send side.
+/// Receives pass through untouched — the faulty party is this endpoint's
+/// *uplink*, which is what the federator's deadline tolerance is tested
+/// against.
+pub struct FaultyStream {
+    inner: FrameStream,
+    faults: ClientFaults,
+    rng: Xoshiro256,
+    frames_sent: u64,
+}
+
+impl FaultyStream {
+    /// Wrap `inner` with `faults`; `rng` drives the seeded injection
+    /// choices (truncation cut points).
+    pub fn new(inner: FrameStream, faults: ClientFaults, rng: Xoshiro256) -> Self {
+        Self {
+            inner,
+            faults,
+            rng,
+            frames_sent: 0,
+        }
+    }
+
+    /// The wrapped stream, for the receive-side calls faults do not touch.
+    pub fn inner_mut(&mut self) -> &mut FrameStream {
+        &mut self.inner
+    }
+
+    /// Send one frame through the fault gauntlet: dropout closes the stream
+    /// and fails like a dead peer; a truncated write puts a seeded prefix of
+    /// the message on the wire and then closes; otherwise the send is paced
+    /// by the link's delay and bandwidth cap and forwarded intact.
+    pub fn send_frame(&mut self, frame: &Frame) -> Result<u64> {
+        if let Some(limit) = self.faults.drop_after_frames {
+            if self.frames_sent >= limit {
+                self.inner.shutdown();
+                return Err(TransportError::PeerClosed);
+            }
+        }
+        let (buf, bits) = frame.encode();
+        if self.faults.truncate_frame == Some(self.frames_sent) {
+            let msg = encode_msg(MSG_FRAME, &buf);
+            // A seeded cut strictly inside the message: at least one byte on
+            // the wire, at least one missing.
+            let cut = 1 + self.rng.next_below(msg.len() - 1);
+            self.inner.write_raw(&msg[..cut])?;
+            self.inner.shutdown();
+            self.frames_sent += 1;
+            return Err(TransportError::Truncated {
+                expected: msg.len(),
+                got: cut,
+            });
+        }
+        self.faults.pace((MSG_HEADER + buf.len()) as u64);
+        let sent = self.inner.send_frame_encoded(&buf, bits)?;
+        self.frames_sent += 1;
+        Ok(sent)
+    }
+}
+
+/// A latency/bandwidth-shaping wrapper over any in-process [`Transport`]:
+/// sends are paced by the per-client spec (keyed by the frame's originating
+/// client id) and then delegated unchanged. Content is never altered, so
+/// every run under a pure-latency spec — and in particular under
+/// [`FaultSpec::none()`] — is bit-identical to the wrapped transport alone;
+/// the determinism suite pins this.
+///
+/// Selected by setting `BICOMPFL_FAULTS` alongside `BICOMPFL_TRANSPORT`
+/// (see [`super::from_env`]).
+pub struct FaultyTransport {
+    inner: Arc<dyn Transport>,
+    spec: FaultSpec,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with the link-shaping half of `spec`.
+    pub fn new(inner: Arc<dyn Transport>, spec: FaultSpec) -> Self {
+        Self { inner, spec }
+    }
+
+    fn pace_frame(&self, frame: &Frame) {
+        // The federator sentinel id has no BTreeMap entry in practice, so it
+        // falls through to the default link like any unlisted client.
+        self.spec
+            .client(match frame {
+                Frame::Plan(p) => p.client,
+                Frame::Uplink(u) => u.client,
+                Frame::Downlink(d) => d.client,
+                Frame::Model(m) => m.client,
+            })
+            .pace(frame.counted_bits().div_ceil(8));
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn send(&self, leg: Leg, frame: Frame) -> Delivery {
+        self.pace_frame(&frame);
+        self.inner.send(leg, frame)
+    }
+
+    fn relay(&self, leg: Leg, frame: &Frame) -> u64 {
+        self.pace_frame(frame);
+        self.inner.relay(leg, frame)
+    }
+
+    fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64 {
+        if copies > 0 {
+            self.pace_frame(frame);
+        }
+        self.inner.relay_copies(leg, frame, copies)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{Loopback, SideInfo, UplinkFrame};
+    use std::os::unix::net::UnixStream;
+
+    fn sample_frame() -> Frame {
+        Frame::Uplink(UplinkFrame {
+            client: 1,
+            round: 0,
+            bits_per_index: 8,
+            indices: vec![vec![1, 2, 3]],
+            side: SideInfo::None,
+        })
+    }
+
+    #[test]
+    fn parse_round_trips_the_documented_grammar() {
+        let spec = FaultSpec::parse(
+            "deadline_ms=200; accept_deadline_ms=5000; retries=2; backoff_ms=10; seed=9; \
+             1:delay_us=50000; 2:drop_after=3,trunc_at=1; *:cap=4096",
+        )
+        .unwrap();
+        assert_eq!(spec.deadline_ms, 200);
+        assert_eq!(spec.accept_deadline_ms, 5000);
+        assert_eq!(spec.max_retries, 2);
+        assert_eq!(spec.backoff_ms, 10);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.client(1).delay_us, 50_000);
+        assert_eq!(spec.client(2).drop_after_frames, Some(3));
+        assert_eq!(spec.client(2).truncate_frame, Some(1));
+        // Unlisted clients get the `*` default.
+        assert_eq!(spec.client(0).bytes_per_ms, 4096);
+        assert!(!spec.is_none());
+    }
+
+    #[test]
+    fn parse_rejects_typos_instead_of_meaning_no_faults() {
+        assert!(FaultSpec::parse("deadline=200").is_err());
+        assert!(FaultSpec::parse("1:delay=5").is_err());
+        assert!(FaultSpec::parse("deadline_ms=soon").is_err());
+        assert!(FaultSpec::parse("x:delay_us=5").is_err());
+        assert!(FaultSpec::parse("1:delay_us").is_err());
+    }
+
+    #[test]
+    fn empty_and_zero_specs_are_none() {
+        assert!(FaultSpec::parse("").unwrap().is_none());
+        assert!(FaultSpec::parse("seed=7").unwrap().is_none());
+        assert!(FaultSpec::parse("1:delay_us=0").unwrap().is_none());
+        assert!(!FaultSpec::parse("deadline_ms=1").unwrap().is_none());
+        assert!(!FaultSpec::parse("*:cap=1").unwrap().is_none());
+    }
+
+    #[test]
+    fn dropout_closes_the_stream_after_the_frame_budget() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let faults = ClientFaults {
+            drop_after_frames: Some(2),
+            ..Default::default()
+        };
+        let mut tx = FaultyStream::new(FrameStream::new(a), faults, Xoshiro256::new(1));
+        let mut rx = FrameStream::new(b);
+        for _ in 0..2 {
+            tx.send_frame(&sample_frame()).unwrap();
+            rx.recv_frame().unwrap();
+        }
+        assert!(matches!(
+            tx.send_frame(&sample_frame()),
+            Err(TransportError::PeerClosed)
+        ));
+        // The receive side sees a dead peer, not garbage.
+        assert!(matches!(rx.recv_msg(), Err(TransportError::PeerClosed)));
+    }
+
+    #[test]
+    fn truncated_frame_injection_yields_a_short_read_on_the_peer() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let faults = ClientFaults {
+            truncate_frame: Some(0),
+            ..Default::default()
+        };
+        let mut tx = FaultyStream::new(FrameStream::new(a), faults, Xoshiro256::new(42));
+        let mut rx = FrameStream::new(b);
+        assert!(matches!(
+            tx.send_frame(&sample_frame()),
+            Err(TransportError::Truncated { .. })
+        ));
+        // The peer gets a typed truncation or (for a cut inside the 5-byte
+        // envelope followed by EOF) a clean peer-closed — never a panic.
+        assert!(matches!(
+            rx.recv_msg(),
+            Err(TransportError::Truncated { .. }) | Err(TransportError::PeerClosed)
+        ));
+    }
+
+    #[test]
+    fn faulty_transport_delegates_bit_identically() {
+        let plain = Loopback::new();
+        let shaped = FaultyTransport::new(Arc::new(Loopback::new()), FaultSpec::none());
+        for leg in [Leg::Uplink, Leg::Downlink, Leg::DownlinkBroadcast] {
+            let f = sample_frame();
+            let a = plain.send(leg, f.clone());
+            let b = shaped.send(leg, f.clone());
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.frame, b.frame);
+            assert_eq!(plain.relay_copies(leg, &f, 3), shaped.relay_copies(leg, &f, 3));
+        }
+        let (p, s) = (plain.stats(), shaped.stats());
+        assert_eq!(p.ul_bits, s.ul_bits);
+        assert_eq!(p.dl_bits, s.dl_bits);
+        assert_eq!(p.dl_bc_bits, s.dl_bc_bits);
+        assert_eq!(p.frames, s.frames);
+    }
+}

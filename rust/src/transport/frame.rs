@@ -16,6 +16,7 @@
 use crate::mrc::block::BlockPlan;
 
 use super::wire::{WireReader, WireWriter};
+use super::TransportError;
 
 /// Sentinel party id for frames the federator originates (GR-Reconst's
 /// second MRC pass, baseline model broadcasts).
@@ -446,39 +447,76 @@ impl Frame {
         }
     }
 
-    /// Unwrap as a plan frame; panics on a misrouted kind.
-    pub fn into_plan(self) -> PlanFrame {
+    /// Unwrap as a plan frame; a misrouted kind is a typed
+    /// [`TransportError::BadFrame`]. The peer-facing distributed path uses
+    /// these `try_into_*` forms so a confused peer cannot crash the
+    /// federator by sending the wrong frame kind.
+    pub fn try_into_plan(self) -> Result<PlanFrame, TransportError> {
         match self {
-            Frame::Plan(p) => p,
-            f => panic!("transport delivered a {} frame, expected plan", f.kind_name()),
+            Frame::Plan(p) => Ok(p),
+            f => Err(TransportError::BadFrame(format!(
+                "transport delivered a {} frame, expected plan",
+                f.kind_name()
+            ))),
         }
+    }
+
+    /// Unwrap as an uplink frame; a misrouted kind is a typed
+    /// [`TransportError::BadFrame`].
+    pub fn try_into_uplink(self) -> Result<UplinkFrame, TransportError> {
+        match self {
+            Frame::Uplink(u) => Ok(u),
+            f => Err(TransportError::BadFrame(format!(
+                "transport delivered a {} frame, expected uplink",
+                f.kind_name()
+            ))),
+        }
+    }
+
+    /// Unwrap as a downlink frame; a misrouted kind is a typed
+    /// [`TransportError::BadFrame`].
+    pub fn try_into_downlink(self) -> Result<DownlinkFrame, TransportError> {
+        match self {
+            Frame::Downlink(d) => Ok(d),
+            f => Err(TransportError::BadFrame(format!(
+                "transport delivered a {} frame, expected downlink",
+                f.kind_name()
+            ))),
+        }
+    }
+
+    /// Unwrap as a model frame; a misrouted kind is a typed
+    /// [`TransportError::BadFrame`].
+    pub fn try_into_model(self) -> Result<ModelFrame, TransportError> {
+        match self {
+            Frame::Model(m) => Ok(m),
+            f => Err(TransportError::BadFrame(format!(
+                "transport delivered a {} frame, expected model",
+                f.kind_name()
+            ))),
+        }
+    }
+
+    /// Unwrap as a plan frame; panics on a misrouted kind. The trusted
+    /// in-process form — a loopback transport delivering the wrong kind is a
+    /// broken process invariant, not a recoverable peer condition.
+    pub fn into_plan(self) -> PlanFrame {
+        self.try_into_plan().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Unwrap as an uplink frame; panics on a misrouted kind.
     pub fn into_uplink(self) -> UplinkFrame {
-        match self {
-            Frame::Uplink(u) => u,
-            f => panic!("transport delivered a {} frame, expected uplink", f.kind_name()),
-        }
+        self.try_into_uplink().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Unwrap as a downlink frame; panics on a misrouted kind.
     pub fn into_downlink(self) -> DownlinkFrame {
-        match self {
-            Frame::Downlink(d) => d,
-            f => panic!(
-                "transport delivered a {} frame, expected downlink",
-                f.kind_name()
-            ),
-        }
+        self.try_into_downlink().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Unwrap as a model frame; panics on a misrouted kind.
     pub fn into_model(self) -> ModelFrame {
-        match self {
-            Frame::Model(m) => m,
-            f => panic!("transport delivered a {} frame, expected model", f.kind_name()),
-        }
+        self.try_into_model().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Serialize to the byte-exact wire form. Returns `(bytes, payload_bits)`
@@ -634,38 +672,113 @@ impl Frame {
         (w.finish(), bits)
     }
 
-    /// Deserialize a frame from its wire form.
+    /// Deserialize a frame from its wire form, panicking on malformed input.
+    /// The trusted in-process form ([`super::FramedLoopback`] and the
+    /// socketpair transport decode bytes they themselves encoded): a failure
+    /// here is a broken process invariant. Untrusted bytes from a peer go
+    /// through [`Frame::try_decode`] instead.
     pub fn decode(buf: &[u8]) -> Frame {
+        Self::try_decode(buf).unwrap_or_else(|e| panic!("frame decode failed: {e}"))
+    }
+
+    /// Deserialize a frame from its wire form, returning a typed error on
+    /// malformed input: a buffer that ends early anywhere — mid-header,
+    /// mid-count, mid-payload — is [`TransportError::Truncated`]; a bad
+    /// magic/version, an unknown kind, an out-of-range count, or trailing
+    /// bytes are [`TransportError::BadFrame`]. Never panics on a truncation
+    /// of a valid frame (the fuzz suite drives every prefix length). The
+    /// socket receive path runs [`check_wire_counts`] first, so hostile
+    /// count fields are refused before any allocation is sized; this decoder
+    /// additionally caps its own row counts and widths as defense in depth.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use bicompfl::transport::{Frame, SideInfo, TransportError, UplinkFrame};
+    ///
+    /// let (buf, _) = Frame::Uplink(UplinkFrame {
+    ///     client: 0,
+    ///     round: 0,
+    ///     bits_per_index: 6,
+    ///     indices: vec![vec![5, 63, 0]],
+    ///     side: SideInfo::None,
+    /// })
+    /// .encode();
+    /// assert!(Frame::try_decode(&buf).is_ok());
+    /// assert!(matches!(
+    ///     Frame::try_decode(&buf[..buf.len() - 1]),
+    ///     Err(TransportError::Truncated { .. })
+    /// ));
+    /// ```
+    pub fn try_decode(buf: &[u8]) -> Result<Frame, TransportError> {
+        let bad = TransportError::BadFrame;
         let mut r = WireReader::new(buf);
-        assert_eq!(r.get_u16(), MAGIC, "bad frame magic");
-        assert_eq!(r.get_u8(), VERSION, "unsupported frame version");
-        let kind = r.get_u8();
-        let client = r.get_u64();
-        let round = r.get_u64();
+        let magic = r.get_u16()?;
+        if magic != MAGIC {
+            return Err(bad(format!(
+                "bad frame magic {magic:#06x}, expected {MAGIC:#06x}"
+            )));
+        }
+        let version = r.get_u8()?;
+        if version != VERSION {
+            return Err(bad(format!("unsupported frame version {version}")));
+        }
+        let kind = r.get_u8()?;
+        let client = r.get_u64()?;
+        let round = r.get_u64()?;
+        // Row-count / width guards on the fields that size allocations or
+        // drive bit-read loops. `check_wire_counts` already enforces these
+        // on the socket path; repeating them here keeps `try_decode` safe on
+        // bytes that skipped that check.
+        let check_rows = |what: &str, n: usize| -> Result<(), TransportError> {
+            if n as u64 > MAX_WIRE_ROWS {
+                Err(bad(format!("{what} count {n} exceeds {MAX_WIRE_ROWS}")))
+            } else {
+                Ok(())
+            }
+        };
+        let check_width = |what: &str, w: u8| -> Result<(), TransportError> {
+            if !(1..=64).contains(&w) {
+                Err(bad(format!("{what} {w} outside 1..=64")))
+            } else {
+                Ok(())
+            }
+        };
+        // Allocation sizes are clamped: a hostile count costs at most a
+        // small reserve, and the push loop below hits a typed truncation
+        // error long before a fake count could matter.
+        let cap = |n: usize| n.min(1 << 16);
         let frame = match kind {
             KIND_PLAN => {
-                let d = r.get_u32();
-                let n_bounds = r.get_u32() as usize;
-                let bounds: Vec<u32> = (0..n_bounds).map(|_| r.get_u32()).collect();
-                let overhead_bits = r.get_u64();
+                let d = r.get_u32()?;
+                let n_bounds = r.get_u32()? as usize;
+                check_rows("plan bound", n_bounds)?;
+                let mut bounds = Vec::with_capacity(cap(n_bounds));
+                for _ in 0..n_bounds {
+                    bounds.push(r.get_u32()?);
+                }
+                if bounds.windows(2).any(|p| p[0] >= p[1]) {
+                    return Err(bad("plan bounds are not strictly increasing".into()));
+                }
+                let overhead_bits = r.get_u64()?;
                 r.begin_payload();
                 match classify_plan(&bounds, overhead_bits) {
                     PlanSignal::None => {}
                     PlanSignal::PerBlock { width } => {
                         for pair in bounds.windows(2) {
-                            let size = r.get_bits(width) + 1;
+                            let size = r.get_bits(width)? + 1;
                             debug_assert_eq!(size, (pair[1] - pair[0]) as u64);
                         }
                     }
                     PlanSignal::Single { width } => {
-                        let size = r.get_bits(width) + 1;
+                        let size = r.get_bits(width)? + 1;
                         debug_assert_eq!(size, (bounds[1] - bounds[0]) as u64);
                     }
                     PlanSignal::Opaque => {
                         let mut rem = overhead_bits;
                         while rem > 0 {
                             let w_now = rem.min(64) as u32;
-                            r.get_bits(w_now);
+                            r.get_bits(w_now)?;
                             rem -= w_now as u64;
                         }
                     }
@@ -680,38 +793,47 @@ impl Frame {
                 })
             }
             KIND_UPLINK => {
-                let bits_per_index = r.get_u8();
-                let n_samples = r.get_u32() as usize;
-                let n_blocks = r.get_u32() as usize;
-                let side_kind = r.get_u8();
+                let bits_per_index = r.get_u8()?;
+                check_width("uplink bits_per_index", bits_per_index)?;
+                let n_samples = r.get_u32()? as usize;
+                check_rows("uplink sample", n_samples)?;
+                let n_blocks = r.get_u32()? as usize;
+                let side_kind = r.get_u8()?;
                 let (scale, tau_bits, side_len) = match side_kind {
                     0 => (0.0, 0, 0),
-                    1 => (r.get_f32(), 0, 0),
+                    1 => (r.get_f32()?, 0, 0),
                     2 => {
-                        let tb = r.get_u8();
-                        let len = r.get_u32() as usize;
+                        let tb = r.get_u8()?;
+                        if tb > 64 {
+                            return Err(bad(format!("uplink tau_bits {tb} > 64")));
+                        }
+                        let len = r.get_u32()? as usize;
                         (0.0, tb, len)
                     }
-                    k => panic!("unknown side-info kind {k}"),
+                    k => return Err(bad(format!("unknown side-info kind {k}"))),
                 };
                 r.begin_payload();
-                let indices: Vec<Vec<u32>> = (0..n_samples)
-                    .map(|_| {
-                        (0..n_blocks)
-                            .map(|_| r.get_bits(bits_per_index as u32) as u32)
-                            .collect()
-                    })
-                    .collect();
+                let mut indices = Vec::with_capacity(cap(n_samples));
+                for _ in 0..n_samples {
+                    let mut row = Vec::with_capacity(cap(n_blocks));
+                    for _ in 0..n_blocks {
+                        row.push(r.get_bits(bits_per_index as u32)? as u32);
+                    }
+                    indices.push(row);
+                }
                 let side = match side_kind {
                     0 => SideInfo::None,
                     1 => SideInfo::Scale(scale),
                     _ => {
-                        let norm = f32::from_bits(r.get_bits(32) as u32);
-                        let signs: Vec<bool> =
-                            (0..side_len).map(|_| r.get_bits(1) == 1).collect();
-                        let tau: Vec<u32> = (0..side_len)
-                            .map(|_| r.get_bits(tau_bits as u32) as u32)
-                            .collect();
+                        let norm = f32::from_bits(r.get_bits(32)? as u32);
+                        let mut signs = Vec::with_capacity(cap(side_len));
+                        for _ in 0..side_len {
+                            signs.push(r.get_bits(1)? == 1);
+                        }
+                        let mut tau = Vec::with_capacity(cap(side_len));
+                        for _ in 0..side_len {
+                            tau.push(r.get_bits(tau_bits as u32)? as u32);
+                        }
                         SideInfo::Qs(QsSide {
                             norm,
                             signs,
@@ -730,18 +852,24 @@ impl Frame {
                 })
             }
             KIND_DOWNLINK => {
-                let bits_per_index = r.get_u8();
-                let n_samples = r.get_u32() as usize;
-                let n_slots = r.get_u32() as usize;
-                let blocks: Vec<u32> = (0..n_slots).map(|_| r.get_u32()).collect();
+                let bits_per_index = r.get_u8()?;
+                check_width("downlink bits_per_index", bits_per_index)?;
+                let n_samples = r.get_u32()? as usize;
+                check_rows("downlink sample", n_samples)?;
+                let n_slots = r.get_u32()? as usize;
+                let mut blocks = Vec::with_capacity(cap(n_slots));
+                for _ in 0..n_slots {
+                    blocks.push(r.get_u32()?);
+                }
                 r.begin_payload();
-                let indices: Vec<Vec<u32>> = (0..n_samples)
-                    .map(|_| {
-                        (0..n_slots)
-                            .map(|_| r.get_bits(bits_per_index as u32) as u32)
-                            .collect()
-                    })
-                    .collect();
+                let mut indices = Vec::with_capacity(cap(n_samples));
+                for _ in 0..n_samples {
+                    let mut row = Vec::with_capacity(cap(n_slots));
+                    for _ in 0..n_slots {
+                        row.push(r.get_bits(bits_per_index as u32)? as u32);
+                    }
+                    indices.push(row);
+                }
                 r.end_payload();
                 Frame::Downlink(DownlinkFrame {
                     client,
@@ -752,40 +880,44 @@ impl Frame {
                 })
             }
             KIND_MODEL => {
-                let payload_kind = r.get_u8();
+                let payload_kind = r.get_u8()?;
                 let payload = match payload_kind {
                     0 => {
-                        let len = r.get_u32() as usize;
+                        let len = r.get_u32()? as usize;
                         r.begin_payload();
-                        let v: Vec<f32> = (0..len)
-                            .map(|_| f32::from_bits(r.get_bits(32) as u32))
-                            .collect();
+                        let mut v = Vec::with_capacity(cap(len));
+                        for _ in 0..len {
+                            v.push(f32::from_bits(r.get_bits(32)? as u32));
+                        }
                         r.end_payload();
                         ModelPayload::Dense(v)
                     }
                     1 => {
-                        let len = r.get_u32() as usize;
+                        let len = r.get_u32()? as usize;
                         r.begin_payload();
-                        let scale = f32::from_bits(r.get_bits(32) as u32);
-                        let signs: Vec<bool> = (0..len).map(|_| r.get_bits(1) == 1).collect();
+                        let scale = f32::from_bits(r.get_bits(32)? as u32);
+                        let mut signs = Vec::with_capacity(cap(len));
+                        for _ in 0..len {
+                            signs.push(r.get_bits(1)? == 1);
+                        }
                         r.end_payload();
                         ModelPayload::Signs { signs, scale }
                     }
                     2 => {
-                        let d = r.get_u32();
-                        let k = r.get_u32() as usize;
+                        let d = r.get_u32()?;
+                        let k = r.get_u32()? as usize;
                         r.begin_payload();
                         let ib = sparse_index_bits(d);
-                        let mut idx = Vec::with_capacity(k);
-                        let mut val = Vec::with_capacity(k);
+                        let mut idx = Vec::with_capacity(cap(k));
+                        let mut val = Vec::with_capacity(cap(k));
                         for _ in 0..k {
-                            idx.push(r.get_bits(ib) as u32);
-                            val.push(f32::from_bits(r.get_bits(32) as u32));
+                            idx.push(r.get_bits(ib)? as u32);
+                            val.push(f32::from_bits(r.get_bits(32)? as u32));
                         }
                         r.end_payload();
                         ModelPayload::Sparse { d, idx, val }
                     }
-                    k => panic!("unknown model payload kind {k}"),
+                    k => return Err(bad(format!("unknown model payload kind {k}"))),
                 };
                 Frame::Model(ModelFrame {
                     client,
@@ -793,10 +925,15 @@ impl Frame {
                     payload,
                 })
             }
-            k => panic!("unknown frame kind {k}"),
+            k => return Err(bad(format!("unknown frame kind {k}"))),
         };
-        assert_eq!(r.consumed(), buf.len(), "trailing bytes after frame");
-        frame
+        if r.consumed() != buf.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after frame",
+                buf.len() - r.consumed()
+            )));
+        }
+        Ok(frame)
     }
 }
 

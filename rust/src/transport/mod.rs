@@ -34,18 +34,80 @@
 //! full suite under `framed` and under `socket`). The determinism suite pins
 //! all three bit-identical.
 
+pub mod fault;
 pub mod frame;
 pub mod socket;
 pub mod wire;
 
+use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+pub use fault::{
+    ClientFaultCounters, ClientFaults, FaultReport, FaultSpec, FaultyStream, FaultyTransport,
+};
 pub use frame::{
     DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide, SideInfo, UplinkFrame,
     FEDERATOR,
 };
-pub use socket::{FrameStream, SocketTransport, TransportError};
+pub use socket::{FrameStream, SocketTransport};
+
+/// Typed failures of the wire-facing transport paths (the socket peer layer,
+/// the fallible frame decoder, and the fault-injection wrappers). The
+/// blocking peer API returns these instead of panicking so a federator can
+/// survive a misbehaving client (and a test can assert on the exact failure
+/// mode).
+#[derive(Debug)]
+pub enum TransportError {
+    /// An OS-level socket failure.
+    Io(io::Error),
+    /// The peer closed the connection cleanly at a message boundary.
+    PeerClosed,
+    /// The stream or buffer ended mid-message: `got` of `expected` bytes.
+    Truncated { expected: usize, got: usize },
+    /// The bytes on the wire are not a valid frame/message.
+    BadFrame(String),
+    /// The peer violated the HELLO/ACK handshake protocol.
+    Handshake(String),
+    /// The federator rejected this client id (out of range or already
+    /// connected — a stale re-connect).
+    StaleClient { id: u64 },
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "socket i/o error: {e}"),
+            TransportError::PeerClosed => write!(f, "peer closed the connection"),
+            TransportError::Truncated { expected, got } => {
+                write!(f, "truncated message: got {got} of {expected} bytes")
+            }
+            TransportError::BadFrame(why) => write!(f, "bad frame on the wire: {why}"),
+            TransportError::Handshake(why) => write!(f, "handshake violation: {why}"),
+            TransportError::StaleClient { id } => {
+                write!(f, "federator rejected client id {id} (stale or duplicate)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+/// Result alias for the transport layer's fallible paths.
+pub type Result<T> = std::result::Result<T, TransportError>;
 
 /// Which link a frame travels on. Point-to-point downlink and broadcast
 /// downlink are metered separately (Appendix I's two downlink conventions).
@@ -285,8 +347,14 @@ impl Transport for FramedLoopback {
 /// unset/empty/`loopback` selects [`Loopback`]. Each call returns a fresh
 /// instance with its own meter, so concurrent algorithms never share
 /// counters.
+///
+/// When `BICOMPFL_FAULTS` names a nonzero [`FaultSpec`], the base transport
+/// is wrapped in a [`FaultyTransport`] that applies the spec's per-client
+/// pacing (artificial delay and bandwidth caps). The wrapper never alters
+/// frame content or metering, so every record stays bit-identical to the
+/// unwrapped path — the CI fault job runs the whole suite this way.
 pub fn from_env() -> Arc<dyn Transport> {
-    match std::env::var("BICOMPFL_TRANSPORT").as_deref() {
+    let base: Arc<dyn Transport> = match std::env::var("BICOMPFL_TRANSPORT").as_deref() {
         Ok("framed") => Arc::new(FramedLoopback::new()),
         Ok("socket") => Arc::new(
             SocketTransport::duplex().expect("BICOMPFL_TRANSPORT=socket: socketpair failed"),
@@ -295,6 +363,11 @@ pub fn from_env() -> Arc<dyn Transport> {
         Ok(other) => panic!(
             "BICOMPFL_TRANSPORT={other:?}: expected \"loopback\", \"framed\", or \"socket\""
         ),
+    };
+    match FaultSpec::from_env() {
+        Ok(Some(spec)) if !spec.is_none() => Arc::new(FaultyTransport::new(base, spec)),
+        Ok(_) => base,
+        Err(why) => panic!("BICOMPFL_FAULTS: {why}"),
     }
 }
 

@@ -43,11 +43,12 @@ use super::frame::Frame;
 use super::{Delivery, Leg, Meter, Transport, TransportStats};
 
 /// Message tags of the socket protocol.
-const MSG_FRAME: u8 = 1;
+pub(crate) const MSG_FRAME: u8 = 1;
 const MSG_HELLO: u8 = 2;
 const MSG_ACK: u8 = 3;
 const MSG_NACK: u8 = 4;
 const MSG_BYE: u8 = 5;
+const MSG_COHORT: u8 = 6;
 
 /// Handshake magic/version, independent of the frame codec's so the two can
 /// evolve separately.
@@ -63,7 +64,7 @@ pub const NACK_STALE_ID: u8 = 1;
 pub const NACK_BAD_HELLO: u8 = 2;
 
 /// Bytes of the `[tag][len]` message envelope.
-const MSG_HEADER: usize = 5;
+pub(crate) const MSG_HEADER: usize = 5;
 
 /// Upper bound on one message body. The length prefix is attacker-controlled
 /// bytes until validated, so it must be sanity-capped *before* the receive
@@ -72,63 +73,14 @@ const MSG_HEADER: usize = 5;
 /// spare; anything larger is a corrupt stream, not a frame.
 const MAX_MSG_BYTES: usize = 64 << 20;
 
-/// Typed failures of the socket layer. The blocking peer API returns these
-/// instead of panicking so a federator can survive a misbehaving client (and
-/// a test can assert on the exact failure mode).
-#[derive(Debug)]
-pub enum TransportError {
-    /// An OS-level socket failure.
-    Io(io::Error),
-    /// The peer closed the connection cleanly at a message boundary.
-    PeerClosed,
-    /// The stream ended mid-message: `got` of `expected` bytes arrived.
-    Truncated { expected: usize, got: usize },
-    /// The bytes on the wire are not a valid frame/message.
-    BadFrame(String),
-    /// The peer violated the HELLO/ACK handshake protocol.
-    Handshake(String),
-    /// The federator rejected this client id (out of range or already
-    /// connected — a stale re-connect).
-    StaleClient { id: u64 },
-}
-
-impl std::fmt::Display for TransportError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            TransportError::Io(e) => write!(f, "socket i/o error: {e}"),
-            TransportError::PeerClosed => write!(f, "peer closed the connection"),
-            TransportError::Truncated { expected, got } => {
-                write!(f, "truncated message: got {got} of {expected} bytes")
-            }
-            TransportError::BadFrame(why) => write!(f, "bad frame on the wire: {why}"),
-            TransportError::Handshake(why) => write!(f, "handshake violation: {why}"),
-            TransportError::StaleClient { id } => {
-                write!(f, "federator rejected client id {id} (stale or duplicate)")
-            }
-        }
-    }
-}
-
-impl std::error::Error for TransportError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            TransportError::Io(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<io::Error> for TransportError {
-    fn from(e: io::Error) -> Self {
-        TransportError::Io(e)
-    }
-}
-
-/// Result alias for the socket layer.
-pub type Result<T> = std::result::Result<T, TransportError>;
+// The typed error surface of every wire-facing path now lives at the
+// transport root (the fallible frame decoder and the fault layer share it);
+// re-exported here so existing `transport::socket::TransportError` imports
+// keep compiling.
+pub use super::{Result, TransportError};
 
 /// Build one `[tag][len][body]` message.
-fn encode_msg(tag: u8, body: &[u8]) -> Vec<u8> {
+pub(crate) fn encode_msg(tag: u8, body: &[u8]) -> Vec<u8> {
     let mut msg = Vec::with_capacity(MSG_HEADER + body.len());
     msg.push(tag);
     msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
@@ -147,19 +99,22 @@ pub enum Msg {
     Ack(Vec<u8>),
     /// Handshake reject with a reason code and the offending value.
     Nack { code: u8, detail: u64 },
+    /// The federator's realized cohort for one round: the client ids whose
+    /// uplinks were delivered before the deadline. An uncounted control
+    /// message (like ACK/BYE) of the deadline-tolerant protocol.
+    Cohort { round: u64, ids: Vec<u64> },
     /// Graceful shutdown.
     Bye,
 }
 
-/// Validation of an untrusted frame buffer before handing it to the
-/// (trusted, panicking) [`Frame::decode`]: header magic/version/kind plus
-/// the full structural count check of
-/// [`check_wire_counts`](crate::transport::frame::check_wire_counts), so a
-/// malformed body becomes a typed error instead of a decoder panic or an
-/// attacker-sized allocation.
+/// Validation of an untrusted frame buffer before decoding it: header
+/// magic/version/kind plus the full structural count check of
+/// [`check_wire_counts`](crate::transport::frame::check_wire_counts), then
+/// the fallible [`Frame::try_decode`] — a malformed body becomes a typed
+/// error instead of a decoder panic or an attacker-sized allocation.
 fn decode_frame_checked(body: &[u8]) -> Result<Frame> {
     match crate::transport::frame::check_wire_counts(body) {
-        Ok(()) => Ok(Frame::decode(body)),
+        Ok(()) => Frame::try_decode(body),
         Err(why) => Err(TransportError::BadFrame(why)),
     }
 }
@@ -304,6 +259,26 @@ impl FrameStream {
                     detail: u64::from_le_bytes(body[1..9].try_into().unwrap()),
                 })
             }
+            MSG_COHORT => {
+                if len < 12 {
+                    return Err(TransportError::Handshake(format!(
+                        "cohort body is {len} bytes, expected at least 12"
+                    )));
+                }
+                let round = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let count = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+                if len != 12 + 8 * count {
+                    return Err(TransportError::Handshake(format!(
+                        "cohort body is {len} bytes, expected {} for {count} ids",
+                        12 + 8 * count
+                    )));
+                }
+                let ids = body[12..]
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Msg::Cohort { round, ids })
+            }
             MSG_BYE => Ok(Msg::Bye),
             t => Err(TransportError::BadFrame(format!("unknown message tag {t}"))),
         }
@@ -367,6 +342,53 @@ impl FrameStream {
         self.send_msg(MSG_NACK, body)
     }
 
+    /// Send one round's realized cohort (the client ids whose uplinks were
+    /// delivered before the deadline). A control message: unmetered, like
+    /// ACK and BYE.
+    pub fn send_cohort(&mut self, round: u64, ids: &[u64]) -> Result<()> {
+        let mut body = Vec::with_capacity(12 + 8 * ids.len());
+        body.extend_from_slice(&round.to_le_bytes());
+        body.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            body.extend_from_slice(&id.to_le_bytes());
+        }
+        self.send_msg(MSG_COHORT, &body)
+    }
+
+    /// Block until the federator's cohort message for the current round
+    /// arrives. A BYE here means the federator shut down where a cohort was
+    /// expected: [`TransportError::PeerClosed`].
+    pub fn recv_cohort(&mut self) -> Result<(u64, Vec<u64>)> {
+        match self.recv_msg()? {
+            Msg::Cohort { round, ids } => Ok((round, ids)),
+            Msg::Bye => Err(TransportError::PeerClosed),
+            other => Err(TransportError::Handshake(format!(
+                "expected cohort, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Write raw bytes to the socket, bypassing the message codec and the
+    /// meters — the fault layer's truncated-write injection, which must put
+    /// a *partial* message on the wire.
+    pub(crate) fn write_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).map_err(|e| {
+            if e.kind() == io::ErrorKind::BrokenPipe {
+                TransportError::PeerClosed
+            } else {
+                TransportError::Io(e)
+            }
+        })
+    }
+
+    /// Shut down both directions of the underlying socket. Used on streams
+    /// the federator gives up on (stragglers past the deadline): the stream
+    /// stays in the caller's vector so its meters remain summable, but the
+    /// peer sees EOF instead of a wedged connection.
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
     /// Send the graceful-shutdown message.
     pub fn send_bye(&mut self) -> Result<()> {
         self.send_msg(MSG_BYE, &[])
@@ -404,14 +426,72 @@ pub fn accept_clients(
     n: usize,
     ack_body: &[u8],
 ) -> Result<Vec<FrameStream>> {
+    accept_clients_deadline(listener, n, ack_body, None)
+}
+
+/// [`accept_clients`] with an optional *total* deadline across the whole
+/// accept phase. The per-stream [`HANDSHAKE_TIMEOUT`] bounds how long one
+/// connected peer may stall its HELLO, but without a total deadline the loop
+/// blocks forever on `accept` when a client never connects at all. With
+/// `total = Some(d)`, the loop returns [`TransportError::Handshake`] listing
+/// the client ids still missing once `d` elapses.
+pub fn accept_clients_deadline(
+    listener: &UnixListener,
+    n: usize,
+    ack_body: &[u8],
+    total: Option<Duration>,
+) -> Result<Vec<FrameStream>> {
+    let deadline = total.map(|d| Instant::now() + d);
+    if deadline.is_some() {
+        // Poll `accept` instead of blocking in it: a client that never
+        // connects would otherwise hold the loop past any deadline.
+        listener.set_nonblocking(true).map_err(TransportError::Io)?;
+    }
     let mut slots: Vec<Option<FrameStream>> = (0..n).map(|_| None).collect();
     let mut connected = 0;
-    while connected < n {
-        let (stream, _) = listener.accept().map_err(TransportError::Io)?;
+    let result = loop {
+        if connected == n {
+            break Ok(());
+        }
+        let remaining = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    let missing: Vec<u64> = slots
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| s.is_none())
+                        .map(|(i, _)| i as u64)
+                        .collect();
+                    break Err(TransportError::Handshake(format!(
+                        "accept deadline expired with missing client ids {missing:?}"
+                    )));
+                }
+                Some(d - now)
+            }
+            None => None,
+        };
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            Err(e) => break Err(TransportError::Io(e)),
+        };
+        // The accepted stream inherits the listener's nonblocking flag on
+        // some platforms; the handshake below is written blocking-with-
+        // timeout, so make that explicit.
+        let _ = stream.set_nonblocking(false);
         // A connected-but-silent peer must not wedge the handshake for the
         // legitimate clients queued behind it: bound the pre-handshake
-        // window, and lift the bound only once the client is admitted.
-        let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+        // window (clamped to the overall deadline), and lift the bound only
+        // once the client is admitted.
+        let handshake = match remaining {
+            Some(r) => HANDSHAKE_TIMEOUT.min(r).max(Duration::from_millis(1)),
+            None => HANDSHAKE_TIMEOUT,
+        };
+        let _ = stream.set_read_timeout(Some(handshake));
         let mut fs = FrameStream::new(stream);
         match fs.recv_msg() {
             Ok(Msg::Hello { id }) => {
@@ -437,8 +517,23 @@ pub fn accept_clients(
             // A peer that died mid-handshake never occupied a slot.
             Err(_) => {}
         }
+    };
+    if deadline.is_some() {
+        let _ = listener.set_nonblocking(false);
     }
-    Ok(slots.into_iter().map(|s| s.expect("slot filled")).collect())
+    result?;
+    let mut streams = Vec::with_capacity(n);
+    for (i, s) in slots.into_iter().enumerate() {
+        match s {
+            Some(fs) => streams.push(fs),
+            None => {
+                return Err(TransportError::Handshake(format!(
+                    "accept loop ended with client id {i} missing"
+                )))
+            }
+        }
+    }
+    Ok(streams)
 }
 
 /// Connect to the federator at `path` as client `id` and run the handshake.

@@ -14,6 +14,13 @@
 //! byte-exact across platforms or `FramedLoopback` runs would not be
 //! reproducible.
 //!
+//! Every [`WireReader`] read is bounds-checked: a buffer that ends before
+//! the bytes a read needs yields a typed
+//! [`TransportError::Truncated`](super::TransportError::Truncated), never a
+//! slice-index panic. The socket path feeds attacker-controlled bytes
+//! straight into these cursors, so the reader — not just the outer header
+//! check — must refuse short input.
+//!
 //! # Examples
 //!
 //! A header write, a bit-packed payload, and the mirrored read:
@@ -32,13 +39,18 @@
 //! assert_eq!(buf.len(), 3); // 2 header bytes + 1 payload byte
 //!
 //! let mut r = WireReader::new(&buf);
-//! assert_eq!(r.get_u16(), 0xB1CF);
+//! assert_eq!(r.get_u16().unwrap(), 0xB1CF);
 //! r.begin_payload();
-//! assert_eq!(r.get_bits(3), 0b101);
-//! assert_eq!(r.get_bits(5), 19);
+//! assert_eq!(r.get_bits(3).unwrap(), 0b101);
+//! assert_eq!(r.get_bits(5).unwrap(), 19);
 //! r.end_payload();
 //! assert_eq!(r.consumed(), buf.len());
+//!
+//! // A truncated buffer is a typed error, not a panic.
+//! assert!(WireReader::new(&buf[..1]).get_u16().is_err());
 //! ```
+
+use super::TransportError;
 
 /// Serializer: header bytes first, then one bit-packed payload section.
 pub struct WireWriter {
@@ -166,36 +178,45 @@ impl<'a> WireReader<'a> {
         }
     }
 
-    fn take(&mut self, n: usize) -> &'a [u8] {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
         debug_assert!(!self.in_payload, "header read inside the payload section");
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        s
+        let end = self.pos + n;
+        if end > self.buf.len() {
+            return Err(TransportError::Truncated {
+                expected: end,
+                got: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
     }
 
     /// Read one header byte.
-    pub fn get_u8(&mut self) -> u8 {
-        self.take(1)[0]
+    pub fn get_u8(&mut self) -> Result<u8, TransportError> {
+        Ok(self.take(1)?[0])
     }
 
     /// Read a little-endian header u16.
-    pub fn get_u16(&mut self) -> u16 {
-        u16::from_le_bytes(self.take(2).try_into().unwrap())
+    pub fn get_u16(&mut self) -> Result<u16, TransportError> {
+        // `take` guarantees the exact slice length, so `try_into` cannot
+        // fail — the unwrap is on an infallible conversion.
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     /// Read a little-endian header u32.
-    pub fn get_u32(&mut self) -> u32 {
-        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    pub fn get_u32(&mut self) -> Result<u32, TransportError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     /// Read a little-endian header u64.
-    pub fn get_u64(&mut self) -> u64 {
-        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    pub fn get_u64(&mut self) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// Read a little-endian header f32.
-    pub fn get_f32(&mut self) -> f32 {
-        f32::from_le_bytes(self.take(4).try_into().unwrap())
+    pub fn get_f32(&mut self) -> Result<f32, TransportError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     /// Enter the bit-packed payload section of the frame being read.
@@ -205,10 +226,16 @@ impl<'a> WireReader<'a> {
     }
 
     /// Read `width` bits of the payload (LSB-first); mirrors `put_bits`.
-    pub fn get_bits(&mut self, width: u32) -> u64 {
+    pub fn get_bits(&mut self, width: u32) -> Result<u64, TransportError> {
         debug_assert!(self.in_payload, "get_bits outside the payload section");
         debug_assert!(width <= 64);
         while self.nacc < width {
+            if self.pos >= self.buf.len() {
+                return Err(TransportError::Truncated {
+                    expected: self.pos + 1,
+                    got: self.buf.len(),
+                });
+            }
             self.acc |= (self.buf[self.pos] as u128) << self.nacc;
             self.pos += 1;
             self.nacc += 8;
@@ -220,7 +247,7 @@ impl<'a> WireReader<'a> {
         };
         self.acc >>= width;
         self.nacc -= width;
-        v
+        Ok(v)
     }
 
     /// Close the payload: discard the padding bits of the trailing byte.
@@ -254,11 +281,11 @@ mod tests {
         // Spot-check the endianness contract on the raw bytes.
         assert_eq!(&buf[..3], &[0xAB, 0xCF, 0xB1]);
         let mut r = WireReader::new(&buf);
-        assert_eq!(r.get_u8(), 0xAB);
-        assert_eq!(r.get_u16(), 0xB1CF);
-        assert_eq!(r.get_u32(), 0xDEAD_BEEF);
-        assert_eq!(r.get_u64(), 0x0123_4567_89AB_CDEF);
-        assert_eq!(r.get_f32(), -1.5e-3);
+        assert_eq!(r.get_u8().unwrap(), 0xAB);
+        assert_eq!(r.get_u16().unwrap(), 0xB1CF);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.get_f32().unwrap(), -1.5e-3);
         assert_eq!(r.consumed(), buf.len());
     }
 
@@ -289,10 +316,10 @@ mod tests {
             let buf = w.finish();
             assert_eq!(buf.len(), 1 + expect_bits.div_ceil(8) as usize);
             let mut r = WireReader::new(&buf);
-            assert_eq!(r.get_u8(), 7);
+            assert_eq!(r.get_u8().unwrap(), 7);
             r.begin_payload();
             for &(v, width) in &items {
-                assert_eq!(r.get_bits(width), v, "width={width}");
+                assert_eq!(r.get_bits(width).unwrap(), v, "width={width}");
             }
             r.end_payload();
             assert_eq!(r.consumed(), buf.len());
@@ -309,8 +336,32 @@ mod tests {
         assert_eq!(buf, vec![0b0000_0101]);
         let mut r = WireReader::new(&buf);
         r.begin_payload();
-        assert_eq!(r.get_bits(3), 0b101);
+        assert_eq!(r.get_bits(3).unwrap(), 0b101);
         r.end_payload();
         assert_eq!(r.consumed(), 1);
+    }
+
+    #[test]
+    fn short_buffers_are_typed_truncation_errors_not_panics() {
+        // Header reads past the end.
+        let header = [0xABu8];
+        let mut r = WireReader::new(&header);
+        assert_eq!(r.get_u8().unwrap(), 0xAB);
+        match r.get_u32() {
+            Err(TransportError::Truncated { expected, got }) => {
+                assert_eq!(expected, 5);
+                assert_eq!(got, 1);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // Bit reads that need bytes the buffer doesn't hold.
+        let payload = [0b0000_0101u8];
+        let mut r = WireReader::new(&payload);
+        r.begin_payload();
+        assert_eq!(r.get_bits(3).unwrap(), 0b101);
+        assert!(matches!(
+            r.get_bits(12),
+            Err(TransportError::Truncated { .. })
+        ));
     }
 }

@@ -21,7 +21,9 @@ use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::{MaskOracle, ShardedMaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::AllocationStrategy;
 use bicompfl::runtime::{ParallelRoundEngine, WorkerPool};
-use bicompfl::transport::{FramedLoopback, Loopback, SocketTransport, Transport};
+use bicompfl::transport::{
+    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, Transport,
+};
 use bicompfl::util::rng::Xoshiro256;
 
 /// A fresh transport of any flavor, for loopback-vs-serialized comparisons.
@@ -30,14 +32,19 @@ fn make_transport(kind: &str) -> Arc<dyn Transport> {
         "loopback" => Arc::new(Loopback::new()),
         "framed" => Arc::new(FramedLoopback::new()),
         "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        "faulty" => Arc::new(FaultyTransport::new(
+            Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+            FaultSpec::none(),
+        )),
         k => panic!("unknown transport kind {k:?}"),
     }
 }
 
 /// The serialized wire paths that must stay bit-identical to the zero-copy
-/// loopback: the in-process byte codec, and the same bytes carried across a
-/// real kernel socketpair.
-const WIRE_KINDS: [&str; 2] = ["framed", "socket"];
+/// loopback: the in-process byte codec, the same bytes carried across a real
+/// kernel socketpair, and the socketpair wrapped in a zero-fault injection
+/// layer — [`FaultSpec::none()`] must be a pure pass-through.
+const WIRE_KINDS: [&str; 3] = ["framed", "socket", "faulty"];
 
 fn cfg(variant: Variant) -> BiCompFlConfig {
     BiCompFlConfig {

@@ -1,0 +1,315 @@
+//! The fault-injection matrix: the deadline-tolerant federator closes rounds
+//! with the realized cohort under injected delays, dropouts, truncated
+//! writes, and bandwidth caps — with per-client counters and exact bit
+//! accounting — while the zero-fault spec stays bit-identical to the strict
+//! protocol. Plus the panic-freedom bar: decoding any truncation of a valid
+//! frame is a typed error, never a panic.
+//!
+//! Every test passes its [`FaultSpec`] explicitly (never through
+//! `BICOMPFL_FAULTS`), so running the suite under a CI-level fault spec
+//! cannot change what these tests inject.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bicompfl::algorithms::runner::{Cohort, RoundRecord};
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::distributed::{run_client_with, run_federator_with, RunSpec};
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::transport::socket::{accept_clients_deadline, bind, connect_client, TransportError};
+use bicompfl::transport::{
+    DownlinkFrame, FaultReport, FaultSpec, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide,
+    SideInfo, UplinkFrame,
+};
+
+/// A unique, short socket path per test (Unix socket paths are length-capped
+/// and tests run concurrently in one process).
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bicompfl-flt-{tag}-{}.sock", std::process::id()))
+}
+
+fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
+    RunSpec {
+        d: 192,
+        n,
+        rounds,
+        n_is: 64,
+        block_size: 32,
+        n_ul: 1,
+        local_iters: 3,
+        eval_every: 1,
+        seed,
+        oracle_seed: 42,
+        local_lr: 0.1,
+        theta0: 0.5,
+        theta_clamp: 0.05,
+        heterogeneity: 0.1,
+    }
+}
+
+/// The in-process reference run with the configuration a [`RunSpec`] maps to.
+fn reference_records(spec: &RunSpec) -> Vec<RoundRecord> {
+    let mut oracle = SyntheticMaskOracle::new(
+        spec.d as usize,
+        spec.n as usize,
+        spec.oracle_seed,
+        spec.heterogeneity,
+    );
+    let mut alg = BiCompFl::new(
+        spec.d as usize,
+        spec.n as usize,
+        BiCompFlConfig {
+            variant: Variant::Gr,
+            n_is: spec.n_is as usize,
+            n_ul: spec.n_ul as usize,
+            allocation: AllocationStrategy::fixed(spec.block_size as usize),
+            local_iters: spec.local_iters as usize,
+            local_lr: spec.local_lr,
+            theta0: spec.theta0,
+            theta_clamp: spec.theta_clamp,
+            seed: spec.seed,
+            ..Default::default()
+        },
+    )
+    .with_engine(ParallelRoundEngine::serial());
+    alg.run(&mut oracle, spec.rounds as usize, spec.eval_every as usize)
+}
+
+/// Run a tolerant federator plus `n` tolerant clients (threads), all under
+/// the same [`FaultSpec`], and return (federator result, per-client results).
+#[allow(clippy::type_complexity)]
+fn run_matrix(
+    tag: &str,
+    spec: RunSpec,
+    faults: FaultSpec,
+) -> (
+    Result<bicompfl::coordinator::distributed::FederatorRun, TransportError>,
+    Vec<Result<(), TransportError>>,
+) {
+    let sock = sock_path(tag);
+    let fed = {
+        let sock = sock.clone();
+        let faults = faults.clone();
+        std::thread::spawn(move || run_federator_with(&sock, &spec, &faults))
+    };
+    let clients: Vec<_> = (0..spec.n as u64)
+        .map(|id| {
+            let sock = sock.clone();
+            let faults = faults.clone();
+            std::thread::spawn(move || run_client_with(&sock, id, &faults))
+        })
+        .collect();
+    let client_results = clients
+        .into_iter()
+        .map(|c| c.join().expect("client thread"))
+        .collect();
+    let run = fed.join().expect("federator thread");
+    let _ = std::fs::remove_file(&sock);
+    (run, client_results)
+}
+
+/// The determinism pin of the tentpole: the tolerant protocol under the
+/// zero-fault spec produces the exact `RoundRecord` stream of the strict
+/// in-process simulation — full cohorts, all-delivered counters, same bits,
+/// same losses.
+#[test]
+fn zero_fault_spec_is_bit_identical_to_the_strict_protocol() {
+    let spec = small_spec(3, 2, 0xB1C0);
+    let (run, clients) = run_matrix("zero", spec, FaultSpec::none());
+    for (id, c) in clients.into_iter().enumerate() {
+        c.unwrap_or_else(|e| panic!("client {id} failed under the zero-fault spec: {e}"));
+    }
+    let run = run.expect("federator run");
+    assert_eq!(run.records, reference_records(&spec));
+    assert!(run.records.iter().all(|r| r.cohort == Cohort::Full));
+    assert_eq!(run.faults, FaultReport::all_delivered(3, 2));
+}
+
+/// A client that drops out mid-run (its frame budget exhausted mid-round)
+/// shrinks the realized cohort; the survivors finish every remaining round
+/// with correct per-round bit accounting, and nothing panics.
+#[test]
+fn mid_round_dropout_shrinks_the_cohort_and_the_survivors_finish() {
+    let spec = small_spec(3, 3, 0x0D0D);
+    // Client 2's frame budget is 3: round-0 plan+uplink and round-1 plan
+    // go through, its round-1 uplink fails like a dead peer.
+    let faults = FaultSpec::parse("2:drop_after=3").unwrap();
+    let (run, mut clients) = run_matrix("drop", spec, faults);
+    assert!(
+        clients.pop().unwrap().is_err(),
+        "the dropped client must see its own death as an error"
+    );
+    for c in clients {
+        c.expect("surviving client");
+    }
+    let run = run.expect("federator must tolerate the dropout");
+
+    assert_eq!(run.records[0].cohort, Cohort::Full);
+    assert_eq!(run.records[1].cohort, Cohort::Partial(vec![0, 1]));
+    assert_eq!(run.records[2].cohort, Cohort::Partial(vec![0, 1]));
+
+    // GR x Fixed: every delivered uplink costs blocks * log2(n_is) bits, and
+    // each cohort payload is relayed to the other surviving clients.
+    let per_client = (spec.d / spec.block_size) as u64 * 6;
+    assert_eq!(run.records[0].ul_bits, 3 * per_client);
+    assert_eq!(run.records[1].ul_bits, 2 * per_client);
+    assert_eq!(run.records[2].ul_bits, 2 * per_client);
+    assert_eq!(run.records[0].dl_bits, 2 * run.records[0].ul_bits);
+    assert_eq!(run.records[1].dl_bits, run.records[1].ul_bits);
+    assert_eq!(run.records[2].dl_bits, run.records[2].ul_bits);
+
+    let c2 = run.faults.clients[2];
+    assert_eq!(
+        (c2.delivered, c2.straggled, c2.dropped),
+        (1, 0, 1),
+        "client 2: one delivered round, one hard dropout, then skipped"
+    );
+    assert_eq!(run.faults.clients[0].delivered, 3);
+    assert_eq!(run.faults.clients[1].delivered, 3);
+}
+
+/// A client whose link delay pushes every uplink past the per-round deadline
+/// is a straggler: the round closes with the on-time cohort and the late
+/// client's thread errors out instead of wedging the run.
+#[test]
+fn a_delayed_client_straggles_past_the_deadline() {
+    let spec = small_spec(3, 2, 0x51AB);
+    let faults = FaultSpec::parse("deadline_ms=150;1:delay_us=400000").unwrap();
+    let (run, clients) = run_matrix("delay", spec, faults);
+    let run = run.expect("federator must tolerate the straggler");
+    assert!(clients[0].is_ok() && clients[2].is_ok(), "on-time clients finish");
+    assert!(clients[1].is_err(), "the straggler must error out, not hang");
+    for r in &run.records {
+        assert_eq!(r.cohort, Cohort::Partial(vec![0, 2]));
+    }
+    let c1 = run.faults.clients[1];
+    assert_eq!((c1.delivered, c1.straggled), (0, 1));
+}
+
+/// A truncated frame mid-message is a hard protocol failure: the federator
+/// sees a typed truncation (never a panic), drops the client, and closes the
+/// round with the intact cohort. The injecting client observes its own
+/// truncation as [`TransportError::Truncated`].
+#[test]
+fn a_truncated_uplink_drops_the_client_and_the_run_completes() {
+    let spec = small_spec(3, 2, 0x7A7A);
+    // Client 1's send #1 (its round-0 uplink) is cut short on the wire.
+    let faults = FaultSpec::parse("seed=9;1:trunc_at=1").unwrap();
+    let (run, clients) = run_matrix("trunc", spec, faults);
+    let run = run.expect("federator must tolerate the truncated frame");
+    assert!(clients[0].is_ok() && clients[2].is_ok(), "honest clients finish");
+    assert!(
+        matches!(clients[1], Err(TransportError::Truncated { .. })),
+        "the injecting client must see the truncation, got {:?}",
+        clients[1]
+    );
+    for r in &run.records {
+        assert_eq!(r.cohort, Cohort::Partial(vec![0, 2]));
+    }
+    let c1 = run.faults.clients[1];
+    assert_eq!((c1.delivered, c1.dropped), (0, 1));
+}
+
+/// A bandwidth-capped client whose paced plan message alone takes longer
+/// than the round deadline is a straggler, exactly like a latency fault.
+#[test]
+fn a_bandwidth_capped_client_straggles_past_the_deadline() {
+    // Small blocks make the plan message big enough that at 1 byte/ms its
+    // pacing dominates any scheduler noise in the deadline comparison.
+    let mut spec = small_spec(3, 1, 0xCA11);
+    spec.block_size = 8;
+    let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+    let (frame_bytes, _bits) = Frame::Plan(PlanFrame::from_plan(1, 0, &plan)).encode();
+    // The capped client sleeps (envelope + frame) ms before its plan lands;
+    // a deadline of half that makes it straggle with a 2x margin.
+    let plan_ms = (5 + frame_bytes.len()) as u64;
+    let faults = FaultSpec::parse(&format!("deadline_ms={};1:cap=1", plan_ms / 2)).unwrap();
+    let (run, clients) = run_matrix("cap", spec, faults);
+    let run = run.expect("federator must tolerate the capped straggler");
+    assert!(clients[0].is_ok() && clients[2].is_ok(), "uncapped clients finish");
+    assert!(clients[1].is_err(), "the capped client must error out");
+    assert_eq!(run.records[0].cohort, Cohort::Partial(vec![0, 2]));
+    let c1 = run.faults.clients[1];
+    assert_eq!((c1.delivered, c1.straggled), (0, 1));
+}
+
+/// The accept phase under a total deadline returns a typed handshake error
+/// naming exactly the client ids that never connected.
+#[test]
+fn accept_deadline_reports_the_missing_client_ids() {
+    let sock = sock_path("acceptdl");
+    let listener = bind(&sock).unwrap();
+    let acceptor = std::thread::spawn(move || {
+        accept_clients_deadline(&listener, 2, &[9u8; 4], Some(Duration::from_millis(200)))
+    });
+    let held = connect_client(&sock, 0).expect("client 0 admitted before the deadline");
+    let err = acceptor
+        .join()
+        .expect("acceptor thread")
+        .expect_err("client 1 never connects, so the accept phase must fail");
+    match err {
+        TransportError::Handshake(why) => {
+            assert!(why.contains("missing client ids"), "{why}");
+            assert!(why.contains('1') && !why.contains('0'), "{why}");
+        }
+        other => panic!("expected a handshake error, got {other:?}"),
+    }
+    drop(held);
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// The panic-freedom bar of the wire decoder: for every frame kind, decoding
+/// ANY strict prefix of a valid encoding is a typed error — the fallible
+/// decoder never panics on short input — while the full buffer round-trips.
+#[test]
+fn every_truncation_of_every_frame_kind_decodes_to_a_typed_error() {
+    let frames = vec![
+        Frame::Plan(PlanFrame::from_plan(1, 2, &BlockPlan::fixed(300, 64))),
+        Frame::Uplink(UplinkFrame {
+            client: 0,
+            round: 0,
+            bits_per_index: 7,
+            indices: vec![vec![3, 99, 0], vec![1, 2, 3]],
+            side: SideInfo::Qs(QsSide {
+                norm: 1.5,
+                signs: vec![true, false, true],
+                tau: vec![1, 0, 3],
+                tau_bits: 2,
+            }),
+        }),
+        Frame::Downlink(DownlinkFrame {
+            client: 1,
+            round: 3,
+            bits_per_index: 5,
+            blocks: vec![0, 4, 7],
+            indices: vec![vec![1, 2, 3]],
+        }),
+        Frame::Model(ModelFrame {
+            client: 2,
+            round: 1,
+            payload: ModelPayload::Sparse {
+                d: 1000,
+                idx: vec![0, 999],
+                val: vec![0.25, -1.5],
+            },
+        }),
+    ];
+    for f in frames {
+        let (buf, _bits) = f.encode();
+        assert!(
+            Frame::try_decode(&buf).is_ok(),
+            "{}: the untruncated frame must decode",
+            f.kind_name()
+        );
+        for k in 0..buf.len() {
+            assert!(
+                Frame::try_decode(&buf[..k]).is_err(),
+                "{}: the {k}-byte prefix of {} decoded as a full frame",
+                f.kind_name(),
+                buf.len()
+            );
+        }
+    }
+}
