@@ -2,8 +2,8 @@
 //! cost (local train stand-in + MRC both directions + aggregation) per
 //! variant, serial vs pooled, the staged multi-round PR driver vs the
 //! barrier-separated pooled loop, the zero-copy loopback transport vs the
-//! byte-exact framed wire path and vs the kernel-socketpair path, plus the
-//! parallel-uplink topology speedup.
+//! byte-exact framed wire path, the kernel-socketpair path, and the
+//! loopback-TCP path, plus the parallel-uplink topology speedup.
 //!
 //! Run: `cargo bench --bench bench_round [-- flags]`
 //!
@@ -29,7 +29,7 @@ use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
 use bicompfl::transport::{
-    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, Transport,
+    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, TcpTransport, Transport,
 };
 use bicompfl::util::json::{arr, num, obj, s, Json};
 use bicompfl::util::rng::Xoshiro256;
@@ -148,6 +148,7 @@ fn bench_pr_round_transport(
         "loopback" => Arc::new(Loopback::new()),
         "framed" => Arc::new(FramedLoopback::new()),
         "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        "tcp" => Arc::new(TcpTransport::duplex().expect("loopback tcp failed")),
         "faulty" => Arc::new(FaultyTransport::new(
             Arc::new(SocketTransport::duplex().expect("socketpair failed")),
             FaultSpec::none(),
@@ -364,6 +365,22 @@ fn main() {
             label: "faulty",
             shards: pooled.shards(),
             run: Box::new(move |w, t| bench_pr_round_transport("faulty", pooled, d, n, w, t)),
+        },
+    });
+    // The loopback-TCP path: the same bytes cross the kernel's TCP stack
+    // (nodelay, CarryDuplex carry) instead of a socketpair, so this case
+    // gates the extra cost of the stream transport the endpoint layer uses.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [tcp wire]",
+        baseline: Side {
+            label: "loopback",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("loopback", pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "tcp",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("tcp", pooled, d, n, w, t)),
         },
     });
 

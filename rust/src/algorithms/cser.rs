@@ -35,7 +35,7 @@ impl Cser {
             t: 0,
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
-            transport: transport::from_env(),
+            transport: transport::from_env_or_die(),
         }
     }
 }

@@ -31,7 +31,7 @@ impl MemSgd {
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
             t: 0,
-            transport: transport::from_env(),
+            transport: transport::from_env_or_die(),
         }
     }
 }

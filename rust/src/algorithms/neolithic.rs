@@ -62,7 +62,7 @@ impl Neolithic {
             scratch: vec![0.0; d],
             agg: vec![0.0; d],
             t: 0,
-            transport: transport::from_env(),
+            transport: transport::from_env_or_die(),
         }
     }
 }

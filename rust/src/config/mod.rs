@@ -5,6 +5,8 @@
 //! datasets, width-scaled models, fewer rounds) and `paper_scale` (the
 //! published dimensions — expensive, intended for larger machines).
 
+pub mod net;
+
 use crate::coordinator::bicompfl::Variant;
 use crate::mrc::block::AllocationStrategy;
 

@@ -1,0 +1,403 @@
+//! Network and runtime configuration: the one resolution point for the
+//! `BICOMPFL_TRANSPORT` / `BICOMPFL_FAULTS` / `BICOMPFL_THREADS`
+//! environment variables, their CLI flags, and the `--topology net.toml`
+//! peer-discovery file.
+//!
+//! ## Precedence
+//!
+//! One rule, applied per knob: **a CLI flag beats its environment variable,
+//! which beats the built-in default.** Nothing merges — the winning source
+//! supplies the whole value. [`NetConfig::from_env_and_args`] is the only
+//! place this resolution happens; everything downstream takes the typed
+//! result. Every parse failure is a [`TransportError::Config`] naming the
+//! offending source — a typo must never silently select a default (the
+//! PR 7 bugfix: an unrecognized `BICOMPFL_TRANSPORT` used to un-meter the
+//! wire by falling back to `loopback`).
+//!
+//! ## Topology files
+//!
+//! `--topology net.toml` replaces positional address arguments for
+//! multi-host runs. The format is a small TOML subset, parsed here with no
+//! dependency (quoted strings, unsigned integers, `#` comments):
+//!
+//! ```toml
+//! [federator]
+//! listen = "127.0.0.1:7070"
+//! cohort = 8              # optional: m-of-n partial participation
+//!
+//! [[client]]
+//! id = 0
+//! addr = "127.0.0.1:7070"
+//!
+//! [[client]]
+//! id = 1
+//! addr = "127.0.0.1:7070"
+//! ```
+//!
+//! Validation is strict: `listen` is required, client ids must cover
+//! `0..n` exactly (no gaps, no duplicates), every client needs an `addr`,
+//! and `cohort` (when present) must lie in `1..=n`.
+
+use std::path::Path;
+
+use crate::transport::{FaultSpec, Result, TransportError, TransportKind};
+
+/// The resolved network/runtime configuration (see the module docs for the
+/// precedence rule).
+#[derive(Clone, Debug, Default)]
+pub struct NetConfig {
+    /// The in-process transport backend (`BICOMPFL_TRANSPORT`).
+    pub transport: TransportKind,
+    /// Fault injection and tolerance (`--faults` / `BICOMPFL_FAULTS`);
+    /// `None` when unset *or* when the spec parses to all-zero (a zero spec
+    /// is the strict protocol, not a tolerant run with no faults).
+    pub faults: Option<FaultSpec>,
+    /// Worker-pool width (`BICOMPFL_THREADS`); `None` means one worker per
+    /// available hardware thread.
+    pub threads: Option<usize>,
+    /// The `--topology` file, when given.
+    pub topology: Option<Topology>,
+}
+
+impl NetConfig {
+    /// Resolve the full network configuration from CLI flags and the
+    /// environment. Per knob, **flag > env > default**:
+    ///
+    /// * `transport_flag` (else `BICOMPFL_TRANSPORT`, else `loopback`) —
+    ///   parsed by [`TransportKind::parse`];
+    /// * `faults_flag` (else `BICOMPFL_FAULTS`, else none) — parsed by
+    ///   [`FaultSpec::parse`]; an all-zero spec resolves to `None`;
+    /// * `BICOMPFL_THREADS` (no flag exists) via [`threads_from_env`];
+    /// * `topology_path` is loaded and validated by [`Topology::load`].
+    ///
+    /// Any unparseable source is a [`TransportError::Config`] naming it.
+    pub fn from_env_and_args(
+        transport_flag: Option<&str>,
+        faults_flag: Option<&str>,
+        topology_path: Option<&Path>,
+    ) -> Result<Self> {
+        let transport = match transport_flag {
+            Some(v) => TransportKind::parse(v)?,
+            None => match std::env::var("BICOMPFL_TRANSPORT") {
+                Ok(v) => TransportKind::parse(&v)?,
+                Err(_) => TransportKind::default(),
+            },
+        };
+        let faults = match faults_flag {
+            Some(v) => Some(
+                FaultSpec::parse(v)
+                    .map_err(|why| TransportError::Config(format!("--faults: {why}")))?,
+            ),
+            None => FaultSpec::from_env()
+                .map_err(|why| TransportError::Config(format!("BICOMPFL_FAULTS: {why}")))?,
+        };
+        let faults = faults.filter(|f| !f.is_none());
+        let threads = threads_from_env()?;
+        let topology = match topology_path {
+            Some(path) => Some(Topology::load(path)?),
+            None => None,
+        };
+        Ok(Self {
+            transport,
+            faults,
+            threads,
+            topology,
+        })
+    }
+}
+
+/// Parse `BICOMPFL_THREADS`: unset or empty is `None` (use hardware
+/// parallelism), a positive integer is `Some(n)`, anything else is a typed
+/// [`TransportError::Config`] — never a silent fallback.
+pub fn threads_from_env() -> Result<Option<usize>> {
+    match std::env::var("BICOMPFL_THREADS") {
+        Ok(v) if v.trim().is_empty() => Ok(None),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => Err(TransportError::Config(format!(
+                "BICOMPFL_THREADS={v:?}: expected a positive integer"
+            ))),
+        },
+        Err(_) => Ok(None),
+    }
+}
+
+/// One client entry of a [`Topology`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Peer {
+    /// Client id; the file must cover `0..n` exactly.
+    pub id: u64,
+    /// The federator address this client dials (`host:port`).
+    pub addr: String,
+}
+
+/// A validated `--topology net.toml`: where the federator listens, where
+/// each client connects, and the optional cohort size for partial
+/// participation. See the module docs for the file format.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// The federator's listen address (`host:port`; port `0` = ephemeral).
+    pub listen: String,
+    /// Optional m-of-n cohort size (validated against `1..=n`).
+    pub cohort: Option<usize>,
+    /// The client entries, sorted by id (ids cover `0..n` exactly).
+    pub clients: Vec<Peer>,
+}
+
+/// Drop a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a quoted TOML string (no escapes — addresses never need them).
+fn toml_str(v: &str) -> std::result::Result<String, String> {
+    let inner = v
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| format!("expected a quoted string, got {v}"))?;
+    if inner.contains('"') {
+        return Err(format!("escapes/embedded quotes are not supported: {v}"));
+    }
+    Ok(inner.to_string())
+}
+
+/// Parse an unsigned TOML integer.
+fn toml_int(v: &str) -> std::result::Result<u64, String> {
+    v.parse::<u64>()
+        .map_err(|_| format!("expected an unsigned integer, got {v}"))
+}
+
+/// Which table the parser is inside.
+enum Section {
+    Preamble,
+    Federator,
+    Client,
+}
+
+/// A client entry mid-parse (fields land one line at a time).
+#[derive(Default)]
+struct PeerDraft {
+    id: Option<u64>,
+    addr: Option<String>,
+}
+
+impl Topology {
+    /// Read and parse `path`; I/O failures and format violations are both
+    /// typed [`TransportError::Config`]s naming the file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| TransportError::Config(format!("topology {}: {e}", path.display())))?;
+        Self::parse(&text)
+            .map_err(|e| TransportError::Config(format!("topology {}: {e}", path.display())))
+    }
+
+    /// Parse and validate topology text (the testable core of
+    /// [`Topology::load`]). Errors name the offending line.
+    pub fn parse(text: &str) -> std::result::Result<Self, String> {
+        let mut listen: Option<String> = None;
+        let mut cohort: Option<usize> = None;
+        let mut drafts: Vec<PeerDraft> = Vec::new();
+        let mut section = Section::Preamble;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = idx + 1;
+            match line {
+                "[federator]" => {
+                    section = Section::Federator;
+                    continue;
+                }
+                "[[client]]" => {
+                    section = Section::Client;
+                    drafts.push(PeerDraft::default());
+                    continue;
+                }
+                _ if line.starts_with('[') => {
+                    return Err(format!("line {lineno}: unknown section {line}"));
+                }
+                _ => {}
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {lineno}: expected `key = value`, got {line:?}"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let at = |why: String| format!("line {lineno}: {why}");
+            match section {
+                Section::Preamble => {
+                    return Err(at(format!("key {key:?} outside any section")));
+                }
+                Section::Federator => match key {
+                    "listen" => listen = Some(toml_str(value).map_err(at)?),
+                    "cohort" => cohort = Some(toml_int(value).map_err(at)? as usize),
+                    other => return Err(at(format!("unknown [federator] key {other:?}"))),
+                },
+                Section::Client => {
+                    let draft = drafts.last_mut().expect("Client section pushed a draft");
+                    match key {
+                        "id" => draft.id = Some(toml_int(value).map_err(at)?),
+                        "addr" => draft.addr = Some(toml_str(value).map_err(at)?),
+                        other => return Err(at(format!("unknown [[client]] key {other:?}"))),
+                    }
+                }
+            }
+        }
+
+        let listen = listen.ok_or("missing [federator] listen address")?;
+        if drafts.is_empty() {
+            return Err("no [[client]] entries".into());
+        }
+        let n = drafts.len();
+        let mut clients = Vec::with_capacity(n);
+        for (k, draft) in drafts.into_iter().enumerate() {
+            let id = draft.id.ok_or(format!("client entry {k} is missing `id`"))?;
+            let addr = draft
+                .addr
+                .ok_or(format!("client entry {k} (id {id}) is missing `addr`"))?;
+            clients.push(Peer { id, addr });
+        }
+        clients.sort_by_key(|p| p.id);
+        for (k, peer) in clients.iter().enumerate() {
+            if peer.id != k as u64 {
+                return Err(format!(
+                    "client ids must cover 0..{n} exactly; got {:?}",
+                    clients.iter().map(|p| p.id).collect::<Vec<_>>()
+                ));
+            }
+        }
+        if let Some(m) = cohort {
+            if m == 0 || m > n {
+                return Err(format!("cohort = {m} out of range 1..={n}"));
+            }
+        }
+        Ok(Self {
+            listen,
+            cohort,
+            clients,
+        })
+    }
+
+    /// The number of clients.
+    pub fn n(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// The federator address client `id` dials, if the id is in range.
+    pub fn addr_of(&self, id: u64) -> Option<&str> {
+        self.clients.get(id as usize).map(|p| p.addr.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# A two-client loopback topology.
+[federator]
+listen = "127.0.0.1:0"   # ephemeral port
+cohort = 2
+
+[[client]]
+id = 1                   # order in the file does not matter
+addr = "127.0.0.1:7070"
+
+[[client]]
+id = 0
+addr = "127.0.0.1:7070"
+"#;
+
+    #[test]
+    fn parses_the_documented_example() {
+        let topo = Topology::parse(EXAMPLE).unwrap();
+        assert_eq!(topo.listen, "127.0.0.1:0");
+        assert_eq!(topo.cohort, Some(2));
+        assert_eq!(topo.n(), 2);
+        // Entries come back sorted by id regardless of file order.
+        assert_eq!(topo.addr_of(0), Some("127.0.0.1:7070"));
+        assert_eq!(topo.addr_of(1), Some("127.0.0.1:7070"));
+        assert_eq!(topo.addr_of(2), None);
+    }
+
+    #[test]
+    fn rejects_malformed_topologies() {
+        // Missing listen.
+        let err = Topology::parse("[[client]]\nid = 0\naddr = \"a:1\"").unwrap_err();
+        assert!(err.contains("listen"), "{err}");
+        // No clients.
+        let err = Topology::parse("[federator]\nlisten = \"a:1\"").unwrap_err();
+        assert!(err.contains("client"), "{err}");
+        // Duplicate / gapped ids.
+        for ids in [[0u64, 0], [0, 2]] {
+            let text = format!(
+                "[federator]\nlisten = \"a:1\"\n\
+                 [[client]]\nid = {}\naddr = \"a:1\"\n\
+                 [[client]]\nid = {}\naddr = \"a:1\"",
+                ids[0], ids[1]
+            );
+            let err = Topology::parse(&text).unwrap_err();
+            assert!(err.contains("cover 0..2"), "{err}");
+        }
+        // Missing addr.
+        let text = "[federator]\nlisten = \"a:1\"\n[[client]]\nid = 0";
+        let err = Topology::parse(text).unwrap_err();
+        assert!(err.contains("addr"), "{err}");
+        // Cohort out of range.
+        let text = "[federator]\nlisten = \"a:1\"\ncohort = 3\n[[client]]\nid = 0\naddr = \"a:1\"";
+        let err = Topology::parse(text).unwrap_err();
+        assert!(err.contains("cohort"), "{err}");
+        // Unquoted string, bad int, unknown key/section — all named by line.
+        let cases = [
+            ("[federator]\nlisten = a:1", "line 2"),
+            ("[federator]\ncohort = x", "line 2"),
+            ("[federator]\nport = 3", "unknown"),
+            ("[server]", "unknown section"),
+            ("listen = \"a:1\"", "outside"),
+        ];
+        for (text, want) in cases {
+            let err = Topology::parse(text).unwrap_err();
+            assert!(err.contains(want), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn comments_respect_quotes() {
+        assert_eq!(strip_comment("listen = \"a#b\" # trailing"), "listen = \"a#b\" ");
+        assert_eq!(strip_comment("# whole line"), "");
+        assert_eq!(strip_comment("id = 3"), "id = 3");
+    }
+
+    #[test]
+    fn flags_beat_the_environment() {
+        // Flag-supplied values must win regardless of what the ambient CI
+        // environment sets (tests never mutate env vars — parallel tests
+        // share the process environment).
+        let cfg =
+            NetConfig::from_env_and_args(Some("framed"), Some("deadline_ms=200;retries=2"), None)
+                .unwrap();
+        assert_eq!(cfg.transport, crate::transport::TransportKind::Framed);
+        assert!(cfg.faults.is_some());
+        assert!(cfg.topology.is_none());
+        // A zero fault spec resolves to None — strict protocol.
+        let cfg = NetConfig::from_env_and_args(Some("loopback"), Some("seed=7"), None).unwrap();
+        assert!(cfg.faults.is_none());
+        // Typos in flags are typed errors, not fallbacks.
+        assert!(matches!(
+            NetConfig::from_env_and_args(Some("bogus"), None, None),
+            Err(TransportError::Config(_))
+        ));
+        assert!(matches!(
+            NetConfig::from_env_and_args(None, Some("nonsense~~"), None),
+            Err(TransportError::Config(_))
+        ));
+    }
+}

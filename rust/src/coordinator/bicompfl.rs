@@ -273,7 +273,7 @@ impl BiCompFl {
             part_rng: Xoshiro256::new(cfg.seed ^ 0xAA17),
             last_cohort: Cohort::Full,
             engine: ParallelRoundEngine::auto(),
-            transport: transport::from_env(),
+            transport: transport::from_env_or_die(),
             cfg,
         }
     }

@@ -95,7 +95,7 @@ impl BiCompFlCfl {
             round: 0,
             scratch: vec![0.0; d],
             engine: ParallelRoundEngine::auto(),
-            transport: transport::from_env(),
+            transport: transport::from_env_or_die(),
             cfg,
         }
     }

@@ -1,15 +1,38 @@
-//! The multi-process BiCompFL-GR round loop over Unix-domain sockets.
+//! The multi-process BiCompFL-GR round loop over real peer connections.
 //!
 //! Everything else in this crate simulates the federator and its clients in
 //! one process; this module runs them as **separate OS processes** connected
 //! by real sockets (`bicompfl federator` / `bicompfl client` in the CLI).
 //! The wire format is unchanged — the frames of [`crate::transport::frame`]
-//! are length-delimited onto the descriptors by
-//! [`crate::transport::socket::FrameStream`] — and the math is *the* math:
-//! both sides call the same MRC encode/decode helpers as the in-process
-//! coordinator, so a distributed run's `RoundRecord`s are bit-identical to
-//! `BiCompFl::run` on the same configuration (pinned by
-//! `rust/tests/socket_transport.rs`).
+//! are length-delimited onto the descriptors by the
+//! [`FrameCodec`](crate::transport::codec::FrameCodec) state machine — and
+//! the math is *the* math: both sides call the same MRC encode/decode
+//! helpers as the in-process coordinator, so a distributed run's
+//! `RoundRecord`s are bit-identical to `BiCompFl::run` on the same
+//! configuration (pinned by `rust/tests/socket_transport.rs` and
+//! `rust/tests/tcp_transport.rs`).
+//!
+//! ## API
+//!
+//! Two entrypoints, one options struct:
+//!
+//! * [`federate`]`(&NetAddr, &RunOpts)` — bind, accept `spec.n` clients,
+//!   drive `spec.rounds` GR rounds, return the [`FederatorRun`];
+//! * [`participate`]`(&NetAddr, id, &RunOpts)` — connect as client `id`,
+//!   adopt the spec from the federator's ACK, train/exchange every round.
+//!
+//! [`NetAddr::Unix`] serves each blocking stream in turn (the PR 5/6 loop);
+//! [`NetAddr::Tcp`] runs the federator as a **single-threaded event loop**
+//! over nonblocking [`Endpoint`]s — accept, handshake, uplink collection,
+//! relay fan-out all multiplexed with `poll(2)` readiness, no thread per
+//! connection, so one process drives 64+ concurrent clients (pinned by the
+//! acceptance test in `rust/tests/tcp_transport.rs`).
+//!
+//! A default [`RunOpts`] reproduces the strict protocol: any fault fails the
+//! whole run — the right bar for the determinism suite. Setting `faults`,
+//! `deadline`, or `cohort` switches to the tolerant cohort protocol below.
+//! The old `run_federator`/`run_client` pairs survive as `#[deprecated]`
+//! wrappers.
 //!
 //! ## Protocol (per round, after the HELLO/ACK handshake)
 //!
@@ -17,10 +40,11 @@
 //!    shared model θ_t, and sends its `Plan` + `Uplink` frames;
 //! 2. the federator decodes each delivered uplink into q̂_i, aggregates
 //!    θ_{t+1} = clamp(mean q̂), and — this being GR's index-relay downlink —
-//!    re-sends every client's two frames verbatim to the other n−1 clients;
-//! 3. each client decodes all n uplinks (its own from the copy it kept,
-//!    global shared randomness for the rest) and computes the identical
-//!    θ_{t+1}.
+//!    re-sends every counted client's two frames verbatim to the other
+//!    participants;
+//! 3. each client decodes all counted uplinks (its own from the copy it
+//!    kept, global shared randomness for the rest) and computes the
+//!    identical θ_{t+1}.
 //!
 //! After the final round the federator sends BYE on every stream. The
 //! federator's per-stream [`LinkMeter`]s must reproduce the `RoundRecord`
@@ -29,22 +53,26 @@
 //!
 //! Scope: the GR variant under Fixed allocation (the configuration where
 //! plans cost zero signalling and every party derives them locally). PR's
-//! per-client downlink MRC rides the same frames and the same
-//! [`FrameStream`] API; extending this loop is the "add a backend" exercise
-//! in `docs/ARCHITECTURE.md`.
+//! per-client downlink MRC rides the same frames and the same peer APIs;
+//! extending this loop is the "add a backend" exercise in
+//! `docs/ARCHITECTURE.md`.
 //!
-//! ## Fault tolerance
+//! ## Fault tolerance & partial participation
 //!
-//! The strict pair above fails the whole run on the first fault — the right
-//! bar for the determinism suite, the wrong one for a deployment. Under a
-//! [`FaultSpec`] (CLI `--faults`, env `BICOMPFL_FAULTS`),
-//! [`run_federator_with`] closes each round with the subset of clients that
-//! delivered before the per-round deadline (the *realized cohort*, broadcast
-//! as a MSG_COHORT control message and recorded in the [`RoundRecord`]), and
-//! [`run_client_with`] decodes exactly that subset's relays. See the "Fault
-//! model" section of `docs/ARCHITECTURE.md`.
+//! Under a nonzero [`FaultSpec`] (CLI `--faults`, env `BICOMPFL_FAULTS`), a
+//! per-round `deadline`, or a `cohort` size, each round closes with the
+//! subset of clients that delivered a valid uplink before the deadline
+//! **and** were drawn by that round's cohort sample (the *realized cohort*,
+//! broadcast as a MSG_COHORT control message and recorded in the
+//! [`RoundRecord`]); clients decode exactly that subset's relays. Delivered
+//! uplinks the round refuses — straggled, invalid, or sampled out — stay on
+//! the meters as *orphaned* bits: the accounting bar under faults is
+//! `wire_recv == Σ ul + orphans`. See the "Fault model" section of
+//! `docs/ARCHITECTURE.md`.
 
-use std::path::Path;
+use std::mem;
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use super::bicompfl::BiCompFl;
@@ -55,8 +83,11 @@ use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
 use crate::transport::socket::{
-    accept_clients, accept_clients_deadline, bind, connect_client, FrameStream, LinkMeter, Result,
-    TransportError,
+    accept_clients, accept_clients_deadline, bind, connect_client, FrameStream, LinkMeter, Msg,
+    Result, TransportError, HANDSHAKE_TIMEOUT, NACK_BAD_HELLO, NACK_STALE_ID,
+};
+use crate::transport::tcp::{
+    connect_client_tcp, poll_fds, Endpoint, Listener, PollFd, POLLIN, POLLOUT,
 };
 use crate::transport::{
     FaultReport, FaultSpec, FaultyStream, Frame, PlanFrame, SideInfo, UplinkFrame,
@@ -211,6 +242,72 @@ impl RunSpec {
     }
 }
 
+/// Where a federator listens / a client connects.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetAddr {
+    /// A Unix-domain socket path (blocking per-stream federator).
+    Unix(PathBuf),
+    /// A TCP `host:port` (event-driven federator; port `0` binds ephemeral).
+    Tcp(String),
+}
+
+/// Options for one distributed run — the single knob set both [`federate`]
+/// and [`participate`] take. `RunOpts::default()` (or [`RunOpts::strict`])
+/// reproduces the strict protocol exactly: zero faults, no deadline, full
+/// participation, fail the run on the first violation.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// The run configuration (federator-side; clients adopt the ACK's copy).
+    pub spec: RunSpec,
+    /// Injected link faults and tolerance parameters (see [`FaultSpec`]).
+    pub faults: FaultSpec,
+    /// Per-round uplink deadline. Overrides `faults.deadline_ms` when set;
+    /// either one (or a `cohort`) switches the run to the tolerant cohort
+    /// protocol.
+    pub deadline: Option<Duration>,
+    /// Cohort size m for partial participation: each round aggregates a
+    /// deterministic m-of-n sample of the delivered uplinks (seeded by
+    /// `spec.seed` and the round, so a rerun realizes the same cohorts).
+    /// `None` (or m = n) keeps full participation.
+    pub cohort: Option<usize>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            spec: RunSpec::default(),
+            faults: FaultSpec::none(),
+            deadline: None,
+            cohort: None,
+        }
+    }
+}
+
+impl RunOpts {
+    /// Strict-protocol options for `spec`: no faults, no deadline, full
+    /// participation.
+    pub fn strict(spec: RunSpec) -> Self {
+        Self {
+            spec,
+            ..Self::default()
+        }
+    }
+
+    /// Whether these options reproduce the strict protocol.
+    pub fn is_strict(&self) -> bool {
+        self.faults.is_none() && self.deadline.is_none() && self.cohort.is_none()
+    }
+
+    /// The effective per-round deadline in milliseconds (0 = none): the
+    /// explicit `deadline` wins over `faults.deadline_ms`.
+    fn deadline_ms(&self) -> u64 {
+        match self.deadline {
+            Some(d) => d.as_millis().clamp(1, u128::from(u64::MAX)) as u64,
+            None => self.faults.deadline_ms,
+        }
+    }
+}
+
 /// A completed federator run: the per-round records plus the aggregate
 /// traffic that physically crossed the client descriptors.
 #[derive(Debug)]
@@ -222,7 +319,7 @@ pub struct FederatorRun {
     pub wire_sent: LinkMeter,
     /// Per-client delivery/straggler/dropout/retry counters. The strict loop
     /// reports every client as fully delivered (it fails the whole run on the
-    /// first fault instead); [`run_federator_with`] reports realized counts.
+    /// first fault instead); the tolerant loops report realized counts.
     pub faults: FaultReport,
 }
 
@@ -276,8 +373,9 @@ fn decode_uplink(spec: &RunSpec, plan: &PlanFrame, ul: &UplinkFrame, theta: &[f3
     )
 }
 
-/// Aggregate the n posterior means (client-id order) into the next global
-/// model — [`BiCompFl::clamped_mean`], the simulation's own aggregation core.
+/// Aggregate the cohort's posterior means (client-id order) into the next
+/// global model — [`BiCompFl::clamped_mean`], the simulation's own
+/// aggregation core.
 fn aggregate(spec: &RunSpec, qhats: &[Vec<f32>]) -> Vec<f32> {
     BiCompFl::clamped_mean(qhats, spec.theta_clamp)
 }
@@ -344,13 +442,176 @@ fn recv_uplink(
     Ok((plan, ul, bits))
 }
 
-/// Run the federator: bind `sock`, accept `spec.n` clients, drive
-/// `spec.rounds` GR rounds, shut the clients down with BYE, and return the
-/// records. Every uplink bit is metered off the receiving descriptor and
-/// every downlink bit off the sending one; the totals must reproduce the
-/// records exactly (hard assertion — the multi-process accounting bar).
-pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
-    spec.validate()?;
+/// Flag byte the cohort-protocol federator appends to its [`RunSpec`] ACK:
+/// every round closes with a MSG_COHORT broadcast of the realized
+/// participant set, and the relay fans out cohort payloads only. The client
+/// adopts whichever protocol the ACK names ([`participate`] inspects the
+/// flag), and a malformed ACK length is a typed handshake error, so the two
+/// protocols can never silently interoperate.
+const PROTO_COHORT: u8 = 1;
+
+/// Whether an I/O error is the read-timeout signal (the kind is
+/// platform-dependent: `SO_RCVTIMEO` surfaces as either).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// Which clients round `round` samples into its cohort: a deterministic
+/// m-of-n draw keyed by the shared seed and the round, so a rerun of the
+/// same configuration realizes the identical cohort sequence. `m = None`
+/// (or m ≥ n) keeps everyone.
+fn sample_cohort(seed: u64, round: u64, n: usize, m: Option<usize>) -> Vec<bool> {
+    let m = match m {
+        Some(m) if m < n => m,
+        _ => return vec![true; n],
+    };
+    let mut rng = Xoshiro256::new(
+        seed ^ 0xC0C0_0001u64.wrapping_add(round.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+    );
+    // Fisher–Yates prefix: the first m entries of a uniform shuffle of 0..n.
+    let mut ids: Vec<usize> = (0..n).collect();
+    for i in 0..m {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        ids.swap(i, j);
+    }
+    let mut keep = vec![false; n];
+    for &i in &ids[..m] {
+        keep[i] = true;
+    }
+    keep
+}
+
+/// One round's realized cohort, split out of the delivered uplinks.
+struct CohortRound {
+    /// Counted client ids, ascending.
+    ids: Vec<u64>,
+    /// Uplink bits the round counts (the cohort's pairs).
+    ul_bits: u64,
+    /// Bits of delivered-but-sampled-out pairs — orphans for the accounting
+    /// bar.
+    sampled_out_bits: u64,
+    /// The cohort's decoded posterior means, id order.
+    qhats: Vec<Vec<f32>>,
+    /// The cohort's verbatim frames for the GR relay, id order.
+    relays: Vec<(Frame, Frame)>,
+}
+
+/// Partition the round's delivered uplinks (`(client, pair bits, plan,
+/// uplink)` in id order, shapes already validated) by the cohort sample:
+/// counted pairs are decoded for aggregation and queued for relay,
+/// sampled-out pairs surrender their bits to the orphan total. Every
+/// delivered pair increments the client's `delivered` counter — sampling is
+/// the federator's choice, not the client's fault.
+fn partition_cohort(
+    spec: &RunSpec,
+    cohort: Option<usize>,
+    t: usize,
+    delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)>,
+    theta: &[f32],
+    report: &mut FaultReport,
+) -> Result<CohortRound> {
+    let keep = sample_cohort(spec.seed, t as u64, spec.n as usize, cohort);
+    let mut cr = CohortRound {
+        ids: Vec::new(),
+        ul_bits: 0,
+        sampled_out_bits: 0,
+        qhats: Vec::new(),
+        relays: Vec::new(),
+    };
+    for (i, bits, plan, ul) in delivered {
+        report.clients[i].delivered += 1;
+        if keep[i] {
+            cr.ul_bits += bits;
+            cr.ids.push(i as u64);
+            cr.qhats.push(decode_uplink(spec, &plan, &ul, theta));
+            cr.relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
+        } else {
+            cr.sampled_out_bits += bits;
+        }
+    }
+    if cr.ids.is_empty() {
+        return Err(TransportError::Handshake(format!(
+            "round {t}: cohort sampling left no delivered client"
+        )));
+    }
+    Ok(cr)
+}
+
+/// Run the federator at `at` under `opts`: bind, accept `spec.n` clients,
+/// drive `spec.rounds` GR rounds, shut the clients down with BYE, and
+/// return the records. Every uplink bit is metered off the receiving
+/// descriptor and every downlink bit off the sending one; the totals must
+/// reproduce the records exactly — plus the orphaned bits of refused
+/// uplinks under the tolerant protocol (hard assertions, the multi-process
+/// accounting bar).
+///
+/// Strict [`RunOpts`] over [`NetAddr::Unix`] reproduce the PR 4 loop
+/// bit-for-bit; any tolerance knob switches to the cohort protocol; a
+/// [`NetAddr::Tcp`] federator is always the event-driven cohort loop (one
+/// thread, `poll(2)` readiness, no per-connection threads).
+pub fn federate(at: &NetAddr, opts: &RunOpts) -> Result<FederatorRun> {
+    opts.spec.validate()?;
+    if let Some(m) = opts.cohort {
+        if m == 0 || m > opts.spec.n as usize {
+            return Err(TransportError::Config(format!(
+                "cohort size {m} out of range 1..={}",
+                opts.spec.n
+            )));
+        }
+    }
+    match at {
+        NetAddr::Unix(path) if opts.is_strict() => federate_unix_strict(path, &opts.spec),
+        NetAddr::Unix(path) => federate_unix_tolerant(path, opts),
+        NetAddr::Tcp(addr) => federate_tcp(addr, opts),
+    }
+}
+
+/// Run one client of the federator at `at` under `opts`: connect as `id`,
+/// handshake (the federator's ACK carries the full [`RunSpec`] and names
+/// the protocol), then train/encode/send uplink and decode the relayed
+/// peers each round, tracking the identical global model the federator
+/// holds. The client's own link faults (if any) are injected on the send
+/// side through [`FaultyStream`]. Returns after the federator's BYE.
+pub fn participate(at: &NetAddr, id: u64, opts: &RunOpts) -> Result<()> {
+    let (stream, ack) = match at {
+        NetAddr::Unix(path) => connect_client(path, id)?,
+        NetAddr::Tcp(addr) => connect_client_tcp(addr, id)?,
+    };
+    let (spec, cohort_proto) = parse_ack(&ack)?;
+    if id >= spec.n as u64 {
+        return Err(TransportError::StaleClient { id });
+    }
+    let fstream = FaultyStream::new(
+        stream,
+        opts.faults.client(id),
+        Xoshiro256::new(opts.faults.seed ^ id),
+    );
+    client_rounds(fstream, id, &spec, cohort_proto)
+}
+
+/// Split the handshake ACK into the [`RunSpec`] and the protocol choice:
+/// a bare spec is the strict protocol, a spec plus the [`PROTO_COHORT`]
+/// flag is the cohort protocol, anything else is a typed handshake error.
+fn parse_ack(ack: &[u8]) -> Result<(RunSpec, bool)> {
+    if ack.len() == SPEC_BYTES {
+        return Ok((RunSpec::decode(ack)?, false));
+    }
+    if ack.len() == SPEC_BYTES + 1 && ack[SPEC_BYTES] == PROTO_COHORT {
+        return Ok((RunSpec::decode(&ack[..SPEC_BYTES])?, true));
+    }
+    Err(TransportError::Handshake(format!(
+        "federator ACK is {} bytes; expected a bare run spec ({SPEC_BYTES}) or one \
+         carrying the cohort-protocol flag ({})",
+        ack.len(),
+        SPEC_BYTES + 1
+    )))
+}
+
+/// The strict blocking federator (Unix-domain sockets, PR 4's loop).
+fn federate_unix_strict(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
     let n = spec.n as usize;
     let listener = bind(sock)?;
     let mut streams = accept_clients(&listener, n, &spec.encode())?;
@@ -424,28 +685,11 @@ pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
     let mut wire_recv = LinkMeter::default();
     let mut wire_sent = LinkMeter::default();
     for stream in &streams {
-        let (r, s) = (stream.received(), stream.sent());
-        wire_recv.frames += r.frames;
-        wire_recv.bits += r.bits;
-        wire_recv.wire_bytes += r.wire_bytes;
-        wire_sent.frames += s.frames;
-        wire_sent.bits += s.bits;
-        wire_sent.wire_bytes += s.wire_bytes;
+        sum_meters(&mut wire_recv, &mut wire_sent, stream.received(), stream.sent());
     }
     // The multi-process accounting bar: what the descriptors carried is
     // exactly what the records report.
-    let ul: u64 = records.iter().map(|r| r.ul_bits).sum();
-    let dl: u64 = records.iter().map(|r| r.dl_bits).sum();
-    assert_eq!(
-        wire_recv.bits, ul,
-        "uplink bits bypassed the sockets: meter {} != records {ul}",
-        wire_recv.bits
-    );
-    assert_eq!(
-        wire_sent.bits, dl,
-        "downlink bits bypassed the sockets: meter {} != records {dl}",
-        wire_sent.bits
-    );
+    assert_wire_bits(&records, &wire_recv, &wire_sent, 0);
     let _ = std::fs::remove_file(sock);
     Ok(FederatorRun {
         records,
@@ -455,110 +699,56 @@ pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
     })
 }
 
-/// Run one client: connect to `sock` as `id`, handshake (the federator's ACK
-/// carries the full [`RunSpec`]), then train/encode/send uplink and decode
-/// the relayed peers each round, tracking the identical global model the
-/// federator holds. Returns after the federator's BYE.
-pub fn run_client(sock: &Path, id: u64) -> Result<()> {
-    let (mut stream, ack) = connect_client(sock, id)?;
-    let spec = RunSpec::decode(&ack)?;
-    if id >= spec.n as u64 {
-        return Err(TransportError::StaleClient { id });
-    }
-    let n = spec.n as usize;
-    let mut oracle = spec.oracle();
-    let mut theta = spec.initial_theta();
-
-    for t in 0..spec.rounds as usize {
-        // -- local training (Algorithm 3 stand-in), clamped as upstream ----
-        let (mut q, _loss, _acc) = oracle.local_train(
-            id as usize,
-            &theta,
-            spec.local_iters as usize,
-            spec.local_lr,
-            t as u64,
-        );
-        crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
-
-        // -- uplink --------------------------------------------------------
-        let (own_plan, own_ul) = encode_uplink(&spec, t as u64, id, &q, &theta);
-        stream.send_frame(&Frame::Plan(own_plan.clone()))?;
-        stream.send_frame(&Frame::Uplink(own_ul.clone()))?;
-
-        // -- downlink: the other n-1 uplinks, relayed verbatim -------------
-        // (A client knows its own samples — the sent copy is byte-identical
-        // to the delivered one, the codec being lossless.)
-        let mut qhats: Vec<Option<Vec<f32>>> = vec![None; n];
-        qhats[id as usize] = Some(decode_uplink(&spec, &own_plan, &own_ul, &theta));
-        for _ in 0..n.saturating_sub(1) {
-            let (plan, ul, _bits) = recv_frame_pair(&mut stream)?;
-            // Decoding derives shared randomness from (round, client), so a
-            // stale or mispaired relay must be a typed error here — decoded
-            // with the wrong stream it would silently corrupt θ instead.
-            if plan.client != ul.client || ul.round != t as u64 {
-                return Err(TransportError::Handshake(format!(
-                    "misrouted relay: plan client {} / uplink client {} round {} \
-                     (expected round {t})",
-                    plan.client, ul.client, ul.round
-                )));
-            }
-            let peer = ul.client as usize;
-            if peer >= n {
-                return Err(TransportError::Handshake(format!(
-                    "relay delivered unknown client {peer} (n={n})"
-                )));
-            }
-            if qhats[peer].is_some() {
-                return Err(TransportError::Handshake(format!(
-                    "relay delivered client {peer} twice"
-                )));
-            }
-            validate_uplink_shape(&spec, &plan, &ul)?;
-            qhats[peer] = Some(decode_uplink(&spec, &plan, &ul, &theta));
-        }
-        // Global randomness: every party lands on the identical θ_{t+1}.
-        let all: Vec<Vec<f32>> = qhats
-            .into_iter()
-            .map(|q| q.expect("every client slot filled above"))
-            .collect();
-        theta = aggregate(&spec, &all);
-    }
-
-    stream.recv_bye()
+/// Fold one stream's meters into the run totals.
+fn sum_meters(recv: &mut LinkMeter, sent: &mut LinkMeter, r: LinkMeter, s: LinkMeter) {
+    recv.frames += r.frames;
+    recv.bits += r.bits;
+    recv.wire_bytes += r.wire_bytes;
+    sent.frames += s.frames;
+    sent.bits += s.bits;
+    sent.wire_bytes += s.wire_bytes;
 }
 
-/// Flag byte the fault-tolerant federator appends to its [`RunSpec`] ACK:
-/// every round closes with a MSG_COHORT broadcast of the realized
-/// participant set, and the relay fans out cohort payloads only. A strict
-/// client rejects the lengthened ACK with a typed handshake error
-/// ([`RunSpec::decode`] requires exactly `SPEC_BYTES`), so the two protocols
-/// can never silently interoperate.
-const PROTO_COHORT: u8 = 1;
-
-/// Whether an I/O error is the read-timeout signal (the kind is
-/// platform-dependent: `SO_RCVTIMEO` surfaces as either).
-fn is_timeout(e: &std::io::Error) -> bool {
-    matches!(
-        e.kind(),
-        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
-    )
+/// The accounting bar, strict and tolerant alike: every received bit is
+/// either counted by a record (a delivered, counted uplink) or
+/// known-orphaned (a refused or sampled-out one); every sent bit is a
+/// successful relay a record counts.
+fn assert_wire_bits(
+    records: &[RoundRecord],
+    wire_recv: &LinkMeter,
+    wire_sent: &LinkMeter,
+    orphan_ul_bits: u64,
+) {
+    let ul: u64 = records.iter().map(|r| r.ul_bits).sum();
+    let dl: u64 = records.iter().map(|r| r.dl_bits).sum();
+    assert_eq!(
+        wire_recv.bits,
+        ul + orphan_ul_bits,
+        "uplink bits bypassed the sockets: meter {} != records {ul} + orphaned {orphan_ul_bits}",
+        wire_recv.bits
+    );
+    assert_eq!(
+        wire_sent.bits, dl,
+        "downlink bits bypassed the sockets: meter {} != records {dl}",
+        wire_sent.bits
+    );
 }
 
-/// [`run_federator`] with deadline tolerance and bounded retries: each round
-/// closes with whichever subset of clients delivered a valid uplink before
-/// the per-round deadline — the *realized cohort*, broadcast to the
-/// survivors and recorded in the round's [`RoundRecord`] — instead of
-/// failing the whole run on the first straggler or protocol violation.
-/// Transient I/O errors are retried up to `faults.max_retries` times with
-/// linear backoff while the stream still sits at a frame boundary.
+/// The tolerant blocking federator (Unix-domain sockets, PR 6's loop, now
+/// with cohort sampling): deadline tolerance and bounded retries, each
+/// round closing with the realized cohort instead of failing the run on the
+/// first straggler or protocol violation. Transient I/O errors are retried
+/// up to `faults.max_retries` times with linear backoff while the stream
+/// still sits at a frame boundary.
 ///
-/// Stragglers and violators are shut down but their streams (and meters) are
-/// kept, so the accounting bar still holds under faults: the received bits
-/// split exactly into the bits the records count plus the orphaned bits of
-/// refused uplinks, and every sent bit is a successful relay the records
-/// count.
-pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Result<FederatorRun> {
-    spec.validate()?;
+/// Stragglers and violators are shut down but their streams (and meters)
+/// are kept, so the accounting bar still holds under faults: the received
+/// bits split exactly into the bits the records count plus the orphaned
+/// bits of refused uplinks, and every sent bit is a successful relay the
+/// records count.
+fn federate_unix_tolerant(sock: &Path, opts: &RunOpts) -> Result<FederatorRun> {
+    let spec = &opts.spec;
+    let faults = &opts.faults;
     let n = spec.n as usize;
     let listener = bind(sock)?;
     let mut ack = spec.encode();
@@ -571,8 +761,8 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
     let mut report = FaultReport::new(n);
     let mut alive = vec![true; n];
     // Bits that crossed the descriptors inside uplinks the round refused
-    // (straggled mid-pair, or failed validation). The records never count
-    // them; the closing assertion does.
+    // (straggled mid-pair, failed validation, or sampled out). The records
+    // never count them; the closing assertion does.
     let mut orphan_ul_bits = 0u64;
 
     let mut oracle = spec.oracle();
@@ -582,14 +772,12 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
     let (mut loss, mut acc) = (f64::NAN, f64::NAN);
 
     for t in 0..spec.rounds as usize {
-        let deadline = (faults.deadline_ms > 0)
-            .then(|| Instant::now() + Duration::from_millis(faults.deadline_ms));
+        let deadline_ms = opts.deadline_ms();
+        let deadline =
+            (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
 
         // -- uplink: poll the alive clients in id order --------------------
-        let mut ul_bits = 0u64;
-        let mut ids: Vec<u64> = Vec::with_capacity(n);
-        let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut relays: Vec<(Frame, Frame)> = Vec::with_capacity(n);
+        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)> = Vec::with_capacity(n);
         for (i, stream) in streams.iter_mut().enumerate() {
             if !alive[i] {
                 continue;
@@ -620,13 +808,7 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
             };
             match outcome {
                 Ok((plan, ul, bits)) => match validate_uplink_shape(spec, &plan, &ul) {
-                    Ok(()) => {
-                        ul_bits += bits;
-                        report.clients[i].delivered += 1;
-                        ids.push(i as u64);
-                        qhats.push(decode_uplink(spec, &plan, &ul, &theta));
-                        relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
-                    }
+                    Ok(()) => delivered.push((i, bits, plan, ul)),
                     Err(why) => {
                         crate::info!("federator: round {t}: dropping client {i}: {why}");
                         report.clients[i].dropped += 1;
@@ -658,22 +840,24 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
                 }
             }
         }
-        if ids.is_empty() {
+        if delivered.is_empty() {
             return Err(TransportError::Handshake(format!(
                 "round {t}: no client delivered an uplink before the deadline"
             )));
         }
 
         // -- aggregate over the realized cohort ----------------------------
-        theta = aggregate(spec, &qhats);
-        let cohort = Cohort::from_ids(&ids, n);
+        let cr = partition_cohort(spec, opts.cohort, t, delivered, &theta, &mut report)?;
+        orphan_ul_bits += cr.sampled_out_bits;
+        theta = aggregate(spec, &cr.qhats);
+        let cohort = Cohort::from_ids(&cr.ids, n);
 
         // -- close the round: cohort broadcast, then the GR relay ----------
         for (i, stream) in streams.iter_mut().enumerate() {
             if !alive[i] {
                 continue;
             }
-            if let Err(why) = stream.send_cohort(t as u64, &ids) {
+            if let Err(why) = stream.send_cohort(t as u64, &cr.ids) {
                 crate::info!("federator: round {t}: client {i} lost on cohort send: {why}");
                 report.clients[i].dropped += 1;
                 alive[i] = false;
@@ -682,7 +866,7 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
         }
         let mut dl_bits = 0u64;
         let mut dl_bc_bits = 0u64;
-        for (&ci, (plan, uplink)) in ids.iter().zip(&relays) {
+        for (&ci, (plan, uplink)) in cr.ids.iter().zip(&cr.relays) {
             for frame in [plan, uplink] {
                 let (bytes, bits) = frame.encode();
                 for (j, stream) in streams.iter_mut().enumerate() {
@@ -712,7 +896,7 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
             round: t,
             loss,
             acc,
-            ul_bits,
+            ul_bits: cr.ul_bits,
             dl_bits,
             dl_bc_bits,
             cohort,
@@ -729,30 +913,9 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
     let mut wire_recv = LinkMeter::default();
     let mut wire_sent = LinkMeter::default();
     for stream in &streams {
-        let (r, s) = (stream.received(), stream.sent());
-        wire_recv.frames += r.frames;
-        wire_recv.bits += r.bits;
-        wire_recv.wire_bytes += r.wire_bytes;
-        wire_sent.frames += s.frames;
-        wire_sent.bits += s.bits;
-        wire_sent.wire_bytes += s.wire_bytes;
+        sum_meters(&mut wire_recv, &mut wire_sent, stream.received(), stream.sent());
     }
-    // The accounting bar under faults: every received bit is either counted
-    // by a record (a delivered uplink) or known-orphaned (a refused one);
-    // every sent bit is a successful relay a record counts.
-    let ul: u64 = records.iter().map(|r| r.ul_bits).sum();
-    let dl: u64 = records.iter().map(|r| r.dl_bits).sum();
-    assert_eq!(
-        wire_recv.bits,
-        ul + orphan_ul_bits,
-        "uplink bits bypassed the sockets: meter {} != records {ul} + orphaned {orphan_ul_bits}",
-        wire_recv.bits
-    );
-    assert_eq!(
-        wire_sent.bits, dl,
-        "downlink bits bypassed the sockets: meter {} != records {dl}",
-        wire_sent.bits
-    );
+    assert_wire_bits(&records, &wire_recv, &wire_sent, orphan_ul_bits);
     let _ = std::fs::remove_file(sock);
     Ok(FederatorRun {
         records,
@@ -762,33 +925,486 @@ pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Re
     })
 }
 
-/// [`run_client`] against a fault-tolerant federator, with this client's own
-/// link faults injected on the send side through [`FaultyStream`]. The round
-/// no longer assumes all n peers: after the uplink, the client receives the
-/// round's realized cohort and decodes exactly that subset's relays,
-/// aggregating θ_{t+1} over the cohort in id order — the same order the
-/// federator uses, so every survivor lands on the identical model.
-pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
-    let (stream, ack) = connect_client(sock, id)?;
-    if ack.len() != SPEC_BYTES + 1 || ack[SPEC_BYTES] != PROTO_COHORT {
-        return Err(TransportError::Handshake(format!(
-            "federator ACK is {} bytes without the cohort-protocol flag; is the \
-             federator running without --faults?",
-            ack.len()
-        )));
+// ---------------------------------------------------------------------------
+// The event-driven TCP federator
+// ---------------------------------------------------------------------------
+
+/// A connection mid-handshake in the accept loop.
+struct Pending {
+    ep: Endpoint,
+    /// Hard per-connection handshake deadline (a connector that never says
+    /// HELLO must not hold the loop's attention forever).
+    expires: Instant,
+    /// The slot this connection's HELLO claimed, once ACKed.
+    admitted: Option<usize>,
+    /// Whether a NACK is queued — once it drains, the connection is done.
+    refused: bool,
+}
+
+/// What the accept loop should do with a pending connection after one
+/// service pass.
+enum Disposition {
+    Keep,
+    Drop,
+    Promote(usize),
+}
+
+/// One nonblocking service pass over a pending handshake: pull in whatever
+/// bytes arrived, react to a complete HELLO (ACK a fresh valid id, NACK a
+/// duplicate/stale one, NACK anything that is not a HELLO), and drain the
+/// queued response.
+fn service_handshake(p: &mut Pending, reserved: &mut [bool], n: usize, ack: &[u8]) -> Disposition {
+    let eof = match p.ep.fill() {
+        Ok(eof) => eof,
+        // A hard read error is indistinguishable from a gone peer here.
+        Err(_) => true,
+    };
+    if p.admitted.is_none() && !p.refused {
+        match p.ep.poll_msg() {
+            Ok(Some(Msg::Hello { id })) => {
+                let slot = id as usize;
+                if slot < n && !reserved[slot] {
+                    reserved[slot] = true;
+                    p.admitted = Some(slot);
+                    p.ep.enqueue_ack(ack);
+                } else {
+                    p.refused = true;
+                    p.ep.enqueue_nack(NACK_STALE_ID, id);
+                }
+            }
+            Ok(Some(_)) => {
+                p.refused = true;
+                p.ep.enqueue_nack(NACK_BAD_HELLO, 0);
+            }
+            Ok(None) => {}
+            Err(_) => return Disposition::Drop,
+        }
     }
-    let spec = RunSpec::decode(&ack[..SPEC_BYTES])?;
-    if id >= spec.n as u64 {
-        return Err(TransportError::StaleClient { id });
+    let drained = match p.ep.flush() {
+        Ok(d) => d,
+        Err(_) => return Disposition::Drop,
+    };
+    if let Some(slot) = p.admitted {
+        if drained {
+            // The ACK is on the wire; any bytes the client already sent for
+            // round 0 stay buffered in this endpoint's codec.
+            return Disposition::Promote(slot);
+        }
     }
+    if (p.refused && drained) || eof {
+        return Disposition::Drop;
+    }
+    Disposition::Keep
+}
+
+/// Accept and handshake exactly `n` clients on the nonblocking `listener`,
+/// returning their endpoints in client-id order — the event-loop twin of
+/// [`accept_clients_deadline`]. Any number of connections handshake
+/// concurrently; invalid, duplicate, silent, or vanished connectors are
+/// NACKed/expired without disturbing the rest (a dropped admitted
+/// connection frees its slot for a reconnect).
+fn accept_endpoints(
+    listener: &Listener,
+    n: usize,
+    ack: &[u8],
+    total: Option<Duration>,
+) -> Result<Vec<Endpoint>> {
+    let deadline = total.map(|d| Instant::now() + d);
+    let mut slots: Vec<Option<Endpoint>> = (0..n).map(|_| None).collect();
+    let mut reserved = vec![false; n];
+    let mut pending: Vec<Pending> = Vec::new();
+    while slots.iter().any(|s| s.is_none()) {
+        let now = Instant::now();
+        if let Some(d) = deadline {
+            if now >= d {
+                let missing: Vec<usize> = (0..n).filter(|&i| slots[i].is_none()).collect();
+                return Err(TransportError::Handshake(format!(
+                    "accept deadline expired with missing client ids {missing:?}"
+                )));
+            }
+        }
+        // Expire handshakes that never completed, freeing their slots.
+        pending.retain(|p| {
+            let keep = now < p.expires;
+            if !keep {
+                if let Some(slot) = p.admitted {
+                    reserved[slot] = false;
+                }
+            }
+            keep
+        });
+        // Sleep until the listener or some pending connection is ready, but
+        // never past the nearest deadline/expiry.
+        let mut fds = Vec::with_capacity(1 + pending.len());
+        fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+        for p in &pending {
+            let mut ev = POLLIN;
+            if p.ep.wants_write() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(p.ep.as_raw_fd(), ev));
+        }
+        let mut wake = now + Duration::from_millis(1000);
+        if let Some(d) = deadline {
+            wake = wake.min(d);
+        }
+        for p in &pending {
+            wake = wake.min(p.expires);
+        }
+        let timeout = wake
+            .saturating_duration_since(now)
+            .as_millis()
+            .clamp(1, i32::MAX as u128) as i32;
+        poll_fds(&mut fds, timeout).map_err(TransportError::Io)?;
+        // Drain the accept queue, then service every handshake in flight.
+        while let Some(ep) = listener.accept()? {
+            pending.push(Pending {
+                ep,
+                expires: Instant::now() + HANDSHAKE_TIMEOUT,
+                admitted: None,
+                refused: false,
+            });
+        }
+        let mut i = 0;
+        while i < pending.len() {
+            match service_handshake(&mut pending[i], &mut reserved, n, ack) {
+                Disposition::Keep => i += 1,
+                Disposition::Drop => {
+                    let p = pending.remove(i);
+                    if let Some(slot) = p.admitted {
+                        reserved[slot] = false;
+                    }
+                    p.ep.shutdown();
+                }
+                Disposition::Promote(slot) => {
+                    let p = pending.remove(i);
+                    slots[slot] = Some(p.ep);
+                }
+            }
+        }
+    }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("loop exits only with every slot filled"))
+        .collect())
+}
+
+/// Where one connection stands in receiving its round-`t` uplink pair.
+enum UplinkProgress {
+    NeedPlan,
+    NeedUplink(PlanFrame, u64),
+}
+
+/// Parse as much of client `client`'s round-`round` uplink pair as its
+/// buffer holds: `Ok(Some(pair))` when complete, `Ok(None)` when more bytes
+/// are needed (poll the fd), a typed error on any protocol violation — the
+/// event-loop form of [`recv_uplink`] + [`validate_uplink_shape`].
+fn advance_uplink(
+    ep: &mut Endpoint,
+    st: &mut UplinkProgress,
+    client: u64,
+    round: u64,
+    spec: &RunSpec,
+) -> Result<Option<(PlanFrame, UplinkFrame, u64)>> {
+    loop {
+        match ep.poll_msg()? {
+            None => return Ok(None),
+            Some(Msg::Frame(frame, bits)) => match mem::replace(st, UplinkProgress::NeedPlan) {
+                UplinkProgress::NeedPlan => {
+                    let plan = frame.try_into_plan()?;
+                    if plan.client != client {
+                        return Err(TransportError::Handshake(format!(
+                            "misrouted uplink: plan client {} (expected client {client})",
+                            plan.client
+                        )));
+                    }
+                    *st = UplinkProgress::NeedUplink(plan, bits);
+                }
+                UplinkProgress::NeedUplink(plan, plan_bits) => {
+                    let ul = frame.try_into_uplink()?;
+                    if ul.client != client || ul.round != round {
+                        return Err(TransportError::Handshake(format!(
+                            "misrouted uplink: client {} round {} (expected client {client} \
+                             round {round})",
+                            ul.client, ul.round
+                        )));
+                    }
+                    validate_uplink_shape(spec, &plan, &ul)?;
+                    return Ok(Some((plan, ul, plan_bits + bits)));
+                }
+            },
+            Some(Msg::Bye) => return Err(TransportError::PeerClosed),
+            Some(other) => {
+                return Err(TransportError::Handshake(format!(
+                    "unexpected message mid-round: {other:?}"
+                )))
+            }
+        }
+    }
+}
+
+/// Retire connection `i` from the round loop: log, count (`Some(why)` is a
+/// drop, `None` a straggle), mark dead, shut down. Its endpoint and meters
+/// are kept for the closing accounting.
+fn fail_conn(
+    conns: &mut [Endpoint],
+    alive: &mut [bool],
+    report: &mut FaultReport,
+    i: usize,
+    t: usize,
+    why: Option<TransportError>,
+) {
+    match why {
+        Some(why) => {
+            crate::info!("federator: round {t}: dropping client {i}: {why}");
+            report.clients[i].dropped += 1;
+        }
+        None => {
+            crate::info!("federator: round {t}: client {i} straggled past the deadline");
+            report.clients[i].straggled += 1;
+        }
+    }
+    alive[i] = false;
+    conns[i].shutdown();
+}
+
+/// Drain every live connection's write queue — the event-loop equivalent of
+/// the blocking loop's sends, so no deadline applies: a slow reader is
+/// waited for, a dead one fails its flush and is retired. Bits were metered
+/// at enqueue time, so a connection dying mid-drain never un-counts traffic
+/// the records already report.
+fn flush_all(
+    conns: &mut [Endpoint],
+    alive: &mut [bool],
+    report: &mut FaultReport,
+    t: usize,
+) -> Result<()> {
+    loop {
+        let writey: Vec<usize> = (0..conns.len())
+            .filter(|&j| alive[j] && conns[j].wants_write())
+            .collect();
+        if writey.is_empty() {
+            return Ok(());
+        }
+        let mut fds: Vec<PollFd> = writey
+            .iter()
+            .map(|&j| PollFd::new(conns[j].as_raw_fd(), POLLOUT))
+            .collect();
+        poll_fds(&mut fds, -1).map_err(TransportError::Io)?;
+        for (k, &j) in writey.iter().enumerate() {
+            if fds[k].revents == 0 {
+                continue;
+            }
+            if let Err(why) = conns[j].flush() {
+                fail_conn(conns, alive, report, j, t, Some(why));
+            }
+        }
+    }
+}
+
+/// The event-driven TCP federator: one thread, `spec.n` nonblocking
+/// [`Endpoint`]s, a `poll(2)` readiness loop — no thread per connection.
+/// Always speaks the cohort protocol (strict [`RunOpts`] simply realize the
+/// full cohort every round, producing records bit-identical to the strict
+/// blocking loop and the in-process simulation).
+fn federate_tcp(addr: &str, opts: &RunOpts) -> Result<FederatorRun> {
+    let spec = &opts.spec;
     let n = spec.n as usize;
-    let mut fstream =
-        FaultyStream::new(stream, faults.client(id), Xoshiro256::new(faults.seed ^ id));
+    let listener = Listener::bind(addr)?;
+    if let Ok(local) = listener.local_addr() {
+        crate::info!("federator: listening on {local}");
+    }
+    let mut ack = spec.encode();
+    ack.push(PROTO_COHORT);
+    let accept_total = (opts.faults.accept_deadline_ms > 0)
+        .then(|| Duration::from_millis(opts.faults.accept_deadline_ms));
+    let mut conns = accept_endpoints(&listener, n, &ack, accept_total)?;
+    crate::info!("federator: {} clients connected", n);
+
+    let mut report = FaultReport::new(n);
+    let mut alive = vec![true; n];
+    let mut orphan_ul_bits = 0u64;
+
+    let mut oracle = spec.oracle();
+    let mut theta = spec.initial_theta();
+    let mut records = Vec::with_capacity(spec.rounds as usize);
+    let ee = (spec.eval_every as usize).max(1);
+    let (mut loss, mut acc) = (f64::NAN, f64::NAN);
+
+    for t in 0..spec.rounds as usize {
+        let deadline_ms = opts.deadline_ms();
+        let deadline =
+            (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+
+        // -- uplink: multiplex all live connections until each has its pair
+        let meter_before: Vec<u64> = conns.iter().map(|c| c.received().bits).collect();
+        let mut progress: Vec<UplinkProgress> =
+            (0..n).map(|_| UplinkProgress::NeedPlan).collect();
+        let mut pairs: Vec<Option<(PlanFrame, UplinkFrame, u64)>> = (0..n).map(|_| None).collect();
+        loop {
+            // Parse whatever is already buffered (a fast client's whole pair
+            // may land in one read — or have been buffered since last round).
+            for i in 0..n {
+                if !alive[i] || pairs[i].is_some() {
+                    continue;
+                }
+                match advance_uplink(&mut conns[i], &mut progress[i], i as u64, t as u64, spec) {
+                    Ok(Some(pair)) => pairs[i] = Some(pair),
+                    Ok(None) => {}
+                    Err(why) => fail_conn(&mut conns, &mut alive, &mut report, i, t, Some(why)),
+                }
+            }
+            let needy: Vec<usize> = (0..n).filter(|&i| alive[i] && pairs[i].is_none()).collect();
+            if needy.is_empty() {
+                break;
+            }
+            let timeout = match deadline {
+                Some(d) => {
+                    let rem = d.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        for &i in &needy {
+                            fail_conn(&mut conns, &mut alive, &mut report, i, t, None);
+                        }
+                        break;
+                    }
+                    rem.as_millis().clamp(1, i32::MAX as u128) as i32
+                }
+                None => -1,
+            };
+            let mut fds: Vec<PollFd> = needy
+                .iter()
+                .map(|&i| PollFd::new(conns[i].as_raw_fd(), POLLIN))
+                .collect();
+            poll_fds(&mut fds, timeout).map_err(TransportError::Io)?;
+            for (k, &i) in needy.iter().enumerate() {
+                if fds[k].revents == 0 {
+                    continue;
+                }
+                match conns[i].fill() {
+                    Ok(false) => {}
+                    Ok(true) => {
+                        // EOF: the buffer holds everything this peer will
+                        // ever send — resolve it now, or a closed fd would
+                        // poll readable forever.
+                        let adv = advance_uplink(
+                            &mut conns[i],
+                            &mut progress[i],
+                            i as u64,
+                            t as u64,
+                            spec,
+                        );
+                        match adv {
+                            Ok(Some(pair)) => pairs[i] = Some(pair),
+                            Ok(None) => {
+                                let why = conns[i].eof_error();
+                                fail_conn(&mut conns, &mut alive, &mut report, i, t, Some(why));
+                            }
+                            Err(why) => {
+                                fail_conn(&mut conns, &mut alive, &mut report, i, t, Some(why))
+                            }
+                        }
+                    }
+                    Err(why) => fail_conn(&mut conns, &mut alive, &mut report, i, t, Some(why)),
+                }
+            }
+        }
+
+        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)> = Vec::with_capacity(n);
+        let mut pair_bits = vec![0u64; n];
+        for (i, pair) in pairs.iter_mut().enumerate() {
+            if let Some((plan, ul, bits)) = pair.take() {
+                pair_bits[i] = bits;
+                delivered.push((i, bits, plan, ul));
+            }
+        }
+        if delivered.is_empty() {
+            return Err(TransportError::Handshake(format!(
+                "round {t}: no client delivered an uplink before the deadline"
+            )));
+        }
+        let cr = partition_cohort(spec, opts.cohort, t, delivered, &theta, &mut report)?;
+        orphan_ul_bits += cr.sampled_out_bits;
+        // Whatever else this round parsed off a connection — a partial pair
+        // from a client that then failed — is orphaned too.
+        for i in 0..n {
+            orphan_ul_bits += (conns[i].received().bits - meter_before[i]) - pair_bits[i];
+        }
+        theta = aggregate(spec, &cr.qhats);
+        let cohort = Cohort::from_ids(&cr.ids, n);
+
+        // -- close the round: queue cohort + relays, then drain ------------
+        for (i, conn) in conns.iter_mut().enumerate() {
+            if alive[i] {
+                conn.enqueue_cohort(t as u64, &cr.ids);
+            }
+        }
+        let mut dl_bits = 0u64;
+        let mut dl_bc_bits = 0u64;
+        for (&ci, (plan, uplink)) in cr.ids.iter().zip(&cr.relays) {
+            for frame in [plan, uplink] {
+                let (bytes, bits) = frame.encode();
+                for (j, conn) in conns.iter_mut().enumerate() {
+                    if j as u64 == ci || !alive[j] {
+                        continue;
+                    }
+                    dl_bits += conn.enqueue_frame_encoded(&bytes, bits);
+                }
+                dl_bc_bits += bits;
+            }
+        }
+        flush_all(&mut conns, &mut alive, &mut report, t)?;
+
+        if t % ee == 0 || t + 1 == spec.rounds as usize {
+            let (l, a) = oracle.eval(&theta);
+            loss = l;
+            acc = a;
+        }
+        records.push(RoundRecord {
+            round: t,
+            loss,
+            acc,
+            ul_bits: cr.ul_bits,
+            dl_bits,
+            dl_bc_bits,
+            cohort,
+        });
+    }
+
+    // -- graceful shutdown of the survivors ----------------------------------
+    for (i, conn) in conns.iter_mut().enumerate() {
+        if alive[i] {
+            conn.enqueue_bye();
+        }
+    }
+    flush_all(&mut conns, &mut alive, &mut report, spec.rounds as usize)?;
+
+    let mut wire_recv = LinkMeter::default();
+    let mut wire_sent = LinkMeter::default();
+    for conn in &conns {
+        sum_meters(&mut wire_recv, &mut wire_sent, conn.received(), conn.sent());
+    }
+    assert_wire_bits(&records, &wire_recv, &wire_sent, orphan_ul_bits);
+    Ok(FederatorRun {
+        records,
+        wire_recv,
+        wire_sent,
+        faults: report,
+    })
+}
+
+/// The client's round loop, shared by every transport and protocol: under
+/// the strict protocol the participant set is everyone; under the cohort
+/// protocol it is the federator's per-round MSG_COHORT broadcast. Either
+/// way the client decodes exactly the counted subset's relays and
+/// aggregates θ_{t+1} over it in id order — the same order the federator
+/// uses, so every survivor lands on the identical model.
+fn client_rounds(mut fs: FaultyStream, id: u64, spec: &RunSpec, cohort_proto: bool) -> Result<()> {
+    let n = spec.n as usize;
     let mut oracle = spec.oracle();
     let mut theta = spec.initial_theta();
 
     for t in 0..spec.rounds as usize {
-        // -- local training, clamped as upstream ---------------------------
+        // -- local training (Algorithm 3 stand-in), clamped as upstream ----
         let (mut q, _loss, _acc) = oracle.local_train(
             id as usize,
             &theta,
@@ -798,35 +1414,45 @@ pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
         );
         crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
 
-        // -- uplink, through the fault gauntlet -----------------------------
-        let (own_plan, own_ul) = encode_uplink(&spec, t as u64, id, &q, &theta);
-        fstream.send_frame(&Frame::Plan(own_plan.clone()))?;
-        fstream.send_frame(&Frame::Uplink(own_ul.clone()))?;
+        // -- uplink (through the fault gauntlet, if any) -------------------
+        let (own_plan, own_ul) = encode_uplink(spec, t as u64, id, &q, &theta);
+        fs.send_frame(&Frame::Plan(own_plan.clone()))?;
+        fs.send_frame(&Frame::Uplink(own_ul.clone()))?;
 
-        // -- the realized cohort closes the round ---------------------------
-        let (c_round, ids) = fstream.inner_mut().recv_cohort()?;
-        if c_round != t as u64 {
-            return Err(TransportError::Handshake(format!(
-                "cohort for round {c_round}, expected round {t}"
-            )));
-        }
-        if ids.is_empty()
-            || ids.windows(2).any(|p| p[0] >= p[1])
-            || ids.last().is_some_and(|&last| last >= n as u64)
-        {
-            return Err(TransportError::Handshake(format!(
-                "malformed cohort ids {ids:?} (n={n})"
-            )));
-        }
+        // -- the round's participant set -----------------------------------
+        let ids: Vec<u64> = if cohort_proto {
+            let (c_round, ids) = fs.inner_mut().recv_cohort()?;
+            if c_round != t as u64 {
+                return Err(TransportError::Handshake(format!(
+                    "cohort for round {c_round}, expected round {t}"
+                )));
+            }
+            if ids.is_empty()
+                || ids.windows(2).any(|p| p[0] >= p[1])
+                || ids.last().is_some_and(|&last| last >= n as u64)
+            {
+                return Err(TransportError::Handshake(format!(
+                    "malformed cohort ids {ids:?} (n={n})"
+                )));
+            }
+            ids
+        } else {
+            (0..n as u64).collect()
+        };
         let me_in = ids.binary_search(&id).is_ok();
         let mut qhats: Vec<Option<Vec<f32>>> = vec![None; n];
         if me_in {
-            qhats[id as usize] = Some(decode_uplink(&spec, &own_plan, &own_ul, &theta));
+            // A client knows its own samples — the sent copy is
+            // byte-identical to the delivered one, the codec being lossless.
+            qhats[id as usize] = Some(decode_uplink(spec, &own_plan, &own_ul, &theta));
         }
 
-        // -- downlink: the other cohort members' uplinks, relayed verbatim --
+        // -- downlink: the other counted uplinks, relayed verbatim ---------
         for _ in 0..ids.len() - usize::from(me_in) {
-            let (plan, ul, _bits) = recv_frame_pair(fstream.inner_mut())?;
+            let (plan, ul, _bits) = recv_frame_pair(fs.inner_mut())?;
+            // Decoding derives shared randomness from (round, client), so a
+            // stale or mispaired relay must be a typed error here — decoded
+            // with the wrong stream it would silently corrupt θ instead.
             if plan.client != ul.client || ul.round != t as u64 {
                 return Err(TransportError::Handshake(format!(
                     "misrouted relay: plan client {} / uplink client {} round {} \
@@ -845,19 +1471,56 @@ pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
                     "relay delivered client {peer} twice"
                 )));
             }
-            validate_uplink_shape(&spec, &plan, &ul)?;
-            qhats[peer] = Some(decode_uplink(&spec, &plan, &ul, &theta));
+            validate_uplink_shape(spec, &plan, &ul)?;
+            qhats[peer] = Some(decode_uplink(spec, &plan, &ul, &theta));
         }
-        // Aggregate the cohort's q̂s in id order — the order the federator
+        // Aggregate the counted q̂s in id order — the order the federator
         // pushed them, so the clamped mean is the identical float sequence.
         let all: Vec<Vec<f32>> = ids
             .iter()
             .map(|&i| qhats[i as usize].take().expect("cohort slot filled above"))
             .collect();
-        theta = aggregate(&spec, &all);
+        theta = aggregate(spec, &all);
     }
 
-    fstream.inner_mut().recv_bye()
+    fs.inner_mut().recv_bye()
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated PR 4/6 entrypoints — thin wrappers over federate/participate
+// ---------------------------------------------------------------------------
+
+/// Strict federator over a Unix socket.
+#[deprecated(note = "use `federate(&NetAddr::Unix(..), &RunOpts::strict(spec))`")]
+pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
+    federate(&NetAddr::Unix(sock.to_path_buf()), &RunOpts::strict(*spec))
+}
+
+/// Fault-tolerant federator over a Unix socket.
+#[deprecated(note = "use `federate` with `RunOpts { faults, .. }`")]
+pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Result<FederatorRun> {
+    let opts = RunOpts {
+        spec: *spec,
+        faults: faults.clone(),
+        ..RunOpts::default()
+    };
+    federate(&NetAddr::Unix(sock.to_path_buf()), &opts)
+}
+
+/// Strict client over a Unix socket.
+#[deprecated(note = "use `participate(&NetAddr::Unix(..), id, &RunOpts::default())`")]
+pub fn run_client(sock: &Path, id: u64) -> Result<()> {
+    participate(&NetAddr::Unix(sock.to_path_buf()), id, &RunOpts::default())
+}
+
+/// Fault-injecting client over a Unix socket.
+#[deprecated(note = "use `participate` with `RunOpts { faults, .. }`")]
+pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
+    let opts = RunOpts {
+        faults: faults.clone(),
+        ..RunOpts::default()
+    };
+    participate(&NetAddr::Unix(sock.to_path_buf()), id, &opts)
 }
 
 #[cfg(test)]
@@ -924,5 +1587,40 @@ mod tests {
         );
         assert_eq!(qhat, direct);
         assert_eq!(ul.index_bits(), (spec.d / spec.block_size) as u64 * 6);
+    }
+
+    #[test]
+    fn sample_cohort_is_deterministic_and_sized() {
+        for round in 0..8u64 {
+            let a = sample_cohort(0xB1C0, round, 10, Some(4));
+            let b = sample_cohort(0xB1C0, round, 10, Some(4));
+            assert_eq!(a, b, "same seed+round must realize the same cohort");
+            assert_eq!(a.iter().filter(|&&k| k).count(), 4);
+        }
+        // Rounds draw different cohorts (with overwhelming probability over
+        // eight rounds of C(10,4) draws — pinned, since the rng is fixed).
+        let draws: Vec<Vec<bool>> = (0..8).map(|r| sample_cohort(0xB1C0, r, 10, Some(4))).collect();
+        assert!(draws.windows(2).any(|w| w[0] != w[1]));
+        // No sampling (or m >= n) keeps everyone.
+        assert_eq!(sample_cohort(7, 0, 5, None), vec![true; 5]);
+        assert_eq!(sample_cohort(7, 0, 5, Some(5)), vec![true; 5]);
+        assert_eq!(sample_cohort(7, 0, 5, Some(9)), vec![true; 5]);
+    }
+
+    #[test]
+    fn parse_ack_distinguishes_the_protocols() {
+        let spec = RunSpec::default();
+        let (s, cohort) = parse_ack(&spec.encode()).unwrap();
+        assert_eq!(s, spec);
+        assert!(!cohort);
+        let mut ack = spec.encode();
+        ack.push(PROTO_COHORT);
+        let (s, cohort) = parse_ack(&ack).unwrap();
+        assert_eq!(s, spec);
+        assert!(cohort);
+        let mut bad = spec.encode();
+        bad.push(42);
+        assert!(matches!(parse_ack(&bad), Err(TransportError::Handshake(_))));
+        assert!(matches!(parse_ack(&[]), Err(TransportError::Handshake(_))));
     }
 }

@@ -16,11 +16,15 @@
 //!   bicompfl federator --sock /tmp/bicompfl.sock --clients 2 --rounds 3 &
 //!   bicompfl client --sock /tmp/bicompfl.sock --id 0 &
 //!   bicompfl client --sock /tmp/bicompfl.sock --id 1
+//!   bicompfl federator --listen 127.0.0.1:7070 --clients 64 --rounds 3 &
+//!   bicompfl client --connect 127.0.0.1:7070 --id 0
+//!   bicompfl federator --topology net.toml & bicompfl client --topology net.toml --id 0
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
+use bicompfl::config::net::NetConfig;
 use bicompfl::config::{preset, ExpConfig, PRESET_NAMES};
 use bicompfl::coordinator::bicompfl::Variant;
 use bicompfl::coordinator::distributed;
@@ -46,10 +50,19 @@ fn cli() -> Cli {
          exp subcommands: table, all-tables, ablate-clients, ablate-ndl,\n\
          ablate-blocksize, ablate-nis, ablate-prior\n\
          federator/client: a real multi-process BiCompFL-GR round loop over a\n\
-         Unix-domain socket (--sock); the federator pushes the run config to\n\
-         every client during the handshake, so clients only need --sock --id",
+         Unix-domain socket (--sock) or TCP (--listen/--connect/--topology);\n\
+         the federator pushes the run config to every client during the\n\
+         handshake, so clients only need an address and --id",
     )
     .flag("sock", "/tmp/bicompfl.sock", "federator/client: Unix socket path")
+    .flag("listen", "", "federator: TCP listen address host:port (event-driven loop)")
+    .flag("connect", "", "client: federator TCP address host:port")
+    .flag(
+        "topology",
+        "",
+        "net.toml with the federator listen address, client ids/addresses, \
+         and cohort size (see config::net docs); explicit address flags win",
+    )
     .flag("id", "0", "client: this client's id in 0..clients")
     .flag(
         "faults",
@@ -79,19 +92,33 @@ fn cli() -> Cli {
     .switch("no-cfl", "exp table: skip BiCompFL-GR-CFL")
 }
 
-/// The fault spec governing a federator/client process: the `--faults` flag
-/// when given, else `BICOMPFL_FAULTS` (both sides read the same environment,
-/// so launching a process group under one env var keeps them in agreement).
-/// `None` — including an explicit all-zero spec — selects the strict
-/// protocol.
-fn fault_spec(c: &Cli) -> Result<Option<bicompfl::transport::FaultSpec>> {
-    let flag = c.get("faults");
-    let spec = if flag.is_empty() {
-        bicompfl::transport::FaultSpec::from_env().map_err(|e| anyhow!(e))?
+/// The network configuration governing a federator/client process, resolved
+/// in one place ([`NetConfig::from_env_and_args`]): the `--faults` and
+/// `--topology` flags beat their environment variables (both sides read the
+/// same environment, so launching a process group under one env var keeps
+/// them in agreement). A `None` fault spec — including an explicit all-zero
+/// one — selects the strict protocol.
+fn net_config(c: &Cli) -> Result<NetConfig> {
+    let faults = Some(c.get("faults")).filter(|s| !s.is_empty());
+    let topology = Some(c.get("topology"))
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from);
+    NetConfig::from_env_and_args(None, faults.as_deref(), topology.as_deref())
+        .map_err(|e| anyhow!(e))
+}
+
+/// Where this federator listens / this client dials: an explicit flag
+/// (`--listen` / `--connect`) wins, then the topology file, then the Unix
+/// socket path.
+fn net_addr(c: &Cli, flag: &str, topo_addr: Option<&str>) -> distributed::NetAddr {
+    let explicit = c.get(flag);
+    if !explicit.is_empty() {
+        distributed::NetAddr::Tcp(explicit)
+    } else if let Some(addr) = topo_addr {
+        distributed::NetAddr::Tcp(addr.to_string())
     } else {
-        Some(bicompfl::transport::FaultSpec::parse(&flag).map_err(|e| anyhow!(e))?)
-    };
-    Ok(spec.filter(|s| !s.is_none()))
+        distributed::NetAddr::Unix(PathBuf::from(c.get("sock")))
+    }
 }
 
 fn build_cfg(c: &Cli) -> Result<ExpConfig> {
@@ -154,11 +181,14 @@ fn real_main() -> Result<()> {
             // One multi-process BiCompFL-GR run: the run spec assembled here
             // travels to every client inside the handshake ACK, so the
             // processes cannot drift apart on a flag.
+            let net = net_config(&c)?;
+            let topo = net.topology.as_ref();
             let defaults = distributed::RunSpec::default();
             let nz = |v: usize, d: u32| if v == 0 { d } else { v as u32 };
+            let n_default = topo.map(|t| t.n() as u32).unwrap_or(defaults.n);
             let spec = distributed::RunSpec {
                 d: nz(c.get_usize("d"), defaults.d),
-                n: nz(c.get_usize("clients"), defaults.n),
+                n: nz(c.get_usize("clients"), n_default),
                 rounds: nz(c.get_usize("rounds"), defaults.rounds),
                 n_is: nz(c.get_usize("nis"), defaults.n_is),
                 block_size: nz(c.get_usize("block-size"), defaults.block_size),
@@ -167,21 +197,27 @@ fn real_main() -> Result<()> {
                 seed: c.get_u64("seed"),
                 ..defaults
             };
-            let sock = PathBuf::from(c.get("sock"));
+            let at = net_addr(&c, "listen", topo.map(|t| t.listen.as_str()));
             info!(
-                "federator: serving {} rounds for {} clients on {}",
-                spec.rounds,
-                spec.n,
-                sock.display()
+                "federator: serving {} rounds for {} clients on {at:?}",
+                spec.rounds, spec.n
             );
-            let faults = fault_spec(&c)?;
-            let run = match &faults {
-                Some(f) => {
-                    info!("federator: deadline-tolerant protocol under faults {f:?}");
-                    distributed::run_federator_with(&sock, &spec, f)?
-                }
-                None => distributed::run_federator(&sock, &spec)?,
+            let opts = distributed::RunOpts {
+                spec,
+                faults: net
+                    .faults
+                    .clone()
+                    .unwrap_or_else(bicompfl::transport::FaultSpec::none),
+                deadline: None,
+                cohort: topo.and_then(|t| t.cohort),
             };
+            if !opts.is_strict() {
+                info!(
+                    "federator: tolerant cohort protocol (faults {:?}, cohort {:?})",
+                    opts.faults, opts.cohort
+                );
+            }
+            let run = distributed::federate(&at, &opts)?;
             for r in &run.records {
                 println!(
                     "round {:>4}: loss {:.4} acc {:.4} ul {} dl {} dl_bc {}",
@@ -195,7 +231,7 @@ fn real_main() -> Result<()> {
             // Both federator loops hard-assert meter == records (the
             // tolerant one splitting out orphaned bits) before returning.
             println!("transport check: meter == records ok");
-            if faults.is_some() {
+            if !opts.is_strict() {
                 for f in &run.faults.clients {
                     println!(
                         "faults: client {}: delivered {} straggled {} dropped {} retries {}",
@@ -205,12 +241,24 @@ fn real_main() -> Result<()> {
             }
         }
         "client" => {
-            let sock = PathBuf::from(c.get("sock"));
+            let net = net_config(&c)?;
             let id = c.get_u64("id");
-            match fault_spec(&c)? {
-                Some(f) => distributed::run_client_with(&sock, id, &f)?,
-                None => distributed::run_client(&sock, id)?,
-            }
+            let topo_addr = match net.topology.as_ref() {
+                Some(t) => Some(
+                    t.addr_of(id)
+                        .ok_or_else(|| anyhow!("client id {id} is not in the topology"))?,
+                ),
+                None => None,
+            };
+            let at = net_addr(&c, "connect", topo_addr);
+            let opts = distributed::RunOpts {
+                faults: net
+                    .faults
+                    .clone()
+                    .unwrap_or_else(bicompfl::transport::FaultSpec::none),
+                ..Default::default()
+            };
+            distributed::participate(&at, id, &opts)?;
             println!("client {id}: run complete, federator said bye");
         }
         "train" => {

@@ -359,16 +359,16 @@ impl Drop for WorkerPool {
 /// thread. The CI `threads=1` matrix job sets `BICOMPFL_THREADS=1` to prove
 /// every pipelined driver degrades to the serial reference semantics; the
 /// variable is read live (the global pool samples it once, at first use).
+/// Parsing lives in [`crate::config::net::threads_from_env`] — a malformed
+/// value aborts with its typed error rather than silently falling back.
 pub fn configured_threads() -> usize {
-    std::env::var("BICOMPFL_THREADS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    match crate::config::net::threads_from_env() {
+        Ok(Some(n)) => n,
+        Ok(None) => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        Err(e) => panic!("{e}"),
+    }
 }
 
 /// The process-wide pool every [`super::engine::ParallelRoundEngine`]

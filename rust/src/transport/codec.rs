@@ -1,0 +1,574 @@
+//! The framing state machine of the peer protocol, owning **no** file
+//! descriptor.
+//!
+//! [`FrameCodec`] is the transport-agnostic core that PR 7 split out of the
+//! blocking [`FrameStream`](super::socket::FrameStream): bytes go in
+//! ([`FrameCodec::feed`]), complete typed messages come out
+//! ([`FrameCodec::poll_msg`]), and outgoing messages are queued
+//! ([`FrameCodec::enqueue_frame`] and friends) for whoever owns the socket
+//! to drain at its own pace ([`FrameCodec::pending_out`] /
+//! [`FrameCodec::consume_out`]). Because the codec never performs I/O, the
+//! same state machine serves both peer styles:
+//!
+//! * the blocking [`FrameStream`](super::socket::FrameStream) reads from its
+//!   descriptor until the codec yields a message and writes queued bytes
+//!   with `write_all`;
+//! * the nonblocking [`Endpoint`](super::tcp::Endpoint) feeds whatever a
+//!   readiness wakeup delivered and drains whatever the kernel buffer
+//!   accepts, so one event-loop thread can multiplex hundreds of clients.
+//!
+//! ## Message framing
+//!
+//! Every message on a stream is `[tag: u8][len: u32 LE][body: len bytes]`.
+//! A [`Frame`] body is exactly the bytes of [`Frame::encode`] — the
+//! simulation's wire codec *is* the multi-process wire format, unchanged.
+//! The 5-byte envelope is transport plumbing: counted in `wire_bytes`
+//! (physical), never in the payload bits (the paper's accounting).
+//!
+//! ## Metering
+//!
+//! The codec owns the per-direction [`LinkMeter`]s. Received frames are
+//! metered when a complete `MSG_FRAME` parses out of the buffer; sent frames
+//! are metered when their bytes are queued. Queued-but-undelivered bytes (a
+//! peer that dies while its write buffer drains) therefore stay counted on
+//! both sides of the federator's accounting identity — the meter and the
+//! records always agree, which is the invariant the round loop asserts.
+
+use super::frame::Frame;
+use super::{Result, TransportError};
+
+/// Message tags of the peer protocol.
+pub(crate) const MSG_FRAME: u8 = 1;
+pub(crate) const MSG_HELLO: u8 = 2;
+pub(crate) const MSG_ACK: u8 = 3;
+pub(crate) const MSG_NACK: u8 = 4;
+pub(crate) const MSG_BYE: u8 = 5;
+pub(crate) const MSG_COHORT: u8 = 6;
+
+/// Handshake magic/version, independent of the frame codec's so the two can
+/// evolve separately.
+const HELLO_MAGIC: u16 = 0xB1C5;
+const HELLO_VERSION: u8 = 1;
+
+/// NACK reason codes.
+pub const NACK_STALE_ID: u8 = 1;
+pub const NACK_BAD_HELLO: u8 = 2;
+
+/// Bytes of the `[tag][len]` message envelope.
+pub(crate) const MSG_HEADER: usize = 5;
+
+/// Upper bound on one message body. The length prefix is attacker-controlled
+/// bytes until validated, so it must be sanity-capped *before* the receive
+/// buffer grows to hold the body — otherwise five bytes of garbage could
+/// demand a 4 GiB allocation. 64 MiB fits a dense f32 frame of d = 16M with
+/// room to spare; anything larger is a corrupt stream, not a frame.
+const MAX_MSG_BYTES: usize = 64 << 20;
+
+/// Build one `[tag][len][body]` message.
+pub(crate) fn encode_msg(tag: u8, body: &[u8]) -> Vec<u8> {
+    let mut msg = Vec::with_capacity(MSG_HEADER + body.len());
+    msg.push(tag);
+    msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    msg.extend_from_slice(body);
+    msg
+}
+
+/// One decoded peer message.
+#[derive(Debug)]
+pub enum Msg {
+    /// A typed frame plus its counted payload bits, metered off the wire.
+    Frame(Frame, u64),
+    /// A client's handshake hello (its claimed client id).
+    Hello { id: u64 },
+    /// Handshake accept; the body carries the run configuration.
+    Ack(Vec<u8>),
+    /// Handshake reject with a reason code and the offending value.
+    Nack { code: u8, detail: u64 },
+    /// The federator's realized cohort for one round: the client ids whose
+    /// uplinks were delivered before the deadline. An uncounted control
+    /// message (like ACK/BYE) of the deadline-tolerant protocol.
+    Cohort { round: u64, ids: Vec<u64> },
+    /// Graceful shutdown.
+    Bye,
+}
+
+/// Cumulative one-direction traffic through a codec.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkMeter {
+    /// Frames carried (control messages are not frames and not counted).
+    pub frames: u64,
+    /// Counted payload bits, off the wire.
+    pub bits: u64,
+    /// Physical bytes including message envelopes and frame headers.
+    pub wire_bytes: u64,
+}
+
+/// Validation of an untrusted frame buffer before decoding it: header
+/// magic/version/kind plus the full structural count check of
+/// [`check_wire_counts`](crate::transport::frame::check_wire_counts), then
+/// the fallible [`Frame::try_decode`] — a malformed body becomes a typed
+/// error instead of a decoder panic or an attacker-sized allocation.
+fn decode_frame_checked(body: &[u8]) -> Result<Frame> {
+    match crate::transport::frame::check_wire_counts(body) {
+        Ok(()) => Frame::try_decode(body),
+        Err(why) => Err(TransportError::BadFrame(why)),
+    }
+}
+
+/// Parse one complete message body. Shared by every peer style; the caller
+/// has already length-delimited `body` out of the stream.
+fn parse_body(tag: u8, body: &[u8]) -> Result<Msg> {
+    let len = body.len();
+    match tag {
+        MSG_FRAME => {
+            let frame = decode_frame_checked(body)?;
+            let bits = frame.counted_bits();
+            // The codec is lossless, so re-encoding the decoded frame must
+            // reproduce the received bytes exactly (debug builds).
+            debug_assert_eq!(frame.encode().0, body, "lossy wire round trip");
+            Ok(Msg::Frame(frame, bits))
+        }
+        MSG_HELLO => {
+            if len != 11 {
+                return Err(TransportError::Handshake(format!(
+                    "hello body is {len} bytes, expected 11"
+                )));
+            }
+            let magic = u16::from_le_bytes(body[0..2].try_into().unwrap());
+            let version = body[2];
+            if magic != HELLO_MAGIC {
+                return Err(TransportError::Handshake(format!(
+                    "hello magic {magic:#06x} != {HELLO_MAGIC:#06x}"
+                )));
+            }
+            if version != HELLO_VERSION {
+                return Err(TransportError::Handshake(format!(
+                    "hello version {version} != {HELLO_VERSION}"
+                )));
+            }
+            let id = u64::from_le_bytes(body[3..11].try_into().unwrap());
+            Ok(Msg::Hello { id })
+        }
+        MSG_ACK => Ok(Msg::Ack(body.to_vec())),
+        MSG_NACK => {
+            if len != 9 {
+                return Err(TransportError::Handshake(format!(
+                    "nack body is {len} bytes, expected 9"
+                )));
+            }
+            Ok(Msg::Nack {
+                code: body[0],
+                detail: u64::from_le_bytes(body[1..9].try_into().unwrap()),
+            })
+        }
+        MSG_COHORT => {
+            if len < 12 {
+                return Err(TransportError::Handshake(format!(
+                    "cohort body is {len} bytes, expected at least 12"
+                )));
+            }
+            let round = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let count = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+            if len != 12 + 8 * count {
+                return Err(TransportError::Handshake(format!(
+                    "cohort body is {len} bytes, expected {} for {count} ids",
+                    12 + 8 * count
+                )));
+            }
+            let ids = body[12..]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Msg::Cohort { round, ids })
+        }
+        MSG_BYE => Ok(Msg::Bye),
+        t => Err(TransportError::BadFrame(format!("unknown message tag {t}"))),
+    }
+}
+
+/// The hello body a client sends: magic, version, claimed id.
+pub(crate) fn hello_body(id: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(11);
+    body.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
+    body.push(HELLO_VERSION);
+    body.extend_from_slice(&id.to_le_bytes());
+    body
+}
+
+/// The nack body: reason code plus the offending value.
+pub(crate) fn nack_body(code: u8, detail: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(9);
+    body.push(code);
+    body.extend_from_slice(&detail.to_le_bytes());
+    body
+}
+
+/// The cohort body: round, count, sorted client ids.
+pub(crate) fn cohort_body(round: u64, ids: &[u64]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(12 + 8 * ids.len());
+    body.extend_from_slice(&round.to_le_bytes());
+    body.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+    for id in ids {
+        body.extend_from_slice(&id.to_le_bytes());
+    }
+    body
+}
+
+/// The framing state machine: feed bytes in, poll complete messages out,
+/// queue messages in, drain pending bytes out. Performs no I/O — see the
+/// module docs for how the blocking and the event-driven peers drive it.
+///
+/// # Examples
+///
+/// Frames queued on one codec and fed to another — in arbitrarily ragged
+/// chunks — parse back identically:
+///
+/// ```
+/// use bicompfl::transport::codec::{FrameCodec, Msg};
+/// use bicompfl::transport::{Frame, ModelFrame, ModelPayload};
+///
+/// let frame = Frame::Model(ModelFrame {
+///     client: 3,
+///     round: 1,
+///     payload: ModelPayload::Dense(vec![0.5, -0.5]),
+/// });
+/// let mut tx = FrameCodec::new();
+/// let bits = tx.enqueue_frame(&frame);
+///
+/// let mut rx = FrameCodec::new();
+/// for byte in tx.pending_out().to_vec() {
+///     rx.feed(&[byte]); // one byte at a time
+/// }
+/// match rx.poll_msg().unwrap() {
+///     Some(Msg::Frame(f, b)) => {
+///         assert_eq!(f, frame);
+///         assert_eq!(b, bits);
+///     }
+///     other => panic!("expected a frame, got {other:?}"),
+/// }
+/// assert_eq!(tx.sent(), rx.received());
+/// ```
+#[derive(Default)]
+pub struct FrameCodec {
+    /// Received-but-unparsed bytes; `in_pos` marks the consumed prefix.
+    in_buf: Vec<u8>,
+    in_pos: usize,
+    /// Queued-but-unwritten bytes; `out_pos` marks the drained prefix.
+    out_buf: Vec<u8>,
+    out_pos: usize,
+    sent: LinkMeter,
+    received: LinkMeter,
+}
+
+impl FrameCodec {
+    /// An empty codec.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Traffic queued for sending through this codec so far.
+    pub fn sent(&self) -> LinkMeter {
+        self.sent
+    }
+
+    /// Traffic parsed out of this codec so far.
+    pub fn received(&self) -> LinkMeter {
+        self.received
+    }
+
+    // ---- inbound ---------------------------------------------------------
+
+    /// Append bytes the transport received.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact before growing: the consumed prefix would otherwise pin
+        // every byte the connection ever carried.
+        if self.in_pos > 0 {
+            self.in_buf.drain(..self.in_pos);
+            self.in_pos = 0;
+        }
+        self.in_buf.extend_from_slice(bytes);
+    }
+
+    /// Unparsed bytes currently buffered.
+    fn in_avail(&self) -> usize {
+        self.in_buf.len() - self.in_pos
+    }
+
+    /// Whether the inbound side sits exactly at a message boundary (no
+    /// partial message buffered). An EOF here is a clean hangup; an EOF
+    /// elsewhere is a truncation.
+    pub fn at_boundary(&self) -> bool {
+        self.in_avail() == 0
+    }
+
+    /// The typed error an EOF at the current inbound position means:
+    /// [`TransportError::PeerClosed`] at a message boundary,
+    /// [`TransportError::Truncated`] mid-message (reporting how much of the
+    /// header or body was still outstanding).
+    pub fn eof_error(&self) -> TransportError {
+        let avail = self.in_avail();
+        if avail == 0 {
+            TransportError::PeerClosed
+        } else if avail < MSG_HEADER {
+            TransportError::Truncated {
+                expected: MSG_HEADER,
+                got: avail,
+            }
+        } else {
+            let at = self.in_pos;
+            let len = u32::from_le_bytes(self.in_buf[at + 1..at + 5].try_into().unwrap()) as usize;
+            TransportError::Truncated {
+                expected: len,
+                got: avail - MSG_HEADER,
+            }
+        }
+    }
+
+    /// Parse one complete message out of the buffer, if one is fully
+    /// buffered. `Ok(None)` means "feed me more bytes". An over-cap length
+    /// prefix or a malformed body is a typed error — and the length cap is
+    /// checked as soon as the 5-byte header is in, *before* any body-sized
+    /// buffer exists anywhere.
+    pub fn poll_msg(&mut self) -> Result<Option<Msg>> {
+        if self.in_avail() < MSG_HEADER {
+            return Ok(None);
+        }
+        let at = self.in_pos;
+        let tag = self.in_buf[at];
+        let len = u32::from_le_bytes(self.in_buf[at + 1..at + 5].try_into().unwrap()) as usize;
+        if len > MAX_MSG_BYTES {
+            return Err(TransportError::BadFrame(format!(
+                "message length {len} exceeds the {MAX_MSG_BYTES}-byte cap"
+            )));
+        }
+        if self.in_avail() < MSG_HEADER + len {
+            return Ok(None);
+        }
+        let body = &self.in_buf[at + MSG_HEADER..at + MSG_HEADER + len];
+        let msg = parse_body(tag, body)?;
+        if let Msg::Frame(_, bits) = &msg {
+            self.received.frames += 1;
+            self.received.bits += bits;
+            self.received.wire_bytes += (MSG_HEADER + len) as u64;
+        }
+        self.in_pos += MSG_HEADER + len;
+        if self.in_pos == self.in_buf.len() {
+            self.in_buf.clear();
+            self.in_pos = 0;
+        }
+        Ok(Some(msg))
+    }
+
+    // ---- outbound --------------------------------------------------------
+
+    /// Queue one `[tag][len][body]` control message (unmetered).
+    fn enqueue_msg(&mut self, tag: u8, body: &[u8]) {
+        self.compact_out();
+        self.out_buf.push(tag);
+        self.out_buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        self.out_buf.extend_from_slice(body);
+    }
+
+    /// Queue one typed frame; returns its counted payload bits.
+    pub fn enqueue_frame(&mut self, frame: &Frame) -> u64 {
+        let (buf, bits) = frame.encode();
+        debug_assert_eq!(
+            bits,
+            frame.counted_bits(),
+            "{} frame: wire bits != analytic counted bits",
+            frame.kind_name()
+        );
+        self.enqueue_frame_encoded(&buf, bits)
+    }
+
+    /// Queue a frame already serialized by [`Frame::encode`] — the relay
+    /// fast path: one encode serves every destination (GR fans each payload
+    /// to n−1 peers; re-encoding per peer would make the round O(n²)
+    /// encodes). `bits` must be the payload-bit count `encode` returned for
+    /// `buf`.
+    pub fn enqueue_frame_encoded(&mut self, buf: &[u8], bits: u64) -> u64 {
+        self.enqueue_msg(MSG_FRAME, buf);
+        self.sent.frames += 1;
+        self.sent.bits += bits;
+        self.sent.wire_bytes += (MSG_HEADER + buf.len()) as u64;
+        bits
+    }
+
+    /// Queue the client hello (handshake step 1, client → federator).
+    pub fn enqueue_hello(&mut self, id: u64) {
+        self.enqueue_msg(MSG_HELLO, &hello_body(id));
+    }
+
+    /// Queue the handshake accept with the run-configuration body.
+    pub fn enqueue_ack(&mut self, body: &[u8]) {
+        self.enqueue_msg(MSG_ACK, body);
+    }
+
+    /// Queue a handshake reject.
+    pub fn enqueue_nack(&mut self, code: u8, detail: u64) {
+        self.enqueue_msg(MSG_NACK, &nack_body(code, detail));
+    }
+
+    /// Queue one round's realized cohort (unmetered, like ACK and BYE).
+    pub fn enqueue_cohort(&mut self, round: u64, ids: &[u64]) {
+        self.enqueue_msg(MSG_COHORT, &cohort_body(round, ids));
+    }
+
+    /// Queue the graceful-shutdown message.
+    pub fn enqueue_bye(&mut self) {
+        self.enqueue_msg(MSG_BYE, &[]);
+    }
+
+    /// The queued bytes not yet written to the transport. The owner writes
+    /// some prefix of this slice and reports it via [`Self::consume_out`] —
+    /// partial writes are the normal case on a nonblocking socket.
+    pub fn pending_out(&self) -> &[u8] {
+        &self.out_buf[self.out_pos..]
+    }
+
+    /// Whether any queued bytes await writing.
+    pub fn wants_write(&self) -> bool {
+        self.out_pos < self.out_buf.len()
+    }
+
+    /// Mark `n` bytes of [`Self::pending_out`] as written.
+    pub fn consume_out(&mut self, n: usize) {
+        self.out_pos += n;
+        debug_assert!(self.out_pos <= self.out_buf.len(), "over-consumed");
+        if self.out_pos == self.out_buf.len() {
+            self.out_buf.clear();
+            self.out_pos = 0;
+        }
+    }
+
+    fn compact_out(&mut self) {
+        if self.out_pos > 0 {
+            self.out_buf.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{ModelFrame, ModelPayload, SideInfo, UplinkFrame};
+
+    fn sample_frame() -> Frame {
+        Frame::Uplink(UplinkFrame {
+            client: 2,
+            round: 1,
+            bits_per_index: 8,
+            indices: vec![vec![1, 255, 7], vec![0, 128, 64]],
+            side: SideInfo::None,
+        })
+    }
+
+    #[test]
+    fn byte_at_a_time_feed_reassembles_every_message_kind() {
+        let mut tx = FrameCodec::new();
+        tx.enqueue_hello(9);
+        tx.enqueue_ack(&[1, 2, 3]);
+        tx.enqueue_nack(NACK_STALE_ID, 9);
+        let bits = tx.enqueue_frame(&sample_frame());
+        tx.enqueue_cohort(4, &[0, 2]);
+        tx.enqueue_bye();
+        let stream = tx.pending_out().to_vec();
+
+        let mut rx = FrameCodec::new();
+        let mut msgs = Vec::new();
+        for b in stream {
+            rx.feed(&[b]);
+            while let Some(m) = rx.poll_msg().unwrap() {
+                msgs.push(m);
+            }
+        }
+        assert_eq!(msgs.len(), 6);
+        assert!(matches!(msgs[0], Msg::Hello { id: 9 }));
+        assert!(matches!(&msgs[1], Msg::Ack(b) if b == &[1, 2, 3]));
+        assert!(matches!(msgs[2], Msg::Nack { code: NACK_STALE_ID, detail: 9 }));
+        match &msgs[3] {
+            Msg::Frame(f, b) => {
+                assert_eq!(*f, sample_frame());
+                assert_eq!(*b, bits);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(matches!(&msgs[4], Msg::Cohort { round: 4, ids } if ids == &[0, 2]));
+        assert!(matches!(msgs[5], Msg::Bye));
+        assert_eq!(rx.received().frames, 1);
+        assert_eq!(rx.received().bits, bits);
+        assert!(rx.at_boundary());
+    }
+
+    #[test]
+    fn partial_writes_drain_in_arbitrary_chunks() {
+        let mut tx = FrameCodec::new();
+        tx.enqueue_frame(&sample_frame());
+        tx.enqueue_bye();
+        let total = tx.pending_out().len();
+        let mut drained = Vec::new();
+        let mut step = 1;
+        while tx.wants_write() {
+            let take = step.min(tx.pending_out().len());
+            drained.extend_from_slice(&tx.pending_out()[..take]);
+            tx.consume_out(take);
+            step = step * 2 + 1; // ragged chunk sizes
+        }
+        assert_eq!(drained.len(), total);
+        let mut rx = FrameCodec::new();
+        rx.feed(&drained);
+        assert!(matches!(rx.poll_msg().unwrap(), Some(Msg::Frame(..))));
+        assert!(matches!(rx.poll_msg().unwrap(), Some(Msg::Bye)));
+        assert!(matches!(rx.poll_msg().unwrap(), None));
+    }
+
+    #[test]
+    fn eof_errors_distinguish_boundary_header_and_body() {
+        let codec = FrameCodec::new();
+        assert!(matches!(codec.eof_error(), TransportError::PeerClosed));
+
+        let mut mid_header = FrameCodec::new();
+        mid_header.feed(&[MSG_BYE, 0]);
+        assert!(matches!(
+            mid_header.eof_error(),
+            TransportError::Truncated { expected: MSG_HEADER, got: 2 }
+        ));
+
+        let mut mid_body = FrameCodec::new();
+        let (buf, _) = sample_frame().encode();
+        let msg = encode_msg(MSG_FRAME, &buf);
+        mid_body.feed(&msg[..msg.len() - 3]);
+        match mid_body.eof_error() {
+            TransportError::Truncated { expected, got } => {
+                assert_eq!(expected, buf.len());
+                assert_eq!(got, buf.len() - 3);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn over_cap_length_prefix_is_refused_from_the_header_alone() {
+        let mut rx = FrameCodec::new();
+        rx.feed(&[MSG_FRAME]);
+        rx.feed(&u32::MAX.to_le_bytes());
+        assert!(matches!(rx.poll_msg(), Err(TransportError::BadFrame(_))));
+    }
+
+    #[test]
+    fn meters_count_frames_only() {
+        let mut tx = FrameCodec::new();
+        tx.enqueue_hello(1);
+        tx.enqueue_bye();
+        assert_eq!(tx.sent(), LinkMeter::default());
+        let bits = tx.enqueue_frame(&Frame::Model(ModelFrame {
+            client: 0,
+            round: 0,
+            payload: ModelPayload::Dense(vec![1.0, 2.0]),
+        }));
+        assert_eq!(tx.sent().frames, 1);
+        assert_eq!(tx.sent().bits, bits);
+        assert!(tx.sent().wire_bytes > 0);
+    }
+}

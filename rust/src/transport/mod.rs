@@ -27,16 +27,25 @@
 //!   [`socket`] module also holds the blocking peer API ([`FrameStream`],
 //!   handshake, typed [`TransportError`]s) that the multi-process
 //!   `bicompfl federator` / `bicompfl client` topology speaks.
+//! * [`tcp::TcpTransport`] — the same carry over a real loopback **TCP**
+//!   connection. The [`tcp`] module also holds the nonblocking
+//!   [`Endpoint`](tcp::Endpoint)/[`Listener`](tcp::Listener) API the
+//!   event-driven many-client federator multiplexes with, built on the
+//!   fd-free framing state machine in [`codec`].
 //!
-//! `BICOMPFL_TRANSPORT` selects the path for every coordinator and baseline:
-//! unset or `loopback` is zero-copy, `framed` serializes in process, and
-//! `socket` carries every frame through a kernel socketpair (CI runs the
-//! full suite under `framed` and under `socket`). The determinism suite pins
-//! all three bit-identical.
+//! `BICOMPFL_TRANSPORT` selects the path for every coordinator and baseline
+//! (see [`TransportKind`]): unset or `loopback` is zero-copy, `framed`
+//! serializes in process, `socket` carries every frame through a kernel
+//! socketpair, and `tcp` through a loopback TCP connection (CI runs the full
+//! suite under each wire value). The determinism suite pins all four
+//! bit-identical. An unrecognized value is a typed [`TransportError`] from
+//! [`from_env`] — a typo must never silently un-meter the wire.
 
+pub mod codec;
 pub mod fault;
 pub mod frame;
 pub mod socket;
+pub mod tcp;
 pub mod wire;
 
 use std::io;
@@ -50,7 +59,8 @@ pub use frame::{
     DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide, SideInfo, UplinkFrame,
     FEDERATOR,
 };
-pub use socket::{FrameStream, SocketTransport};
+pub use socket::{FrameStream, PeerSocket, SocketTransport};
+pub use tcp::TcpTransport;
 
 /// Typed failures of the wire-facing transport paths (the socket peer layer,
 /// the fallible frame decoder, and the fault-injection wrappers). The
@@ -72,6 +82,9 @@ pub enum TransportError {
     /// The federator rejected this client id (out of range or already
     /// connected — a stale re-connect).
     StaleClient { id: u64 },
+    /// A configuration value (env var, CLI flag, or topology file) failed to
+    /// parse or named something that does not exist.
+    Config(String),
 }
 
 impl std::fmt::Display for TransportError {
@@ -87,6 +100,7 @@ impl std::fmt::Display for TransportError {
             TransportError::StaleClient { id } => {
                 write!(f, "federator rejected client id {id} (stale or duplicate)")
             }
+            TransportError::Config(why) => write!(f, "configuration error: {why}"),
         }
     }
 }
@@ -341,34 +355,92 @@ impl Transport for FramedLoopback {
     }
 }
 
-/// Construct the configured transport: `BICOMPFL_TRANSPORT=framed` selects
-/// [`FramedLoopback`], `socket` selects a fresh duplex-socketpair
-/// [`SocketTransport`] (every frame crosses real file descriptors), and
-/// unset/empty/`loopback` selects [`Loopback`]. Each call returns a fresh
-/// instance with its own meter, so concurrent algorithms never share
-/// counters.
+/// The in-process transport backends `BICOMPFL_TRANSPORT` can select. The
+/// enum is the one place the value names are parsed — CLI flags, env vars,
+/// and the bench harness all go through [`TransportKind::parse`], so a typo
+/// is a typed [`TransportError::Config`] everywhere instead of a silent
+/// fallback that would un-meter the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Zero-copy in-process metering ([`Loopback`]). The default.
+    #[default]
+    Loopback,
+    /// Byte-exact in-process serialization ([`FramedLoopback`]).
+    Framed,
+    /// Every frame crosses a kernel Unix socketpair ([`SocketTransport`]).
+    Socket,
+    /// Every frame crosses a loopback TCP connection ([`TcpTransport`]).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Every accepted value name, for error messages and docs.
+    pub const NAMES: [&'static str; 4] = ["loopback", "framed", "socket", "tcp"];
+
+    /// Parse a `BICOMPFL_TRANSPORT` value (empty selects the default).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "" | "loopback" => Ok(TransportKind::Loopback),
+            "framed" => Ok(TransportKind::Framed),
+            "socket" => Ok(TransportKind::Socket),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(TransportError::Config(format!(
+                "BICOMPFL_TRANSPORT={other:?}: expected one of {:?}",
+                Self::NAMES
+            ))),
+        }
+    }
+
+    /// The value name this kind parses from.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Loopback => "loopback",
+            TransportKind::Framed => "framed",
+            TransportKind::Socket => "socket",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Construct a fresh transport of this kind (its own meter, so
+    /// concurrent algorithms never share counters). The socket-backed kinds
+    /// can fail on fd/port exhaustion — a typed error, not a panic.
+    pub fn build(self) -> Result<Arc<dyn Transport>> {
+        Ok(match self {
+            TransportKind::Loopback => Arc::new(Loopback::new()),
+            TransportKind::Framed => Arc::new(FramedLoopback::new()),
+            TransportKind::Socket => Arc::new(SocketTransport::duplex()?),
+            TransportKind::Tcp => Arc::new(TcpTransport::duplex()?),
+        })
+    }
+}
+
+/// Construct the transport `BICOMPFL_TRANSPORT` selects (see
+/// [`TransportKind`]); unset or empty selects [`Loopback`]. An unrecognized
+/// value is a [`TransportError::Config`] — never a silent fallback.
 ///
 /// When `BICOMPFL_FAULTS` names a nonzero [`FaultSpec`], the base transport
 /// is wrapped in a [`FaultyTransport`] that applies the spec's per-client
 /// pacing (artificial delay and bandwidth caps). The wrapper never alters
 /// frame content or metering, so every record stays bit-identical to the
 /// unwrapped path — the CI fault job runs the whole suite this way.
-pub fn from_env() -> Arc<dyn Transport> {
-    let base: Arc<dyn Transport> = match std::env::var("BICOMPFL_TRANSPORT").as_deref() {
-        Ok("framed") => Arc::new(FramedLoopback::new()),
-        Ok("socket") => Arc::new(
-            SocketTransport::duplex().expect("BICOMPFL_TRANSPORT=socket: socketpair failed"),
-        ),
-        Ok("") | Ok("loopback") | Err(_) => Arc::new(Loopback::new()),
-        Ok(other) => panic!(
-            "BICOMPFL_TRANSPORT={other:?}: expected \"loopback\", \"framed\", or \"socket\""
-        ),
+pub fn from_env() -> Result<Arc<dyn Transport>> {
+    let kind = match std::env::var("BICOMPFL_TRANSPORT") {
+        Ok(v) => TransportKind::parse(&v)?,
+        Err(_) => TransportKind::default(),
     };
+    let base = kind.build()?;
     match FaultSpec::from_env() {
-        Ok(Some(spec)) if !spec.is_none() => Arc::new(FaultyTransport::new(base, spec)),
-        Ok(_) => base,
-        Err(why) => panic!("BICOMPFL_FAULTS: {why}"),
+        Ok(Some(spec)) if !spec.is_none() => Ok(Arc::new(FaultyTransport::new(base, spec))),
+        Ok(_) => Ok(base),
+        Err(why) => Err(TransportError::Config(format!("BICOMPFL_FAULTS: {why}"))),
     }
+}
+
+/// [`from_env`] for infallible construction sites (the `Default` impls of
+/// the algorithm runners): a bad environment is reported and aborts, with
+/// the typed error's message. Fallible callers should use [`from_env`].
+pub fn from_env_or_die() -> Arc<dyn Transport> {
+    from_env().unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Debug-time consistency check between a run's meter delta and the bit

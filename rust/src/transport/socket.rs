@@ -24,140 +24,153 @@
 //!   drops mid-round, and a handshake with a stale client id are all
 //!   recoverable conditions the caller can match on.
 //!
-//! ## Message framing
-//!
-//! Every message on a socket is `[tag: u8][len: u32 LE][body: len bytes]`.
-//! A [`Frame`] body is exactly the bytes of [`Frame::encode`] — the
-//! simulation's wire codec *is* the multi-process wire format, unchanged.
-//! The 5-byte message envelope is transport plumbing and is counted in
-//! `wire_bytes` (physical), never in the payload bits (the paper's
-//! accounting).
+//! Since PR 7 the framing itself — `[tag][len][body]` envelopes, message
+//! parsing, per-direction metering — lives in the fd-free
+//! [`FrameCodec`](super::codec::FrameCodec) state machine. [`FrameStream`]
+//! is that codec bolted onto a blocking [`PeerSocket`] (Unix **or** TCP);
+//! the nonblocking [`Endpoint`](super::tcp::Endpoint) is the same codec
+//! bolted onto a readiness loop. One parser, every transport.
 
 use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::codec::FrameCodec;
 use super::frame::Frame;
 use super::{Delivery, Leg, Meter, Transport, TransportStats};
 
-/// Message tags of the socket protocol.
-pub(crate) const MSG_FRAME: u8 = 1;
-const MSG_HELLO: u8 = 2;
-const MSG_ACK: u8 = 3;
-const MSG_NACK: u8 = 4;
-const MSG_BYE: u8 = 5;
-const MSG_COHORT: u8 = 6;
-
-/// Handshake magic/version, independent of the frame codec's so the two can
-/// evolve separately.
-const HELLO_MAGIC: u16 = 0xB1C5;
-const HELLO_VERSION: u8 = 1;
+pub(crate) use super::codec::{encode_msg, MSG_FRAME, MSG_HEADER};
+pub use super::codec::{LinkMeter, Msg, NACK_BAD_HELLO, NACK_STALE_ID};
 
 /// How long an accepted connection gets to complete its HELLO before the
 /// federator drops it and serves the next peer.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+pub(crate) const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// NACK reason codes.
-pub const NACK_STALE_ID: u8 = 1;
-pub const NACK_BAD_HELLO: u8 = 2;
-
-/// Bytes of the `[tag][len]` message envelope.
-pub(crate) const MSG_HEADER: usize = 5;
-
-/// Upper bound on one message body. The length prefix is attacker-controlled
-/// bytes until validated, so it must be sanity-capped *before* the receive
-/// buffer is allocated — otherwise five bytes of garbage could demand a
-/// 4 GiB allocation. 64 MiB fits a dense f32 frame of d = 16M with room to
-/// spare; anything larger is a corrupt stream, not a frame.
-const MAX_MSG_BYTES: usize = 64 << 20;
-
-// The typed error surface of every wire-facing path now lives at the
-// transport root (the fallible frame decoder and the fault layer share it);
+// The typed error surface of every wire-facing path lives at the transport
+// root (the fallible frame decoder and the fault layer share it);
 // re-exported here so existing `transport::socket::TransportError` imports
 // keep compiling.
 pub use super::{Result, TransportError};
 
-/// Build one `[tag][len][body]` message.
-pub(crate) fn encode_msg(tag: u8, body: &[u8]) -> Vec<u8> {
-    let mut msg = Vec::with_capacity(MSG_HEADER + body.len());
-    msg.push(tag);
-    msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    msg.extend_from_slice(body);
-    msg
-}
-
-/// One decoded socket message.
+/// One connected stream socket of either family. The peer layer is
+/// family-agnostic — the same handshake, framing, and metering run over a
+/// Unix-domain descriptor (single-host demos) or a TCP connection (the
+/// many-client federator) — so the stream type is an enum, not a generic:
+/// every caller handles both without monomorphizing the whole peer API.
 #[derive(Debug)]
-pub enum Msg {
-    /// A typed frame plus its counted payload bits, metered off the wire.
-    Frame(Frame, u64),
-    /// A client's handshake hello (its claimed client id).
-    Hello { id: u64 },
-    /// Handshake accept; the body carries the run configuration.
-    Ack(Vec<u8>),
-    /// Handshake reject with a reason code and the offending value.
-    Nack { code: u8, detail: u64 },
-    /// The federator's realized cohort for one round: the client ids whose
-    /// uplinks were delivered before the deadline. An uncounted control
-    /// message (like ACK/BYE) of the deadline-tolerant protocol.
-    Cohort { round: u64, ids: Vec<u64> },
-    /// Graceful shutdown.
-    Bye,
+pub enum PeerSocket {
+    Unix(UnixStream),
+    Tcp(TcpStream),
 }
 
-/// Validation of an untrusted frame buffer before decoding it: header
-/// magic/version/kind plus the full structural count check of
-/// [`check_wire_counts`](crate::transport::frame::check_wire_counts), then
-/// the fallible [`Frame::try_decode`] — a malformed body becomes a typed
-/// error instead of a decoder panic or an attacker-sized allocation.
-fn decode_frame_checked(body: &[u8]) -> Result<Frame> {
-    match crate::transport::frame::check_wire_counts(body) {
-        Ok(()) => Frame::try_decode(body),
-        Err(why) => Err(TransportError::BadFrame(why)),
+impl PeerSocket {
+    /// Set or clear the socket's read timeout (`SO_RCVTIMEO`).
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            PeerSocket::Unix(s) => s.set_read_timeout(dur),
+            PeerSocket::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    /// Switch the socket between blocking and nonblocking mode.
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            PeerSocket::Unix(s) => s.set_nonblocking(nb),
+            PeerSocket::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Shut down both directions.
+    pub fn shutdown(&self) {
+        match self {
+            PeerSocket::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            PeerSocket::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for PeerSocket {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            PeerSocket::Unix(s) => s.read(buf),
+            PeerSocket::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for PeerSocket {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            PeerSocket::Unix(s) => s.write(buf),
+            PeerSocket::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            PeerSocket::Unix(s) => s.flush(),
+            PeerSocket::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+impl AsRawFd for PeerSocket {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            PeerSocket::Unix(s) => s.as_raw_fd(),
+            PeerSocket::Tcp(s) => s.as_raw_fd(),
+        }
+    }
+}
+
+impl From<UnixStream> for PeerSocket {
+    fn from(s: UnixStream) -> Self {
+        PeerSocket::Unix(s)
+    }
+}
+
+impl From<TcpStream> for PeerSocket {
+    fn from(s: TcpStream) -> Self {
+        PeerSocket::Tcp(s)
     }
 }
 
 /// Blocking, metered, length-delimited frame I/O over one connected socket —
 /// the peer-to-peer leg of the multi-process topology. Each direction keeps
-/// a [`LinkMeter`] so a round loop can check its `RoundRecord` bit totals
-/// against what physically crossed this descriptor.
+/// a [`LinkMeter`] (owned by the inner [`FrameCodec`]) so a round loop can
+/// check its `RoundRecord` bit totals against what physically crossed this
+/// descriptor.
 pub struct FrameStream {
-    stream: UnixStream,
-    sent: LinkMeter,
-    received: LinkMeter,
-}
-
-/// Cumulative one-direction traffic of a [`FrameStream`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct LinkMeter {
-    /// Frames carried (control messages are not frames and not counted).
-    pub frames: u64,
-    /// Counted payload bits, off the wire.
-    pub bits: u64,
-    /// Physical bytes including message envelopes and frame headers.
-    pub wire_bytes: u64,
+    sock: PeerSocket,
+    codec: FrameCodec,
 }
 
 impl FrameStream {
-    /// Wrap a connected socket (no handshake is performed here).
-    pub fn new(stream: UnixStream) -> Self {
+    /// Wrap a connected socket of either family (no handshake is performed
+    /// here).
+    pub fn new(sock: impl Into<PeerSocket>) -> Self {
         Self {
-            stream,
-            sent: LinkMeter::default(),
-            received: LinkMeter::default(),
+            sock: sock.into(),
+            codec: FrameCodec::new(),
         }
     }
 
     /// Traffic sent on this stream so far.
     pub fn sent(&self) -> LinkMeter {
-        self.sent
+        self.codec.sent()
     }
 
     /// Traffic received on this stream so far.
     pub fn received(&self) -> LinkMeter {
-        self.received
+        self.codec.received()
     }
 
     /// Set or clear the underlying socket's read timeout. The federator
@@ -165,135 +178,50 @@ impl FrameStream {
     /// peer must not wedge the accept loop) and clears it once a client is
     /// admitted.
     pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
-        self.stream.set_read_timeout(dur)
+        self.sock.set_read_timeout(dur)
     }
 
-    fn send_msg(&mut self, tag: u8, body: &[u8]) -> Result<()> {
-        let msg = encode_msg(tag, body);
-        self.stream.write_all(&msg).map_err(|e| {
-            if e.kind() == io::ErrorKind::BrokenPipe {
-                TransportError::PeerClosed
-            } else {
-                TransportError::Io(e)
-            }
-        })
-    }
-
-    /// Read exactly `buf.len()` bytes. A clean EOF before the first byte is
-    /// [`TransportError::PeerClosed`] when `at_boundary`; any later EOF is a
-    /// typed [`TransportError::Truncated`].
-    fn read_exactly(&mut self, buf: &mut [u8], at_boundary: bool) -> Result<()> {
-        let mut got = 0;
-        while got < buf.len() {
-            match self.stream.read(&mut buf[got..]) {
-                Ok(0) => {
-                    return Err(if got == 0 && at_boundary {
-                        TransportError::PeerClosed
-                    } else {
-                        TransportError::Truncated { expected: buf.len(), got }
-                    });
-                }
-                Ok(k) => got += k,
+    /// Write everything the codec has queued — the blocking peer always
+    /// drains immediately, so `wants_write` is false between calls.
+    fn flush_out(&mut self) -> Result<()> {
+        while self.codec.wants_write() {
+            match self.sock.write(self.codec.pending_out()) {
+                Ok(0) => return Err(TransportError::PeerClosed),
+                Ok(k) => self.codec.consume_out(k),
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::BrokenPipe => {
+                    return Err(TransportError::PeerClosed)
+                }
                 Err(e) => return Err(TransportError::Io(e)),
             }
         }
         Ok(())
     }
 
-    /// Receive one message of any kind.
+    /// Receive one message of any kind: poll the codec, feeding it from the
+    /// descriptor until a complete message parses out. An EOF becomes the
+    /// codec's position-aware typed error ([`TransportError::PeerClosed`] at
+    /// a boundary, [`TransportError::Truncated`] mid-message).
     pub fn recv_msg(&mut self) -> Result<Msg> {
-        let mut header = [0u8; MSG_HEADER];
-        self.read_exactly(&mut header, true)?;
-        let tag = header[0];
-        let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
-        if len > MAX_MSG_BYTES {
-            return Err(TransportError::BadFrame(format!(
-                "message length {len} exceeds the {MAX_MSG_BYTES}-byte cap"
-            )));
-        }
-        let mut body = vec![0u8; len];
-        self.read_exactly(&mut body, false)?;
-        match tag {
-            MSG_FRAME => {
-                let frame = decode_frame_checked(&body)?;
-                let bits = frame.counted_bits();
-                // The codec is lossless, so re-encoding the decoded frame
-                // must reproduce the received bytes exactly (debug builds).
-                debug_assert_eq!(frame.encode().0, body, "lossy wire round trip");
-                self.received.frames += 1;
-                self.received.bits += bits;
-                self.received.wire_bytes += (MSG_HEADER + len) as u64;
-                Ok(Msg::Frame(frame, bits))
+        loop {
+            if let Some(msg) = self.codec.poll_msg()? {
+                return Ok(msg);
             }
-            MSG_HELLO => {
-                if len != 11 {
-                    return Err(TransportError::Handshake(format!(
-                        "hello body is {len} bytes, expected 11"
-                    )));
-                }
-                let magic = u16::from_le_bytes(body[0..2].try_into().unwrap());
-                let version = body[2];
-                if magic != HELLO_MAGIC {
-                    return Err(TransportError::Handshake(format!(
-                        "hello magic {magic:#06x} != {HELLO_MAGIC:#06x}"
-                    )));
-                }
-                if version != HELLO_VERSION {
-                    return Err(TransportError::Handshake(format!(
-                        "hello version {version} != {HELLO_VERSION}"
-                    )));
-                }
-                let id = u64::from_le_bytes(body[3..11].try_into().unwrap());
-                Ok(Msg::Hello { id })
+            let mut tmp = [0u8; 16 * 1024];
+            match self.sock.read(&mut tmp) {
+                Ok(0) => return Err(self.codec.eof_error()),
+                Ok(k) => self.codec.feed(&tmp[..k]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(TransportError::Io(e)),
             }
-            MSG_ACK => Ok(Msg::Ack(body)),
-            MSG_NACK => {
-                if len != 9 {
-                    return Err(TransportError::Handshake(format!(
-                        "nack body is {len} bytes, expected 9"
-                    )));
-                }
-                Ok(Msg::Nack {
-                    code: body[0],
-                    detail: u64::from_le_bytes(body[1..9].try_into().unwrap()),
-                })
-            }
-            MSG_COHORT => {
-                if len < 12 {
-                    return Err(TransportError::Handshake(format!(
-                        "cohort body is {len} bytes, expected at least 12"
-                    )));
-                }
-                let round = u64::from_le_bytes(body[0..8].try_into().unwrap());
-                let count = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
-                if len != 12 + 8 * count {
-                    return Err(TransportError::Handshake(format!(
-                        "cohort body is {len} bytes, expected {} for {count} ids",
-                        12 + 8 * count
-                    )));
-                }
-                let ids = body[12..]
-                    .chunks_exact(8)
-                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
-                Ok(Msg::Cohort { round, ids })
-            }
-            MSG_BYE => Ok(Msg::Bye),
-            t => Err(TransportError::BadFrame(format!("unknown message tag {t}"))),
         }
     }
 
     /// Send one typed frame; returns its counted payload bits.
     pub fn send_frame(&mut self, frame: &Frame) -> Result<u64> {
-        let (buf, bits) = frame.encode();
-        debug_assert_eq!(
-            bits,
-            frame.counted_bits(),
-            "{} frame: wire bits != analytic counted bits",
-            frame.kind_name()
-        );
-        self.send_frame_encoded(&buf, bits)
+        let bits = self.codec.enqueue_frame(frame);
+        self.flush_out()?;
+        Ok(bits)
     }
 
     /// Send a frame already serialized by [`Frame::encode`] — the relay fast
@@ -301,10 +229,8 @@ impl FrameStream {
     /// n−1 peers; re-encoding per peer would make the round O(n²) encodes).
     /// `bits` must be the payload-bit count `encode` returned for `buf`.
     pub fn send_frame_encoded(&mut self, buf: &[u8], bits: u64) -> Result<u64> {
-        self.send_msg(MSG_FRAME, buf)?;
-        self.sent.frames += 1;
-        self.sent.bits += bits;
-        self.sent.wire_bytes += (MSG_HEADER + buf.len()) as u64;
+        self.codec.enqueue_frame_encoded(buf, bits);
+        self.flush_out()?;
         Ok(bits)
     }
 
@@ -322,37 +248,28 @@ impl FrameStream {
 
     /// Send the client hello (handshake step 1, client → federator).
     pub fn send_hello(&mut self, id: u64) -> Result<()> {
-        let mut body = Vec::with_capacity(11);
-        body.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
-        body.push(HELLO_VERSION);
-        body.extend_from_slice(&id.to_le_bytes());
-        self.send_msg(MSG_HELLO, &body)
+        self.codec.enqueue_hello(id);
+        self.flush_out()
     }
 
     /// Send the handshake accept with the run-configuration body.
     pub fn send_ack(&mut self, body: &[u8]) -> Result<()> {
-        self.send_msg(MSG_ACK, body)
+        self.codec.enqueue_ack(body);
+        self.flush_out()
     }
 
     /// Send a handshake reject.
     pub fn send_nack(&mut self, code: u8, detail: u64) -> Result<()> {
-        let mut body = Vec::with_capacity(9);
-        body.push(code);
-        body.extend_from_slice(&detail.to_le_bytes());
-        self.send_msg(MSG_NACK, body)
+        self.codec.enqueue_nack(code, detail);
+        self.flush_out()
     }
 
     /// Send one round's realized cohort (the client ids whose uplinks were
     /// delivered before the deadline). A control message: unmetered, like
     /// ACK and BYE.
     pub fn send_cohort(&mut self, round: u64, ids: &[u64]) -> Result<()> {
-        let mut body = Vec::with_capacity(12 + 8 * ids.len());
-        body.extend_from_slice(&round.to_le_bytes());
-        body.extend_from_slice(&(ids.len() as u32).to_le_bytes());
-        for id in ids {
-            body.extend_from_slice(&id.to_le_bytes());
-        }
-        self.send_msg(MSG_COHORT, &body)
+        self.codec.enqueue_cohort(round, ids);
+        self.flush_out()
     }
 
     /// Block until the federator's cohort message for the current round
@@ -372,7 +289,7 @@ impl FrameStream {
     /// meters — the fault layer's truncated-write injection, which must put
     /// a *partial* message on the wire.
     pub(crate) fn write_raw(&mut self, bytes: &[u8]) -> Result<()> {
-        self.stream.write_all(bytes).map_err(|e| {
+        self.sock.write_all(bytes).map_err(|e| {
             if e.kind() == io::ErrorKind::BrokenPipe {
                 TransportError::PeerClosed
             } else {
@@ -386,12 +303,13 @@ impl FrameStream {
     /// stays in the caller's vector so its meters remain summable, but the
     /// peer sees EOF instead of a wedged connection.
     pub fn shutdown(&self) {
-        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        self.sock.shutdown();
     }
 
     /// Send the graceful-shutdown message.
     pub fn send_bye(&mut self) -> Result<()> {
-        self.send_msg(MSG_BYE, &[])
+        self.codec.enqueue_bye();
+        self.flush_out()
     }
 
     /// Block until the peer's BYE arrives (a frame here is a protocol
@@ -536,6 +454,24 @@ pub fn accept_clients_deadline(
     Ok(streams)
 }
 
+/// Run the client side of the HELLO/ACK handshake on a freshly connected
+/// stream of either family. Returns the stream plus the federator's ACK
+/// body (the run configuration). Shared by [`connect_client`] and the TCP
+/// dialer ([`super::tcp::connect_client_tcp`]).
+pub(crate) fn client_handshake(mut fs: FrameStream, id: u64) -> Result<(FrameStream, Vec<u8>)> {
+    fs.send_hello(id)?;
+    match fs.recv_msg()? {
+        Msg::Ack(body) => Ok((fs, body)),
+        Msg::Nack { code: NACK_STALE_ID, .. } => Err(TransportError::StaleClient { id }),
+        Msg::Nack { code, .. } => Err(TransportError::Handshake(format!(
+            "federator refused the handshake (code {code})"
+        ))),
+        other => Err(TransportError::Handshake(format!(
+            "expected ack/nack, got {other:?}"
+        ))),
+    }
+}
+
 /// Connect to the federator at `path` as client `id` and run the handshake.
 /// Retries the connect briefly (the federator may not have bound yet when
 /// the processes launch together). Returns the stream plus the federator's
@@ -559,39 +495,30 @@ pub fn connect_client(path: &Path, id: u64) -> Result<(FrameStream, Vec<u8>)> {
             }
         }
     };
-    let mut fs = FrameStream::new(stream);
-    fs.send_hello(id)?;
-    match fs.recv_msg()? {
-        Msg::Ack(body) => Ok((fs, body)),
-        Msg::Nack { code: NACK_STALE_ID, .. } => Err(TransportError::StaleClient { id }),
-        Msg::Nack { code, .. } => Err(TransportError::Handshake(format!(
-            "federator refused the handshake (code {code})"
-        ))),
-        other => Err(TransportError::Handshake(format!(
-            "expected ack/nack, got {other:?}"
-        ))),
-    }
+    client_handshake(FrameStream::new(stream), id)
 }
 
-/// The two ends of one in-process socketpair: the write end is nonblocking
-/// so a frame larger than the kernel buffer is pumped through (write some,
-/// drain some) instead of deadlocking the single carrying thread.
-struct Duplex {
-    tx: UnixStream,
-    rx: UnixStream,
+/// The two ends of one in-process duplex connection: the write end is
+/// nonblocking so a frame larger than the kernel buffer is pumped through
+/// (write some, drain some) instead of deadlocking the single carrying
+/// thread. Generic over the stream family — [`SocketTransport`] runs it on
+/// a Unix socketpair, [`super::tcp::TcpTransport`] on a loopback TCP
+/// connection.
+pub(crate) struct CarryDuplex<S: Read + Write> {
+    tx: S,
+    rx: S,
 }
 
-impl Duplex {
-    fn pair() -> io::Result<Self> {
-        let (tx, rx) = UnixStream::pair()?;
-        tx.set_nonblocking(true)?;
-        Ok(Self { tx, rx })
+impl<S: Read + Write> CarryDuplex<S> {
+    /// Wrap a connected pair; `tx` must already be in nonblocking mode.
+    pub(crate) fn new(tx: S, rx: S) -> Self {
+        Self { tx, rx }
     }
 
     /// Push `msg` through the kernel and read it back from the other end.
     /// Only one message is ever in flight (the caller holds the lock), so
     /// exactly `msg.len()` bytes come back.
-    fn carry(&mut self, msg: &[u8]) -> io::Result<Vec<u8>> {
+    pub(crate) fn carry(&mut self, msg: &[u8]) -> io::Result<Vec<u8>> {
         let mut back: Vec<u8> = Vec::with_capacity(msg.len());
         let mut off = 0;
         while off < msg.len() {
@@ -599,7 +526,7 @@ impl Duplex {
                 Ok(0) => {
                     return Err(io::Error::new(
                         io::ErrorKind::WriteZero,
-                        "socketpair write end closed",
+                        "duplex write end closed",
                     ))
                 }
                 Ok(k) => off += k,
@@ -612,7 +539,7 @@ impl Duplex {
                     if k == 0 {
                         return Err(io::Error::new(
                             io::ErrorKind::UnexpectedEof,
-                            "socketpair read end closed",
+                            "duplex read end closed",
                         ));
                     }
                     back.extend_from_slice(&tmp[..k]);
@@ -629,13 +556,41 @@ impl Duplex {
             if k == 0 {
                 return Err(io::Error::new(
                     io::ErrorKind::UnexpectedEof,
-                    "socketpair read end closed",
+                    "duplex read end closed",
                 ));
             }
             got += k;
         }
         Ok(back)
     }
+}
+
+/// Serialize, carry through the kernel, and decode one frame; returns the
+/// delivered frame, its payload bits, and the physical message bytes.
+/// Shared by the socketpair and loopback-TCP in-process transports.
+pub(crate) fn carry_frame<S: Read + Write>(
+    duplex: &mut CarryDuplex<S>,
+    frame: &Frame,
+) -> (Frame, u64, u64) {
+    let (buf, payload_bits) = frame.encode();
+    debug_assert_eq!(
+        payload_bits,
+        frame.counted_bits(),
+        "{} frame: wire bits != analytic counted bits",
+        frame.kind_name()
+    );
+    let msg = encode_msg(MSG_FRAME, &buf);
+    let back = duplex
+        .carry(&msg)
+        .unwrap_or_else(|e| panic!("in-process duplex transport failed: {e}"));
+    assert_eq!(back[0], MSG_FRAME, "duplex delivered a non-frame tag");
+    let len = u32::from_le_bytes(back[1..MSG_HEADER].try_into().unwrap()) as usize;
+    assert_eq!(len, back.len() - MSG_HEADER, "duplex length drift");
+    let delivered = Frame::decode(&back[MSG_HEADER..]);
+    // Bit-pattern check, as in FramedLoopback: NaN payloads round-trip
+    // exactly but NaN != NaN would misreport the codec as lossy.
+    debug_assert_eq!(delivered.encode().0, buf, "lossy wire round trip");
+    (delivered, payload_bits, msg.len() as u64)
 }
 
 /// In-process [`Transport`] over a real socketpair (a duplex pipe): every
@@ -671,45 +626,23 @@ impl Duplex {
 /// assert_eq!(t.stats().ul_bits, 64);
 /// ```
 pub struct SocketTransport {
-    duplex: Mutex<Duplex>,
+    duplex: Mutex<CarryDuplex<UnixStream>>,
     meter: Meter,
 }
 
 impl SocketTransport {
     /// A transport over a fresh in-process socketpair.
     pub fn duplex() -> io::Result<Self> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
         Ok(Self {
-            duplex: Mutex::new(Duplex::pair()?),
+            duplex: Mutex::new(CarryDuplex::new(tx, rx)),
             meter: Meter::default(),
         })
     }
 
-    /// Serialize, carry through the kernel, and decode one frame; returns
-    /// the delivered frame, its payload bits, and the physical message
-    /// bytes.
     fn carry_frame(&self, frame: &Frame) -> (Frame, u64, u64) {
-        let (buf, payload_bits) = frame.encode();
-        debug_assert_eq!(
-            payload_bits,
-            frame.counted_bits(),
-            "{} frame: wire bits != analytic counted bits",
-            frame.kind_name()
-        );
-        let msg = encode_msg(MSG_FRAME, &buf);
-        let back = self
-            .duplex
-            .lock()
-            .unwrap()
-            .carry(&msg)
-            .unwrap_or_else(|e| panic!("socket transport pair failed: {e}"));
-        assert_eq!(back[0], MSG_FRAME, "socket pair delivered a non-frame tag");
-        let len = u32::from_le_bytes(back[1..MSG_HEADER].try_into().unwrap()) as usize;
-        assert_eq!(len, back.len() - MSG_HEADER, "socket pair length drift");
-        let delivered = Frame::decode(&back[MSG_HEADER..]);
-        // Bit-pattern check, as in FramedLoopback: NaN payloads round-trip
-        // exactly but NaN != NaN would misreport the codec as lossy.
-        debug_assert_eq!(delivered.encode().0, buf, "lossy wire round trip");
-        (delivered, payload_bits, msg.len() as u64)
+        carry_frame(&mut self.duplex.lock().unwrap(), frame)
     }
 }
 
@@ -835,6 +768,24 @@ mod tests {
         assert_eq!(tx.sent().frames, 1);
         tx.send_bye().unwrap();
         assert!(matches!(rx.recv_bye(), Ok(())));
+    }
+
+    #[test]
+    fn framestream_roundtrip_over_tcp() {
+        // The identical peer API over the other socket family: a loopback
+        // TCP connection carries the same frames with the same meters.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut tx = FrameStream::new(client);
+        let mut rx = FrameStream::new(server);
+        let f = sample_frame();
+        let sent_bits = tx.send_frame(&f).unwrap();
+        let (back, recv_bits) = rx.recv_frame().unwrap();
+        assert_eq!(back, f);
+        assert_eq!(sent_bits, recv_bits);
+        assert_eq!(tx.sent(), rx.received());
     }
 
     #[test]

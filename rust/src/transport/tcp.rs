@@ -1,0 +1,563 @@
+//! TCP backend of the peer layer: a nonblocking [`Listener`]/[`Endpoint`]
+//! API plus the readiness primitive ([`poll_fds`]) the event-driven
+//! federator multiplexes them with.
+//!
+//! The blocking [`FrameStream`](super::socket::FrameStream) is one thread
+//! per connection by construction — fine for an N-process demo, structurally
+//! unable to serve cross-device scale. This module is the other half of the
+//! PR 7 split: the same [`FrameCodec`](super::codec::FrameCodec) state
+//! machine (one parser, every transport) bolted onto a **nonblocking**
+//! `TcpStream`, so a single event-loop thread owns every connection:
+//!
+//! * [`Listener`] accepts without blocking ([`Listener::accept`] returns
+//!   `None` when no connection is pending);
+//! * [`Endpoint::fill`] reads whatever the kernel has buffered and feeds the
+//!   codec; [`Endpoint::poll_msg`] parses complete messages out;
+//! * outgoing messages queue in the codec's write buffer and
+//!   [`Endpoint::flush`] drains as much as the socket accepts — partial
+//!   writes are the normal case, and the per-connection buffer *is* the flow
+//!   control: a slow reader's bytes wait in its own buffer without stalling
+//!   any other connection or the loop;
+//! * [`poll_fds`] is a thin `poll(2)` wrapper (no mio, no tokio — the
+//!   readiness loop is ~a page of code on top of it) that sleeps until some
+//!   registered fd is readable/writable.
+//!
+//! Clients stay blocking: [`connect_client_tcp`] is the TCP twin of
+//! [`connect_client`](super::socket::connect_client), returning an ordinary
+//! [`FrameStream`](super::socket::FrameStream) — only the federator needs
+//! to multiplex.
+//!
+//! [`TcpTransport`] rounds out the in-process story: the
+//! `BICOMPFL_TRANSPORT=tcp` backend that carries every frame through a real
+//! loopback TCP connection, pinned bit-identical to `loopback`, `framed`,
+//! and `socket` by the determinism suite.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::codec::FrameCodec;
+use super::frame::Frame;
+use super::socket::{carry_frame, client_handshake, CarryDuplex, FrameStream, PeerSocket};
+use super::{Delivery, Leg, Meter, Result, Transport, TransportError, TransportStats};
+pub use sys::{poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
+
+/// Minimal `poll(2)` bindings. The event loop needs exactly one syscall —
+/// "sleep until one of these fds is ready" — which is not worth a dependency:
+/// the crate is std-only, so the declaration lives here.
+mod sys {
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    /// Readable (or a pending accept on a listener).
+    pub const POLLIN: i16 = 0x001;
+    /// Writable without blocking.
+    pub const POLLOUT: i16 = 0x004;
+    /// Error condition (always polled, even if not requested).
+    pub const POLLERR: i16 = 0x008;
+    /// Peer hung up (always polled, even if not requested).
+    pub const POLLHUP: i16 = 0x010;
+
+    /// `struct pollfd` — layout fixed by POSIX.
+    #[repr(C)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        /// Watch `fd` for the interest mask `events`.
+        pub fn new(fd: RawFd, events: i16) -> Self {
+            Self {
+                fd,
+                events,
+                revents: 0,
+            }
+        }
+    }
+
+    // `nfds_t` is `unsigned long` on Linux and `unsigned int` on the BSDs
+    // (including macOS).
+    #[cfg(target_os = "linux")]
+    type Nfds = u64;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = u32;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+
+    /// Block until at least one fd in `fds` has a ready event, an error, or
+    /// `timeout_ms` elapses (`-1` = wait forever, `0` = just check). Returns
+    /// the number of fds with nonzero `revents`; retries `EINTR` internally.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+/// A nonblocking accepting socket for the event-driven federator.
+pub struct Listener {
+    inner: TcpListener,
+}
+
+impl Listener {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, or port `0` to let the kernel
+    /// pick) and switch the listener to nonblocking mode.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let inner = TcpListener::bind(addr).map_err(TransportError::Io)?;
+        inner.set_nonblocking(true).map_err(TransportError::Io)?;
+        Ok(Self { inner })
+    }
+
+    /// The bound address (the way to learn a kernel-assigned port).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.inner.local_addr()
+    }
+
+    /// Accept one pending connection as a nonblocking [`Endpoint`], or
+    /// `None` when no connection is queued right now (the readiness loop
+    /// polls the listener fd to know when to try again).
+    pub fn accept(&self) -> Result<Option<Endpoint>> {
+        match self.inner.accept() {
+            Ok((stream, _)) => Ok(Some(Endpoint::from_stream(stream)?)),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(None),
+            Err(e) => Err(TransportError::Io(e)),
+        }
+    }
+}
+
+impl AsRawFd for Listener {
+    fn as_raw_fd(&self) -> RawFd {
+        self.inner.as_raw_fd()
+    }
+}
+
+/// One nonblocking peer connection: a [`FrameCodec`] bolted onto a
+/// nonblocking socket. The owner (the event loop) is responsible for
+/// calling [`Self::fill`] when the fd polls readable and [`Self::flush`]
+/// when it polls writable; everything else — parsing, queuing, metering —
+/// is the codec's.
+pub struct Endpoint {
+    sock: PeerSocket,
+    codec: FrameCodec,
+    /// The peer sent EOF (observed by [`Self::fill`]). Sticky: a half-closed
+    /// connection never becomes readable again.
+    eof: bool,
+}
+
+impl Endpoint {
+    /// Wrap a freshly accepted/connected stream: `TCP_NODELAY` on (the round
+    /// loop is request/response; Nagle would add 40ms stalls per exchange),
+    /// nonblocking on.
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).map_err(TransportError::Io)?;
+        stream.set_nonblocking(true).map_err(TransportError::Io)?;
+        Ok(Self {
+            sock: PeerSocket::Tcp(stream),
+            codec: FrameCodec::new(),
+            eof: false,
+        })
+    }
+
+    /// Read everything the kernel has buffered into the codec. Returns
+    /// `Ok(true)` when the peer's EOF was reached (once sticky, always
+    /// returned); `Ok(false)` means the socket simply has no more bytes
+    /// right now. Connection-level failures (reset, broken pipe) are
+    /// reported as EOF too — from the protocol's point of view the peer is
+    /// gone either way, and [`Self::eof_error`] names what was mid-flight.
+    pub fn fill(&mut self) -> Result<bool> {
+        if self.eof {
+            return Ok(true);
+        }
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            match self.sock.read(&mut tmp) {
+                Ok(0) => {
+                    self.eof = true;
+                    return Ok(true);
+                }
+                Ok(k) => self.codec.feed(&tmp[..k]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::ConnectionAborted
+                            | io::ErrorKind::BrokenPipe
+                    ) =>
+                {
+                    self.eof = true;
+                    return Ok(true);
+                }
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    /// Parse one complete message out of the buffer, if any.
+    pub fn poll_msg(&mut self) -> Result<Option<super::codec::Msg>> {
+        self.codec.poll_msg()
+    }
+
+    /// The typed error this connection's EOF means at its current parse
+    /// position ([`TransportError::PeerClosed`] at a message boundary,
+    /// [`TransportError::Truncated`] mid-message).
+    pub fn eof_error(&self) -> TransportError {
+        self.codec.eof_error()
+    }
+
+    /// Whether [`Self::fill`] has observed the peer's EOF.
+    pub fn is_eof(&self) -> bool {
+        self.eof
+    }
+
+    /// Queue one typed frame; returns its counted payload bits.
+    pub fn enqueue_frame(&mut self, frame: &Frame) -> u64 {
+        self.codec.enqueue_frame(frame)
+    }
+
+    /// Queue a frame already serialized by [`Frame::encode`] (the
+    /// encode-once relay fast path); `bits` must be the payload-bit count
+    /// `encode` returned for `buf`.
+    pub fn enqueue_frame_encoded(&mut self, buf: &[u8], bits: u64) -> u64 {
+        self.codec.enqueue_frame_encoded(buf, bits)
+    }
+
+    /// Queue the handshake accept with the run-configuration body.
+    pub fn enqueue_ack(&mut self, body: &[u8]) {
+        self.codec.enqueue_ack(body);
+    }
+
+    /// Queue a handshake reject.
+    pub fn enqueue_nack(&mut self, code: u8, detail: u64) {
+        self.codec.enqueue_nack(code, detail);
+    }
+
+    /// Queue one round's realized cohort.
+    pub fn enqueue_cohort(&mut self, round: u64, ids: &[u64]) {
+        self.codec.enqueue_cohort(round, ids);
+    }
+
+    /// Queue the graceful-shutdown message.
+    pub fn enqueue_bye(&mut self) {
+        self.codec.enqueue_bye();
+    }
+
+    /// Write as much queued output as the socket accepts right now.
+    /// Returns `Ok(true)` when the queue fully drained, `Ok(false)` when
+    /// bytes remain (poll the fd for [`POLLOUT`] and flush again). A dead
+    /// peer (broken pipe / reset) surfaces as
+    /// [`TransportError::PeerClosed`]; the already-metered queued bytes stay
+    /// counted — see the codec's metering contract.
+    pub fn flush(&mut self) -> Result<bool> {
+        while self.codec.wants_write() {
+            match self.sock.write(self.codec.pending_out()) {
+                Ok(0) => return Err(TransportError::PeerClosed),
+                Ok(k) => self.codec.consume_out(k),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::BrokenPipe
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    return Err(TransportError::PeerClosed)
+                }
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+        Ok(true)
+    }
+
+    /// Whether queued output awaits draining.
+    pub fn wants_write(&self) -> bool {
+        self.codec.wants_write()
+    }
+
+    /// Traffic queued for sending through this endpoint so far.
+    pub fn sent(&self) -> super::codec::LinkMeter {
+        self.codec.sent()
+    }
+
+    /// Traffic parsed off this endpoint so far.
+    pub fn received(&self) -> super::codec::LinkMeter {
+        self.codec.received()
+    }
+
+    /// Shut down both directions (stragglers the federator gives up on see
+    /// EOF instead of a wedged connection; the endpoint stays summable).
+    pub fn shutdown(&self) {
+        self.sock.shutdown();
+    }
+}
+
+impl AsRawFd for Endpoint {
+    fn as_raw_fd(&self) -> RawFd {
+        self.sock.as_raw_fd()
+    }
+}
+
+/// Connect to the federator at `addr` (`host:port`) as client `id` and run
+/// the HELLO/ACK handshake — the TCP twin of
+/// [`connect_client`](super::socket::connect_client), with the same brief
+/// connect retry (the federator may not have bound yet when the processes
+/// launch together) and the same typed-error surface. The returned stream
+/// is the ordinary blocking peer API: only the federator side needs the
+/// nonblocking [`Endpoint`].
+pub fn connect_client_tcp(addr: &str, id: u64) -> Result<(FrameStream, Vec<u8>)> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                let retriable = matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::AddrNotAvailable
+                        | io::ErrorKind::TimedOut
+                );
+                if !retriable || Instant::now() >= deadline {
+                    return Err(TransportError::Io(e));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    stream.set_nodelay(true).map_err(TransportError::Io)?;
+    client_handshake(FrameStream::new(stream), id)
+}
+
+/// In-process [`Transport`] over a real loopback TCP connection: every frame
+/// is serialized to its byte-exact wire form, written to one end of a
+/// `127.0.0.1` socket pair, read back from the other, and deserialized —
+/// the TCP twin of [`SocketTransport`](super::socket::SocketTransport),
+/// selected by `BICOMPFL_TRANSPORT=tcp`. The determinism suite pins this
+/// path bit-identical to `loopback`, `framed`, and `socket` for every
+/// variant, driver, and baseline.
+///
+/// `send` is infallible by the [`Transport`] contract; an I/O failure on the
+/// owned loopback pair is a broken process invariant and panics. The
+/// fallible, peer-facing APIs are [`FrameStream`] and [`Endpoint`].
+pub struct TcpTransport {
+    duplex: Mutex<CarryDuplex<TcpStream>>,
+    meter: Meter,
+}
+
+impl TcpTransport {
+    /// A transport over a fresh loopback TCP connection.
+    pub fn duplex() -> io::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let tx = TcpStream::connect(addr)?;
+        let (rx, _) = listener.accept()?;
+        tx.set_nodelay(true)?;
+        rx.set_nodelay(true)?;
+        tx.set_nonblocking(true)?;
+        Ok(Self {
+            duplex: Mutex::new(CarryDuplex::new(tx, rx)),
+            meter: Meter::default(),
+        })
+    }
+
+    fn carry(&self, frame: &Frame) -> (Frame, u64, u64) {
+        carry_frame(&mut self.duplex.lock().unwrap(), frame)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn send(&self, leg: Leg, frame: Frame) -> Delivery {
+        let (delivered, bits, wire_bytes) = self.carry(&frame);
+        self.meter.record(leg, bits, wire_bytes, bits.div_ceil(8));
+        Delivery {
+            frame: delivered,
+            bits,
+        }
+    }
+
+    fn relay(&self, leg: Leg, frame: &Frame) -> u64 {
+        self.relay_copies(leg, frame, 1)
+    }
+
+    fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64 {
+        if copies == 0 {
+            return 0;
+        }
+        let (_, bits, wire_bytes) = self.carry(frame);
+        self.meter
+            .record_many(leg, copies, bits, wire_bytes, bits.div_ceil(8));
+        bits * copies
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.meter.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::codec::Msg;
+    use crate::transport::{Loopback, ModelFrame, ModelPayload, SideInfo, UplinkFrame};
+
+    fn sample_frame() -> Frame {
+        Frame::Uplink(UplinkFrame {
+            client: 1,
+            round: 3,
+            bits_per_index: 6,
+            indices: vec![vec![5, 9, 63], vec![0, 1, 2]],
+            side: SideInfo::None,
+        })
+    }
+
+    #[test]
+    fn tcp_transport_matches_loopback_meters() {
+        let lo = Loopback::new();
+        let tc = TcpTransport::duplex().unwrap();
+        for leg in [Leg::Uplink, Leg::Downlink, Leg::DownlinkBroadcast] {
+            let f = sample_frame();
+            let a = lo.send(leg, f.clone());
+            let b = tc.send(leg, f.clone());
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.frame, b.frame);
+            assert_eq!(lo.relay(leg, &f), tc.relay(leg, &f));
+        }
+        let (sl, st) = (lo.stats(), tc.stats());
+        assert_eq!(sl.ul_bits, st.ul_bits);
+        assert_eq!(sl.dl_bits, st.dl_bits);
+        assert_eq!(sl.dl_bc_bits, st.dl_bc_bits);
+        assert_eq!(sl.frames, st.frames);
+        assert!(st.wire_bytes > st.payload_bytes);
+    }
+
+    #[test]
+    fn tcp_transport_pumps_frames_larger_than_the_socket_buffer() {
+        let tc = TcpTransport::duplex().unwrap();
+        let big: Vec<f32> = (0..256 * 1024).map(|i| (i % 997) as f32 - 400.0).collect();
+        let frame = Frame::Model(ModelFrame {
+            client: 0,
+            round: 0,
+            payload: ModelPayload::Dense(big.clone()),
+        });
+        let sent = tc.send(Leg::Downlink, frame);
+        assert_eq!(sent.bits, 32 * big.len() as u64);
+        match sent.frame {
+            Frame::Model(m) => match m.payload {
+                ModelPayload::Dense(v) => assert_eq!(v, big),
+                _ => panic!("payload kind changed"),
+            },
+            _ => panic!("frame kind changed"),
+        }
+    }
+
+    #[test]
+    fn endpoint_round_trips_against_a_blocking_stream() {
+        // A nonblocking Endpoint on one side, a blocking FrameStream on the
+        // other — the codec split means they interoperate byte-for-byte.
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut fs = FrameStream::new(stream);
+            let bits = fs.send_frame(&sample_frame()).unwrap();
+            let (back, rbits) = fs.recv_frame().unwrap();
+            (back, bits, rbits)
+        });
+        // Poll-accept (the connect above may not have landed yet).
+        let ep = loop {
+            if let Some(ep) = listener.accept().unwrap() {
+                break ep;
+            }
+            let mut fds = [PollFd::new(listener.as_raw_fd(), POLLIN)];
+            poll_fds(&mut fds, 100).unwrap();
+        };
+        let mut ep = ep;
+        // Read the client's frame via the readiness API.
+        let (frame, bits) = loop {
+            if let Some(Msg::Frame(f, b)) = ep.poll_msg().unwrap() {
+                break (f, b);
+            }
+            let mut fds = [PollFd::new(ep.as_raw_fd(), POLLIN)];
+            poll_fds(&mut fds, 100).unwrap();
+            ep.fill().unwrap();
+        };
+        assert_eq!(frame, sample_frame());
+        // Echo it back through the nonblocking write path.
+        let ebits = ep.enqueue_frame(&frame);
+        assert_eq!(ebits, bits);
+        while !ep.flush().unwrap() {
+            let mut fds = [PollFd::new(ep.as_raw_fd(), POLLOUT)];
+            poll_fds(&mut fds, 100).unwrap();
+        }
+        let (back, cbits, rbits) = client.join().unwrap();
+        assert_eq!(back, sample_frame());
+        assert_eq!(cbits, bits);
+        assert_eq!(rbits, bits);
+        assert_eq!(ep.received().bits, ep.sent().bits);
+    }
+
+    #[test]
+    fn endpoint_eof_is_typed_by_parse_position() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let mut ep = loop {
+            if let Some(ep) = listener.accept().unwrap() {
+                break ep;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // Half a header, then hangup.
+        {
+            let mut w = &client;
+            w.write_all(&[super::super::codec::MSG_FRAME, 9]).unwrap();
+        }
+        drop(client);
+        loop {
+            let mut fds = [PollFd::new(ep.as_raw_fd(), POLLIN)];
+            poll_fds(&mut fds, 1000).unwrap();
+            if ep.fill().unwrap() {
+                break;
+            }
+        }
+        assert!(matches!(
+            ep.poll_msg().unwrap(),
+            None // two bytes is not a message
+        ));
+        assert!(matches!(
+            ep.eof_error(),
+            TransportError::Truncated { expected: 5, got: 2 }
+        ));
+    }
+
+    #[test]
+    fn poll_fds_times_out_cleanly() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let mut fds = [PollFd::new(listener.as_raw_fd(), POLLIN)];
+        // Nothing is connecting: a zero-timeout poll reports no readiness.
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        assert_eq!(fds[0].revents & POLLIN, 0);
+    }
+}

@@ -22,7 +22,7 @@ use bicompfl::coordinator::{MaskOracle, ShardedMaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::AllocationStrategy;
 use bicompfl::runtime::{ParallelRoundEngine, WorkerPool};
 use bicompfl::transport::{
-    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, Transport,
+    FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, TcpTransport, Transport,
 };
 use bicompfl::util::rng::Xoshiro256;
 
@@ -32,6 +32,7 @@ fn make_transport(kind: &str) -> Arc<dyn Transport> {
         "loopback" => Arc::new(Loopback::new()),
         "framed" => Arc::new(FramedLoopback::new()),
         "socket" => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+        "tcp" => Arc::new(TcpTransport::duplex().expect("loopback tcp failed")),
         "faulty" => Arc::new(FaultyTransport::new(
             Arc::new(SocketTransport::duplex().expect("socketpair failed")),
             FaultSpec::none(),
@@ -42,9 +43,10 @@ fn make_transport(kind: &str) -> Arc<dyn Transport> {
 
 /// The serialized wire paths that must stay bit-identical to the zero-copy
 /// loopback: the in-process byte codec, the same bytes carried across a real
-/// kernel socketpair, and the socketpair wrapped in a zero-fault injection
-/// layer — [`FaultSpec::none()`] must be a pure pass-through.
-const WIRE_KINDS: [&str; 3] = ["framed", "socket", "faulty"];
+/// kernel socketpair and a real loopback TCP connection, and the socketpair
+/// wrapped in a zero-fault injection layer — [`FaultSpec::none()`] must be a
+/// pure pass-through.
+const WIRE_KINDS: [&str; 4] = ["framed", "socket", "tcp", "faulty"];
 
 fn cfg(variant: Variant) -> BiCompFlConfig {
     BiCompFlConfig {

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use bicompfl::algorithms::runner::{Cohort, RoundRecord};
 use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
-use bicompfl::coordinator::distributed::{run_client_with, run_federator_with, RunSpec};
+use bicompfl::coordinator::distributed::{federate, participate, NetAddr, RunOpts, RunSpec};
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::ParallelRoundEngine;
@@ -77,28 +77,28 @@ fn reference_records(spec: &RunSpec) -> Vec<RoundRecord> {
     alg.run(&mut oracle, spec.rounds as usize, spec.eval_every as usize)
 }
 
-/// Run a tolerant federator plus `n` tolerant clients (threads), all under
-/// the same [`FaultSpec`], and return (federator result, per-client results).
+/// Run a federator plus `n` clients (threads) over one Unix socket, all
+/// under the same [`RunOpts`], and return (federator result, per-client
+/// results).
 #[allow(clippy::type_complexity)]
-fn run_matrix(
+fn run_opts_matrix(
     tag: &str,
-    spec: RunSpec,
-    faults: FaultSpec,
+    opts: &RunOpts,
 ) -> (
     Result<bicompfl::coordinator::distributed::FederatorRun, TransportError>,
     Vec<Result<(), TransportError>>,
 ) {
     let sock = sock_path(tag);
     let fed = {
-        let sock = sock.clone();
-        let faults = faults.clone();
-        std::thread::spawn(move || run_federator_with(&sock, &spec, &faults))
+        let at = NetAddr::Unix(sock.clone());
+        let opts = opts.clone();
+        std::thread::spawn(move || federate(&at, &opts))
     };
-    let clients: Vec<_> = (0..spec.n as u64)
+    let clients: Vec<_> = (0..opts.spec.n as u64)
         .map(|id| {
-            let sock = sock.clone();
-            let faults = faults.clone();
-            std::thread::spawn(move || run_client_with(&sock, id, &faults))
+            let at = NetAddr::Unix(sock.clone());
+            let opts = opts.clone();
+            std::thread::spawn(move || participate(&at, id, &opts))
         })
         .collect();
     let client_results = clients
@@ -110,21 +110,53 @@ fn run_matrix(
     (run, client_results)
 }
 
-/// The determinism pin of the tentpole: the tolerant protocol under the
-/// zero-fault spec produces the exact `RoundRecord` stream of the strict
-/// in-process simulation — full cohorts, all-delivered counters, same bits,
-/// same losses.
+/// The historical entry shape of this suite: a spec plus a fault spec maps
+/// to [`RunOpts`] with everything else defaulted.
+#[allow(clippy::type_complexity)]
+fn run_matrix(
+    tag: &str,
+    spec: RunSpec,
+    faults: FaultSpec,
+) -> (
+    Result<bicompfl::coordinator::distributed::FederatorRun, TransportError>,
+    Vec<Result<(), TransportError>>,
+) {
+    let opts = RunOpts {
+        spec,
+        faults,
+        ..Default::default()
+    };
+    run_opts_matrix(tag, &opts)
+}
+
+/// The determinism pin of the fault layer: zero-fault options dispatch to
+/// the strict protocol, and the tolerant cohort loop (forced here by an
+/// explicit generous deadline) produces the exact same `RoundRecord` stream
+/// as the strict in-process simulation — full cohorts, all-delivered
+/// counters, same bits, same losses.
 #[test]
 fn zero_fault_spec_is_bit_identical_to_the_strict_protocol() {
     let spec = small_spec(3, 2, 0xB1C0);
-    let (run, clients) = run_matrix("zero", spec, FaultSpec::none());
-    for (id, c) in clients.into_iter().enumerate() {
-        c.unwrap_or_else(|e| panic!("client {id} failed under the zero-fault spec: {e}"));
+    for (tag, opts) in [
+        ("zero", RunOpts::strict(spec)),
+        (
+            "zerodl",
+            RunOpts {
+                spec,
+                deadline: Some(Duration::from_secs(30)),
+                ..Default::default()
+            },
+        ),
+    ] {
+        let (run, clients) = run_opts_matrix(tag, &opts);
+        for (id, c) in clients.into_iter().enumerate() {
+            c.unwrap_or_else(|e| panic!("{tag}: client {id} failed without faults: {e}"));
+        }
+        let run = run.expect("federator run");
+        assert_eq!(run.records, reference_records(&spec), "{tag}");
+        assert!(run.records.iter().all(|r| r.cohort == Cohort::Full), "{tag}");
+        assert_eq!(run.faults, FaultReport::all_delivered(3, 2), "{tag}");
     }
-    let run = run.expect("federator run");
-    assert_eq!(run.records, reference_records(&spec));
-    assert!(run.records.iter().all(|r| r.cohort == Cohort::Full));
-    assert_eq!(run.faults, FaultReport::all_delivered(3, 2));
 }
 
 /// A client that drops out mid-run (its frame budget exhausted mid-round)

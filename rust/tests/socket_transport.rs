@@ -10,7 +10,7 @@ use std::path::PathBuf;
 use std::process::{Command, Stdio};
 
 use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
-use bicompfl::coordinator::distributed::{run_client, run_federator, RunSpec};
+use bicompfl::coordinator::distributed::{federate, participate, NetAddr, RunOpts, RunSpec};
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
 use bicompfl::runtime::ParallelRoundEngine;
@@ -74,20 +74,20 @@ fn reference_records(spec: &RunSpec) -> Vec<bicompfl::algorithms::runner::RoundR
 /// every frame over real Unix sockets produce the exact `RoundRecord` stream
 /// of the single-process `BiCompFl` GR simulation — same bits, same losses —
 /// and the descriptor meters equal the records (asserted inside
-/// `run_federator`).
+/// `federate`).
 #[test]
 fn distributed_gr_run_is_bit_identical_to_in_process_run() {
     for n in [2u32, 3] {
         let spec = small_spec(n, 3, 0xB1C0);
         let sock = sock_path(&format!("ident{n}"));
         let fed = {
-            let sock = sock.clone();
-            std::thread::spawn(move || run_federator(&sock, &spec))
+            let at = NetAddr::Unix(sock.clone());
+            std::thread::spawn(move || federate(&at, &RunOpts::strict(spec)))
         };
         let clients: Vec<_> = (0..n as u64)
             .map(|id| {
-                let sock = sock.clone();
-                std::thread::spawn(move || run_client(&sock, id))
+                let at = NetAddr::Unix(sock.clone());
+                std::thread::spawn(move || participate(&at, id, &RunOpts::default()))
             })
             .collect();
         for c in clients {
@@ -108,7 +108,7 @@ fn distributed_gr_run_is_bit_identical_to_in_process_run() {
 }
 
 /// A client that dies mid-round (handshake done, one frame sent, then gone)
-/// must surface as a typed peer-drop error from `run_federator` — not a
+/// must surface as a typed peer-drop error from `federate` — not a
 /// panic — and the process (including the global worker pool) stays fully
 /// usable afterwards.
 #[test]
@@ -116,8 +116,8 @@ fn peer_disconnect_mid_round_is_typed_and_leaves_the_pool_usable() {
     let spec = small_spec(2, 2, 0x5EED);
     let sock = sock_path("drop");
     let fed = {
-        let sock = sock.clone();
-        std::thread::spawn(move || run_federator(&sock, &spec))
+        let at = NetAddr::Unix(sock.clone());
+        std::thread::spawn(move || federate(&at, &RunOpts::strict(spec)))
     };
     // Client 0: handshakes, sends only its plan frame, hangs up.
     let rogue = {
@@ -132,8 +132,8 @@ fn peer_disconnect_mid_round_is_typed_and_leaves_the_pool_usable() {
     // Client 1 behaves; it must also get a typed error once the federator
     // gives up, rather than hanging.
     let honest = {
-        let sock = sock.clone();
-        std::thread::spawn(move || run_client(&sock, 1))
+        let at = NetAddr::Unix(sock.clone());
+        std::thread::spawn(move || participate(&at, 1, &RunOpts::default()))
     };
     rogue.join().expect("rogue thread").expect("rogue handshake");
     let fed_err = fed
@@ -183,8 +183,8 @@ fn stale_client_id_is_refused_and_the_run_still_completes() {
     let spec = small_spec(2, 1, 0xCAFE);
     let sock = sock_path("stale");
     let fed = {
-        let sock = sock.clone();
-        std::thread::spawn(move || run_federator(&sock, &spec))
+        let at = NetAddr::Unix(sock.clone());
+        std::thread::spawn(move || federate(&at, &RunOpts::strict(spec)))
     };
     // The stale client connects first and must be turned away by id.
     {
@@ -196,8 +196,8 @@ fn stale_client_id_is_refused_and_the_run_still_completes() {
     }
     let clients: Vec<_> = (0..2u64)
         .map(|id| {
-            let sock = sock.clone();
-            std::thread::spawn(move || run_client(&sock, id))
+            let at = NetAddr::Unix(sock.clone());
+            std::thread::spawn(move || participate(&at, id, &RunOpts::default()))
         })
         .collect();
     for c in clients {

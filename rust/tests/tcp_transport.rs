@@ -1,0 +1,423 @@
+//! The TCP endpoint layer end to end: one event-driven federator thread
+//! drives many concurrent TCP clients through the full GR round loop with
+//! records bit-identical to the in-process simulation, the handshake turns
+//! duplicate and stale ids into typed errors without disturbing the run,
+//! mid-round faults shrink the realized cohort instead of wedging the
+//! loop, cohort sampling realizes a deterministic m-of-n participation,
+//! and the transport-agnostic [`FrameCodec`] reassembles the identical
+//! message stream under any fragmentation of the bytes.
+
+use std::time::Duration;
+
+use bicompfl::algorithms::runner::{Cohort, RoundRecord};
+use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
+use bicompfl::coordinator::distributed::{
+    federate, participate, FederatorRun, NetAddr, RunOpts, RunSpec,
+};
+use bicompfl::coordinator::SyntheticMaskOracle;
+use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::transport::codec::{FrameCodec, LinkMeter};
+use bicompfl::transport::tcp::connect_client_tcp;
+use bicompfl::transport::{
+    DownlinkFrame, FaultReport, FaultSpec, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide,
+    SideInfo, TransportError, UplinkFrame,
+};
+use bicompfl::util::rng::Xoshiro256;
+
+/// A free loopback `host:port` for one test: bind an ephemeral port, note
+/// the address, release it for the federator to rebind a moment later.
+/// Concurrent tests hold their probe sockets simultaneously, so the OS
+/// hands them distinct ports.
+fn free_addr() -> String {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("ephemeral bind");
+    let addr = probe.local_addr().expect("probe addr").to_string();
+    drop(probe);
+    addr
+}
+
+fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
+    RunSpec {
+        d: 192,
+        n,
+        rounds,
+        n_is: 64,
+        block_size: 32,
+        n_ul: 1,
+        local_iters: 3,
+        eval_every: 1,
+        seed,
+        oracle_seed: 42,
+        local_lr: 0.1,
+        theta0: 0.5,
+        theta_clamp: 0.05,
+        heterogeneity: 0.1,
+    }
+}
+
+/// The in-process reference run with the configuration a [`RunSpec`] maps to.
+fn reference_records(spec: &RunSpec) -> Vec<RoundRecord> {
+    let mut oracle = SyntheticMaskOracle::new(
+        spec.d as usize,
+        spec.n as usize,
+        spec.oracle_seed,
+        spec.heterogeneity,
+    );
+    let mut alg = BiCompFl::new(
+        spec.d as usize,
+        spec.n as usize,
+        BiCompFlConfig {
+            variant: Variant::Gr,
+            n_is: spec.n_is as usize,
+            n_ul: spec.n_ul as usize,
+            allocation: AllocationStrategy::fixed(spec.block_size as usize),
+            local_iters: spec.local_iters as usize,
+            local_lr: spec.local_lr,
+            theta0: spec.theta0,
+            theta_clamp: spec.theta_clamp,
+            seed: spec.seed,
+            ..Default::default()
+        },
+    )
+    .with_engine(ParallelRoundEngine::serial());
+    alg.run(&mut oracle, spec.rounds as usize, spec.eval_every as usize)
+}
+
+/// One event-driven federator thread plus `opts.spec.n` client threads, all
+/// over a fresh loopback TCP port; returns (federator result, per-client
+/// results). Clients retry the connect, so launch order is immaterial.
+#[allow(clippy::type_complexity)]
+fn run_tcp_matrix(
+    opts: &RunOpts,
+) -> (
+    Result<FederatorRun, TransportError>,
+    Vec<Result<(), TransportError>>,
+) {
+    let addr = free_addr();
+    let fed = {
+        let at = NetAddr::Tcp(addr.clone());
+        let opts = opts.clone();
+        std::thread::spawn(move || federate(&at, &opts))
+    };
+    let clients: Vec<_> = (0..opts.spec.n as u64)
+        .map(|id| {
+            let at = NetAddr::Tcp(addr.clone());
+            let opts = opts.clone();
+            std::thread::spawn(move || participate(&at, id, &opts))
+        })
+        .collect();
+    let client_results = clients
+        .into_iter()
+        .map(|c| c.join().expect("client thread"))
+        .collect();
+    (fed.join().expect("federator thread"), client_results)
+}
+
+/// The core fidelity claim of the endpoint layer: the event-driven TCP
+/// federator produces the exact `RoundRecord` stream of the single-process
+/// GR simulation — same bits, same losses — with the descriptor meters
+/// reconciled against the records (asserted inside `federate`).
+#[test]
+fn tcp_gr_run_is_bit_identical_to_in_process_run() {
+    for n in [2u32, 3] {
+        let spec = small_spec(n, 3, 0x7C9 + n as u64);
+        let (run, clients) = run_tcp_matrix(&RunOpts::strict(spec));
+        for (id, c) in clients.into_iter().enumerate() {
+            c.unwrap_or_else(|e| panic!("n={n}: client {id} failed: {e}"));
+        }
+        let run = run.expect("federator run");
+        assert_eq!(
+            run.records,
+            reference_records(&spec),
+            "n={n}: TCP records diverged from the simulation"
+        );
+        assert!(run.records.iter().all(|r| r.cohort == Cohort::Full));
+        // GR with Fixed allocation: ul = n * blocks * log2(n_is) per round.
+        let blocks = (spec.d / spec.block_size) as u64;
+        assert_eq!(run.records[0].ul_bits, n as u64 * blocks * 6);
+        assert_eq!(run.records[0].dl_bits, (n as u64 - 1) * run.records[0].ul_bits);
+    }
+}
+
+/// The scale bar: one federator thread (no per-connection threads inside)
+/// drives 64 concurrent TCP clients through the full round loop, still
+/// bit-identical to the simulation with every delivery accounted.
+#[test]
+fn one_federator_thread_drives_64_tcp_clients_bit_identically() {
+    let spec = small_spec(64, 2, 0x64C1);
+    let (run, clients) = run_tcp_matrix(&RunOpts::strict(spec));
+    for (id, c) in clients.into_iter().enumerate() {
+        c.unwrap_or_else(|e| panic!("client {id} failed: {e}"));
+    }
+    let run = run.expect("federator run");
+    assert_eq!(run.records, reference_records(&spec));
+    assert!(run.records.iter().all(|r| r.cohort == Cohort::Full));
+    assert_eq!(run.faults, FaultReport::all_delivered(64, 2));
+    let per_client = (spec.d / spec.block_size) as u64 * 6;
+    assert_eq!(run.records[0].ul_bits, 64 * per_client);
+    assert_eq!(run.records[0].dl_bits, 63 * 64 * per_client);
+}
+
+/// A TCP handshake offering an out-of-range id is answered with a typed
+/// [`TransportError::StaleClient`] NACK and the accept loop keeps serving:
+/// the legitimate client set still completes, bit-identical.
+#[test]
+fn a_stale_client_id_is_refused_and_the_run_still_completes() {
+    let spec = small_spec(2, 2, 0x57A1);
+    let addr = free_addr();
+    let fed = {
+        let at = NetAddr::Tcp(addr.clone());
+        std::thread::spawn(move || federate(&at, &RunOpts::strict(spec)))
+    };
+    // The stale client connects first, while the accept loop is live.
+    match connect_client_tcp(&addr, 7) {
+        Err(TransportError::StaleClient { id }) => assert_eq!(id, 7),
+        Err(other) => panic!("expected StaleClient, got {other:?}"),
+        Ok(_) => panic!("id 7 of 2 must be refused"),
+    }
+    let clients: Vec<_> = (0..2u64)
+        .map(|id| {
+            let at = NetAddr::Tcp(addr.clone());
+            std::thread::spawn(move || participate(&at, id, &RunOpts::default()))
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread").expect("client run");
+    }
+    let run = fed.join().expect("federator thread").expect("federator run");
+    assert_eq!(run.records, reference_records(&spec));
+}
+
+/// A duplicate id is the same typed refusal: once a slot's HELLO is ACKed,
+/// a second claimant gets the NACK while the first keeps its connection.
+/// Here the first claimant then goes silent, so the per-round deadline
+/// retires it as a straggler and the other client finishes alone.
+#[test]
+fn a_duplicate_client_id_is_refused_with_a_typed_error() {
+    let spec = small_spec(2, 2, 0xD0B1);
+    let opts = RunOpts {
+        spec,
+        deadline: Some(Duration::from_millis(400)),
+        ..Default::default()
+    };
+    let addr = free_addr();
+    let fed = {
+        let at = NetAddr::Tcp(addr.clone());
+        let opts = opts.clone();
+        std::thread::spawn(move || federate(&at, &opts))
+    };
+    let held = connect_client_tcp(&addr, 0).expect("first claim of id 0");
+    match connect_client_tcp(&addr, 0) {
+        Err(TransportError::StaleClient { id }) => assert_eq!(id, 0),
+        Err(other) => panic!("second claim of id 0 must be StaleClient, got {other:?}"),
+        Ok(_) => panic!("second claim of id 0 must be refused"),
+    }
+    let c1 = {
+        let at = NetAddr::Tcp(addr.clone());
+        let opts = opts.clone();
+        std::thread::spawn(move || participate(&at, 1, &opts))
+    };
+    c1.join().expect("client thread").expect("client 1 run");
+    let run = fed.join().expect("federator thread").expect("federator run");
+    assert!(
+        run.records.iter().all(|r| r.cohort == Cohort::Partial(vec![1])),
+        "the silent holder of id 0 must never enter a cohort"
+    );
+    assert_eq!(run.faults.clients[0].straggled, 1);
+    assert_eq!(run.faults.clients[1].delivered, 2);
+    drop(held);
+}
+
+/// A truncated frame on a TCP link is a typed failure on both sides: the
+/// injecting client observes [`TransportError::Truncated`], the federator
+/// drops the connection mid-parse and closes every round with the intact
+/// cohort — with the orphaned partial-pair bits still reconciling the
+/// wire meters (asserted inside `federate`).
+#[test]
+fn a_truncated_uplink_drops_the_client_and_the_run_completes() {
+    let spec = small_spec(3, 2, 0x7CA7);
+    let opts = RunOpts {
+        spec,
+        faults: FaultSpec::parse("seed=9;1:trunc_at=1").unwrap(),
+        ..Default::default()
+    };
+    let (run, clients) = run_tcp_matrix(&opts);
+    let run = run.expect("federator must tolerate the truncated frame");
+    assert!(clients[0].is_ok() && clients[2].is_ok(), "honest clients finish");
+    assert!(
+        matches!(clients[1], Err(TransportError::Truncated { .. })),
+        "the injecting client must see the truncation, got {:?}",
+        clients[1]
+    );
+    for r in &run.records {
+        assert_eq!(r.cohort, Cohort::Partial(vec![0, 2]));
+    }
+    let c1 = run.faults.clients[1];
+    assert_eq!((c1.delivered, c1.dropped), (0, 1));
+}
+
+/// A peer vanishing mid-round (its frame budget dies between plan and
+/// uplink) shrinks the realized cohort; the survivors finish every round
+/// with the exact per-round bit accounting.
+#[test]
+fn a_peer_drop_mid_round_shrinks_the_cohort_and_the_survivors_finish() {
+    let spec = small_spec(3, 3, 0xDEAD);
+    let opts = RunOpts {
+        spec,
+        faults: FaultSpec::parse("1:drop_after=1").unwrap(),
+        ..Default::default()
+    };
+    let (run, clients) = run_tcp_matrix(&opts);
+    let run = run.expect("federator must tolerate the dropout");
+    assert!(clients[0].is_ok() && clients[2].is_ok(), "survivors finish");
+    assert!(clients[1].is_err(), "the dropped client must see its own death");
+    let per_client = (spec.d / spec.block_size) as u64 * 6;
+    for r in &run.records {
+        assert_eq!(r.cohort, Cohort::Partial(vec![0, 2]));
+        assert_eq!(r.ul_bits, 2 * per_client);
+        assert_eq!(r.dl_bits, 2 * per_client);
+    }
+    let c1 = run.faults.clients[1];
+    assert_eq!((c1.delivered, c1.dropped), (0, 1));
+}
+
+/// Partial participation: with `cohort: Some(2)` of 3 delivered uplinks,
+/// every round aggregates a deterministic 2-of-3 sample — the sampled-out
+/// client still delivers, still receives the cohort's payloads, and still
+/// finishes — and a rerun realizes the identical records.
+#[test]
+fn cohort_sampling_is_deterministic_and_every_client_finishes() {
+    let spec = small_spec(3, 3, 0xC040);
+    let opts = RunOpts {
+        spec,
+        cohort: Some(2),
+        ..Default::default()
+    };
+    let (run, clients) = run_tcp_matrix(&opts);
+    for (id, c) in clients.into_iter().enumerate() {
+        c.unwrap_or_else(|e| panic!("client {id} failed under sampling: {e}"));
+    }
+    let run = run.expect("federator run");
+    let per_client = (spec.d / spec.block_size) as u64 * 6;
+    for r in &run.records {
+        match &r.cohort {
+            Cohort::Partial(ids) => {
+                assert_eq!(ids.len(), 2, "round {}: {ids:?}", r.round);
+                assert!(ids.windows(2).all(|w| w[0] < w[1]) && ids.iter().all(|&i| i < 3));
+            }
+            other => panic!("round {}: expected a 2-of-3 cohort, got {other:?}", r.round),
+        }
+        // Only the sampled uplinks count; the third is an orphan by choice.
+        assert_eq!(r.ul_bits, 2 * per_client);
+    }
+    // Sampling is the federator's choice, not the client's fault: every
+    // client delivered every round.
+    assert!(run.faults.clients.iter().all(|c| c.delivered == 3));
+    let (rerun, _) = run_tcp_matrix(&opts);
+    assert_eq!(
+        rerun.expect("rerun").records,
+        run.records,
+        "cohort sampling must be a pure function of seed and round"
+    );
+}
+
+/// The shared fragment of the codec property tests: a transcript of every
+/// message kind, its whole-buffer parse (the reference), and the meters.
+fn codec_reference() -> (Vec<u8>, Vec<String>, LinkMeter) {
+    let frames = vec![
+        Frame::Plan(PlanFrame::from_plan(1, 2, &BlockPlan::fixed(300, 64))),
+        Frame::Uplink(UplinkFrame {
+            client: 0,
+            round: 0,
+            bits_per_index: 7,
+            indices: vec![vec![3, 99, 0], vec![1, 2, 3]],
+            side: SideInfo::Qs(QsSide {
+                norm: 1.5,
+                signs: vec![true, false, true],
+                tau: vec![1, 0, 3],
+                tau_bits: 2,
+            }),
+        }),
+        Frame::Downlink(DownlinkFrame {
+            client: 1,
+            round: 3,
+            bits_per_index: 5,
+            blocks: vec![0, 4, 7],
+            indices: vec![vec![1, 2, 3]],
+        }),
+        Frame::Model(ModelFrame {
+            client: 2,
+            round: 1,
+            payload: ModelPayload::Sparse {
+                d: 1000,
+                idx: vec![0, 999],
+                val: vec![0.25, -1.5],
+            },
+        }),
+    ];
+    let mut tx = FrameCodec::new();
+    tx.enqueue_hello(3);
+    tx.enqueue_ack(&[0xAB; 65]);
+    for f in &frames {
+        tx.enqueue_frame(f);
+    }
+    tx.enqueue_nack(2, 9);
+    tx.enqueue_cohort(4, &[0, 2, 5]);
+    tx.enqueue_bye();
+    let bytes = tx.pending_out().to_vec();
+
+    let mut rx = FrameCodec::new();
+    rx.feed(&bytes);
+    let mut msgs = Vec::new();
+    while let Some(m) = rx.poll_msg().expect("valid stream") {
+        msgs.push(format!("{m:?}"));
+    }
+    assert_eq!(msgs.len(), frames.len() + 5, "every enqueued message parses");
+    assert!(rx.at_boundary());
+    assert_eq!(rx.received().frames, tx.sent().frames);
+    assert_eq!(rx.received().bits, tx.sent().bits);
+    (bytes, msgs, rx.received())
+}
+
+/// Fragmentation invariance, worst case: feeding the transcript one byte at
+/// a time yields the identical message sequence and meter as the
+/// whole-buffer parse.
+#[test]
+fn the_frame_codec_reassembles_a_byte_at_a_time() {
+    let (bytes, want, meter) = codec_reference();
+    let mut rx = FrameCodec::new();
+    let mut got = Vec::new();
+    for &b in &bytes {
+        rx.feed(std::slice::from_ref(&b));
+        while let Some(m) = rx.poll_msg().expect("prefix of a valid stream") {
+            got.push(format!("{m:?}"));
+        }
+    }
+    assert_eq!(got, want);
+    assert_eq!(rx.received(), meter);
+    assert!(rx.at_boundary());
+}
+
+/// Fragmentation invariance, property form: under any random split of the
+/// byte stream — TCP may deliver any segmentation — the parse is identical.
+#[test]
+fn the_frame_codec_reassembles_under_random_splits() {
+    let (bytes, want, meter) = codec_reference();
+    let mut rng = Xoshiro256::new(0x5EED);
+    for case in 0..64 {
+        let mut rx = FrameCodec::new();
+        let mut got = Vec::new();
+        let mut pos = 0;
+        while pos < bytes.len() {
+            let take = 1 + rng.next_below(23.min(bytes.len() - pos));
+            rx.feed(&bytes[pos..pos + take]);
+            pos += take;
+            while let Some(m) = rx.poll_msg().expect("prefix of a valid stream") {
+                got.push(format!("{m:?}"));
+            }
+        }
+        assert_eq!(got, want, "case {case}");
+        assert_eq!(rx.received(), meter, "case {case}");
+        assert!(rx.at_boundary(), "case {case}");
+    }
+}

@@ -32,13 +32,14 @@ SCHEMA = "bicompfl-bench-round/v1"
 
 # Engine labels of the two sides of each comparison, as bench_round emits
 # them; "-retry" entries (the authoritative 3x-window re-measurements)
-# override the first pass. "loopback" vs "framed"/"socket"/"faulty" are the
-# transport comparisons: zero-copy vs the byte-exact serialized wire path vs
-# the same bytes carried through a kernel socketpair vs the socketpair under
-# the zero-fault injection wrapper, on identical rounds (the
-# `BiCompFL-PR [framed wire]` / `[socket wire]` / `[faulty wire]` labels).
+# override the first pass. "loopback" vs "framed"/"socket"/"tcp"/"faulty"
+# are the transport comparisons: zero-copy vs the byte-exact serialized wire
+# path vs the same bytes carried through a kernel socketpair vs a real
+# loopback TCP connection vs the socketpair under the zero-fault injection
+# wrapper, on identical rounds (the `BiCompFL-PR [framed wire]` /
+# `[socket wire]` / `[tcp wire]` / `[faulty wire]` labels).
 BASELINE_ENGINES = ("serial", "pooled-seq", "loopback")
-CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket", "faulty")
+CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket", "tcp", "faulty")
 
 
 def load_record(path):
