@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use bicompfl::mrc::block::BlockPlan;
 use bicompfl::mrc::codec::BlockCodec;
+use bicompfl::mrc::stream::{encode_stream, StreamDecoder};
 use bicompfl::util::rng::{Philox, Xoshiro256};
 use bicompfl::util::timer::bench;
 
@@ -95,6 +96,74 @@ fn main() {
         println!(
             "{}",
             stats.throughput_line("uplink d=100k bs=128 n_is=256", (d * n_is) as f64)
+        );
+    }
+
+    // Streaming encode at large d in O(block) memory: per-entry parameters
+    // regenerate from counter-based draws inside the fill callback, so no
+    // d-length buffer ever exists — the kernel the d = 10⁷ CI memory smoke
+    // and the `[stream large-d]` round case run.
+    let d = 1_000_000;
+    let n_is = 64;
+    let plan = BlockPlan::fixed(d, 256);
+    let q_src = Philox::keyed(17, 1);
+    let p_src = Philox::keyed(17, 2);
+    let fill = |_b: usize, r: std::ops::Range<usize>, qb: &mut Vec<f32>, pb: &mut Vec<f32>| {
+        qb.extend(r.clone().map(|e| 0.05 + 0.9 * q_src.uniform_at(e as u64)));
+        pb.extend(r.map(|e| 0.05 + 0.9 * p_src.uniform_at(e as u64)));
+    };
+    {
+        let stats = bench(warm, Duration::from_secs(2), || {
+            let bits = encode_stream(
+                n_is,
+                1,
+                5,
+                &plan,
+                |b| Philox::keyed(19, b),
+                fill,
+                |_b, col| {
+                    std::hint::black_box(col);
+                },
+            );
+            std::hint::black_box(bits);
+        });
+        println!(
+            "{}",
+            stats.throughput_line("stream encode d=1M bs=256 n_is=64", (d * n_is) as f64)
+        );
+    }
+
+    // Streaming decode over the same shape: regenerate each block's prior,
+    // decode its column, fold the means — again without a d-length vector.
+    {
+        let mut columns = vec![0u32; plan.n_blocks()];
+        encode_stream(
+            n_is,
+            1,
+            5,
+            &plan,
+            |b| Philox::keyed(19, b),
+            fill,
+            |b, col| columns[b] = col[0],
+        );
+        let mut dec = StreamDecoder::new(n_is);
+        let mut p = Vec::new();
+        let mut out = Vec::new();
+        let stats = bench(warm, Duration::from_secs(2), || {
+            let mut sum = 0.0f32;
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                p.clear();
+                p.extend(r.clone().map(|e| 0.05 + 0.9 * p_src.uniform_at(e as u64)));
+                out.resize(r.len(), 0.0);
+                dec.decode_block_mean(&p, &Philox::keyed(19, b as u64), &columns[b..=b], &mut out);
+                sum += out.iter().sum::<f32>();
+            }
+            std::hint::black_box(sum);
+        });
+        println!(
+            "{}",
+            stats.throughput_line("stream decode d=1M bs=256", d as f64)
         );
     }
 }

@@ -27,12 +27,14 @@ use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::mrc::codec::BlockCodec;
+use bicompfl::mrc::stream::encode_stream;
 use bicompfl::runtime::{pool, ParallelRoundEngine};
 use bicompfl::transport::{
     FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, TcpTransport, Transport,
 };
 use bicompfl::util::json::{arr, num, obj, s, Json};
-use bicompfl::util::rng::Xoshiro256;
+use bicompfl::util::rng::{Philox, Xoshiro256};
 use bicompfl::util::timer::{bench, BenchStats};
 
 /// One measured cell of a baseline-vs-contender comparison.
@@ -143,6 +145,12 @@ fn bench_pr_round_transport(
     warm: Duration,
     target: Duration,
 ) -> BenchStats {
+    // "chunked" is the framed wire with every MRC payload split into 4-column
+    // CHUNK frames — the gate tracks the per-chunk header + reassembly cost.
+    let (kind, chunk_blocks) = match kind {
+        "chunked" => ("framed", 4),
+        k => (k, 0),
+    };
     let mut oracle = SyntheticMaskOracle::new(d, n, 1, 0.1);
     let transport: Arc<dyn Transport> = match kind {
         "loopback" => Arc::new(Loopback::new()),
@@ -162,6 +170,7 @@ fn bench_pr_round_transport(
             variant: Variant::Pr,
             n_is: 256,
             allocation: AllocationStrategy::fixed(128),
+            chunk_blocks,
             ..Default::default()
         },
     )
@@ -170,6 +179,50 @@ fn bench_pr_round_transport(
     bench(warm, target, || {
         std::hint::black_box(alg.round(&mut oracle));
     })
+}
+
+/// One client's full uplink encode at large d: the materialized baseline
+/// fills two d-length vectors then walks their blocks; the streamed
+/// contender regenerates each block's parameters inside the fill callback
+/// and never holds more than one block. Same draws, same indices — the gate
+/// tracks whether O(block) memory costs throughput.
+fn bench_stream_encode(streamed: bool, d: usize, warm: Duration, target: Duration) -> BenchStats {
+    let n_is = 64;
+    let plan = BlockPlan::fixed(d, 256);
+    let q_src = Philox::keyed(21, 1);
+    let p_src = Philox::keyed(21, 2);
+    let qp = move |src: &Philox, e: usize| 0.05 + 0.9 * src.uniform_at(e as u64);
+    if streamed {
+        bench(warm, target, || {
+            let bits = encode_stream(
+                n_is,
+                1,
+                9,
+                &plan,
+                |b| Philox::keyed(23, b),
+                |_b, r, qb, pb| {
+                    qb.extend(r.clone().map(|e| qp(&q_src, e)));
+                    pb.extend(r.map(|e| qp(&p_src, e)));
+                },
+                |_b, col| {
+                    std::hint::black_box(col);
+                },
+            );
+            std::hint::black_box(bits);
+        })
+    } else {
+        let codec = BlockCodec::new(n_is);
+        bench(warm, target, || {
+            let q: Vec<f32> = (0..d).map(|e| qp(&q_src, e)).collect();
+            let p: Vec<f32> = (0..d).map(|e| qp(&p_src, e)).collect();
+            let mut sel = Xoshiro256::new(9);
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                let st = Philox::keyed(23, b as u64);
+                std::hint::black_box(codec.encode(&q[r.clone()], &p[r], &st, 0, &mut sel));
+            }
+        })
+    }
 }
 
 /// Rounds per multi-round measurement of the staged PR driver.
@@ -381,6 +434,39 @@ fn main() {
             label: "tcp",
             shards: pooled.shards(),
             run: Box::new(move |w, t| bench_pr_round_transport("tcp", pooled, d, n, w, t)),
+        },
+    });
+    // The chunked wire: the framed path with every MRC payload traveling as
+    // 4-column CHUNK frames (split, per-chunk headers, reassembly before
+    // decode). Chunking must be a memory-shape decision, not a speed one, so
+    // it gates against the same zero-copy loopback as the other wire cases.
+    comparisons.push(Comparison {
+        name: "BiCompFL-PR [chunked wire]",
+        baseline: Side {
+            label: "loopback",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("loopback", pooled, d, n, w, t)),
+        },
+        contender: Side {
+            label: "chunked",
+            shards: pooled.shards(),
+            run: Box::new(move |w, t| bench_pr_round_transport("chunked", pooled, d, n, w, t)),
+        },
+    });
+    // The streaming encoder at large d vs the same work on materialized
+    // d-length vectors: O(block) working memory must not cost throughput.
+    let d_stream = if quick { 262_144 } else { 2_097_152 };
+    comparisons.push(Comparison {
+        name: "MRC encode [stream large-d]",
+        baseline: Side {
+            label: "materialized",
+            shards: 1,
+            run: Box::new(move |w, t| bench_stream_encode(false, d_stream, w, t)),
+        },
+        contender: Side {
+            label: "stream",
+            shards: 1,
+            run: Box::new(move |w, t| bench_stream_encode(true, d_stream, w, t)),
         },
     });
 

@@ -14,7 +14,7 @@ use super::oracle::{MaskOracle, ShardedMaskOracle};
 use super::shared_rand::{mrc_stream, private_seed, Direction};
 use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::{AllocationStrategy, BlockPlan};
-use crate::mrc::codec::BlockCodec;
+use crate::mrc::codec::{BlockCodec, EncodeScratch};
 use crate::mrc::kl;
 use crate::runtime::ParallelRoundEngine;
 use crate::transport::{
@@ -56,8 +56,51 @@ struct DlJob {
     n_is: usize,
     n_dl: usize,
     theta_clamp: f32,
+    /// Wire chunking granularity in block-columns (0 = whole frames).
+    chunk_blocks: usize,
     /// The leg this job's frames travel on (shared with the coordinator).
     transport: Arc<dyn Transport>,
+}
+
+/// Send one MRC payload frame through `leg`, split into `chunk_blocks`-slot
+/// chunk frames when chunking is on and the payload supports it (whole
+/// otherwise). Returns the delivered wire frames in arrival order, the
+/// reassembled logical frame when the payload traveled chunked (`None` ⇒ the
+/// single delivered frame IS the payload), and the exact wire bits — equal
+/// to the whole-frame cost either way, because chunking is bit-neutral.
+fn send_mrc_leg(
+    tr: &dyn Transport,
+    leg: Leg,
+    frame: Frame,
+    chunk_blocks: usize,
+) -> (Vec<Frame>, Option<Frame>, u64) {
+    let chunks = match chunk_blocks {
+        0 => None,
+        cb => transport::chunk_frames(&frame, cb),
+    };
+    let Some(chunks) = chunks else {
+        let sent = tr.send(leg, frame);
+        return (vec![sent.frame], None, sent.bits);
+    };
+    let mut wires = Vec::with_capacity(chunks.len());
+    let mut asm = transport::ChunkAssembler::new();
+    let mut whole = None;
+    let mut bits = 0u64;
+    for c in chunks {
+        let sent = tr.send(leg, c);
+        bits += sent.bits;
+        match &sent.frame {
+            Frame::Chunk(c) => {
+                if let Some(f) = asm.push(c.clone()).expect("delivered chunk stream corrupted") {
+                    whole = Some(f);
+                }
+            }
+            f => panic!("chunked leg delivered a {} frame", f.kind_name()),
+        }
+        wires.push(sent.frame);
+    }
+    let whole = whole.expect("chunk stream ended without its last chunk");
+    (wires, Some(whole), bits)
 }
 
 impl DlJob {
@@ -73,6 +116,7 @@ impl DlJob {
     fn execute(&self) -> (Vec<f32>, u64) {
         let codec = BlockCodec::new(self.n_is);
         let mut sel = Xoshiro256::new(self.sel_seed);
+        let mut scratch = EncodeScratch::default();
         // -- federator side: encode (selector order: block-major) ----------
         let mut indices = vec![vec![0u32; self.blocks.len()]; self.n_dl];
         for (slot, &b) in self.blocks.iter().enumerate() {
@@ -85,33 +129,37 @@ impl DlJob {
                 Direction::Downlink,
             );
             for (ell, row) in indices.iter_mut().enumerate() {
-                let out = codec.encode(
+                let out = codec.encode_with(
                     &self.theta[r.clone()],
                     &self.prior[r.clone()],
                     &stream,
                     ell as u64,
                     &mut sel,
+                    &mut scratch,
                 );
                 row[slot] = out.index;
             }
         }
-        // -- the wire: plan signalling, then this client's indices ---------
+        // -- the wire: plan signalling, then this client's indices (chunked
+        // into block-column pieces when chunking is on — bit-neutral) ------
         let plan_sent = self.transport.send(
             Leg::Downlink,
             Frame::Plan(PlanFrame::from_plan(self.client as u64, self.round, &self.plan)),
         );
-        let dl_sent = self.transport.send(
-            Leg::Downlink,
-            Frame::Downlink(DownlinkFrame {
-                client: self.client as u64,
-                round: self.round,
-                bits_per_index: codec.index_bits() as u8,
-                blocks: self.blocks.iter().map(|&b| b as u32).collect(),
-                indices,
-            }),
-        );
+        let dl_frame = Frame::Downlink(DownlinkFrame {
+            client: self.client as u64,
+            round: self.round,
+            bits_per_index: codec.index_bits() as u8,
+            blocks: self.blocks.iter().map(|&b| b as u32).collect(),
+            indices,
+        });
+        let (dl_wires, dl_whole, dl_bits) =
+            send_mrc_leg(self.transport.as_ref(), Leg::Downlink, dl_frame, self.chunk_blocks);
         let plan_rx = plan_sent.frame.into_plan().to_block_plan();
-        let dl_rx = dl_sent.frame.into_downlink();
+        let dl_rx = match dl_whole.as_ref().unwrap_or(&dl_wires[0]) {
+            Frame::Downlink(d) => d,
+            f => panic!("downlink leg delivered a {} frame", f.kind_name()),
+        };
         // -- client side: decode the delivered frames ----------------------
         let mut est = self.prior.clone();
         for (slot, &b) in dl_rx.blocks.iter().enumerate() {
@@ -126,14 +174,21 @@ impl DlJob {
             let mut mean = vec![0.0f32; r.len()];
             let mut buf = vec![0.0f32; r.len()];
             for (ell, row) in dl_rx.indices.iter().enumerate() {
-                codec.decode(&self.prior[r.clone()], &stream, ell as u64, row[slot], &mut buf);
+                codec.decode_with(
+                    &self.prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    row[slot],
+                    &mut buf,
+                    &mut scratch,
+                );
                 crate::tensor::add_assign(&mut mean, &buf);
             }
             crate::tensor::scale(&mut mean, 1.0 / self.n_dl as f32);
             est[r].copy_from_slice(&mean);
         }
         crate::tensor::clamp(&mut est, self.theta_clamp, 1.0 - self.theta_clamp);
-        (est, plan_sent.bits + dl_sent.bits)
+        (est, plan_sent.bits + dl_bits)
     }
 }
 
@@ -143,7 +198,10 @@ impl DlJob {
 struct UlPayload {
     client: usize,
     plan_wire: Frame,
-    ul_wire: Frame,
+    /// The delivered uplink wire frames in arrival order: one whole
+    /// [`Frame::Uplink`], or its chunk sequence when chunking is on. The GR
+    /// downlink relays these verbatim — chunk for chunk, as they parsed.
+    ul_wires: Vec<Frame>,
     /// Plan signalling + MRC index bits, off the wire.
     bits: u64,
     qhat: Vec<f32>,
@@ -203,6 +261,22 @@ pub struct BiCompFlConfig {
     /// Mix coefficient λ for the PR uplink prior:
     /// p_{i,u} = λ·θ̂_i + (1−λ)·q̂_i_prev (Appendix J.2; 1.0 = paper default).
     pub lambda: f32,
+    /// Split MRC index payloads into chunk frames of this many block-columns
+    /// each on the wire (0 = whole frames). Chunking is bit-neutral — the
+    /// per-chunk counted bits sum to exactly the whole frame's — and changes
+    /// no decoded value; the determinism suite pins chunked == unchunked
+    /// bit-identical across every wire kind. The default comes from
+    /// `BICOMPFL_CHUNK` (unset ⇒ 0).
+    pub chunk_blocks: usize,
+}
+
+/// The `BICOMPFL_CHUNK` environment default for
+/// [`BiCompFlConfig::chunk_blocks`] (unset or unparsable ⇒ 0, whole frames).
+fn env_chunk_blocks() -> usize {
+    std::env::var("BICOMPFL_CHUNK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
 }
 
 impl Default for BiCompFlConfig {
@@ -221,6 +295,7 @@ impl Default for BiCompFlConfig {
             participation: 1.0,
             seed: 0xB1C0,
             lambda: 1.0,
+            chunk_blocks: env_chunk_blocks(),
         }
     }
 }
@@ -353,14 +428,21 @@ impl BiCompFl {
     ) -> (Vec<Vec<u32>>, u64) {
         let codec = BlockCodec::new(n_is);
         let mut sel = Xoshiro256::new(sel_seed);
+        let mut scratch = EncodeScratch::default();
         let mut bits = 0u64;
         let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
         for b in 0..plan.n_blocks() {
             let r = plan.block(b);
             let stream = mrc_stream(seed, round, client, b as u64, dir);
             for (ell, row) in indices.iter_mut().enumerate() {
-                let out =
-                    codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
+                let out = codec.encode_with(
+                    &q[r.clone()],
+                    &prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    &mut sel,
+                    &mut scratch,
+                );
                 row[b] = out.index;
                 bits += out.bits;
             }
@@ -389,13 +471,21 @@ impl BiCompFl {
         dir: Direction,
     ) -> Vec<f32> {
         let codec = BlockCodec::new(n_is);
+        let mut scratch = EncodeScratch::default();
         let mut mean = vec![0.0f32; prior.len()];
         let mut buf = vec![0.0f32; prior.len()];
         for (ell, row) in indices.iter().enumerate() {
             for b in 0..plan.n_blocks() {
                 let r = plan.block(b);
                 let stream = mrc_stream(seed, round, client, b as u64, dir);
-                codec.decode(&prior[r.clone()], &stream, ell as u64, row[b], &mut buf[r.clone()]);
+                codec.decode_with(
+                    &prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    row[b],
+                    &mut buf[r.clone()],
+                    &mut scratch,
+                );
             }
             crate::tensor::add_assign(&mut mean, &buf);
         }
@@ -570,6 +660,7 @@ impl BiCompFl {
         let n_ul = self.cfg.n_ul;
         let round = self.round;
         let bpi = BlockCodec::new(n_is).index_bits() as u8;
+        let chunk_blocks = self.cfg.chunk_blocks;
         let transport = Arc::clone(&self.transport);
         let encoded: Vec<UlPayload> = self.engine.run(&jobs, |_, j| {
             let (indices, _analytic_bits) = Self::encode_vector_at(
@@ -588,21 +679,20 @@ impl BiCompFl {
                 Leg::Uplink,
                 Frame::Plan(PlanFrame::from_plan(j.client as u64, round, &j.plan)),
             );
-            let ul_sent = transport.send(
-                Leg::Uplink,
-                Frame::Uplink(UplinkFrame {
-                    client: j.client as u64,
-                    round,
-                    bits_per_index: bpi,
-                    indices,
-                    side: SideInfo::None,
-                }),
-            );
+            let ul_frame = Frame::Uplink(UplinkFrame {
+                client: j.client as u64,
+                round,
+                bits_per_index: bpi,
+                indices,
+                side: SideInfo::None,
+            });
+            let (ul_wires, ul_whole, ul_bits) =
+                send_mrc_leg(transport.as_ref(), Leg::Uplink, ul_frame, chunk_blocks);
             let plan_rx = match &plan_sent.frame {
                 Frame::Plan(p) => p.to_block_plan(),
                 f => panic!("uplink leg delivered a {} frame", f.kind_name()),
             };
-            let indices_rx = match &ul_sent.frame {
+            let indices_rx = match ul_whole.as_ref().unwrap_or(&ul_wires[0]) {
                 Frame::Uplink(u) => &u.indices,
                 f => panic!("uplink leg delivered a {} frame", f.kind_name()),
             };
@@ -619,8 +709,8 @@ impl BiCompFl {
             UlPayload {
                 client: j.client,
                 plan_wire: plan_sent.frame,
-                ul_wire: ul_sent.frame,
-                bits: plan_sent.bits + ul_sent.bits,
+                ul_wires,
+                bits: plan_sent.bits + ul_bits,
                 qhat,
             }
         });
@@ -687,6 +777,7 @@ impl BiCompFl {
                 n_is: self.cfg.n_is,
                 n_dl,
                 theta_clamp: self.cfg.theta_clamp,
+                chunk_blocks: self.cfg.chunk_blocks,
                 transport: Arc::clone(&self.transport),
             });
         }
@@ -728,14 +819,15 @@ impl BiCompFl {
         match self.cfg.variant {
             Variant::Gr => {
                 // Relay: client j receives every other client's plan and
-                // index frames — re-sent verbatim through the transport —
-                // and reconstructs the identical average (it already knows
-                // its own samples, hence n − 1 copies of each payload:
-                // per-client DL = Σ_{i≠j} bits_i). The broadcast channel
-                // carries the concatenation once.
+                // index frames — re-sent verbatim through the transport, at
+                // the granularity they arrived (whole frames, or chunk for
+                // chunk when chunking is on) — and reconstructs the identical
+                // average (it already knows its own samples, hence n − 1
+                // copies of each payload: per-client DL = Σ_{i≠j} bits_i).
+                // The broadcast channel carries the concatenation once.
                 let tr = self.transport.as_ref();
                 for p in &ul_payloads {
-                    for f in [&p.plan_wire, &p.ul_wire] {
+                    for f in std::iter::once(&p.plan_wire).chain(&p.ul_wires) {
                         bits.dl += channel::fan_out(tr, Leg::Downlink, f, n.saturating_sub(1));
                         bits.dl_bc += tr.relay(Leg::DownlinkBroadcast, f);
                     }
@@ -772,17 +864,32 @@ impl BiCompFl {
                     blocks: (0..plan.n_blocks() as u32).collect(),
                     indices,
                 });
-                // Point-to-point: one copy of both frames per client.
-                for f in [&plan_wire, &dl_wire] {
+                // Point-to-point: one copy of both frames per client,
+                // chunked exactly like the broadcast copy below (chunking is
+                // deterministic, so both copies split identically).
+                let dl_chunks = match self.cfg.chunk_blocks {
+                    0 => None,
+                    cb => transport::chunk_frames(&dl_wire, cb),
+                };
+                let dl_p2p = dl_chunks.as_deref().unwrap_or(std::slice::from_ref(&dl_wire));
+                for f in std::iter::once(&plan_wire).chain(dl_p2p) {
                     bits.dl += channel::fan_out(self.transport.as_ref(), Leg::Downlink, f, n);
                 }
                 // Broadcast: one copy total; every client decodes the same
                 // delivered frames via the global randomness.
                 let plan_sent = self.transport.send(Leg::DownlinkBroadcast, plan_wire);
-                let dl_sent = self.transport.send(Leg::DownlinkBroadcast, dl_wire);
-                bits.dl_bc += plan_sent.bits + dl_sent.bits;
+                let (dl_wires, dl_whole, dl_bc_bits) = send_mrc_leg(
+                    self.transport.as_ref(),
+                    Leg::DownlinkBroadcast,
+                    dl_wire,
+                    self.cfg.chunk_blocks,
+                );
+                bits.dl_bc += plan_sent.bits + dl_bc_bits;
                 let plan_rx = plan_sent.frame.into_plan().to_block_plan();
-                let dl_rx = dl_sent.frame.into_downlink();
+                let dl_rx = match dl_whole.as_ref().unwrap_or(&dl_wires[0]) {
+                    Frame::Downlink(d) => d,
+                    f => panic!("downlink broadcast delivered a {} frame", f.kind_name()),
+                };
                 let mut theta_hat = Self::decode_mean_at(
                     self.cfg.n_is,
                     self.round,
@@ -1169,6 +1276,28 @@ mod tests {
         assert_eq!(r.dl_bits, 3 * r.ul_bits);
         // Broadcast: one copy of all indices.
         assert_eq!(r.dl_bc_bits, r.ul_bits);
+    }
+
+    #[test]
+    fn chunked_wire_is_bit_identical_to_whole_frames() {
+        // Chunking only changes the wire granularity: every record — loss,
+        // accuracy, and all three bit meters — must match bit for bit, for
+        // every variant, with a chunk size deliberately misaligned with the
+        // 8-block plans so mid-message chunk boundaries are exercised.
+        for v in [Variant::Gr, Variant::GrReconst, Variant::Pr, Variant::PrSplitDl] {
+            let run = |chunk_blocks: usize| {
+                let mut c = cfg(v);
+                c.chunk_blocks = chunk_blocks;
+                let mut oracle = SyntheticMaskOracle::new(256, 4, 42, 0.1);
+                let mut alg = BiCompFl::new(256, 4, c);
+                let recs = alg.run(&mut oracle, 3, 1);
+                (recs, alg.global_model().to_vec())
+            };
+            let (recs_whole, theta_whole) = run(0);
+            let (recs_chunked, theta_chunked) = run(3);
+            assert_eq!(recs_whole, recs_chunked, "{} records drift under chunking", v.label());
+            assert_eq!(theta_whole, theta_chunked, "{} model drifts under chunking", v.label());
+        }
     }
 
     #[test]

@@ -31,8 +31,14 @@
 //! A default [`RunOpts`] reproduces the strict protocol: any fault fails the
 //! whole run — the right bar for the determinism suite. Setting `faults`,
 //! `deadline`, or `cohort` switches to the tolerant cohort protocol below.
-//! The old `run_federator`/`run_client` pairs survive as `#[deprecated]`
-//! wrappers.
+//!
+//! With `spec.chunk_blocks > 0` every uplink index payload travels as a
+//! sequence of `Frame::Chunk` pieces instead of one whole frame: clients
+//! split before sending, the federator reassembles as chunks parse and
+//! relays the delivered chunk frames verbatim — chunk for chunk, never
+//! holding more than the message being assembled — and every receiver's
+//! reassembly is bit-identical to the whole frame (chunking is bit-neutral,
+//! so all the accounting bars below hold unchanged).
 //!
 //! ## Protocol (per round, after the HELLO/ACK handshake)
 //!
@@ -90,7 +96,8 @@ use crate::transport::tcp::{
     connect_client_tcp, poll_fds, Endpoint, Listener, PollFd, POLLIN, POLLOUT,
 };
 use crate::transport::{
-    FaultReport, FaultSpec, FaultyStream, Frame, PlanFrame, SideInfo, UplinkFrame,
+    chunk_frames, ChunkAssembler, FaultReport, FaultSpec, FaultyStream, Frame, PlanFrame,
+    SideInfo, UplinkFrame,
 };
 use crate::util::rng::Xoshiro256;
 
@@ -127,6 +134,10 @@ pub struct RunSpec {
     pub theta_clamp: f32,
     /// Fraction of synthetic-target entries flipped per client (non-iid-ness).
     pub heterogeneity: f32,
+    /// Uplink payloads travel as chunk frames of this many block-columns
+    /// each (0 = whole frames). Bit-neutral and bit-identical — records
+    /// match the unchunked run exactly (pinned by the determinism suite).
+    pub chunk_blocks: u32,
 }
 
 impl Default for RunSpec {
@@ -146,12 +157,13 @@ impl Default for RunSpec {
             theta0: 0.5,
             theta_clamp: 0.05,
             heterogeneity: 0.1,
+            chunk_blocks: 0,
         }
     }
 }
 
 /// Encoded byte length of a [`RunSpec`].
-const SPEC_BYTES: usize = 8 * 4 + 2 * 8 + 4 * 4;
+const SPEC_BYTES: usize = 8 * 4 + 2 * 8 + 4 * 4 + 4;
 
 impl RunSpec {
     /// Serialize to the fixed-width little-endian ACK body.
@@ -174,6 +186,7 @@ impl RunSpec {
         for v in [self.local_lr, self.theta0, self.theta_clamp, self.heterogeneity] {
             out.extend_from_slice(&v.to_le_bytes());
         }
+        out.extend_from_slice(&self.chunk_blocks.to_le_bytes());
         debug_assert_eq!(out.len(), SPEC_BYTES);
         out
     }
@@ -205,6 +218,7 @@ impl RunSpec {
             theta0: f32_at(52),
             theta_clamp: f32_at(56),
             heterogeneity: f32_at(60),
+            chunk_blocks: u32_at(64),
         };
         spec.validate()?;
         Ok(spec)
@@ -380,16 +394,36 @@ fn aggregate(spec: &RunSpec, qhats: &[Vec<f32>]) -> Vec<f32> {
     BiCompFl::clamped_mean(qhats, spec.theta_clamp)
 }
 
-/// Receive the (plan, uplink) frame pair every uplink leg and every relayed
-/// downlink consists of — one decode shared by both sides of the protocol.
-/// A mis-kinded frame is a typed [`TransportError::BadFrame`], never a panic:
-/// this path reads bytes a misbehaving peer controls.
-fn recv_frame_pair(stream: &mut FrameStream) -> Result<(PlanFrame, UplinkFrame, u64)> {
+/// Receive the (plan, uplink) message pair every uplink leg and every
+/// relayed downlink consists of — one decode shared by both sides of the
+/// protocol. The uplink payload arrives either as one whole frame or as a
+/// `Frame::Chunk` sequence (reassembled here as the chunks parse; the
+/// returned `Vec<Frame>` holds the delivered chunk frames for relaying, and
+/// is empty for a whole-frame arrival). A mis-kinded frame or an
+/// inconsistent chunk stream is a typed [`TransportError::BadFrame`], never
+/// a panic: this path reads bytes a misbehaving peer controls.
+fn recv_frame_pair(stream: &mut FrameStream) -> Result<(PlanFrame, UplinkFrame, u64, Vec<Frame>)> {
     let (plan_frame, plan_bits) = stream.recv_frame()?;
-    let (ul_frame, ul_bits) = stream.recv_frame()?;
     let plan = plan_frame.try_into_plan()?;
-    let ul = ul_frame.try_into_uplink()?;
-    Ok((plan, ul, plan_bits + ul_bits))
+    let (first, first_bits) = stream.recv_frame()?;
+    let mut bits = plan_bits + first_bits;
+    let c = match first {
+        Frame::Chunk(c) => c,
+        f => return Ok((plan, f.try_into_uplink()?, bits, Vec::new())),
+    };
+    let mut asm = ChunkAssembler::new();
+    let mut wires = Vec::new();
+    let mut done = asm.push(c.clone())?;
+    wires.push(Frame::Chunk(c));
+    while done.is_none() {
+        let (frame, b) = stream.recv_frame()?;
+        bits += b;
+        let c = frame.try_into_chunk()?;
+        done = asm.push(c.clone())?;
+        wires.push(Frame::Chunk(c));
+    }
+    let ul = done.expect("loop exits only on reassembly").try_into_uplink()?;
+    Ok((plan, ul, bits, wires))
 }
 
 /// Validate a received (plan, uplink) pair against the run spec. Under
@@ -430,8 +464,8 @@ fn recv_uplink(
     stream: &mut FrameStream,
     expect_client: u64,
     expect_round: u64,
-) -> Result<(PlanFrame, UplinkFrame, u64)> {
-    let (plan, ul, bits) = recv_frame_pair(stream)?;
+) -> Result<(PlanFrame, UplinkFrame, u64, Vec<Frame>)> {
+    let (plan, ul, bits, wires) = recv_frame_pair(stream)?;
     if plan.client != expect_client || ul.client != expect_client || ul.round != expect_round {
         return Err(TransportError::Handshake(format!(
             "misrouted uplink: client {}/{} round {} (expected client {expect_client} \
@@ -439,7 +473,7 @@ fn recv_uplink(
             plan.client, ul.client, ul.round
         )));
     }
-    Ok((plan, ul, bits))
+    Ok((plan, ul, bits, wires))
 }
 
 /// Flag byte the cohort-protocol federator appends to its [`RunSpec`] ACK:
@@ -495,8 +529,24 @@ struct CohortRound {
     sampled_out_bits: u64,
     /// The cohort's decoded posterior means, id order.
     qhats: Vec<Vec<f32>>,
-    /// The cohort's verbatim frames for the GR relay, id order.
-    relays: Vec<(Frame, Frame)>,
+    /// The cohort's verbatim frames for the GR relay, id order: each
+    /// client's plan followed by its index payload at the granularity it
+    /// arrived (one whole uplink frame, or its chunk frames as they parsed).
+    relays: Vec<Vec<Frame>>,
+}
+
+/// The frames one counted uplink contributes to the GR relay, in delivery
+/// order: its plan, then its index payload exactly as it arrived — the
+/// whole uplink frame, or the delivered chunk frames relayed verbatim.
+fn relay_frames(plan: PlanFrame, ul: UplinkFrame, chunks: Vec<Frame>) -> Vec<Frame> {
+    let mut out = Vec::with_capacity(1 + chunks.len().max(1));
+    out.push(Frame::Plan(plan));
+    if chunks.is_empty() {
+        out.push(Frame::Uplink(ul));
+    } else {
+        out.extend(chunks);
+    }
+    out
 }
 
 /// Partition the round's delivered uplinks (`(client, pair bits, plan,
@@ -509,7 +559,7 @@ fn partition_cohort(
     spec: &RunSpec,
     cohort: Option<usize>,
     t: usize,
-    delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)>,
+    delivered: Vec<(usize, u64, PlanFrame, UplinkFrame, Vec<Frame>)>,
     theta: &[f32],
     report: &mut FaultReport,
 ) -> Result<CohortRound> {
@@ -521,13 +571,13 @@ fn partition_cohort(
         qhats: Vec::new(),
         relays: Vec::new(),
     };
-    for (i, bits, plan, ul) in delivered {
+    for (i, bits, plan, ul, chunks) in delivered {
         report.clients[i].delivered += 1;
         if keep[i] {
             cr.ul_bits += bits;
             cr.ids.push(i as u64);
             cr.qhats.push(decode_uplink(spec, &plan, &ul, theta));
-            cr.relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
+            cr.relays.push(relay_frames(plan, ul, chunks));
         } else {
             cr.sampled_out_bits += bits;
         }
@@ -629,16 +679,16 @@ fn federate_unix_strict(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
         // -- uplink: each client's plan + indices, off the wire ------------
         let mut ul_bits = 0u64;
         let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut relays: Vec<(Frame, Frame)> = Vec::with_capacity(n);
+        let mut relays: Vec<Vec<Frame>> = Vec::with_capacity(n);
         for (i, stream) in streams.iter_mut().enumerate() {
-            let (plan, ul, bits) = recv_uplink(stream, i as u64, t as u64)?;
+            let (plan, ul, bits, chunks) = recv_uplink(stream, i as u64, t as u64)?;
             // Refuse spec-inconsistent shapes before decoding them — and
             // before relaying them, so one bad client cannot poison the
             // honest n-1.
             validate_uplink_shape(spec, &plan, &ul)?;
             ul_bits += bits;
             qhats.push(decode_uplink(spec, &plan, &ul, &theta));
-            relays.push((Frame::Plan(plan), Frame::Uplink(ul)));
+            relays.push(relay_frames(plan, ul, chunks));
         }
         theta = aggregate(spec, &qhats);
 
@@ -649,8 +699,8 @@ fn federate_unix_strict(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
         // deterministic, so per-destination re-encodes would only burn CPU.
         let mut dl_bits = 0u64;
         let mut dl_bc_bits = 0u64;
-        for (i, (plan, uplink)) in relays.iter().enumerate() {
-            for frame in [plan, uplink] {
+        for (i, frames) in relays.iter().enumerate() {
+            for frame in frames {
                 let (bytes, bits) = frame.encode();
                 for (j, stream) in streams.iter_mut().enumerate() {
                     if j != i {
@@ -777,7 +827,8 @@ fn federate_unix_tolerant(sock: &Path, opts: &RunOpts) -> Result<FederatorRun> {
             (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
 
         // -- uplink: poll the alive clients in id order --------------------
-        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)> = Vec::with_capacity(n);
+        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame, Vec<Frame>)> =
+            Vec::with_capacity(n);
         for (i, stream) in streams.iter_mut().enumerate() {
             if !alive[i] {
                 continue;
@@ -807,8 +858,8 @@ fn federate_unix_tolerant(sock: &Path, opts: &RunOpts) -> Result<FederatorRun> {
                 }
             };
             match outcome {
-                Ok((plan, ul, bits)) => match validate_uplink_shape(spec, &plan, &ul) {
-                    Ok(()) => delivered.push((i, bits, plan, ul)),
+                Ok((plan, ul, bits, chunks)) => match validate_uplink_shape(spec, &plan, &ul) {
+                    Ok(()) => delivered.push((i, bits, plan, ul, chunks)),
                     Err(why) => {
                         crate::info!("federator: round {t}: dropping client {i}: {why}");
                         report.clients[i].dropped += 1;
@@ -866,8 +917,8 @@ fn federate_unix_tolerant(sock: &Path, opts: &RunOpts) -> Result<FederatorRun> {
         }
         let mut dl_bits = 0u64;
         let mut dl_bc_bits = 0u64;
-        for (&ci, (plan, uplink)) in cr.ids.iter().zip(&cr.relays) {
-            for frame in [plan, uplink] {
+        for (&ci, frames) in cr.ids.iter().zip(&cr.relays) {
+            for frame in frames {
                 let (bytes, bits) = frame.encode();
                 for (j, stream) in streams.iter_mut().enumerate() {
                     if j as u64 == ci || !alive[j] {
@@ -1093,19 +1144,47 @@ fn accept_endpoints(
 enum UplinkProgress {
     NeedPlan,
     NeedUplink(PlanFrame, u64),
+    /// Mid-reassembly of a chunked index payload: the plan, the bits counted
+    /// so far, the assembler, and the delivered chunk frames kept verbatim
+    /// for the GR relay.
+    Chunks {
+        plan: PlanFrame,
+        bits: u64,
+        asm: ChunkAssembler,
+        wires: Vec<Frame>,
+    },
+}
+
+/// Final checks on a completed uplink pair: routing, then spec shape.
+fn check_uplink(
+    spec: &RunSpec,
+    plan: &PlanFrame,
+    ul: &UplinkFrame,
+    client: u64,
+    round: u64,
+) -> Result<()> {
+    if ul.client != client || ul.round != round {
+        return Err(TransportError::Handshake(format!(
+            "misrouted uplink: client {} round {} (expected client {client} round {round})",
+            ul.client, ul.round
+        )));
+    }
+    validate_uplink_shape(spec, plan, ul)
 }
 
 /// Parse as much of client `client`'s round-`round` uplink pair as its
 /// buffer holds: `Ok(Some(pair))` when complete, `Ok(None)` when more bytes
 /// are needed (poll the fd), a typed error on any protocol violation — the
-/// event-loop form of [`recv_uplink`] + [`validate_uplink_shape`].
+/// event-loop form of [`recv_uplink`] + [`validate_uplink_shape`]. A chunked
+/// index payload is reassembled chunk by chunk as it parses; the delivered
+/// chunk frames ride along in the result for the verbatim GR relay.
 fn advance_uplink(
     ep: &mut Endpoint,
     st: &mut UplinkProgress,
     client: u64,
     round: u64,
     spec: &RunSpec,
-) -> Result<Option<(PlanFrame, UplinkFrame, u64)>> {
+) -> Result<Option<(PlanFrame, UplinkFrame, u64, Vec<Frame>)>> {
     loop {
         match ep.poll_msg()? {
             None => return Ok(None),
@@ -1120,17 +1199,57 @@ fn advance_uplink(
                     }
                     *st = UplinkProgress::NeedUplink(plan, bits);
                 }
-                UplinkProgress::NeedUplink(plan, plan_bits) => {
-                    let ul = frame.try_into_uplink()?;
-                    if ul.client != client || ul.round != round {
-                        return Err(TransportError::Handshake(format!(
-                            "misrouted uplink: client {} round {} (expected client {client} \
-                             round {round})",
-                            ul.client, ul.round
-                        )));
+                UplinkProgress::NeedUplink(plan, plan_bits) => match frame {
+                    Frame::Chunk(c) => {
+                        let mut asm = ChunkAssembler::new();
+                        let done = asm.push(c.clone())?;
+                        let wires = vec![Frame::Chunk(c)];
+                        match done {
+                            Some(whole) => {
+                                let ul = whole.try_into_uplink()?;
+                                check_uplink(spec, &plan, &ul, client, round)?;
+                                return Ok(Some((plan, ul, plan_bits + bits, wires)));
+                            }
+                            None => {
+                                *st = UplinkProgress::Chunks {
+                                    plan,
+                                    bits: plan_bits + bits,
+                                    asm,
+                                    wires,
+                                };
+                            }
+                        }
                     }
-                    validate_uplink_shape(spec, &plan, &ul)?;
-                    return Ok(Some((plan, ul, plan_bits + bits)));
+                    f => {
+                        let ul = f.try_into_uplink()?;
+                        check_uplink(spec, &plan, &ul, client, round)?;
+                        return Ok(Some((plan, ul, plan_bits + bits, Vec::new())));
+                    }
+                },
+                UplinkProgress::Chunks {
+                    plan,
+                    bits: acc,
+                    mut asm,
+                    mut wires,
+                } => {
+                    let c = frame.try_into_chunk()?;
+                    let done = asm.push(c.clone())?;
+                    wires.push(Frame::Chunk(c));
+                    match done {
+                        Some(whole) => {
+                            let ul = whole.try_into_uplink()?;
+                            check_uplink(spec, &plan, &ul, client, round)?;
+                            return Ok(Some((plan, ul, acc + bits, wires)));
+                        }
+                        None => {
+                            *st = UplinkProgress::Chunks {
+                                plan,
+                                bits: acc + bits,
+                                asm,
+                                wires,
+                            };
+                        }
+                    }
                 }
             },
             Some(Msg::Bye) => return Err(TransportError::PeerClosed),
@@ -1240,7 +1359,8 @@ fn federate_tcp(addr: &str, opts: &RunOpts) -> Result<FederatorRun> {
         let meter_before: Vec<u64> = conns.iter().map(|c| c.received().bits).collect();
         let mut progress: Vec<UplinkProgress> =
             (0..n).map(|_| UplinkProgress::NeedPlan).collect();
-        let mut pairs: Vec<Option<(PlanFrame, UplinkFrame, u64)>> = (0..n).map(|_| None).collect();
+        let mut pairs: Vec<Option<(PlanFrame, UplinkFrame, u64, Vec<Frame>)>> =
+            (0..n).map(|_| None).collect();
         loop {
             // Parse whatever is already buffered (a fast client's whole pair
             // may land in one read — or have been buffered since last round).
@@ -1309,12 +1429,13 @@ fn federate_tcp(addr: &str, opts: &RunOpts) -> Result<FederatorRun> {
             }
         }
 
-        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame)> = Vec::with_capacity(n);
+        let mut delivered: Vec<(usize, u64, PlanFrame, UplinkFrame, Vec<Frame>)> =
+            Vec::with_capacity(n);
         let mut pair_bits = vec![0u64; n];
         for (i, pair) in pairs.iter_mut().enumerate() {
-            if let Some((plan, ul, bits)) = pair.take() {
+            if let Some((plan, ul, bits, chunks)) = pair.take() {
                 pair_bits[i] = bits;
-                delivered.push((i, bits, plan, ul));
+                delivered.push((i, bits, plan, ul, chunks));
             }
         }
         if delivered.is_empty() {
@@ -1340,8 +1461,8 @@ fn federate_tcp(addr: &str, opts: &RunOpts) -> Result<FederatorRun> {
         }
         let mut dl_bits = 0u64;
         let mut dl_bc_bits = 0u64;
-        for (&ci, (plan, uplink)) in cr.ids.iter().zip(&cr.relays) {
-            for frame in [plan, uplink] {
+        for (&ci, frames) in cr.ids.iter().zip(&cr.relays) {
+            for frame in frames {
                 let (bytes, bits) = frame.encode();
                 for (j, conn) in conns.iter_mut().enumerate() {
                     if j as u64 == ci || !alive[j] {
@@ -1415,9 +1536,26 @@ fn client_rounds(mut fs: FaultyStream, id: u64, spec: &RunSpec, cohort_proto: bo
         crate::tensor::clamp(&mut q, kl::EPS, 1.0 - kl::EPS);
 
         // -- uplink (through the fault gauntlet, if any) -------------------
+        // With chunking on, the index payload leaves as Frame::Chunk pieces
+        // so no full serialized uplink is ever buffered for the wire; the
+        // chunk bits sum to the whole frame's, so accounting is unchanged.
         let (own_plan, own_ul) = encode_uplink(spec, t as u64, id, &q, &theta);
         fs.send_frame(&Frame::Plan(own_plan.clone()))?;
-        fs.send_frame(&Frame::Uplink(own_ul.clone()))?;
+        let ul_frame = Frame::Uplink(own_ul.clone());
+        let ul_chunks = match spec.chunk_blocks {
+            0 => None,
+            cb => chunk_frames(&ul_frame, cb as usize),
+        };
+        match ul_chunks {
+            Some(chunks) => {
+                for c in &chunks {
+                    fs.send_frame(c)?;
+                }
+            }
+            None => {
+                fs.send_frame(&ul_frame)?;
+            }
+        }
 
         // -- the round's participant set -----------------------------------
         let ids: Vec<u64> = if cohort_proto {
@@ -1449,7 +1587,7 @@ fn client_rounds(mut fs: FaultyStream, id: u64, spec: &RunSpec, cohort_proto: bo
 
         // -- downlink: the other counted uplinks, relayed verbatim ---------
         for _ in 0..ids.len() - usize::from(me_in) {
-            let (plan, ul, _bits) = recv_frame_pair(fs.inner_mut())?;
+            let (plan, ul, _bits, _wires) = recv_frame_pair(fs.inner_mut())?;
             // Decoding derives shared randomness from (round, client), so a
             // stale or mispaired relay must be a typed error here — decoded
             // with the wrong stream it would silently corrupt θ instead.
@@ -1486,43 +1624,6 @@ fn client_rounds(mut fs: FaultyStream, id: u64, spec: &RunSpec, cohort_proto: bo
     fs.inner_mut().recv_bye()
 }
 
-// ---------------------------------------------------------------------------
-// Deprecated PR 4/6 entrypoints — thin wrappers over federate/participate
-// ---------------------------------------------------------------------------
-
-/// Strict federator over a Unix socket.
-#[deprecated(note = "use `federate(&NetAddr::Unix(..), &RunOpts::strict(spec))`")]
-pub fn run_federator(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
-    federate(&NetAddr::Unix(sock.to_path_buf()), &RunOpts::strict(*spec))
-}
-
-/// Fault-tolerant federator over a Unix socket.
-#[deprecated(note = "use `federate` with `RunOpts { faults, .. }`")]
-pub fn run_federator_with(sock: &Path, spec: &RunSpec, faults: &FaultSpec) -> Result<FederatorRun> {
-    let opts = RunOpts {
-        spec: *spec,
-        faults: faults.clone(),
-        ..RunOpts::default()
-    };
-    federate(&NetAddr::Unix(sock.to_path_buf()), &opts)
-}
-
-/// Strict client over a Unix socket.
-#[deprecated(note = "use `participate(&NetAddr::Unix(..), id, &RunOpts::default())`")]
-pub fn run_client(sock: &Path, id: u64) -> Result<()> {
-    participate(&NetAddr::Unix(sock.to_path_buf()), id, &RunOpts::default())
-}
-
-/// Fault-injecting client over a Unix socket.
-#[deprecated(note = "use `participate` with `RunOpts { faults, .. }`")]
-pub fn run_client_with(sock: &Path, id: u64, faults: &FaultSpec) -> Result<()> {
-    let opts = RunOpts {
-        faults: faults.clone(),
-        ..RunOpts::default()
-    };
-    participate(&NetAddr::Unix(sock.to_path_buf()), id, &opts)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1544,6 +1645,7 @@ mod tests {
             theta0: 0.5,
             theta_clamp: 0.05,
             heterogeneity: 0.2,
+            chunk_blocks: 7,
         };
         let body = spec.encode();
         assert_eq!(body.len(), SPEC_BYTES);

@@ -7,6 +7,7 @@
 //!   info      Show the artifact manifest summary.
 //!   federator Serve one multi-process BiCompFL-GR run over a Unix socket.
 //!   client    Join a federator's run as one client process.
+//!   mrc-smoke Stream one MRC encode/decode at large d in O(block) memory.
 //!
 //! Examples:
 //!   bicompfl train --arch mlp --variant gr --rounds 20
@@ -46,7 +47,7 @@ fn main() {
 fn cli() -> Cli {
     Cli::new(
         "bicompfl — stochastic federated learning with bi-directional compression\n\n\
-         Usage: bicompfl <train|exp|presets|info|federator|client> [flags]\n\
+         Usage: bicompfl <train|exp|presets|info|federator|client|mrc-smoke> [flags]\n\
          exp subcommands: table, all-tables, ablate-clients, ablate-ndl,\n\
          ablate-blocksize, ablate-nis, ablate-prior\n\
          federator/client: a real multi-process BiCompFL-GR round loop over a\n\
@@ -70,7 +71,14 @@ fn cli() -> Cli {
         "fault-injection spec, e.g. 'deadline_ms=200;1:delay_us=50000' \
          (docs/ARCHITECTURE.md, Fault model); overrides BICOMPFL_FAULTS",
     )
-    .flag("d", "0", "federator: synthetic model dimension (0 = default 256)")
+    .flag("d", "0", "federator: synthetic model dimension (0 = default 256); \
+         mrc-smoke: streamed dimension (0 = default 10^7)")
+    .flag(
+        "chunk",
+        "0",
+        "federator: relay index payloads as CHUNK frames of this many \
+         block-columns (0 = whole frames); bit-neutral on the meters",
+    )
     .flag("preset", "quick", "experiment preset (see `bicompfl presets`)")
     .flag("arch", "", "model architecture (mlp|lenet5|cnn4|cnn6); overrides preset")
     .flag("dataset", "", "dataset (mnist-like|fashion-like|cifar-like); overrides preset")
@@ -195,6 +203,7 @@ fn real_main() -> Result<()> {
                 n_ul: nz(c.get_usize("nul"), defaults.n_ul),
                 local_iters: nz(c.get_usize("local-iters"), defaults.local_iters),
                 seed: c.get_u64("seed"),
+                chunk_blocks: c.get_usize("chunk") as u32,
                 ..defaults
             };
             let at = net_addr(&c, "listen", topo.map(|t| t.listen.as_str()));
@@ -260,6 +269,31 @@ fn real_main() -> Result<()> {
             };
             distributed::participate(&at, id, &opts)?;
             println!("client {id}: run complete, federator said bye");
+        }
+        "mrc-smoke" => {
+            // Streaming MRC memory smoke: encode and decode a d-dimensional
+            // vector without ever materializing it — per-entry parameters
+            // are a pure function of the entry index, so live memory is
+            // O(block), not O(d). The CI `large-d-memory` job runs this at
+            // d = 10⁷ under `/usr/bin/time -v` and fails the build if peak
+            // RSS crosses the declared ceiling.
+            let d = match c.get_usize("d") {
+                0 => 10_000_000,
+                v => v,
+            };
+            let bs = match c.get_usize("block-size") {
+                0 => 256,
+                v => v,
+            };
+            let n_is = match c.get_usize("nis") {
+                0 => 64,
+                v => v,
+            };
+            let n_ul = match c.get_usize("nul") {
+                0 => 1,
+                v => v,
+            };
+            mrc_smoke(d, bs, n_is, n_ul, c.get_u64("seed"))?;
         }
         "train" => {
             let cfg = build_cfg(&c)?;
@@ -347,5 +381,65 @@ fn real_main() -> Result<()> {
             eprintln!("{}", cli().usage());
         }
     }
+    Ok(())
+}
+
+/// One streamed MRC encode + decode at dimension `d`, never holding a
+/// d-length vector: posterior/prior entries are regenerated per block from
+/// counter-based Philox draws, index columns drain into the kept wire
+/// payload (4 bytes per block-sample — the only state that grows with
+/// d/block), and the decoder folds every regenerated mean into a checksum.
+/// Asserts wire == analytic bits and prints one summary line the CI memory
+/// job greps.
+fn mrc_smoke(d: usize, bs: usize, n_is: usize, n_ul: usize, seed: u64) -> Result<()> {
+    use bicompfl::mrc::stream::encode_stream;
+    use bicompfl::mrc::{BlockPlan, StreamDecoder};
+    use bicompfl::util::rng::Philox;
+
+    let plan = BlockPlan::fixed(d, bs);
+    let n_blocks = plan.n_blocks();
+    let q_src = Philox::keyed(seed, 1);
+    let p_src = Philox::keyed(seed, 2);
+    let param = |src: &Philox, e: usize| 0.05 + 0.9 * src.uniform_at(e as u64);
+    let stream_for = |b: u64| Philox::keyed(seed ^ 0xB10C_57EA, b);
+
+    let mut columns: Vec<u32> = Vec::with_capacity(n_blocks * n_ul);
+    let bits = encode_stream(
+        n_is,
+        n_ul,
+        seed ^ 0x5E1,
+        &plan,
+        stream_for,
+        |_b, r, qb, pb| {
+            qb.extend(r.clone().map(|e| param(&q_src, e)));
+            pb.extend(r.map(|e| param(&p_src, e)));
+        },
+        |_b, column| columns.extend_from_slice(column),
+    );
+    let index_bits = u64::from(u32::BITS - (n_is as u32 - 1).leading_zeros());
+    let analytic = n_blocks as u64 * n_ul as u64 * index_bits;
+    anyhow::ensure!(
+        bits == analytic,
+        "wire bits {bits} != analytic {analytic} (blocks {n_blocks} x n_ul {n_ul} x {index_bits})"
+    );
+
+    let mut dec = StreamDecoder::new(n_is);
+    let mut p = Vec::new();
+    let mut out = Vec::new();
+    let mut checksum = 0.0f64;
+    for b in 0..n_blocks {
+        let r = plan.block(b);
+        p.clear();
+        p.extend(r.clone().map(|e| param(&p_src, e)));
+        out.resize(r.len(), 0.0);
+        let col = &columns[b * n_ul..(b + 1) * n_ul];
+        dec.decode_block_mean(&p, &stream_for(b as u64), col, &mut out);
+        checksum += out.iter().map(|&v| f64::from(v)).sum::<f64>();
+    }
+    println!(
+        "mrc-smoke ok: d={d} blocks={n_blocks} n_is={n_is} n_ul={n_ul} bits={bits} \
+         mean={:.6}",
+        checksum / d as f64
+    );
     Ok(())
 }

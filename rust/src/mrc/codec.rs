@@ -41,6 +41,20 @@ pub struct EncodeOut {
     pub bits: u64,
 }
 
+/// Reusable working memory for the block codec's hot paths: per-entry
+/// log-ratio deltas and clamped priors, one candidate's batched uniform
+/// groups, and the per-candidate log-weights. Every buffer is sized by the
+/// *current* block, so a streaming caller that reuses one scratch across
+/// blocks keeps encode/decode at O(block) live memory no matter how large
+/// the full vector grows.
+#[derive(Clone, Debug, Default)]
+pub struct EncodeScratch {
+    delta: Vec<f32>,
+    pc: Vec<f32>,
+    u4: Vec<[f32; 4]>,
+    logw: Vec<f64>,
+}
+
 impl BlockCodec {
     pub fn new(n_is: usize) -> Self {
         assert!(n_is >= 2);
@@ -56,7 +70,7 @@ impl BlockCodec {
     /// Philox counter stride per candidate (4 uniform lanes per block).
     #[inline]
     fn stride(m: usize) -> u64 {
-        ((m + 3) / 4) as u64
+        m.div_ceil(4) as u64
     }
 
     /// Regenerate candidate `i`'s Bernoulli(p) bits into `out` (0.0/1.0).
@@ -89,6 +103,38 @@ impl BlockCodec {
         }
     }
 
+    /// [`BlockCodec::candidate_bits`] with the uniforms drawn in one batched
+    /// [`Philox::fill_uniform4`] pass through `scratch` — identical output
+    /// (the uniforms are pure functions of their counters), but the Philox
+    /// core runs in a tight loop instead of interleaved with the threshold.
+    pub fn candidate_bits_with(
+        &self,
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        i: u32,
+        out: &mut [f32],
+        scratch: &mut EncodeScratch,
+    ) {
+        let m = p.len();
+        debug_assert_eq!(out.len(), m);
+        let stride = Self::stride(m);
+        let base = sample_idx * self.n_is as u64 * stride + i as u64 * stride;
+        scratch.u4.resize(stride as usize, [0.0; 4]);
+        stream.fill_uniform4(base, &mut scratch.u4);
+        for (g, u4) in scratch.u4.iter().enumerate() {
+            let e = g * 4;
+            let take = (m - e).min(4);
+            for lane in 0..take {
+                out[e + lane] = if u4[lane] < clamp_param(p[e + lane]) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
     /// Encode one block: compute all candidate log-weights, Gumbel-max
     /// sample an index with the encoder's private `sel` randomness.
     ///
@@ -102,12 +148,33 @@ impl BlockCodec {
         sample_idx: u64,
         sel: &mut Xoshiro256,
     ) -> EncodeOut {
+        self.encode_with(q, p, stream, sample_idx, sel, &mut EncodeScratch::default())
+    }
+
+    /// [`BlockCodec::encode`] against caller-owned scratch, in two separated
+    /// passes: (1) all candidate log-weights via batched Philox draws, (2)
+    /// the Gumbel-max selection over the block's weight vector. The float-op
+    /// sequence is identical to the fused form — the uniforms are pure
+    /// counter functions, the accumulation order per candidate is unchanged,
+    /// and `sel` is still drawn once per candidate in ascending order — so
+    /// the selected index is bit-identical; the split just keeps the f64
+    /// selector state out of the vectorizable f32 weight loop.
+    pub fn encode_with(
+        &self,
+        q: &[f32],
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        sel: &mut Xoshiro256,
+        scratch: &mut EncodeScratch,
+    ) -> EncodeOut {
         let m = q.len();
         debug_assert_eq!(p.len(), m);
         // Precompute per-entry log-ratio deltas: on-bit contribution a_e - b_e
         // (the constant Σ b_e cancels in the softmax).
-        let mut delta = vec![0.0f32; m];
-        let mut pc = vec![0.0f32; m];
+        scratch.delta.resize(m, 0.0);
+        scratch.pc.resize(m, 0.0);
+        let (delta, pc) = (&mut scratch.delta, &mut scratch.pc);
         for e in 0..m {
             let qe = clamp_param(q[e]);
             let pe = clamp_param(p[e]);
@@ -118,33 +185,37 @@ impl BlockCodec {
         let stride = Self::stride(m);
         let sample_base = sample_idx * self.n_is as u64 * stride;
         let full = m & !3; // largest multiple of 4
-        let mut best_idx = 0u32;
-        let mut best_val = f64::NEG_INFINITY;
+        scratch.u4.resize(stride as usize, [0.0; 4]);
+        scratch.logw.clear();
         for i in 0..self.n_is {
             let base = sample_base + i as u64 * stride;
+            stream.fill_uniform4(base, &mut scratch.u4);
+            let u4 = &scratch.u4;
             // Branchless 4-lane accumulation: one Philox block yields the
             // four uniforms of an entry group; the select compiles to a
             // compare + masked add (vectorizable, no data-dependent branch).
             let mut acc = [0.0f32; 4];
-            let mut ctr = 0u64;
             let mut e = 0usize;
             while e < full {
-                let u = stream.uniform4_at(base + ctr);
+                let u = u4[e / 4];
                 acc[0] += delta[e] * ((u[0] < pc[e]) as u32 as f32);
                 acc[1] += delta[e + 1] * ((u[1] < pc[e + 1]) as u32 as f32);
                 acc[2] += delta[e + 2] * ((u[2] < pc[e + 2]) as u32 as f32);
                 acc[3] += delta[e + 3] * ((u[3] < pc[e + 3]) as u32 as f32);
                 e += 4;
-                ctr += 1;
             }
             if e < m {
-                let u = stream.uniform4_at(base + ctr);
+                let u = u4[e / 4];
                 for lane in 0..(m - e) {
                     acc[lane] += delta[e + lane] * ((u[lane] < pc[e + lane]) as u32 as f32);
                 }
             }
-            let logw = (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
-            // Gumbel-max: argmax_i (logw_i + G_i), G_i ~ Gumbel(0,1).
+            scratch.logw.push((acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64);
+        }
+        // Gumbel-max over the block: argmax_i (logw_i + G_i), G_i ~ Gumbel(0,1).
+        let mut best_idx = 0u32;
+        let mut best_val = f64::NEG_INFINITY;
+        for (i, &logw) in scratch.logw.iter().enumerate() {
             let g = -(-(sel.next_f64().max(1e-300)).ln()).ln();
             let val = logw + g;
             if val > best_val {
@@ -168,6 +239,20 @@ impl BlockCodec {
         out: &mut [f32],
     ) {
         self.candidate_bits(p, stream, sample_idx, index, out);
+    }
+
+    /// [`BlockCodec::decode`] through caller-owned scratch (the batched
+    /// uniform path) — identical output.
+    pub fn decode_with(
+        &self,
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        index: u32,
+        out: &mut [f32],
+        scratch: &mut EncodeScratch,
+    ) {
+        self.candidate_bits_with(p, stream, sample_idx, index, out, scratch);
     }
 }
 
@@ -207,6 +292,108 @@ mod tests {
             codec.candidate_bits(&p, &st, 3, out.index, &mut expect);
             assert_eq!(dec, expect);
             assert!(dec.iter().all(|&b| b == 0.0 || b == 1.0));
+        });
+    }
+
+    /// The pre-vectorization fused encode loop, kept verbatim as the
+    /// reference the two-pass [`BlockCodec::encode_with`] is pinned against:
+    /// logw accumulation and the Gumbel draw interleaved per candidate.
+    fn fused_reference_encode(
+        codec: &BlockCodec,
+        q: &[f32],
+        p: &[f32],
+        stream: &Philox,
+        sample_idx: u64,
+        sel: &mut Xoshiro256,
+    ) -> u32 {
+        let m = q.len();
+        let mut delta = vec![0.0f32; m];
+        let mut pc = vec![0.0f32; m];
+        for e in 0..m {
+            let qe = clamp_param(q[e]);
+            let pe = clamp_param(p[e]);
+            pc[e] = pe;
+            delta[e] = (qe / pe).ln() - ((1.0 - qe) / (1.0 - pe)).ln();
+        }
+        let stride = m.div_ceil(4) as u64;
+        let sample_base = sample_idx * codec.n_is as u64 * stride;
+        let full = m & !3;
+        let mut best_idx = 0u32;
+        let mut best_val = f64::NEG_INFINITY;
+        for i in 0..codec.n_is {
+            let base = sample_base + i as u64 * stride;
+            let mut acc = [0.0f32; 4];
+            let mut ctr = 0u64;
+            let mut e = 0usize;
+            while e < full {
+                let u = stream.uniform4_at(base + ctr);
+                acc[0] += delta[e] * ((u[0] < pc[e]) as u32 as f32);
+                acc[1] += delta[e + 1] * ((u[1] < pc[e + 1]) as u32 as f32);
+                acc[2] += delta[e + 2] * ((u[2] < pc[e + 2]) as u32 as f32);
+                acc[3] += delta[e + 3] * ((u[3] < pc[e + 3]) as u32 as f32);
+                e += 4;
+                ctr += 1;
+            }
+            if e < m {
+                let u = stream.uniform4_at(base + ctr);
+                for lane in 0..(m - e) {
+                    acc[lane] += delta[e + lane] * ((u[lane] < pc[e + lane]) as u32 as f32);
+                }
+            }
+            let logw = (acc[0] + acc[1]) as f64 + (acc[2] + acc[3]) as f64;
+            let g = -(-(sel.next_f64().max(1e-300)).ln()).ln();
+            let val = logw + g;
+            if val > best_val {
+                best_val = val;
+                best_idx = i as u32;
+            }
+        }
+        best_idx
+    }
+
+    #[test]
+    fn two_pass_encode_matches_fused_reference() {
+        run_prop("codec-two-pass-pin", 25, |rng, _| {
+            let m = len_in(rng, 180);
+            let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+            let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+            let codec = BlockCodec::new(64);
+            let st = stream();
+            let mut sel_ref = rng.fork(7);
+            let mut sel_new = sel_ref.clone();
+            let want = fused_reference_encode(&codec, &q, &p, &st, 2, &mut sel_ref);
+            let got = codec.encode(&q, &p, &st, 2, &mut sel_new);
+            assert_eq!(got.index, want);
+            // Both consumed the selector identically: the streams stay in
+            // lockstep for whatever comes next.
+            assert_eq!(sel_ref.next_u64(), sel_new.next_u64());
+        });
+    }
+
+    #[test]
+    fn scratch_paths_match_fresh_allocations() {
+        // One scratch reused across blocks of different sizes must produce
+        // exactly what per-call allocation produces — encode and decode both.
+        run_prop("codec-scratch-reuse", 20, |rng, _| {
+            let codec = BlockCodec::new(32);
+            let st = stream();
+            let mut scratch = EncodeScratch::default();
+            for trial in 0..4u64 {
+                let m = len_in(rng, 150);
+                let q: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+                let p: Vec<f32> = (0..m).map(|_| bern_param(rng, 0.01)).collect();
+                let mut sel_a = rng.fork(trial);
+                let mut sel_b = sel_a.clone();
+                let a = codec.encode(&q, &p, &st, trial, &mut sel_a);
+                let b = codec.encode_with(&q, &p, &st, trial, &mut sel_b, &mut scratch);
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.bits, b.bits);
+                let mut out_a = vec![0.0f32; m];
+                let mut out_b = vec![0.0f32; m];
+                codec.decode(&p, &st, trial, a.index, &mut out_a);
+                codec.decode_with(&p, &st, trial, b.index, &mut out_b, &mut scratch);
+                assert_eq!(out_a, out_b);
+            }
         });
     }
 

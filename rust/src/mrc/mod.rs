@@ -12,12 +12,15 @@
 //! * [`kl`]     — Bernoulli KL utilities and the KL-ball projection (§5).
 //! * [`codec`]  — the block encoder/decoder (log-domain weights, Gumbel-max).
 //! * [`block`]  — block allocation strategies (Fixed / Adaptive / Adaptive-Avg).
+//! * [`stream`] — block-streaming encode/decode in O(block) working memory.
 //! * [`theory`] — Prop. 1 / Lemma 1 / Lemma 2 / Theorem 1 bound calculators.
 
 pub mod kl;
 pub mod codec;
 pub mod block;
+pub mod stream;
 pub mod theory;
 
 pub use block::{AllocationStrategy, BlockPlan};
 pub use codec::BlockCodec;
+pub use stream::{StreamDecoder, StreamEncoder};

@@ -1,0 +1,297 @@
+//! Streaming block-MRC: encode/decode one block at a time in O(block)
+//! working memory, for vectors far too large to materialize (d ≫ 10⁶).
+//!
+//! The full-vector path ([`crate::coordinator`]'s `encode_vector_at` /
+//! `decode_mean_at`) walks blocks in ascending plan order and consumes the
+//! private Gumbel selector block-major; the decoder's per-entry accumulation
+//! never crosses a block boundary. Both facts make block streaming *exact*:
+//! a [`StreamEncoder`] fed blocks in plan order consumes the identical
+//! selector stream and emits the identical indices, and a [`StreamDecoder`]
+//! reproduces the identical per-entry means bit for bit — pinned by the unit
+//! tests below and, end to end over every wire kind, by the determinism
+//! suite.
+//!
+//! Memory model: the only live state is one block's posterior/prior slices,
+//! the codec's [`EncodeScratch`] (sized by the largest block seen), and one
+//! column of `n_samples` indices. Nothing scales with d. The CI
+//! `large-d-memory` job holds a d = 10⁷ encode/decode under a hard peak-RSS
+//! ceiling to keep it that way.
+
+use std::ops::Range;
+
+use super::block::BlockPlan;
+use super::codec::{BlockCodec, EncodeScratch};
+use crate::util::rng::{Philox, Xoshiro256};
+
+/// Streaming MRC encoder: push blocks in ascending plan order, get back one
+/// column of `n_samples` indices per block. Owns the private Gumbel selector
+/// (sequential — this is why block order is mandatory) and the reused codec
+/// scratch.
+pub struct StreamEncoder {
+    codec: BlockCodec,
+    n_samples: usize,
+    sel: Xoshiro256,
+    scratch: EncodeScratch,
+    blocks_done: u64,
+}
+
+impl StreamEncoder {
+    /// A fresh encoder for one (round, client, direction) leg: `sel_seed` is
+    /// that leg's selector seed (`shared_rand::selector_seed`).
+    pub fn new(n_is: usize, n_samples: usize, sel_seed: u64) -> Self {
+        Self {
+            codec: BlockCodec::new(n_is),
+            n_samples,
+            sel: Xoshiro256::new(sel_seed),
+            scratch: EncodeScratch::default(),
+            blocks_done: 0,
+        }
+    }
+
+    /// ceil(log2(n_is)) — the per-index wire cost in bits.
+    pub fn index_bits(&self) -> u64 {
+        self.codec.index_bits()
+    }
+
+    /// Encode the next block (`q`/`p` are its posterior/prior slices,
+    /// `stream` its keyed Philox), appending the column's `n_samples`
+    /// indices to `column`. Returns the index bits spent. Blocks MUST arrive
+    /// in ascending plan order — the selector stream is sequential and
+    /// shared across blocks.
+    pub fn encode_block(
+        &mut self,
+        q: &[f32],
+        p: &[f32],
+        stream: &Philox,
+        column: &mut Vec<u32>,
+    ) -> u64 {
+        let mut bits = 0u64;
+        for ell in 0..self.n_samples {
+            let out = self
+                .codec
+                .encode_with(q, p, stream, ell as u64, &mut self.sel, &mut self.scratch);
+            column.push(out.index);
+            bits += out.bits;
+        }
+        self.blocks_done += 1;
+        bits
+    }
+
+    /// How many blocks this encoder has consumed.
+    pub fn blocks_done(&self) -> u64 {
+        self.blocks_done
+    }
+}
+
+/// Streaming MRC decoder: feed it one block's prior slice, keyed Philox and
+/// index column, read back the per-entry mean over the column's samples.
+/// Stateless across blocks (the candidate streams are counter-keyed), so
+/// blocks may decode in any order — only the scratch is reused.
+pub struct StreamDecoder {
+    codec: BlockCodec,
+    scratch: EncodeScratch,
+    buf: Vec<f32>,
+}
+
+impl StreamDecoder {
+    pub fn new(n_is: usize) -> Self {
+        Self {
+            codec: BlockCodec::new(n_is),
+            scratch: EncodeScratch::default(),
+            buf: Vec::new(),
+        }
+    }
+
+    /// Decode `column` (one index per sample) against prior slice `p` and
+    /// write the per-entry mean of the regenerated samples into `out`
+    /// (len = block len). The accumulation order per entry — samples
+    /// ascending, one scale at the end — is exactly the full-vector
+    /// `decode_mean_at`'s, so the result is f32-bit-identical.
+    pub fn decode_block_mean(
+        &mut self,
+        p: &[f32],
+        stream: &Philox,
+        column: &[u32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(p.len(), out.len());
+        out.fill(0.0);
+        self.buf.resize(p.len(), 0.0);
+        for (ell, &idx) in column.iter().enumerate() {
+            self.codec
+                .decode_with(p, stream, ell as u64, idx, &mut self.buf, &mut self.scratch);
+            for (o, &b) in out.iter_mut().zip(&self.buf) {
+                *o += b;
+            }
+        }
+        let scale = 1.0 / column.len().max(1) as f32;
+        for o in out.iter_mut() {
+            *o *= scale;
+        }
+    }
+}
+
+/// Drive a full streaming encode over `plan`: `stream_for(b)` derives block
+/// `b`'s keyed Philox, `fill(b, range, q, p)` materializes that block's
+/// posterior/prior into the reused buffers, and `sink(b, column)` drains its
+/// index column. Live memory is O(largest block); returns the total index
+/// bits. This is the encoder the d = 10⁷ memory smoke and the large-d bench
+/// case run.
+pub fn encode_stream(
+    n_is: usize,
+    n_samples: usize,
+    sel_seed: u64,
+    plan: &BlockPlan,
+    mut stream_for: impl FnMut(u64) -> Philox,
+    mut fill: impl FnMut(usize, Range<usize>, &mut Vec<f32>, &mut Vec<f32>),
+    mut sink: impl FnMut(usize, &[u32]),
+) -> u64 {
+    let mut enc = StreamEncoder::new(n_is, n_samples, sel_seed);
+    let mut q = Vec::new();
+    let mut p = Vec::new();
+    let mut column = Vec::with_capacity(n_samples);
+    let mut bits = 0u64;
+    for b in 0..plan.n_blocks() {
+        let r = plan.block(b);
+        q.clear();
+        p.clear();
+        fill(b, r.clone(), &mut q, &mut p);
+        debug_assert_eq!(q.len(), r.len());
+        debug_assert_eq!(p.len(), r.len());
+        column.clear();
+        bits += enc.encode_block(&q, &p, &stream_for(b as u64), &mut column);
+        sink(b, &column);
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream_for(b: u64) -> Philox {
+        Philox::keyed(0x57AE, b)
+    }
+
+    /// Synthetic per-entry parameters, a pure function of the global entry
+    /// index — what the memory smoke uses in place of a materialized vector.
+    fn param_at(e: usize, salt: u64) -> f32 {
+        let p = Philox::keyed(salt, 0);
+        0.05 + 0.9 * p.uniform_at(e as u64)
+    }
+
+    /// The full-vector reference: encode every (block, sample) with one
+    /// shared selector, block-major — the simulation's exact loop shape.
+    fn reference_encode(
+        n_is: usize,
+        n_samples: usize,
+        sel_seed: u64,
+        plan: &BlockPlan,
+        q: &[f32],
+        p: &[f32],
+    ) -> (Vec<Vec<u32>>, u64) {
+        let codec = BlockCodec::new(n_is);
+        let mut sel = Xoshiro256::new(sel_seed);
+        let mut bits = 0u64;
+        let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
+        for b in 0..plan.n_blocks() {
+            let r = plan.block(b);
+            let st = stream_for(b as u64);
+            for (ell, row) in indices.iter_mut().enumerate() {
+                let out = codec.encode(&q[r.clone()], &p[r.clone()], &st, ell as u64, &mut sel);
+                row[b] = out.index;
+                bits += out.bits;
+            }
+        }
+        (indices, bits)
+    }
+
+    #[test]
+    fn streamed_encode_matches_full_vector_encode() {
+        let d = 777; // deliberately not a multiple of the block size
+        let plan = BlockPlan::fixed(d, 64);
+        let q: Vec<f32> = (0..d).map(|e| param_at(e, 1)).collect();
+        let p: Vec<f32> = (0..d).map(|e| param_at(e, 2)).collect();
+        let (want, want_bits) = reference_encode(32, 3, 0x5ED5u64, &plan, &q, &p);
+        let mut got = vec![vec![0u32; plan.n_blocks()]; 3];
+        let bits = encode_stream(
+            32,
+            3,
+            0x5ED5u64,
+            &plan,
+            stream_for,
+            |_b, r, qb, pb| {
+                qb.extend_from_slice(&q[r.clone()]);
+                pb.extend_from_slice(&p[r]);
+            },
+            |b, column| {
+                for (ell, &idx) in column.iter().enumerate() {
+                    got[ell][b] = idx;
+                }
+            },
+        );
+        assert_eq!(got, want);
+        assert_eq!(bits, want_bits);
+    }
+
+    #[test]
+    fn streamed_decode_matches_full_vector_decode() {
+        let d = 500;
+        let plan = BlockPlan::fixed(d, 64);
+        let q: Vec<f32> = (0..d).map(|e| param_at(e, 3)).collect();
+        let p: Vec<f32> = (0..d).map(|e| param_at(e, 4)).collect();
+        let n_samples = 4;
+        let (indices, _) = reference_encode(16, n_samples, 99, &plan, &q, &p);
+
+        // Full-vector reference decode: sample-major accumulation over a
+        // d-length buffer, one scale at the end (decode_mean_at's shape).
+        let codec = BlockCodec::new(16);
+        let mut mean = vec![0.0f32; d];
+        let mut buf = vec![0.0f32; d];
+        for (ell, row) in indices.iter().enumerate() {
+            for b in 0..plan.n_blocks() {
+                let r = plan.block(b);
+                codec.decode(&p[r.clone()], &stream_for(b as u64), ell as u64, row[b], &mut buf[r]);
+            }
+            for (m, &v) in mean.iter_mut().zip(&buf) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m *= 1.0 / n_samples as f32;
+        }
+
+        // Streamed: per-block columns, any order; must be bit-identical.
+        let mut dec = StreamDecoder::new(16);
+        let mut got = vec![0.0f32; d];
+        for b in (0..plan.n_blocks()).rev() {
+            let r = plan.block(b);
+            let column: Vec<u32> = indices.iter().map(|row| row[b]).collect();
+            let mut out = vec![0.0f32; r.len()];
+            dec.decode_block_mean(&p[r.clone()], &stream_for(b as u64), &column, &mut out);
+            got[r].copy_from_slice(&out);
+        }
+        assert_eq!(got, mean);
+    }
+
+    #[test]
+    fn encoder_requires_no_dimension_scaled_state() {
+        // Two encoders fed the same blocks must agree regardless of how many
+        // further blocks exist — the state is (selector, scratch), not d.
+        let plan_small = BlockPlan::fixed(128, 32);
+        let plan_large = BlockPlan::fixed(4096, 32);
+        let fill = |_b: usize, r: Range<usize>, qb: &mut Vec<f32>, pb: &mut Vec<f32>| {
+            qb.extend(r.clone().map(|e| param_at(e, 5)));
+            pb.extend(r.map(|e| param_at(e, 6)));
+        };
+        let mut cols_small = Vec::new();
+        encode_stream(8, 2, 7, &plan_small, stream_for, fill, |_b, c| {
+            cols_small.push(c.to_vec())
+        });
+        let mut cols_large = Vec::new();
+        encode_stream(8, 2, 7, &plan_large, stream_for, fill, |_b, c| {
+            cols_large.push(c.to_vec())
+        });
+        assert_eq!(cols_small[..], cols_large[..cols_small.len()]);
+    }
+}

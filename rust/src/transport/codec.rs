@@ -394,6 +394,23 @@ impl FrameCodec {
         bits
     }
 
+    /// Queue one MRC frame as length-delimited [`ChunkFrame`]s of at most
+    /// `chunk_slots` block columns — each chunk its own `MSG_FRAME` message,
+    /// so a receiver (or relay) handles O(chunk) bytes at a time and never
+    /// needs the whole payload buffered. Bit-neutral: the chunks' counted
+    /// bits sum to exactly the frame's, so the returned total (and the sent
+    /// meter) match the unchunked send. Falls back to the plain send when
+    /// the frame doesn't chunk (`chunk_slots == 0`, plan/model kinds, side
+    /// info present).
+    ///
+    /// [`ChunkFrame`]: crate::transport::frame::ChunkFrame
+    pub fn enqueue_frame_chunked(&mut self, frame: &Frame, chunk_slots: usize) -> u64 {
+        match crate::transport::frame::chunk_frames(frame, chunk_slots) {
+            Some(chunks) => chunks.iter().map(|c| self.enqueue_frame(c)).sum(),
+            None => self.enqueue_frame(frame),
+        }
+    }
+
     /// Queue the client hello (handshake step 1, client → federator).
     pub fn enqueue_hello(&mut self, id: u64) {
         self.enqueue_msg(MSG_HELLO, &hello_body(id));
@@ -554,6 +571,43 @@ mod tests {
         rx.feed(&[MSG_FRAME]);
         rx.feed(&u32::MAX.to_le_bytes());
         assert!(matches!(rx.poll_msg(), Err(TransportError::BadFrame(_))));
+    }
+
+    #[test]
+    fn chunked_enqueue_is_bit_neutral_and_reassembles() {
+        use crate::transport::frame::ChunkAssembler;
+        let frame = Frame::Uplink(UplinkFrame {
+            client: 5,
+            round: 2,
+            bits_per_index: 6,
+            indices: vec![(0..11).collect(), (11..22).map(|v| v & 63).collect()],
+            side: SideInfo::None,
+        });
+        let mut plain = FrameCodec::new();
+        let plain_bits = plain.enqueue_frame(&frame);
+        let mut tx = FrameCodec::new();
+        let bits = tx.enqueue_frame_chunked(&frame, 4);
+        assert_eq!(bits, plain_bits);
+        assert_eq!(tx.sent().bits, plain_bits);
+        assert_eq!(tx.sent().frames, 3); // ceil(11 / 4)
+
+        let mut rx = FrameCodec::new();
+        rx.feed(tx.pending_out());
+        let mut asm = ChunkAssembler::new();
+        let mut done = None;
+        while let Some(msg) = rx.poll_msg().unwrap() {
+            match msg {
+                Msg::Frame(Frame::Chunk(c), _) => {
+                    if let Some(f) = asm.push(c).unwrap() {
+                        done = Some(f);
+                    }
+                }
+                other => panic!("expected chunk, got {other:?}"),
+            }
+        }
+        assert_eq!(done.expect("reassembled"), frame);
+        assert_eq!(rx.received().bits, plain_bits);
+        assert_eq!(rx.received().frames, 3);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Typed federator↔client envelopes and their byte-exact wire codec.
 //!
-//! Four frame kinds cover every counted message in the system:
+//! Five frame kinds cover every counted message in the system:
 //!
 //! * [`PlanFrame`]     — block-allocation signalling (boundary bits).
 //! * [`UplinkFrame`]   — a client's MRC indices (+ quantizer side info).
@@ -8,10 +8,15 @@
 //!   over a block subset (PR-SplitDL's rotating shares).
 //! * [`ModelFrame`]    — baseline payloads: dense f32 vectors, sign bits
 //!   with a scale, or sparse (index, value) pairs (TopK).
+//! * [`ChunkFrame`]    — a block-column slice of an uplink/downlink MRC
+//!   message, so large-d payloads travel (and are relayed) in O(chunk)
+//!   pieces; [`chunk_frames`] splits, [`ChunkAssembler`] reassembles.
 //!
 //! `counted_bits` is the analytic Appendix-I cost of a frame; the wire
 //! payload packs **exactly those bits** (verified by `FramedLoopback` on
 //! every send), with routing/structure metadata in an uncounted header.
+//! Chunking is bit-neutral: a chunk's counted bits are exactly its slice of
+//! the unchunked payload, so the per-message total is invariant.
 
 use crate::mrc::block::BlockPlan;
 
@@ -29,6 +34,7 @@ const KIND_PLAN: u8 = 1;
 const KIND_UPLINK: u8 = 2;
 const KIND_DOWNLINK: u8 = 3;
 const KIND_MODEL: u8 = 4;
+const KIND_CHUNK: u8 = 5;
 
 /// ceil(log2(max(d, 2))) — index width for sparse payloads; matches the
 /// TopK/RandK accounting in `compressors::topk`.
@@ -84,7 +90,7 @@ pub fn check_wire_header(buf: &[u8]) -> Result<(), String> {
     if buf[2] != VERSION {
         return Err(format!("unsupported frame version {}", buf[2]));
     }
-    if !(KIND_PLAN..=KIND_MODEL).contains(&buf[3]) {
+    if !(KIND_PLAN..=KIND_CHUNK).contains(&buf[3]) {
         return Err(format!("unknown frame kind {}", buf[3]));
     }
     Ok(())
@@ -200,6 +206,31 @@ pub fn check_wire_counts(buf: &[u8]) -> Result<(), String> {
                 }
                 k => return Err(format!("unknown model payload kind {k}")),
             }
+        }
+        KIND_CHUNK => {
+            need(39)?;
+            let inner = buf[20];
+            if inner != KIND_UPLINK && inner != KIND_DOWNLINK {
+                return Err(format!("chunk carries unknown inner kind {inner}"));
+            }
+            if buf[21] > 1 {
+                return Err(format!("unknown chunk flags {:#04x}", buf[21]));
+            }
+            let bpi = buf[26] as u128;
+            if !(1..=64).contains(&bpi) {
+                return Err(format!("chunk bits_per_index {bpi} outside 1..=64"));
+            }
+            let n_samples = u32_at(27) as u128;
+            if n_samples > MAX_WIRE_ROWS as u128 {
+                return Err(format!("chunk sample count {n_samples} exceeds {MAX_WIRE_ROWS}"));
+            }
+            let n_slots = u32_at(35) as u128;
+            if n_slots > MAX_WIRE_ROWS as u128 {
+                return Err(format!("chunk slot count {n_slots} exceeds {MAX_WIRE_ROWS}"));
+            }
+            let blocks_bytes = if inner == KIND_DOWNLINK { 4 * n_slots } else { 0 };
+            let payload_bits = n_samples * n_slots * bpi;
+            39 + blocks_bytes + payload_bits.div_ceil(8)
         }
         k => return Err(format!("unknown frame kind {k}")),
     };
@@ -359,6 +390,247 @@ impl DownlinkFrame {
     }
 }
 
+/// One block-column slice of an uplink or downlink MRC message, so a
+/// large-d payload never has to exist in memory as a whole frame: the sender
+/// emits chunks as it encodes blocks, relays forward each chunk as it
+/// parses, and the receiver either reassembles ([`ChunkAssembler`]) or
+/// decodes block-streaming.
+///
+/// `indices[sample][slot]` covers slots `slot0 .. slot0 + n_slots` of the
+/// carried message; every chunk of a message repeats the full row count, so
+/// any chunk is independently interpretable. Chunk boundaries sit on
+/// block-column edges, which makes the accounting exact: this chunk's
+/// counted bits are `n_samples × n_slots × bits_per_index` — precisely its
+/// slice of the unchunked payload, never a split or padded index.
+///
+/// Only side-info-free messages chunk ([`chunk_frames`] refuses the rest);
+/// quantizer side info always rides an unchunked [`UplinkFrame`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkFrame {
+    pub client: u64,
+    pub round: u64,
+    /// The carried frame kind: `KIND_UPLINK` or `KIND_DOWNLINK` on the wire;
+    /// use [`ChunkFrame::carries_downlink`] rather than the raw constant.
+    pub inner: u8,
+    /// 0-based chunk sequence number within the message.
+    pub seq: u32,
+    /// Set on the final chunk of the message.
+    pub last: bool,
+    pub bits_per_index: u8,
+    /// First slot (block column) of the carried message this chunk covers.
+    pub slot0: u32,
+    /// Downlink only: the absolute block ids of this chunk's slots (aligned
+    /// with the columns of `indices`). Empty for uplink chunks.
+    pub blocks: Vec<u32>,
+    /// `indices[sample][slot]`, slots relative to `slot0`.
+    pub indices: Vec<Vec<u32>>,
+}
+
+impl ChunkFrame {
+    /// Whether this chunk carries a downlink message (else uplink).
+    pub fn carries_downlink(&self) -> bool {
+        self.inner == KIND_DOWNLINK
+    }
+
+    /// Slots (block columns) this chunk covers.
+    pub fn n_slots(&self) -> usize {
+        self.indices.first().map_or(0, |r| r.len())
+    }
+
+    /// Counted MRC index bits of this chunk — its exact slice of the carried
+    /// message's payload.
+    pub fn index_bits(&self) -> u64 {
+        let n: u64 = self.indices.iter().map(|r| r.len() as u64).sum();
+        n * self.bits_per_index as u64
+    }
+}
+
+/// Split an MRC frame into [`ChunkFrame`]s of at most `chunk_slots` block
+/// columns each (boundaries on block edges — see [`ChunkFrame`] for why the
+/// bit accounting stays exact). Returns `None` when the frame does not
+/// chunk: plan/model kinds, side-info-carrying uplinks, or `chunk_slots ==
+/// 0` (chunking disabled). A message with zero slots (an empty PR-SplitDL
+/// share) yields one empty final chunk so the receiver still observes the
+/// message.
+pub fn chunk_frames(frame: &Frame, chunk_slots: usize) -> Option<Vec<Frame>> {
+    if chunk_slots == 0 {
+        return None;
+    }
+    let (client, round, inner, bpi, blocks, indices) = match frame {
+        Frame::Uplink(u) if u.side == SideInfo::None => {
+            (u.client, u.round, KIND_UPLINK, u.bits_per_index, None, &u.indices)
+        }
+        Frame::Downlink(d) => (
+            d.client,
+            d.round,
+            KIND_DOWNLINK,
+            d.bits_per_index,
+            Some(&d.blocks),
+            &d.indices,
+        ),
+        _ => return None,
+    };
+    if indices.is_empty() {
+        // A zero-row message has no per-row slot structure to slice (and a
+        // downlink's block ids would have nothing to align with): unchunked.
+        return None;
+    }
+    let n_slots = indices.first().map_or(0, |r| r.len());
+    let mut out = Vec::with_capacity(n_slots.div_ceil(chunk_slots).max(1));
+    let mut slot0 = 0usize;
+    loop {
+        let end = (slot0 + chunk_slots).min(n_slots);
+        let last = end == n_slots;
+        out.push(Frame::Chunk(ChunkFrame {
+            client,
+            round,
+            inner,
+            seq: out.len() as u32,
+            last,
+            bits_per_index: bpi,
+            slot0: slot0 as u32,
+            blocks: blocks.map_or_else(Vec::new, |b| b[slot0..end].to_vec()),
+            indices: indices.iter().map(|r| r[slot0..end].to_vec()).collect(),
+        }));
+        if last {
+            return Some(out);
+        }
+        slot0 = end;
+    }
+}
+
+/// Reassembles one chunked MRC message from its [`ChunkFrame`]s, restoring
+/// the exact [`UplinkFrame`] / [`DownlinkFrame`] the sender split. Chunks
+/// must arrive in sequence (the transports are ordered streams); any
+/// inconsistency — wrong seq, wrong slot offset, mismatched routing fields,
+/// row-count drift, a downlink chunk whose block ids don't match its slot
+/// count — is a typed [`TransportError::BadFrame`], never a panic.
+#[derive(Debug, Default)]
+pub struct ChunkAssembler {
+    state: Option<ChunkAsm>,
+}
+
+#[derive(Debug)]
+struct ChunkAsm {
+    client: u64,
+    round: u64,
+    inner: u8,
+    bits_per_index: u8,
+    next_seq: u32,
+    next_slot: u32,
+    blocks: Vec<u32>,
+    indices: Vec<Vec<u32>>,
+}
+
+impl ChunkAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether a message is partially assembled (a truncated-mid-message
+    /// connection teardown can report this).
+    pub fn in_progress(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Feed the next chunk; returns the reassembled frame when `last`
+    /// completes the message, `None` while the message is still partial.
+    pub fn push(&mut self, c: ChunkFrame) -> Result<Option<Frame>, TransportError> {
+        let bad = TransportError::BadFrame;
+        if c.inner != KIND_UPLINK && c.inner != KIND_DOWNLINK {
+            return Err(bad(format!("chunk carries unknown inner kind {}", c.inner)));
+        }
+        let n_slots = c.n_slots();
+        if c.indices.iter().any(|r| r.len() != n_slots) {
+            return Err(bad("chunk rows have unequal slot counts".into()));
+        }
+        if c.carries_downlink() && c.blocks.len() != n_slots {
+            return Err(bad(format!(
+                "downlink chunk has {} block ids for {n_slots} slots",
+                c.blocks.len()
+            )));
+        }
+        let st = match &mut self.state {
+            None => {
+                if c.seq != 0 || c.slot0 != 0 {
+                    return Err(bad(format!(
+                        "chunk seq {} slot0 {} opens a message (want 0/0)",
+                        c.seq, c.slot0
+                    )));
+                }
+                self.state = Some(ChunkAsm {
+                    client: c.client,
+                    round: c.round,
+                    inner: c.inner,
+                    bits_per_index: c.bits_per_index,
+                    next_seq: 0,
+                    next_slot: 0,
+                    blocks: Vec::new(),
+                    indices: vec![Vec::new(); c.indices.len()],
+                });
+                self.state.as_mut().expect("state just set")
+            }
+            Some(st) => st,
+        };
+        if (st.client, st.round, st.inner, st.bits_per_index)
+            != (c.client, c.round, c.inner, c.bits_per_index)
+        {
+            return Err(bad(format!(
+                "chunk routing drift: message is (client {}, round {}, kind {}, bpi {}), \
+                 chunk is (client {}, round {}, kind {}, bpi {})",
+                st.client,
+                st.round,
+                st.inner,
+                st.bits_per_index,
+                c.client,
+                c.round,
+                c.inner,
+                c.bits_per_index
+            )));
+        }
+        if c.seq != st.next_seq || c.slot0 != st.next_slot {
+            return Err(bad(format!(
+                "chunk out of sequence: got seq {} slot0 {}, want seq {} slot0 {}",
+                c.seq, c.slot0, st.next_seq, st.next_slot
+            )));
+        }
+        if c.indices.len() != st.indices.len() {
+            return Err(bad(format!(
+                "chunk row count drifted: {} rows, message has {}",
+                c.indices.len(),
+                st.indices.len()
+            )));
+        }
+        for (acc, row) in st.indices.iter_mut().zip(&c.indices) {
+            acc.extend_from_slice(row);
+        }
+        st.blocks.extend_from_slice(&c.blocks);
+        st.next_seq += 1;
+        st.next_slot += n_slots as u32;
+        if !c.last {
+            return Ok(None);
+        }
+        let st = self.state.take().expect("state present on last chunk");
+        Ok(Some(if st.inner == KIND_DOWNLINK {
+            Frame::Downlink(DownlinkFrame {
+                client: st.client,
+                round: st.round,
+                bits_per_index: st.bits_per_index,
+                blocks: st.blocks,
+                indices: st.indices,
+            })
+        } else {
+            Frame::Uplink(UplinkFrame {
+                client: st.client,
+                round: st.round,
+                bits_per_index: st.bits_per_index,
+                indices: st.indices,
+                side: SideInfo::None,
+            })
+        }))
+    }
+}
+
 /// A baseline algorithm's payload over either link.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ModelPayload {
@@ -417,6 +689,7 @@ pub enum Frame {
     Uplink(UplinkFrame),
     Downlink(DownlinkFrame),
     Model(ModelFrame),
+    Chunk(ChunkFrame),
 }
 
 impl Frame {
@@ -434,6 +707,7 @@ impl Frame {
                     idx.len() as u64 * (32 + sparse_index_bits(*d) as u64)
                 }
             },
+            Frame::Chunk(c) => c.index_bits(),
         }
     }
 
@@ -444,6 +718,7 @@ impl Frame {
             Frame::Uplink(_) => "uplink",
             Frame::Downlink(_) => "downlink",
             Frame::Model(_) => "model",
+            Frame::Chunk(_) => "chunk",
         }
     }
 
@@ -497,6 +772,18 @@ impl Frame {
         }
     }
 
+    /// Unwrap as a chunk frame; a misrouted kind is a typed
+    /// [`TransportError::BadFrame`].
+    pub fn try_into_chunk(self) -> Result<ChunkFrame, TransportError> {
+        match self {
+            Frame::Chunk(c) => Ok(c),
+            f => Err(TransportError::BadFrame(format!(
+                "transport delivered a {} frame, expected chunk",
+                f.kind_name()
+            ))),
+        }
+    }
+
     /// Unwrap as a plan frame; panics on a misrouted kind. The trusted
     /// in-process form — a loopback transport delivering the wrong kind is a
     /// broken process invariant, not a recoverable peer condition.
@@ -517,6 +804,11 @@ impl Frame {
     /// Unwrap as a model frame; panics on a misrouted kind.
     pub fn into_model(self) -> ModelFrame {
         self.try_into_model().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Unwrap as a chunk frame; panics on a misrouted kind.
+    pub fn into_chunk(self) -> ChunkFrame {
+        self.try_into_chunk().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Serialize to the byte-exact wire form. Returns `(bytes, payload_bits)`
@@ -552,6 +844,7 @@ impl Frame {
             Frame::Uplink(u) => (KIND_UPLINK, u.client, u.round),
             Frame::Downlink(d) => (KIND_DOWNLINK, d.client, d.round),
             Frame::Model(m) => (KIND_MODEL, m.client, m.round),
+            Frame::Chunk(c) => (KIND_CHUNK, c.client, c.round),
         };
         w.put_u8(kind);
         w.put_u64(client);
@@ -663,6 +956,29 @@ impl Frame {
                             w.put_bits(i as u64, ib);
                             w.put_bits(v.to_bits() as u64, 32);
                         }
+                    }
+                }
+                w.end_payload();
+            }
+            Frame::Chunk(c) => {
+                debug_assert!(c.inner == KIND_UPLINK || c.inner == KIND_DOWNLINK);
+                debug_assert!(c.inner == KIND_DOWNLINK || c.blocks.is_empty());
+                w.put_u8(c.inner);
+                w.put_u8(c.last as u8);
+                w.put_u32(c.seq);
+                w.put_u8(c.bits_per_index);
+                w.put_u32(c.indices.len() as u32);
+                w.put_u32(c.slot0);
+                w.put_u32(c.n_slots() as u32);
+                if c.carries_downlink() {
+                    for &b in &c.blocks {
+                        w.put_u32(b);
+                    }
+                }
+                w.begin_payload();
+                for row in &c.indices {
+                    for &idx in row {
+                        w.put_bits(idx as u64, c.bits_per_index as u32);
                     }
                 }
                 w.end_payload();
@@ -925,6 +1241,52 @@ impl Frame {
                     payload,
                 })
             }
+            KIND_CHUNK => {
+                let inner = r.get_u8()?;
+                if inner != KIND_UPLINK && inner != KIND_DOWNLINK {
+                    return Err(bad(format!("chunk carries unknown inner kind {inner}")));
+                }
+                let flags = r.get_u8()?;
+                if flags > 1 {
+                    return Err(bad(format!("unknown chunk flags {flags:#04x}")));
+                }
+                let seq = r.get_u32()?;
+                let bits_per_index = r.get_u8()?;
+                check_width("chunk bits_per_index", bits_per_index)?;
+                let n_samples = r.get_u32()? as usize;
+                check_rows("chunk sample", n_samples)?;
+                let slot0 = r.get_u32()?;
+                let n_slots = r.get_u32()? as usize;
+                check_rows("chunk slot", n_slots)?;
+                let mut blocks = Vec::new();
+                if inner == KIND_DOWNLINK {
+                    blocks.reserve(cap(n_slots));
+                    for _ in 0..n_slots {
+                        blocks.push(r.get_u32()?);
+                    }
+                }
+                r.begin_payload();
+                let mut indices = Vec::with_capacity(cap(n_samples));
+                for _ in 0..n_samples {
+                    let mut row = Vec::with_capacity(cap(n_slots));
+                    for _ in 0..n_slots {
+                        row.push(r.get_bits(bits_per_index as u32)? as u32);
+                    }
+                    indices.push(row);
+                }
+                r.end_payload();
+                Frame::Chunk(ChunkFrame {
+                    client,
+                    round,
+                    inner,
+                    seq,
+                    last: flags & 1 == 1,
+                    bits_per_index,
+                    slot0,
+                    blocks,
+                    indices,
+                })
+            }
             k => return Err(bad(format!("unknown frame kind {k}"))),
         };
         if r.consumed() != buf.len() {
@@ -1139,6 +1501,157 @@ mod tests {
             longer.push(0);
             assert!(check_wire_counts(&longer).is_err());
         }
+    }
+
+    #[test]
+    fn chunk_frames_round_trip_bit_exactly() {
+        run_prop("frame-chunk", 40, |rng, case| {
+            let bpi = 1 + rng.next_below(16) as u8;
+            let n_samples = rng.next_below(4);
+            let n_slots = rng.next_below(10);
+            let max = if bpi >= 32 { u32::MAX } else { (1u32 << bpi) - 1 };
+            let indices: Vec<Vec<u32>> = (0..n_samples)
+                .map(|_| (0..n_slots).map(|_| (rng.next_u64() as u32) & max).collect())
+                .collect();
+            let downlink = case % 2 == 1;
+            let f = Frame::Chunk(ChunkFrame {
+                client: rng.next_u64(),
+                round: rng.next_u64(),
+                inner: if downlink { KIND_DOWNLINK } else { KIND_UPLINK },
+                seq: rng.next_u64() as u32,
+                last: case % 3 == 0,
+                bits_per_index: bpi,
+                slot0: rng.next_u64() as u32,
+                blocks: if downlink && n_samples > 0 {
+                    (0..n_slots).map(|s| s as u32 * 5).collect()
+                } else {
+                    Vec::new()
+                },
+                indices,
+            });
+            roundtrip(f.clone());
+            let (buf, _) = f.encode();
+            assert!(check_wire_counts(&buf).is_ok(), "chunk refused structurally");
+        });
+    }
+
+    #[test]
+    fn chunking_splits_and_reassembles_every_mrc_shape_exactly() {
+        run_prop("frame-chunk-split", 40, |rng, case| {
+            let bpi = 1 + rng.next_below(10) as u8;
+            let n_samples = 1 + rng.next_below(3);
+            let n_slots = rng.next_below(23);
+            let max = (1u32 << bpi) - 1;
+            let indices: Vec<Vec<u32>> = (0..n_samples)
+                .map(|_| (0..n_slots).map(|_| (rng.next_u64() as u32) & max).collect())
+                .collect();
+            let frame = if case % 2 == 0 {
+                Frame::Uplink(UplinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    indices,
+                    side: SideInfo::None,
+                })
+            } else {
+                Frame::Downlink(DownlinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    blocks: (0..n_slots).map(|s| s as u32 * 3 + 1).collect(),
+                    indices,
+                })
+            };
+            let chunk_slots = 1 + rng.next_below(8);
+            let chunks = chunk_frames(&frame, chunk_slots).expect("chunkable");
+            // Bit neutrality: the chunks' counted bits sum to the frame's.
+            let total: u64 = chunks.iter().map(|c| c.counted_bits()).sum();
+            assert_eq!(total, frame.counted_bits());
+            // Reassembly through the byte codec restores the exact frame.
+            let mut asm = ChunkAssembler::new();
+            let mut done = None;
+            for (i, c) in chunks.iter().enumerate() {
+                let (buf, _) = c.encode();
+                let back = Frame::decode(&buf).into_chunk();
+                let out = asm.push(back).expect("consistent chunk stream");
+                if i + 1 < chunks.len() {
+                    assert!(out.is_none(), "message completed early");
+                } else {
+                    done = out;
+                }
+            }
+            assert_eq!(done.expect("last chunk completes the message"), frame);
+            assert!(!asm.in_progress());
+        });
+    }
+
+    #[test]
+    fn chunking_refuses_unchunkable_frames() {
+        let plan = Frame::Plan(PlanFrame::from_plan(0, 0, &BlockPlan::fixed(64, 32)));
+        assert!(chunk_frames(&plan, 4).is_none());
+        let side = Frame::Uplink(UplinkFrame {
+            client: 0,
+            round: 0,
+            bits_per_index: 3,
+            indices: vec![vec![1, 2]],
+            side: SideInfo::Scale(0.5),
+        });
+        assert!(chunk_frames(&side, 4).is_none());
+        let ok = Frame::Uplink(UplinkFrame {
+            client: 0,
+            round: 0,
+            bits_per_index: 3,
+            indices: vec![vec![1, 2]],
+            side: SideInfo::None,
+        });
+        assert!(chunk_frames(&ok, 0).is_none(), "chunk_slots = 0 disables");
+        assert!(chunk_frames(&ok, 4).is_some());
+    }
+
+    #[test]
+    fn assembler_rejects_inconsistent_chunk_streams_without_panicking() {
+        let frame = Frame::Downlink(DownlinkFrame {
+            client: 7,
+            round: 3,
+            bits_per_index: 4,
+            blocks: (0..10).collect(),
+            indices: vec![(0..10).collect(), (10..20).map(|v| v & 15).collect()],
+        });
+        let chunks: Vec<ChunkFrame> = chunk_frames(&frame, 3)
+            .unwrap()
+            .into_iter()
+            .map(Frame::into_chunk)
+            .collect();
+        assert_eq!(chunks.len(), 4);
+
+        // Opening mid-message.
+        let mut asm = ChunkAssembler::new();
+        assert!(asm.push(chunks[1].clone()).is_err());
+
+        // Skipping a chunk.
+        let mut asm = ChunkAssembler::new();
+        asm.push(chunks[0].clone()).unwrap();
+        assert!(asm.push(chunks[2].clone()).is_err());
+
+        // Routing drift mid-message.
+        let mut asm = ChunkAssembler::new();
+        asm.push(chunks[0].clone()).unwrap();
+        let mut drifted = chunks[1].clone();
+        drifted.round = 4;
+        assert!(asm.push(drifted).is_err());
+
+        // Row-count drift mid-message.
+        let mut asm = ChunkAssembler::new();
+        asm.push(chunks[0].clone()).unwrap();
+        let mut fat = chunks[1].clone();
+        fat.indices.push(fat.indices[0].clone());
+        assert!(asm.push(fat).is_err());
+
+        // Block-id/slot misalignment on a downlink chunk.
+        let mut asm = ChunkAssembler::new();
+        let mut lopsided = chunks[0].clone();
+        lopsided.blocks.pop();
+        assert!(asm.push(lopsided).is_err());
     }
 
     #[test]

@@ -56,8 +56,8 @@ pub use fault::{
     ClientFaultCounters, ClientFaults, FaultReport, FaultSpec, FaultyStream, FaultyTransport,
 };
 pub use frame::{
-    DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide, SideInfo, UplinkFrame,
-    FEDERATOR,
+    chunk_frames, ChunkAssembler, ChunkFrame, DownlinkFrame, Frame, ModelFrame, ModelPayload,
+    PlanFrame, QsSide, SideInfo, UplinkFrame, FEDERATOR,
 };
 pub use socket::{FrameStream, PeerSocket, SocketTransport};
 pub use tcp::TcpTransport;

@@ -1,0 +1,311 @@
+//! Chunk-boundary properties of the wire layer.
+//!
+//! The `KIND_CHUNK` path must be invisible to everything above it: splitting
+//! an MRC frame into chunks and reassembling them is the identity, the byte
+//! stream parses identically however the transport fragments it (byte at a
+//! time, random split sizes, splits landing exactly on chunk-message edges),
+//! and every way a chunk can arrive damaged — truncated mid-header or
+//! mid-payload, out of sequence, with drifted routing fields — is a typed
+//! [`TransportError`], never a panic. These tests drive the raw codec and
+//! assembler directly; the determinism suite pins the same invariants end to
+//! end through every transport.
+
+use bicompfl::transport::codec::{FrameCodec, Msg};
+use bicompfl::transport::{
+    chunk_frames, ChunkAssembler, DownlinkFrame, Frame, ModelFrame, ModelPayload, PlanFrame,
+    QsSide, SideInfo, TransportError, UplinkFrame,
+};
+use bicompfl::util::rng::Xoshiro256;
+
+/// A (rows × slots) uplink frame with distinct, bpi-respecting indices.
+fn uplink(rows: usize, slots: usize, side: SideInfo) -> Frame {
+    Frame::Uplink(UplinkFrame {
+        client: 2,
+        round: 9,
+        bits_per_index: 6,
+        indices: (0..rows)
+            .map(|r| (0..slots).map(|s| ((r * 31 + s * 7) % 64) as u32).collect())
+            .collect(),
+        side,
+    })
+}
+
+/// A (rows × slots) downlink frame with non-contiguous absolute block ids.
+fn downlink(rows: usize, slots: usize) -> Frame {
+    Frame::Downlink(DownlinkFrame {
+        client: 5,
+        round: 3,
+        bits_per_index: 5,
+        blocks: (0..slots).map(|s| (s * 3 + 1) as u32).collect(),
+        indices: (0..rows)
+            .map(|r| (0..slots).map(|s| ((r * 13 + s * 5) % 32) as u32).collect())
+            .collect(),
+    })
+}
+
+/// One frame of every kind (and every payload flavor), chunkable or not.
+fn frames_of_every_kind() -> Vec<Frame> {
+    vec![
+        Frame::Plan(PlanFrame {
+            client: 1,
+            round: 4,
+            d: 96,
+            bounds: vec![0, 32, 64, 96],
+            overhead_bits: 0,
+        }),
+        uplink(2, 6, SideInfo::None),
+        uplink(1, 3, SideInfo::Scale(0.75)),
+        uplink(
+            1,
+            2,
+            SideInfo::Qs(QsSide {
+                norm: 2.5,
+                signs: vec![true, false, true],
+                tau: vec![1, 0, 2],
+                tau_bits: 2,
+            }),
+        ),
+        downlink(3, 5),
+        Frame::Model(ModelFrame {
+            client: 0,
+            round: 7,
+            payload: ModelPayload::Dense(vec![0.5, -1.25, 3.0]),
+        }),
+        Frame::Model(ModelFrame {
+            client: 1,
+            round: 7,
+            payload: ModelPayload::Signs {
+                signs: vec![true, true, false],
+                scale: 0.1,
+            },
+        }),
+        Frame::Model(ModelFrame {
+            client: 2,
+            round: 7,
+            payload: ModelPayload::Sparse {
+                d: 48,
+                idx: vec![3, 17],
+                val: vec![1.5, -0.5],
+            },
+        }),
+    ]
+}
+
+/// Splitting then reassembling is the identity for both chunkable kinds, at
+/// every chunk width from one column to wider than the frame — and the
+/// chunks' counted bits sum exactly to the whole frame's (bit neutrality,
+/// the invariant the meters rely on).
+#[test]
+fn chunk_then_reassemble_is_the_identity() {
+    for frame in [uplink(3, 7, SideInfo::None), downlink(2, 7)] {
+        for chunk_slots in 1..=9usize {
+            let chunks = chunk_frames(&frame, chunk_slots)
+                .unwrap_or_else(|| panic!("{} must chunk", frame.kind_name()));
+            let expected = 7usize.div_ceil(chunk_slots);
+            assert_eq!(chunks.len(), expected, "chunk count at width {chunk_slots}");
+            let bit_sum: u64 = chunks.iter().map(|c| c.counted_bits()).sum();
+            assert_eq!(bit_sum, frame.counted_bits(), "chunking must be bit-neutral");
+            let mut asm = ChunkAssembler::new();
+            let mut out = None;
+            for (k, c) in chunks.iter().enumerate() {
+                // Each chunk must itself survive the wire byte-exactly.
+                let (bytes, bits) = c.encode();
+                let rt = Frame::try_decode(&bytes).expect("chunk wire round-trip");
+                assert_eq!(&rt, c);
+                assert_eq!(bits, c.counted_bits());
+                let done = asm.push(rt.try_into_chunk().unwrap()).expect("clean stream");
+                assert_eq!(done.is_some(), k + 1 == chunks.len());
+                out = done;
+            }
+            assert!(!asm.in_progress(), "assembler must reset after the last chunk");
+            assert_eq!(out.as_ref(), Some(&frame), "reassembly at width {chunk_slots}");
+        }
+    }
+}
+
+/// Frames that cannot travel as chunks refuse to: plan and model kinds,
+/// uplinks carrying side information, a zero chunk width, and an empty index
+/// matrix all fall back to whole-frame sends.
+#[test]
+fn unchunkable_frames_return_none() {
+    for frame in frames_of_every_kind() {
+        let chunkable = matches!(
+            &frame,
+            Frame::Uplink(UplinkFrame {
+                side: SideInfo::None,
+                ..
+            }) | Frame::Downlink(_)
+        );
+        assert_eq!(chunk_frames(&frame, 2).is_some(), chunkable, "{}", frame.kind_name());
+        assert!(chunk_frames(&frame, 0).is_none(), "width 0 never chunks");
+    }
+    let empty = Frame::Uplink(UplinkFrame {
+        client: 0,
+        round: 0,
+        bits_per_index: 6,
+        indices: Vec::new(),
+        side: SideInfo::None,
+    });
+    assert!(chunk_frames(&empty, 1).is_none(), "no rows, nothing to stream");
+}
+
+/// Feed `stream` to a receiving codec in the given split sizes and parse
+/// every frame back out, reassembling chunked messages as they arrive.
+fn parse_split(stream: &[u8], splits: impl Iterator<Item = usize>) -> Vec<Frame> {
+    let mut rx = FrameCodec::new();
+    let mut out = Vec::new();
+    let mut asm = ChunkAssembler::new();
+    let mut fed = 0;
+    for n in splits {
+        let end = (fed + n.max(1)).min(stream.len());
+        rx.feed(&stream[fed..end]);
+        fed = end;
+        while let Some(msg) = rx.poll_msg().expect("clean stream must parse") {
+            match msg {
+                Msg::Frame(Frame::Chunk(c), _) => {
+                    if let Some(whole) = asm.push(c).expect("clean chunk stream") {
+                        out.push(whole);
+                    }
+                }
+                Msg::Frame(f, _) => out.push(f),
+                other => panic!("unexpected control message {other:?}"),
+            }
+        }
+        if fed == stream.len() {
+            break;
+        }
+    }
+    assert_eq!(fed, stream.len(), "parser must consume the whole stream");
+    assert!(!asm.in_progress(), "no partial message may remain");
+    out
+}
+
+/// However the transport fragments the bytes — one byte at a time, random
+/// split sizes, or splits landing exactly on the chunk-message boundaries —
+/// the parsed (and reassembled) frame sequence is identical: every frame
+/// kind, with the chunkable ones traveling as width-2 chunk trains.
+#[test]
+fn reassembly_is_invariant_under_byte_splits() {
+    let originals = frames_of_every_kind();
+    let mut tx = FrameCodec::new();
+    let mut edges = vec![0usize];
+    for f in &originals {
+        match chunk_frames(f, 2) {
+            Some(chunks) => {
+                for c in &chunks {
+                    tx.enqueue_frame(c);
+                    edges.push(tx.pending_out().len());
+                }
+            }
+            None => {
+                tx.enqueue_frame(f);
+                edges.push(tx.pending_out().len());
+            }
+        }
+    }
+    let stream = tx.pending_out().to_vec();
+
+    // The convenience entry point produces the identical byte stream (and
+    // meter): chunking is a framing decision, not a second codec.
+    let mut tx2 = FrameCodec::new();
+    for f in &originals {
+        tx2.enqueue_frame_chunked(f, 2);
+    }
+    assert_eq!(tx2.pending_out(), &stream[..]);
+    assert_eq!(tx2.sent(), tx.sent());
+
+    // Whole stream at once: the reference parse.
+    let reference = parse_split(&stream, std::iter::once(stream.len()));
+    assert_eq!(reference, originals, "chunked transit must reproduce the originals");
+
+    // Byte at a time.
+    assert_eq!(parse_split(&stream, std::iter::repeat(1)), reference);
+
+    // Splits exactly at each enqueued frame's edge (chunk boundaries
+    // included — each chunk is its own length-delimited message).
+    let edge_sizes: Vec<usize> = edges.windows(2).map(|w| w[1] - w[0]).collect();
+    assert_eq!(parse_split(&stream, edge_sizes.into_iter()), reference);
+
+    // Random fragmentation, several seeds.
+    for seed in 0..8u64 {
+        let mut rng = Xoshiro256::new(seed);
+        let sizes = std::iter::from_fn(move || Some(1 + (rng.next_u64() % 37) as usize));
+        assert_eq!(parse_split(&stream, sizes), reference, "seed {seed} diverged");
+    }
+}
+
+/// A chunk cut off anywhere — mid-header, mid-count, mid-blocks,
+/// mid-bit-packed-payload — is a typed [`TransportError::Truncated`], and
+/// the full buffer still decodes; no prefix length panics.
+#[test]
+fn truncation_inside_a_chunk_is_a_typed_error() {
+    let frame = downlink(2, 6);
+    let chunks = chunk_frames(&frame, 4).expect("downlink must chunk");
+    for c in &chunks {
+        let (bytes, _) = c.encode();
+        for cut in 0..bytes.len() {
+            match Frame::try_decode(&bytes[..cut]) {
+                Err(TransportError::Truncated { expected, got }) => {
+                    assert!(got < expected, "cut {cut}: got {got} !< expected {expected}")
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        assert_eq!(&Frame::try_decode(&bytes).unwrap(), c);
+    }
+}
+
+/// Every way a chunk stream can go wrong mid-assembly is a typed
+/// [`TransportError::BadFrame`]: opening mid-message, a skipped or repeated
+/// sequence number, routing drift between chunks, row-count drift, and a
+/// non-chunk frame where a chunk was required.
+#[test]
+fn assembler_rejects_corrupt_chunk_streams() {
+    let chunks: Vec<_> = chunk_frames(&uplink(2, 6, SideInfo::None), 2)
+        .unwrap()
+        .into_iter()
+        .map(|f| f.try_into_chunk().unwrap())
+        .collect();
+    assert!(chunks.len() >= 3, "need a multi-chunk train");
+    let bad = |r: Result<Option<Frame>, TransportError>| {
+        assert!(matches!(r, Err(TransportError::BadFrame(_))), "got {r:?}");
+    };
+
+    // A message must open with seq 0 / slot0 0.
+    bad(ChunkAssembler::new().push(chunks[1].clone()));
+
+    // Skipping a chunk breaks the sequence.
+    let mut asm = ChunkAssembler::new();
+    asm.push(chunks[0].clone()).unwrap();
+    bad(asm.push(chunks[2].clone()));
+
+    // Repeating one does too.
+    let mut asm = ChunkAssembler::new();
+    asm.push(chunks[0].clone()).unwrap();
+    bad(asm.push(chunks[0].clone()));
+
+    // Routing fields may not drift within a message.
+    let mut asm = ChunkAssembler::new();
+    asm.push(chunks[0].clone()).unwrap();
+    let mut drift = chunks[1].clone();
+    drift.round += 1;
+    bad(asm.push(drift));
+
+    // Nor may the row count.
+    let mut asm = ChunkAssembler::new();
+    asm.push(chunks[0].clone()).unwrap();
+    let mut rows = chunks[1].clone();
+    rows.indices.pop();
+    bad(asm.push(rows));
+
+    // A non-chunk frame where a chunk was required is the same typed error.
+    assert!(matches!(
+        uplink(1, 2, SideInfo::None).try_into_chunk(),
+        Err(TransportError::BadFrame(_))
+    ));
+
+    // And a teardown mid-message is observable for the orphan accounting.
+    let mut asm = ChunkAssembler::new();
+    asm.push(chunks[0].clone()).unwrap();
+    assert!(asm.in_progress());
+}

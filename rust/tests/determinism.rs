@@ -525,6 +525,57 @@ fn wire_transports_are_bit_identical_for_every_mask_variant() {
     }
 }
 
+/// Chunking is a pure wire-layer re-framing: with `chunk_blocks > 0` every
+/// MRC index payload crosses the transport as `KIND_CHUNK` pieces and is
+/// reassembled before decode, yet records (bits come *off the wire*), the
+/// global model, and every client estimate must be bit-identical to the
+/// whole-frame run — on the analytic loopback and through every serialized
+/// wire, for every variant's downlink shape (GR relays the delivered chunks
+/// verbatim, GR-Reconst re-encodes and re-chunks, PR chunks per client).
+#[test]
+fn chunked_wire_is_bit_identical_across_all_transports() {
+    for variant in [
+        Variant::Gr,
+        Variant::GrReconst,
+        Variant::Pr,
+        Variant::PrSplitDl,
+    ] {
+        let run = |kind: &str, chunk_blocks: usize| {
+            let d = 192;
+            let n = 4;
+            let mut c = cfg(variant);
+            c.chunk_blocks = chunk_blocks;
+            let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
+            let mut alg = BiCompFl::new(d, n, c)
+                .with_engine(ParallelRoundEngine::with_shards(4))
+                .with_transport(make_transport(kind));
+            let recs = alg.run(&mut oracle, 4, 1);
+            let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+            (recs, alg.global_model().to_vec(), clients)
+        };
+        let reference = run("loopback", 0);
+        // Chunk sizes straddling the 192/32 = 6-block frames: one-column
+        // chunks (maximal splitting), a mid split, and a chunk wider than
+        // the frame (the whole payload in a single final chunk).
+        for chunk_blocks in [1usize, 3, 7] {
+            assert_eq!(
+                reference,
+                run("loopback", chunk_blocks),
+                "{}: loopback drifted at chunk_blocks={chunk_blocks}",
+                variant.label()
+            );
+            for kind in WIRE_KINDS {
+                assert_eq!(
+                    reference,
+                    run(kind, chunk_blocks),
+                    "{}: {kind} wire drifted at chunk_blocks={chunk_blocks}",
+                    variant.label()
+                );
+            }
+        }
+    }
+}
+
 /// Adaptive allocation puts real signalling bits into the plan frames
 /// (per-block boundaries for Adaptive, single renegotiated sizes for
 /// Adaptive-Avg); the serialized wire paths must carry them bit-exactly too.

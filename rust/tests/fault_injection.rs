@@ -46,6 +46,7 @@ fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
         theta0: 0.5,
         theta_clamp: 0.05,
         heterogeneity: 0.1,
+        chunk_blocks: 0,
     }
 }
 

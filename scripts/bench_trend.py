@@ -11,8 +11,8 @@ Why speedups, not raw nanoseconds: CI runners differ between runs (and the
 committed fallback baseline may come from different hardware entirely), so
 absolute medians are not comparable across records. The per-comparison
 speedup — baseline-side p50 over contender-side p50, e.g. serial/pooled or
-pooled-seq/staged — is dimensionless and machine-invariant, which makes it
-the signal that can be trended across PRs. Raw medians are still rendered in
+pooled-seq/staged or materialized/stream — is dimensionless and
+machine-invariant, which makes it the signal that can be trended across PRs. Raw medians are still rendered in
 the table for the human eye.
 
 A rendered markdown trend table is always written to `--summary` (defaulting
@@ -37,9 +37,14 @@ SCHEMA = "bicompfl-bench-round/v1"
 # path vs the same bytes carried through a kernel socketpair vs a real
 # loopback TCP connection vs the socketpair under the zero-fault injection
 # wrapper, on identical rounds (the `BiCompFL-PR [framed wire]` /
-# `[socket wire]` / `[tcp wire]` / `[faulty wire]` labels).
-BASELINE_ENGINES = ("serial", "pooled-seq", "loopback")
-CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket", "tcp", "faulty")
+# `[socket wire]` / `[tcp wire]` / `[faulty wire]` labels). "chunked" is the
+# framed wire with index payloads split into CHUNK trains (the
+# `BiCompFL-PR [chunked wire]` label, gated against "loopback" like the
+# other wire cases); "materialized" vs "stream" is the large-d MRC encode
+# comparison (`MRC encode [stream large-d]`): d-length parameter buffers
+# versus the O(block)-memory streaming encoder over identical draws.
+BASELINE_ENGINES = ("serial", "pooled-seq", "loopback", "materialized")
+CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket", "tcp", "faulty", "chunked", "stream")
 
 
 def load_record(path):

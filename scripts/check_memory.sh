@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Peak-RSS ceiling for the streaming MRC path (CI `large-d-memory` job).
+#
+# Runs `bicompfl mrc-smoke` — a full streamed encode + decode round trip at
+# d = 10^7 (default) — under `/usr/bin/time -v` and fails if the maximum
+# resident set size exceeds the ceiling. The streamed path holds O(block)
+# working memory plus one 4-byte column slot per block (~160 KiB at the
+# default shape), so it fits comfortably under 128 MiB; a materialized
+# implementation would need several d-length f32 buffers (>= 120 MiB for the
+# parameter vectors alone) and trips the ceiling. That separation is the
+# regression signal: if this script starts failing, something on the encode
+# or decode path began allocating per-entry instead of per-block.
+#
+# Usage: scripts/check_memory.sh [BINARY]
+#   BINARY        path to the bicompfl binary (default target/release/bicompfl)
+#   MEM_CEILING_KB  override the ceiling, in KiB (default 131072 = 128 MiB)
+#   SMOKE_D         override the streamed dimension (default 10000000)
+set -euo pipefail
+
+BIN="${1:-target/release/bicompfl}"
+CEILING_KB="${MEM_CEILING_KB:-131072}"
+D="${SMOKE_D:-10000000}"
+
+if [ ! -x "$BIN" ]; then
+    echo "error: $BIN not found or not executable (build with: cargo build --release)" >&2
+    exit 2
+fi
+if [ ! -x /usr/bin/time ]; then
+    echo "error: /usr/bin/time not available (GNU time required for -v)" >&2
+    exit 2
+fi
+
+log=$(mktemp)
+trap 'rm -f "$log"' EXIT
+
+# GNU time writes its report to stderr; keep the program's stdout visible.
+/usr/bin/time -v -o "$log" "$BIN" mrc-smoke --d "$D" | tee smoke_out.txt
+
+# The smoke must actually have completed (wire bits == analytic bits is
+# asserted inside the binary; this line only prints after that check).
+grep -q "mrc-smoke ok:" smoke_out.txt
+rm -f smoke_out.txt
+
+peak_kb=$(awk -F': ' '/Maximum resident set size/ { print $2 }' "$log")
+if [ -z "$peak_kb" ]; then
+    echo "error: could not parse peak RSS from /usr/bin/time -v output:" >&2
+    cat "$log" >&2
+    exit 2
+fi
+
+echo "peak RSS: ${peak_kb} KiB (ceiling: ${CEILING_KB} KiB, d=${D})"
+if [ "$peak_kb" -gt "$CEILING_KB" ]; then
+    echo "FAIL: peak RSS ${peak_kb} KiB exceeds the ${CEILING_KB} KiB ceiling —" \
+         "the O(block) memory bound of the streaming MRC path has regressed." >&2
+    exit 1
+fi
+echo "OK: streaming MRC stayed within the O(block) memory ceiling."
