@@ -27,8 +27,8 @@ use bicompfl::coordinator::cfl::{BiCompFlCfl, CflConfig, Quantizer};
 use bicompfl::coordinator::topology::parallel_uplink;
 use bicompfl::coordinator::{MaskOracle, SyntheticMaskOracle};
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
-use bicompfl::mrc::codec::BlockCodec;
-use bicompfl::mrc::stream::encode_stream;
+use bicompfl::mrc::codec::{BlockCodec, EncodeScratch};
+use bicompfl::mrc::stream::{encode_stream, encode_stream_parallel};
 use bicompfl::runtime::{pool, ParallelRoundEngine};
 use bicompfl::transport::{
     FaultSpec, FaultyTransport, FramedLoopback, Loopback, SocketTransport, TcpTransport, Transport,
@@ -212,6 +212,7 @@ fn bench_stream_encode(streamed: bool, d: usize, warm: Duration, target: Duratio
         })
     } else {
         let codec = BlockCodec::new(n_is);
+        let mut scratch = EncodeScratch::default();
         bench(warm, target, || {
             let q: Vec<f32> = (0..d).map(|e| qp(&q_src, e)).collect();
             let p: Vec<f32> = (0..d).map(|e| qp(&p_src, e)).collect();
@@ -219,10 +220,53 @@ fn bench_stream_encode(streamed: bool, d: usize, warm: Duration, target: Duratio
             for b in 0..plan.n_blocks() {
                 let r = plan.block(b);
                 let st = Philox::keyed(23, b as u64);
-                std::hint::black_box(codec.encode(&q[r.clone()], &p[r], &st, 0, &mut sel));
+                std::hint::black_box(codec.encode_with(
+                    &q[r.clone()],
+                    &p[r],
+                    &st,
+                    0,
+                    &mut sel,
+                    &mut scratch,
+                ));
             }
         })
     }
+}
+
+/// One client's streaming uplink encode, serial (`shards == 1`, the exact
+/// [`encode_stream`] path) vs fanned across the worker pool in block waves.
+/// Identical draws and columns on both sides; only wall clock differs. Gated
+/// like every other case so a scheduling regression (a barrier per block, a
+/// cold scratch per task) shows up in the trend.
+fn bench_parallel_stream_encode(
+    shards: usize,
+    d: usize,
+    warm: Duration,
+    target: Duration,
+) -> BenchStats {
+    let n_is = 64;
+    let plan = BlockPlan::fixed(d, 256);
+    let q_src = Philox::keyed(21, 1);
+    let p_src = Philox::keyed(21, 2);
+    let qp = move |src: &Philox, e: usize| 0.05 + 0.9 * src.uniform_at(e as u64);
+    bench(warm, target, || {
+        let bits = encode_stream_parallel(
+            n_is,
+            1,
+            9,
+            &plan,
+            shards,
+            |b| Philox::keyed(23, b),
+            |_b, r, qb, pb| {
+                qb.extend(r.clone().map(|e| qp(&q_src, e)));
+                pb.extend(r.map(|e| qp(&p_src, e)));
+            },
+            |_b, col| {
+                std::hint::black_box(col);
+            },
+        );
+        std::hint::black_box(bits);
+    })
 }
 
 /// Rounds per multi-round measurement of the staged PR driver.
@@ -467,6 +511,22 @@ fn main() {
             label: "stream",
             shards: 1,
             run: Box::new(move |w, t| bench_stream_encode(true, d_stream, w, t)),
+        },
+    });
+    // The worker-sharded block pipeline vs the serial stream on the same
+    // uplink encode: identical columns, wall clock fanned across the pool
+    // (§Perf target: ≥ 1.5× over serial with ≥ 4 workers at d = 10⁶).
+    comparisons.push(Comparison {
+        name: "MRC encode [parallel stream]",
+        baseline: Side {
+            label: "serial-stream",
+            shards: 1,
+            run: Box::new(move |w, t| bench_parallel_stream_encode(1, d_stream, w, t)),
+        },
+        contender: Side {
+            label: "parallel-stream",
+            shards: threads,
+            run: Box::new(move |w, t| bench_parallel_stream_encode(threads, d_stream, w, t)),
         },
     });
 

@@ -268,6 +268,14 @@ pub struct BiCompFlConfig {
     /// bit-identical across every wire kind. The default comes from
     /// `BICOMPFL_CHUNK` (unset ⇒ 0).
     pub chunk_blocks: usize,
+    /// Parallel block pipeline for the streaming MRC legs: `Some(true)`
+    /// forces it, `Some(false)` pins the serial reference, `None` (the
+    /// default) defers to `BICOMPFL_PARALLEL_STREAM` and then to automatic
+    /// engagement at d ≥ [`crate::mrc::stream::PARALLEL_STREAM_MIN_D`] (see
+    /// [`crate::mrc::auto_shards`]). Purely a throughput knob: the pipeline
+    /// is bit-identical to the serial encoder at every thread count, pinned
+    /// by the determinism suite.
+    pub parallel_stream: Option<bool>,
 }
 
 /// The `BICOMPFL_CHUNK` environment default for
@@ -296,6 +304,7 @@ impl Default for BiCompFlConfig {
             seed: 0xB1C0,
             lambda: 1.0,
             chunk_blocks: env_chunk_blocks(),
+            parallel_stream: None,
         }
     }
 }
@@ -447,6 +456,52 @@ impl BiCompFl {
                 bits += out.bits;
             }
         }
+        (indices, bits)
+    }
+
+    /// [`Self::encode_vector_at`] with the parallel block pipeline engaged
+    /// when `shards > 1` — bit-identical either way (the pipeline is pinned
+    /// against the serial encoder), so the engagement decision is purely a
+    /// throughput choice ([`crate::mrc::auto_shards`]). When `shards > 1`
+    /// this must run on the caller thread, never inside a pool job (batch
+    /// jobs must not dispatch nested batches — see `runtime::pool`).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn encode_vector_sharded(
+        n_is: usize,
+        round: u64,
+        q: &[f32],
+        prior: &[f32],
+        plan: &BlockPlan,
+        seed: u64,
+        client: u64,
+        n_samples: usize,
+        dir: Direction,
+        sel_seed: u64,
+        shards: usize,
+    ) -> (Vec<Vec<u32>>, u64) {
+        if shards <= 1 {
+            return Self::encode_vector_at(
+                n_is, round, q, prior, plan, seed, client, n_samples, dir, sel_seed,
+            );
+        }
+        let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
+        let bits = crate::mrc::encode_stream_parallel(
+            n_is,
+            n_samples,
+            sel_seed,
+            plan,
+            shards,
+            |b| mrc_stream(seed, round, client, b, dir),
+            |_, r, qb, pb| {
+                qb.extend_from_slice(&q[r.clone()]);
+                pb.extend_from_slice(&prior[r]);
+            },
+            |b, col| {
+                for (ell, &idx) in col.iter().enumerate() {
+                    indices[ell][b] = idx;
+                }
+            },
+        );
         (indices, bits)
     }
 
@@ -661,9 +716,14 @@ impl BiCompFl {
         let round = self.round;
         let bpi = BlockCodec::new(n_is).index_bits() as u8;
         let chunk_blocks = self.cfg.chunk_blocks;
+        let shards = crate::mrc::auto_shards(self.d, self.cfg.parallel_stream);
         let transport = Arc::clone(&self.transport);
-        let encoded: Vec<UlPayload> = self.engine.run(&jobs, |_, j| {
-            let (indices, _analytic_bits) = Self::encode_vector_at(
+        // One leg body serves both execution shapes below, so they cannot
+        // drift: per-client engine sharding runs it with `shards == 1`
+        // (serial encode on a worker), the parallel block pipeline runs it
+        // on the caller thread with the blocks fanned across the pool.
+        let ul_leg = |j: &UlJob, shards: usize| -> UlPayload {
+            let (indices, _analytic_bits) = Self::encode_vector_sharded(
                 n_is,
                 round,
                 &j.q,
@@ -674,6 +734,7 @@ impl BiCompFl {
                 n_ul,
                 Direction::Uplink,
                 j.sel_seed,
+                shards,
             );
             let plan_sent = transport.send(
                 Leg::Uplink,
@@ -713,7 +774,16 @@ impl BiCompFl {
                 bits: plan_sent.bits + ul_bits,
                 qhat,
             }
-        });
+        };
+        let encoded: Vec<UlPayload> = if shards > 1 {
+            // Nested batches are forbidden (runtime::pool), so the two
+            // sharding axes are mutually exclusive: here clients go
+            // sequentially on the caller and each client's blocks pipeline
+            // across the workers.
+            jobs.iter().map(|j| ul_leg(j, shards)).collect()
+        } else {
+            self.engine.run(&jobs, |_, j| ul_leg(j, 1))
+        };
         let mut qhats: Vec<Vec<f32>> = Vec::with_capacity(encoded.len());
         let mut ul_payloads: Vec<UlPayload> = Vec::with_capacity(encoded.len());
         for (mut p, job) in encoded.into_iter().zip(jobs) {
@@ -844,7 +914,10 @@ impl BiCompFl {
                 let prior = self.client_theta[0].clone();
                 let plan = self.plan_for(&theta_next, &prior);
                 let n_dl = self.n_dl();
-                let (indices, _analytic_bits) = Self::encode_vector_at(
+                // Runs on the caller thread, so the parallel block pipeline
+                // may engage (n_dl samples over the full model make this the
+                // heaviest single encode of the round).
+                let (indices, _analytic_bits) = Self::encode_vector_sharded(
                     self.cfg.n_is,
                     self.round,
                     &theta_next,
@@ -855,6 +928,7 @@ impl BiCompFl {
                     n_dl,
                     Direction::Downlink,
                     self.sel_seed(FEDERATOR, Direction::Downlink),
+                    crate::mrc::auto_shards(self.d, self.cfg.parallel_stream),
                 );
                 let plan_wire = Frame::Plan(PlanFrame::from_plan(FEDERATOR, self.round, &plan));
                 let dl_wire = Frame::Downlink(DownlinkFrame {
@@ -1297,6 +1371,28 @@ mod tests {
             let (recs_chunked, theta_chunked) = run(3);
             assert_eq!(recs_whole, recs_chunked, "{} records drift under chunking", v.label());
             assert_eq!(theta_whole, theta_chunked, "{} model drifts under chunking", v.label());
+        }
+    }
+
+    #[test]
+    fn parallel_stream_is_bit_identical_to_serial() {
+        // The parallel block pipeline is a pure throughput knob: every
+        // record and the final model must match the serial reference bit for
+        // bit, for every variant. `Some(true)` forces engagement far below
+        // the auto threshold so the pool actually runs.
+        for v in [Variant::Gr, Variant::GrReconst, Variant::Pr, Variant::PrSplitDl] {
+            let run = |parallel: bool| {
+                let mut c = cfg(v);
+                c.parallel_stream = Some(parallel);
+                let mut oracle = SyntheticMaskOracle::new(256, 4, 42, 0.1);
+                let mut alg = BiCompFl::new(256, 4, c);
+                let recs = alg.run(&mut oracle, 3, 1);
+                (recs, alg.global_model().to_vec())
+            };
+            let (recs_serial, theta_serial) = run(false);
+            let (recs_par, theta_par) = run(true);
+            assert_eq!(recs_serial, recs_par, "{} records drift in parallel", v.label());
+            assert_eq!(theta_serial, theta_par, "{} model drifts in parallel", v.label());
         }
     }
 

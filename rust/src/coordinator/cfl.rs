@@ -20,7 +20,7 @@ use crate::algorithms::{CflAlgorithm, GradOracle, RoundBits, ShardedGradOracle};
 use crate::compressors::qsgd::{Qs, QsPosterior};
 use crate::compressors::sign::stochastic_sign_posterior;
 use crate::mrc::block::BlockPlan;
-use crate::mrc::codec::BlockCodec;
+use crate::mrc::codec::{BlockCodec, EncodeScratch};
 use crate::runtime::ParallelRoundEngine;
 use crate::tensor;
 use crate::transport::{self, channel, Frame, Leg, QsSide, SideInfo, Transport, UplinkFrame};
@@ -295,18 +295,20 @@ fn transport_payload(
     let codec = BlockCodec::new(n_is);
     let prior = vec![0.5f32; d];
     let mut sel = Xoshiro256::new(j.sel_seed);
+    let mut scratch = EncodeScratch::default();
     // -- client side: encode (selector order: sample-major) ----------------
     let mut indices = vec![vec![0u32; plan.n_blocks()]; n_ul];
     for (ell, row) in indices.iter_mut().enumerate() {
         for (b, slot) in row.iter_mut().enumerate() {
             let r = plan.block(b);
             let stream = mrc_stream(seed, round, j.client, b as u64, Direction::Uplink);
-            let out = codec.encode(
+            let out = codec.encode_with(
                 &q[r.clone()],
                 &prior[r.clone()],
                 &stream,
                 ell as u64,
                 &mut sel,
+                &mut scratch,
             );
             *slot = out.index;
         }

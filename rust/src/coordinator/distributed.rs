@@ -83,7 +83,7 @@ use std::time::{Duration, Instant};
 
 use super::bicompfl::BiCompFl;
 use super::oracle::{MaskOracle, SyntheticMaskOracle};
-use super::shared_rand::{selector_seed, Direction};
+use super::shared_rand::{mrc_stream, selector_seed, Direction};
 use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
@@ -370,6 +370,91 @@ fn encode_uplink(
             side: SideInfo::None,
         },
     )
+}
+
+/// The streamed form of [`encode_uplink`]: blocks encode through the
+/// parallel pipeline ([`crate::mrc::encode_stream_parallel`]; `shards <= 1`
+/// is the serial reference) and the uplink chunk train leaves through
+/// `emit` as blocks complete — each `chunk_slots`-wide chunk goes out the
+/// moment its last block column exists, overlapping MRC encode with the
+/// `KIND_CHUNK` sends. The emitted train is exactly [`chunk_frames`]' split
+/// of the returned [`UplinkFrame`] (same seq/slot0/last geometry), so the
+/// federator observes an identical byte stream; the full index matrix is
+/// still returned because the client self-decodes its own samples. With
+/// `chunk_slots == 0` nothing is emitted and the caller sends the whole
+/// frame, exactly as before. Bit-identical to [`encode_uplink`] at every
+/// shard count.
+#[allow(clippy::too_many_arguments)]
+fn encode_uplink_streamed(
+    spec: &RunSpec,
+    round: u64,
+    client: u64,
+    q: &[f32],
+    theta: &[f32],
+    plan: &BlockPlan,
+    shards: usize,
+    chunk_slots: usize,
+    mut emit: impl FnMut(&Frame) -> Result<u64>,
+) -> Result<UplinkFrame> {
+    let n_ul = spec.n_ul as usize;
+    let n_blocks = plan.n_blocks();
+    let bpi = BlockCodec::new(spec.n_is as usize).index_bits() as u8;
+    let mut indices = vec![vec![0u32; n_blocks]; n_ul];
+    let mut emitted = 0usize;
+    let mut seq = 0u32;
+    let mut failed: Option<TransportError> = None;
+    crate::mrc::encode_stream_parallel(
+        spec.n_is as usize,
+        n_ul,
+        selector_seed(spec.seed, round, client, Direction::Uplink),
+        plan,
+        shards,
+        |b| mrc_stream(spec.seed, round, client, b, Direction::Uplink),
+        |_, r, qb, pb| {
+            qb.extend_from_slice(&q[r.clone()]);
+            pb.extend_from_slice(&theta[r]);
+        },
+        |b, col| {
+            for (ell, &idx) in col.iter().enumerate() {
+                indices[ell][b] = idx;
+            }
+            if chunk_slots == 0 || failed.is_some() {
+                return;
+            }
+            // The sink runs in ascending block order, so `b + 1` is the
+            // completion watermark: flush every chunk window it closes.
+            let done = b + 1;
+            while emitted < n_blocks && (done - emitted >= chunk_slots || done == n_blocks) {
+                let end = (emitted + chunk_slots).min(n_blocks);
+                let chunk = crate::transport::frame::uplink_chunk(
+                    client,
+                    round,
+                    bpi,
+                    seq,
+                    end == n_blocks,
+                    emitted,
+                    end,
+                    &indices,
+                );
+                if let Err(e) = emit(&chunk) {
+                    failed = Some(e);
+                    return;
+                }
+                seq += 1;
+                emitted = end;
+            }
+        },
+    );
+    if let Some(e) = failed {
+        return Err(e);
+    }
+    Ok(UplinkFrame {
+        client,
+        round,
+        bits_per_index: bpi,
+        indices,
+        side: SideInfo::None,
+    })
 }
 
 /// Decode one delivered uplink into the posterior mean q̂ — the identical
@@ -1537,24 +1622,27 @@ fn client_rounds(mut fs: FaultyStream, id: u64, spec: &RunSpec, cohort_proto: bo
 
         // -- uplink (through the fault gauntlet, if any) -------------------
         // With chunking on, the index payload leaves as Frame::Chunk pieces
-        // so no full serialized uplink is ever buffered for the wire; the
-        // chunk bits sum to the whole frame's, so accounting is unchanged.
-        let (own_plan, own_ul) = encode_uplink(spec, t as u64, id, &q, &theta);
+        // so no full serialized uplink is ever buffered for the wire — and
+        // each chunk goes out the moment the block pipeline completes its
+        // columns, overlapping encode with the sends. The chunk bits sum to
+        // the whole frame's, so accounting is unchanged.
+        let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+        let own_plan = PlanFrame::from_plan(id, t as u64, &plan);
         fs.send_frame(&Frame::Plan(own_plan.clone()))?;
-        let ul_frame = Frame::Uplink(own_ul.clone());
-        let ul_chunks = match spec.chunk_blocks {
-            0 => None,
-            cb => chunk_frames(&ul_frame, cb as usize),
-        };
-        match ul_chunks {
-            Some(chunks) => {
-                for c in &chunks {
-                    fs.send_frame(c)?;
-                }
-            }
-            None => {
-                fs.send_frame(&ul_frame)?;
-            }
+        let shards = crate::mrc::auto_shards(spec.d as usize, None);
+        let own_ul = encode_uplink_streamed(
+            spec,
+            t as u64,
+            id,
+            &q,
+            &theta,
+            &plan,
+            shards,
+            spec.chunk_blocks as usize,
+            |f| fs.send_frame(f),
+        )?;
+        if spec.chunk_blocks == 0 {
+            fs.send_frame(&Frame::Uplink(own_ul.clone()))?;
         }
 
         // -- the round's participant set -----------------------------------
@@ -1689,6 +1777,64 @@ mod tests {
         );
         assert_eq!(qhat, direct);
         assert_eq!(ul.index_bits(), (spec.d / spec.block_size) as u64 * 6);
+    }
+
+    #[test]
+    fn streamed_uplink_emits_the_exact_chunk_train_of_the_batch_splitter() {
+        // The incremental emitter must produce (a) the identical UplinkFrame
+        // the batch encoder builds and (b) the exact chunk sequence
+        // `chunk_frames` would split it into — same seq/slot0/last and
+        // bytes — for serial and parallel shard counts and for chunk widths
+        // that do and do not divide the block count (d=512, bs=64 ⇒ 8
+        // blocks).
+        let spec = RunSpec {
+            d: 512,
+            block_size: 64,
+            n_ul: 2,
+            ..RunSpec::default()
+        };
+        let theta = spec.initial_theta();
+        let q: Vec<f32> = (0..spec.d as usize)
+            .map(|i| (0.2 + 0.6 * ((i * 53 % 100) as f32 / 100.0)).clamp(0.05, 0.95))
+            .collect();
+        let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+        let (_, want_ul) = encode_uplink(&spec, 2, 1, &q, &theta);
+        for shards in [1usize, 3] {
+            for chunk_slots in [0usize, 3, 8] {
+                let mut emitted: Vec<Frame> = Vec::new();
+                let got_ul = encode_uplink_streamed(
+                    &spec,
+                    2,
+                    1,
+                    &q,
+                    &theta,
+                    &plan,
+                    shards,
+                    chunk_slots,
+                    |f| {
+                        emitted.push(f.clone());
+                        Ok(0)
+                    },
+                )
+                .unwrap();
+                assert_eq!(got_ul, want_ul, "shards={shards} cs={chunk_slots}");
+                let want_train =
+                    chunk_frames(&Frame::Uplink(want_ul.clone()), chunk_slots).unwrap_or_default();
+                assert_eq!(emitted, want_train, "shards={shards} cs={chunk_slots}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_uplink_send_failure_propagates() {
+        let spec = RunSpec::default();
+        let theta = spec.initial_theta();
+        let q = vec![0.4f32; spec.d as usize];
+        let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+        let err = encode_uplink_streamed(&spec, 0, 0, &q, &theta, &plan, 1, 2, |_| {
+            Err(TransportError::PeerClosed)
+        });
+        assert!(matches!(err, Err(TransportError::PeerClosed)));
     }
 
     #[test]

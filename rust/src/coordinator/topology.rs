@@ -20,7 +20,7 @@
 
 use super::shared_rand::{client_selector_seed, mrc_stream, Direction};
 use crate::mrc::block::BlockPlan;
-use crate::mrc::codec::BlockCodec;
+use crate::mrc::codec::{BlockCodec, EncodeScratch};
 use crate::runtime::ParallelRoundEngine;
 use crate::transport::{Frame, Leg, SideInfo, Transport, UplinkFrame};
 use crate::util::rng::Xoshiro256;
@@ -51,13 +51,20 @@ pub fn parallel_uplink(
         // Private selector randomness per client, derived deterministically
         // so parallel == serial.
         let mut sel = Xoshiro256::new(client_selector_seed(sel_seed, i as u64));
+        let mut scratch = EncodeScratch::default();
         let mut indices = vec![vec![0u32; plan.n_blocks()]; n_ul];
         for b in 0..plan.n_blocks() {
             let r = plan.block(b);
             let stream = mrc_stream(seed, round, i as u64, b as u64, Direction::Uplink);
             for (ell, row) in indices.iter_mut().enumerate() {
-                let out =
-                    codec.encode(&q[r.clone()], &prior[r.clone()], &stream, ell as u64, &mut sel);
+                let out = codec.encode_with(
+                    &q[r.clone()],
+                    &prior[r.clone()],
+                    &stream,
+                    ell as u64,
+                    &mut sel,
+                    &mut scratch,
+                );
                 row[b] = out.index;
             }
         }

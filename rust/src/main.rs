@@ -92,6 +92,12 @@ fn cli() -> Cli {
     .flag("block-size", "0", "fixed block size (0 = preset default)")
     .flag("local-iters", "0", "local iterations per round (0 = preset default)")
     .flag("mask-lr", "0", "mask-training score learning rate (0 = preset default)")
+    .flag(
+        "threads",
+        "0",
+        "mrc-smoke: shard the block pipeline this wide across the worker \
+         pool (0 = serial reference); bit-identical at every width",
+    )
     .flag("seed", "1", "master seed")
     .flag("out", "results", "output directory")
     .switch("fast", "use the synthetic oracle instead of PJRT artifacts")
@@ -293,7 +299,7 @@ fn real_main() -> Result<()> {
                 0 => 1,
                 v => v,
             };
-            mrc_smoke(d, bs, n_is, n_ul, c.get_u64("seed"))?;
+            mrc_smoke(d, bs, n_is, n_ul, c.get_usize("threads"), c.get_u64("seed"))?;
         }
         "train" => {
             let cfg = build_cfg(&c)?;
@@ -389,13 +395,23 @@ fn real_main() -> Result<()> {
 /// counter-based Philox draws, index columns drain into the kept wire
 /// payload (4 bytes per block-sample — the only state that grows with
 /// d/block), and the decoder folds every regenerated mean into a checksum.
-/// Asserts wire == analytic bits and prints one summary line the CI memory
-/// job greps.
-fn mrc_smoke(d: usize, bs: usize, n_is: usize, n_ul: usize, seed: u64) -> Result<()> {
-    use bicompfl::mrc::stream::encode_stream;
-    use bicompfl::mrc::{BlockPlan, StreamDecoder};
+/// With `threads > 1` both legs run the parallel block pipeline `threads`
+/// shards wide (peak memory O(block × threads), results bit-identical to
+/// the serial reference — the checksum fold stays in ascending block
+/// order). Asserts wire == analytic bits and prints one summary line the CI
+/// memory job greps.
+fn mrc_smoke(
+    d: usize,
+    bs: usize,
+    n_is: usize,
+    n_ul: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<()> {
+    use bicompfl::mrc::{decode_stream_parallel, encode_stream_parallel, BlockPlan};
     use bicompfl::util::rng::Philox;
 
+    let shards = threads.max(1);
     let plan = BlockPlan::fixed(d, bs);
     let n_blocks = plan.n_blocks();
     let q_src = Philox::keyed(seed, 1);
@@ -404,11 +420,12 @@ fn mrc_smoke(d: usize, bs: usize, n_is: usize, n_ul: usize, seed: u64) -> Result
     let stream_for = |b: u64| Philox::keyed(seed ^ 0xB10C_57EA, b);
 
     let mut columns: Vec<u32> = Vec::with_capacity(n_blocks * n_ul);
-    let bits = encode_stream(
+    let bits = encode_stream_parallel(
         n_is,
         n_ul,
         seed ^ 0x5E1,
         &plan,
+        shards,
         stream_for,
         |_b, r, qb, pb| {
             qb.extend(r.clone().map(|e| param(&q_src, e)));
@@ -423,22 +440,21 @@ fn mrc_smoke(d: usize, bs: usize, n_is: usize, n_ul: usize, seed: u64) -> Result
         "wire bits {bits} != analytic {analytic} (blocks {n_blocks} x n_ul {n_ul} x {index_bits})"
     );
 
-    let mut dec = StreamDecoder::new(n_is);
-    let mut p = Vec::new();
-    let mut out = Vec::new();
-    let mut checksum = 0.0f64;
-    for b in 0..n_blocks {
-        let r = plan.block(b);
-        p.clear();
-        p.extend(r.clone().map(|e| param(&p_src, e)));
-        out.resize(r.len(), 0.0);
-        let col = &columns[b * n_ul..(b + 1) * n_ul];
-        dec.decode_block_mean(&p, &stream_for(b as u64), col, &mut out);
-        checksum += out.iter().map(|&v| f64::from(v)).sum::<f64>();
-    }
+    let block_sums = decode_stream_parallel(
+        n_is,
+        n_ul,
+        &plan,
+        shards,
+        &columns,
+        stream_for,
+        |_b, r, pb| pb.extend(r.map(|e| param(&p_src, e))),
+        |_b, out| out.iter().map(|&v| f64::from(v)).sum::<f64>(),
+    );
+    // Ascending-block fold — the serial checksum's exact f64 sequence.
+    let checksum: f64 = block_sums.iter().sum();
     println!(
-        "mrc-smoke ok: d={d} blocks={n_blocks} n_is={n_is} n_ul={n_ul} bits={bits} \
-         mean={:.6}",
+        "mrc-smoke ok: d={d} blocks={n_blocks} n_is={n_is} n_ul={n_ul} threads={shards} \
+         bits={bits} mean={:.6}",
         checksum / d as f64
     );
     Ok(())

@@ -55,6 +55,16 @@ pub struct EncodeScratch {
     logw: Vec<f64>,
 }
 
+thread_local! {
+    /// Backing scratch for the convenience wrappers ([`BlockCodec::encode`])
+    /// so casual call sites don't re-allocate working memory every block.
+    /// Scratch contents never influence output (pinned by
+    /// `scratch_paths_match_fresh_allocations`), so sharing one per thread
+    /// is safe.
+    static ENCODE_SCRATCH: std::cell::RefCell<EncodeScratch> =
+        std::cell::RefCell::new(EncodeScratch::default());
+}
+
 impl BlockCodec {
     pub fn new(n_is: usize) -> Self {
         assert!(n_is >= 2);
@@ -140,6 +150,12 @@ impl BlockCodec {
     ///
     /// `sample_idx` distinguishes the n_UL / n_DL repetitions so each uses a
     /// fresh candidate set from the same stream.
+    ///
+    /// Convenience form of [`BlockCodec::encode_with`] against a long-lived
+    /// thread-local [`EncodeScratch`]: once the scratch has grown to the
+    /// largest block seen on this thread, repeated calls allocate nothing.
+    /// Hot loops that already own scratch (the stream drivers, the
+    /// coordinators) should still call `encode_with` directly.
     pub fn encode(
         &self,
         q: &[f32],
@@ -148,7 +164,9 @@ impl BlockCodec {
         sample_idx: u64,
         sel: &mut Xoshiro256,
     ) -> EncodeOut {
-        self.encode_with(q, p, stream, sample_idx, sel, &mut EncodeScratch::default())
+        ENCODE_SCRATCH.with(|cell| {
+            self.encode_with(q, p, stream, sample_idx, sel, &mut cell.borrow_mut())
+        })
     }
 
     /// [`BlockCodec::encode`] against caller-owned scratch, in two separated

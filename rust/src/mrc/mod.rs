@@ -24,3 +24,4 @@ pub mod theory;
 pub use block::{AllocationStrategy, BlockPlan};
 pub use codec::BlockCodec;
 pub use stream::{StreamDecoder, StreamEncoder};
+pub use stream::{auto_shards, decode_stream_parallel, encode_stream_parallel};

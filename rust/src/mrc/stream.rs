@@ -16,12 +16,93 @@
 //! column of `n_samples` indices. Nothing scales with d. The CI
 //! `large-d-memory` job holds a d = 10⁷ encode/decode under a hard peak-RSS
 //! ceiling to keep it that way.
+//!
+//! # Parallel block pipeline
+//!
+//! Blocks are independent by construction — the counter-based [`Philox`]
+//! gives random access to any block's candidate stream, and every
+//! `encode_with` call consumes exactly `n_is` draws from the private Gumbel
+//! selector, so block `b` starts from the selector state advanced by exactly
+//! `b × n_samples × n_is` draws. [`encode_stream_parallel`] exploits both:
+//! the caller walks blocks in plan order handing each task a cloned,
+//! pre-skipped selector ([`Xoshiro256::skip`]), fans bounded waves of block
+//! ranges across the [`crate::runtime::WorkerPool`], and drains index
+//! columns in block order. Each worker keeps a long-lived thread-local
+//! [`EncodeScratch`] plus block buffers, so steady-state encode allocates
+//! nothing and peak memory stays O(block × workers). Output is bit-identical
+//! to the serial [`StreamEncoder`] at every shard count (shards ≤ 1 *is* the
+//! serial path). [`decode_stream_parallel`] is the mirror image; the decoder
+//! is stateless across blocks, so only result order matters.
 
+use std::cell::RefCell;
 use std::ops::Range;
 
 use super::block::BlockPlan;
 use super::codec::{BlockCodec, EncodeScratch};
 use crate::util::rng::{Philox, Xoshiro256};
+
+/// Blocks handed to one pool task: amortizes dispatch overhead while keeping
+/// each wave's in-flight column memory bounded at
+/// `shards × PAR_BLOCKS_PER_TASK` columns.
+const PAR_BLOCKS_PER_TASK: usize = 8;
+
+/// Dimension at which coordinator streaming legs auto-engage the parallel
+/// block pipeline (absent an explicit knob or env override). Below this the
+/// per-block work is too small for dispatch to pay off and the serial
+/// reference runs.
+pub const PARALLEL_STREAM_MIN_D: usize = 1 << 20;
+
+/// The `BICOMPFL_PARALLEL_STREAM` override: `1`/`on`/`true` forces the
+/// parallel pipeline at any dimension, `0`/`off`/`false` pins the serial
+/// reference, unset means automatic (engage at d ≥
+/// [`PARALLEL_STREAM_MIN_D`]).
+pub fn parallel_stream_env() -> Option<bool> {
+    match std::env::var("BICOMPFL_PARALLEL_STREAM") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "" => None,
+            "1" | "on" | "true" | "yes" => Some(true),
+            "0" | "off" | "false" | "no" => Some(false),
+            other => panic!("BICOMPFL_PARALLEL_STREAM: expected 0/1/on/off, got {other:?}"),
+        },
+        Err(_) => None,
+    }
+}
+
+/// Resolve the shard count for a streaming MRC leg at dimension `d`.
+/// Precedence: an explicit coordinator `knob`, then the
+/// `BICOMPFL_PARALLEL_STREAM` env var, then automatic engagement at
+/// d ≥ [`PARALLEL_STREAM_MIN_D`]. Engaged legs shard across the global
+/// worker pool; 1 selects the serial reference path (and is what
+/// `BICOMPFL_THREADS=1` always resolves to).
+pub fn auto_shards(d: usize, knob: Option<bool>) -> usize {
+    let engaged = knob
+        .or_else(parallel_stream_env)
+        .unwrap_or(d >= PARALLEL_STREAM_MIN_D);
+    if engaged {
+        crate::runtime::pool::global().threads()
+    } else {
+        1
+    }
+}
+
+thread_local! {
+    /// Per-worker working set for the parallel block pipeline. Pool workers
+    /// are long-lived (see `runtime::pool`), so after the first wave sizes
+    /// these to the largest block, steady-state encode/decode performs zero
+    /// heap allocation on the workers.
+    static WORKER_SCRATCH: RefCell<WorkerScratch> = RefCell::new(WorkerScratch::default());
+}
+
+#[derive(Default)]
+struct WorkerScratch {
+    codec: EncodeScratch,
+    /// Encode: posterior slice. Decode: regenerated-sample buffer.
+    q: Vec<f32>,
+    /// Prior slice.
+    p: Vec<f32>,
+    /// Decode: per-entry mean accumulator.
+    out: Vec<f32>,
+}
 
 /// Streaming MRC encoder: push blocks in ascending plan order, get back one
 /// column of `n_samples` indices per block. Owns the private Gumbel selector
@@ -114,20 +195,41 @@ impl StreamDecoder {
         column: &[u32],
         out: &mut [f32],
     ) {
-        debug_assert_eq!(p.len(), out.len());
-        out.fill(0.0);
-        self.buf.resize(p.len(), 0.0);
-        for (ell, &idx) in column.iter().enumerate() {
-            self.codec
-                .decode_with(p, stream, ell as u64, idx, &mut self.buf, &mut self.scratch);
-            for (o, &b) in out.iter_mut().zip(&self.buf) {
-                *o += b;
-            }
+        decode_block_mean_with(
+            &self.codec,
+            p,
+            stream,
+            column,
+            out,
+            &mut self.buf,
+            &mut self.scratch,
+        );
+    }
+}
+
+/// [`StreamDecoder::decode_block_mean`] with caller-owned scratch — the form
+/// the parallel pipeline runs against per-worker thread-local buffers.
+fn decode_block_mean_with(
+    codec: &BlockCodec,
+    p: &[f32],
+    stream: &Philox,
+    column: &[u32],
+    out: &mut [f32],
+    buf: &mut Vec<f32>,
+    scratch: &mut EncodeScratch,
+) {
+    debug_assert_eq!(p.len(), out.len());
+    out.fill(0.0);
+    buf.resize(p.len(), 0.0);
+    for (ell, &idx) in column.iter().enumerate() {
+        codec.decode_with(p, stream, ell as u64, idx, buf, scratch);
+        for (o, &b) in out.iter_mut().zip(buf.iter()) {
+            *o += b;
         }
-        let scale = 1.0 / column.len().max(1) as f32;
-        for o in out.iter_mut() {
-            *o *= scale;
-        }
+    }
+    let scale = 1.0 / column.len().max(1) as f32;
+    for o in out.iter_mut() {
+        *o *= scale;
     }
 }
 
@@ -163,6 +265,170 @@ pub fn encode_stream(
         sink(b, &column);
     }
     bits
+}
+
+/// [`encode_stream`] sharded across the global [`crate::runtime::WorkerPool`]
+/// as a block pipeline, bit-identical to the serial driver at every shard
+/// count.
+///
+/// The caller thread walks blocks in plan order in waves of
+/// `shards × PAR_BLOCKS_PER_TASK`; each task gets a contiguous block range
+/// plus a clone of the selector pre-advanced ([`Xoshiro256::skip`]) to that
+/// range's start (every `encode_with` consumes exactly `n_is` selector
+/// draws, so the offset is `blocks × n_samples × n_is`). Workers encode out
+/// of long-lived thread-local scratch; the caller drains `sink(b, column)`
+/// in ascending block order after each wave, so downstream consumers (chunk
+/// trains, wire frames) see the exact serial emission order. Peak memory is
+/// O(block × shards). `shards <= 1` (or a trivial plan) falls through to the
+/// serial [`encode_stream`].
+///
+/// Must be called from a thread that is not itself a pool worker (batch jobs
+/// must not dispatch nested batches — see `runtime::pool`).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_stream_parallel(
+    n_is: usize,
+    n_samples: usize,
+    sel_seed: u64,
+    plan: &BlockPlan,
+    shards: usize,
+    stream_for: impl Fn(u64) -> Philox + Sync,
+    fill: impl Fn(usize, Range<usize>, &mut Vec<f32>, &mut Vec<f32>) + Sync,
+    mut sink: impl FnMut(usize, &[u32]),
+) -> u64 {
+    let n_blocks = plan.n_blocks();
+    if shards <= 1 || n_blocks <= 1 {
+        return encode_stream(n_is, n_samples, sel_seed, plan, stream_for, fill, sink);
+    }
+    let pool = crate::runtime::pool::global();
+    let codec = BlockCodec::new(n_is);
+    let draws_per_block = (n_samples * n_is) as u64;
+    let mut sel = Xoshiro256::new(sel_seed);
+    let wave_blocks = shards * PAR_BLOCKS_PER_TASK;
+    let mut bits = 0u64;
+    let mut b0 = 0usize;
+    let mut tasks: Vec<(usize, usize, Xoshiro256)> = Vec::with_capacity(shards);
+    while b0 < n_blocks {
+        let wave_end = (b0 + wave_blocks).min(n_blocks);
+        tasks.clear();
+        let mut t0 = b0;
+        while t0 < wave_end {
+            let t1 = (t0 + PAR_BLOCKS_PER_TASK).min(wave_end);
+            tasks.push((t0, t1, sel.clone()));
+            sel.skip(draws_per_block * (t1 - t0) as u64);
+            t0 = t1;
+        }
+        let cols: Vec<(Vec<u32>, u64)> = pool.run(shards, &tasks, |_, (s, e, sel0)| {
+            let mut sel = sel0.clone();
+            let mut col = Vec::with_capacity((e - s) * n_samples);
+            let mut task_bits = 0u64;
+            WORKER_SCRATCH.with(|cell| {
+                let ws = &mut *cell.borrow_mut();
+                for b in *s..*e {
+                    let r = plan.block(b);
+                    ws.q.clear();
+                    ws.p.clear();
+                    fill(b, r.clone(), &mut ws.q, &mut ws.p);
+                    debug_assert_eq!(ws.q.len(), r.len());
+                    debug_assert_eq!(ws.p.len(), r.len());
+                    let st = stream_for(b as u64);
+                    for ell in 0..n_samples {
+                        let out = codec.encode_with(
+                            &ws.q,
+                            &ws.p,
+                            &st,
+                            ell as u64,
+                            &mut sel,
+                            &mut ws.codec,
+                        );
+                        col.push(out.index);
+                        task_bits += out.bits;
+                    }
+                }
+            });
+            (col, task_bits)
+        });
+        for (t, (s, e, _)) in tasks.iter().enumerate() {
+            let (col, task_bits) = &cols[t];
+            for (k, b) in (*s..*e).enumerate() {
+                sink(b, &col[k * n_samples..(k + 1) * n_samples]);
+            }
+            bits += task_bits;
+        }
+        b0 = wave_end;
+    }
+    bits
+}
+
+/// The decode side of the block pipeline: decode every block's index column
+/// against its prior slice and reduce the per-entry mean to an `R`, sharded
+/// across the global pool. Returns one `R` per block in ascending block
+/// order, so any caller-side fold sees the serial order and f64
+/// accumulations stay bit-identical. `columns` is block-major:
+/// `columns[b*n_samples..(b+1)*n_samples]` is block `b`'s column. The
+/// decoder is stateless across blocks, so no selector bookkeeping is needed;
+/// `shards <= 1` runs the serial reference loop inline.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_stream_parallel<R: Send>(
+    n_is: usize,
+    n_samples: usize,
+    plan: &BlockPlan,
+    shards: usize,
+    columns: &[u32],
+    stream_for: impl Fn(u64) -> Philox + Sync,
+    fill_prior: impl Fn(usize, Range<usize>, &mut Vec<f32>) + Sync,
+    reduce: impl Fn(usize, &[f32]) -> R + Sync,
+) -> Vec<R> {
+    let n_blocks = plan.n_blocks();
+    assert_eq!(columns.len(), n_blocks * n_samples, "column matrix shape");
+    if shards <= 1 || n_blocks <= 1 {
+        let mut dec = StreamDecoder::new(n_is);
+        let mut p = Vec::new();
+        let mut out = Vec::new();
+        let mut reduced = Vec::with_capacity(n_blocks);
+        for b in 0..n_blocks {
+            let r = plan.block(b);
+            p.clear();
+            fill_prior(b, r.clone(), &mut p);
+            debug_assert_eq!(p.len(), r.len());
+            out.resize(r.len(), 0.0);
+            let column = &columns[b * n_samples..(b + 1) * n_samples];
+            dec.decode_block_mean(&p, &stream_for(b as u64), column, &mut out);
+            reduced.push(reduce(b, &out));
+        }
+        return reduced;
+    }
+    let pool = crate::runtime::pool::global();
+    let codec = BlockCodec::new(n_is);
+    let tasks: Vec<(usize, usize)> = (0..n_blocks)
+        .step_by(PAR_BLOCKS_PER_TASK)
+        .map(|s| (s, (s + PAR_BLOCKS_PER_TASK).min(n_blocks)))
+        .collect();
+    let per_task: Vec<Vec<R>> = pool.run(shards, &tasks, |_, (s, e)| {
+        let mut reduced = Vec::with_capacity(e - s);
+        WORKER_SCRATCH.with(|cell| {
+            let ws = &mut *cell.borrow_mut();
+            for b in *s..*e {
+                let r = plan.block(b);
+                ws.p.clear();
+                fill_prior(b, r.clone(), &mut ws.p);
+                debug_assert_eq!(ws.p.len(), r.len());
+                ws.out.resize(r.len(), 0.0);
+                let column = &columns[b * n_samples..(b + 1) * n_samples];
+                decode_block_mean_with(
+                    &codec,
+                    &ws.p,
+                    &stream_for(b as u64),
+                    column,
+                    &mut ws.out,
+                    &mut ws.q,
+                    &mut ws.codec,
+                );
+                reduced.push(reduce(b, &ws.out));
+            }
+        });
+        reduced
+    });
+    per_task.into_iter().flatten().collect()
 }
 
 #[cfg(test)]
@@ -272,6 +538,132 @@ mod tests {
             got[r].copy_from_slice(&out);
         }
         assert_eq!(got, mean);
+    }
+
+    #[test]
+    fn parallel_encode_matches_serial_at_every_shard_count() {
+        // Shard counts spanning the serial fall-through (1), an even split
+        // (2) and a ragged one (7); dimensions giving odd (777/64 ⇒ 13,
+        // non-dividing final block), even (640/64 ⇒ 10) and wave-boundary
+        // (1344/64 ⇒ 21 > one 2-shard wave of 16) block counts.
+        for d in [777usize, 640, 1344] {
+            let plan = BlockPlan::fixed(d, 64);
+            let q: Vec<f32> = (0..d).map(|e| param_at(e, 1)).collect();
+            let p: Vec<f32> = (0..d).map(|e| param_at(e, 2)).collect();
+            let (want, want_bits) = reference_encode(32, 3, 0x5ED5u64, &plan, &q, &p);
+            for shards in [1usize, 2, 7] {
+                let mut got = vec![vec![0u32; plan.n_blocks()]; 3];
+                let mut order = Vec::with_capacity(plan.n_blocks());
+                let bits = encode_stream_parallel(
+                    32,
+                    3,
+                    0x5ED5u64,
+                    &plan,
+                    shards,
+                    stream_for,
+                    |_b, r, qb, pb| {
+                        qb.extend_from_slice(&q[r.clone()]);
+                        pb.extend_from_slice(&p[r]);
+                    },
+                    |b, column| {
+                        order.push(b);
+                        for (ell, &idx) in column.iter().enumerate() {
+                            got[ell][b] = idx;
+                        }
+                    },
+                );
+                assert_eq!(got, want, "d={d} shards={shards}");
+                assert_eq!(bits, want_bits, "d={d} shards={shards}");
+                // The sink must drain in ascending block order — the wire
+                // emission contract of the chunk-train overlap.
+                assert_eq!(order, (0..plan.n_blocks()).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial_at_every_shard_count() {
+        let d = 777;
+        let plan = BlockPlan::fixed(d, 64);
+        let q: Vec<f32> = (0..d).map(|e| param_at(e, 3)).collect();
+        let p: Vec<f32> = (0..d).map(|e| param_at(e, 4)).collect();
+        let n_samples = 4;
+        let (indices, _) = reference_encode(16, n_samples, 99, &plan, &q, &p);
+        // Block-major column matrix, the shape decode_stream_parallel takes.
+        let columns: Vec<u32> = (0..plan.n_blocks())
+            .flat_map(|b| indices.iter().map(move |row| row[b]))
+            .collect();
+        let fill_prior = |_b: usize, r: Range<usize>, pb: &mut Vec<f32>| {
+            pb.extend_from_slice(&p[r]);
+        };
+        let reduce = |_b: usize, out: &[f32]| out.to_vec();
+        let want = decode_stream_parallel(
+            16, n_samples, &plan, 1, &columns, stream_for, fill_prior, reduce,
+        );
+        for shards in [2usize, 7] {
+            let got = decode_stream_parallel(
+                16, n_samples, &plan, shards, &columns, stream_for, fill_prior, reduce,
+            );
+            assert_eq!(got, want, "shards={shards}");
+        }
+        // And the serial reference itself matches the StreamDecoder loop.
+        let mut dec = StreamDecoder::new(16);
+        for b in 0..plan.n_blocks() {
+            let r = plan.block(b);
+            let column = &columns[b * n_samples..(b + 1) * n_samples];
+            let mut out = vec![0.0f32; r.len()];
+            dec.decode_block_mean(&p[r], &stream_for(b as u64), column, &mut out);
+            assert_eq!(out, want[b], "block {b}");
+        }
+    }
+
+    #[test]
+    fn panicking_block_task_propagates_and_pool_stays_usable() {
+        let d = 2048;
+        let plan = BlockPlan::fixed(d, 64);
+        let encode = |poison: bool| {
+            let mut cols = Vec::new();
+            let bits = encode_stream_parallel(
+                8,
+                1,
+                3,
+                &plan,
+                4,
+                stream_for,
+                |b, r, qb, pb| {
+                    assert!(!(poison && b == 17), "engineered fill failure");
+                    qb.extend(r.clone().map(|e| param_at(e, 5)));
+                    pb.extend(r.map(|e| param_at(e, 6)));
+                },
+                |_b, c| cols.extend_from_slice(c),
+            );
+            (cols, bits)
+        };
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| encode(true)));
+        assert!(boom.is_err(), "worker panic must re-raise on the caller");
+        // The global pool survives the poisoned batch: the same encode runs
+        // clean and still matches the serial reference.
+        let (cols, bits) = encode(false);
+        let q: Vec<f32> = (0..d).map(|e| param_at(e, 5)).collect();
+        let p: Vec<f32> = (0..d).map(|e| param_at(e, 6)).collect();
+        let (want, want_bits) = reference_encode(8, 1, 3, &plan, &q, &p);
+        assert_eq!(cols, want[0]);
+        assert_eq!(bits, want_bits);
+    }
+
+    #[test]
+    fn auto_shards_respects_knob_threshold_and_pool_width() {
+        let w = crate::runtime::pool::global().threads();
+        // Explicit knob wins at any dimension.
+        assert_eq!(auto_shards(16, Some(true)), w);
+        assert_eq!(auto_shards(PARALLEL_STREAM_MIN_D * 2, Some(false)), 1);
+        // Automatic: engaged at the threshold, serial below (this test keeps
+        // the env var unset — the env override is additive and panics on
+        // garbage, which a unit test cannot safely exercise process-wide).
+        if parallel_stream_env().is_none() {
+            assert_eq!(auto_shards(PARALLEL_STREAM_MIN_D, None), w);
+            assert_eq!(auto_shards(PARALLEL_STREAM_MIN_D - 1, None), 1);
+        }
     }
 
     #[test]

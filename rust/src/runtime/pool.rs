@@ -36,7 +36,18 @@
 //! blocked waiting for a sub-batch could deadlock the pool. The coordinators
 //! never nest — `run` is only called from coordinator threads, and the
 //! pipelining primitive [`WorkerPool::run_pair`] runs its second closure on
-//! the *caller* thread precisely so that closure may itself call `run`.
+//! the *caller* thread precisely so that closure may itself call `run`
+//! (which is also why the parallel streaming-MRC legs engage only on
+//! caller-thread encode sites, never inside a dispatched job).
+//!
+//! ## Worker longevity is API
+//!
+//! Because workers are spawned once and never replaced — not even after a
+//! panicking batch — `thread_local!` state observed from inside jobs is a
+//! legitimate per-worker cache: it survives across batches for the life of
+//! the process. `crate::mrc::stream`'s block pipeline leans on this for its
+//! zero-steady-state-allocation scratch (`workers_keep_thread_locals_warm`
+//! pins the property).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -413,6 +424,38 @@ mod tests {
             let par = pool.run(4, &jobs, work);
             assert_eq!(serial, par, "round={round}");
         }
+    }
+
+    #[test]
+    fn workers_keep_thread_locals_warm() {
+        // The block pipeline's per-worker scratch relies on workers being
+        // spawned once and never replaced: thread-local state seen from
+        // inside a job must still be there in later batches. Count, per
+        // observed thread, how many batches incremented its local — the set
+        // of threads must stay fixed and every local must keep growing.
+        thread_local! {
+            static HITS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+        }
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<u32> = (0..3).collect();
+        let batch = |_: usize, _: &u32| {
+            HITS.with(|h| h.set(h.get() + 1));
+            (std::thread::current().id(), HITS.with(|h| h.get()))
+        };
+        let mut seen: std::collections::HashMap<std::thread::ThreadId, u64> =
+            std::collections::HashMap::new();
+        for round in 1..=20u64 {
+            for (tid, hits) in pool.run(3, &jobs, batch) {
+                if let Some(prev) = seen.insert(tid, hits) {
+                    assert!(
+                        hits > prev,
+                        "round {round}: thread-local went backwards — worker was replaced"
+                    );
+                }
+            }
+        }
+        // Three workers + the caller (chunk 0 runs inline) bound the set.
+        assert!(seen.len() <= 4, "unexpected extra threads: {}", seen.len());
     }
 
     #[test]

@@ -256,6 +256,15 @@ pub struct FrameCodec {
     /// Queued-but-unwritten bytes; `out_pos` marks the drained prefix.
     out_buf: Vec<u8>,
     out_pos: usize,
+    /// Recycled frame-serialization scratch: every `enqueue_frame` /
+    /// chunked enqueue encodes into this buffer (via
+    /// [`Frame::encode_into`]), so once it has grown to the largest frame
+    /// seen, the send hot path performs zero per-frame heap allocation.
+    enc_buf: Vec<u8>,
+    /// Diagnostic: how many times an enqueue grew `out_buf` or `enc_buf`
+    /// capacity. Flat across a warmed-up steady state — the allocation
+    /// audit's observable (`steady_state_enqueue_does_not_allocate`).
+    grew: u64,
     sent: LinkMeter,
     received: LinkMeter,
 }
@@ -363,22 +372,52 @@ impl FrameCodec {
 
     /// Queue one `[tag][len][body]` control message (unmetered).
     fn enqueue_msg(&mut self, tag: u8, body: &[u8]) {
-        self.compact_out();
-        self.out_buf.push(tag);
-        self.out_buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        self.begin_msg(tag, body.len());
         self.out_buf.extend_from_slice(body);
     }
 
-    /// Queue one typed frame; returns its counted payload bits.
+    /// Write a `[tag][len]` message envelope directly into `out_buf` (after
+    /// compacting), leaving the caller to append exactly `body_len` bytes.
+    /// Tracks capacity growth for the allocation audit.
+    fn begin_msg(&mut self, tag: u8, body_len: usize) {
+        self.compact_out();
+        let before = self.out_buf.capacity();
+        self.out_buf.reserve(MSG_HEADER + body_len);
+        if self.out_buf.capacity() != before {
+            self.grew += 1;
+        }
+        self.out_buf.push(tag);
+        self.out_buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    }
+
+    /// How many times an enqueue has grown this codec's outbound buffers
+    /// (`out_buf` or the frame-encode scratch). The wire hot path's
+    /// allocation contract is that this stays flat once a steady state has
+    /// warmed both buffers to the largest message seen — the relay loop then
+    /// allocates nothing per frame.
+    pub fn buffer_growth_events(&self) -> u64 {
+        self.grew
+    }
+
+    /// Queue one typed frame; returns its counted payload bits. Serializes
+    /// into the codec's recycled scratch buffer — no per-frame allocation at
+    /// steady state.
     pub fn enqueue_frame(&mut self, frame: &Frame) -> u64 {
-        let (buf, bits) = frame.encode();
+        let scratch = std::mem::take(&mut self.enc_buf);
+        let before = scratch.capacity();
+        let (buf, bits) = frame.encode_into(scratch);
+        if buf.capacity() != before {
+            self.grew += 1;
+        }
         debug_assert_eq!(
             bits,
             frame.counted_bits(),
             "{} frame: wire bits != analytic counted bits",
             frame.kind_name()
         );
-        self.enqueue_frame_encoded(&buf, bits)
+        let out = self.enqueue_frame_encoded(&buf, bits);
+        self.enc_buf = buf;
+        out
     }
 
     /// Queue a frame already serialized by [`Frame::encode`] — the relay
@@ -405,15 +444,40 @@ impl FrameCodec {
     ///
     /// [`ChunkFrame`]: crate::transport::frame::ChunkFrame
     pub fn enqueue_frame_chunked(&mut self, frame: &Frame, chunk_slots: usize) -> u64 {
-        match crate::transport::frame::chunk_frames(frame, chunk_slots) {
-            Some(chunks) => chunks.iter().map(|c| self.enqueue_frame(c)).sum(),
-            None => self.enqueue_frame(frame),
+        // Serialize each window straight from the unsplit frame's borrowed
+        // rows (no owned ChunkFrame, no cloned index slices) into the
+        // recycled scratch buffer — byte-identical to encoding the owned
+        // chunks, pinned by `chunked_enqueue_is_bit_neutral_and_reassembles`
+        // and the window/owned byte-equality test in `frame`.
+        let mut scratch = Some(std::mem::take(&mut self.enc_buf));
+        let mut total = 0u64;
+        let chunked =
+            crate::transport::frame::for_each_chunk_window(frame, chunk_slots, |win| {
+                let buf = scratch.take().expect("scratch in flight");
+                let before = buf.capacity();
+                let (buf, bits) = win.encode_into(buf);
+                if buf.capacity() != before {
+                    self.grew += 1;
+                }
+                total += self.enqueue_frame_encoded(&buf, bits);
+                scratch = Some(buf);
+            });
+        self.enc_buf = scratch.take().expect("scratch returned");
+        if !chunked {
+            return self.enqueue_frame(frame);
         }
+        total
     }
 
     /// Queue the client hello (handshake step 1, client → federator).
+    /// Control bodies have statically known layouts, so they are written
+    /// straight into `out_buf` — no intermediate body `Vec` (the `*_body`
+    /// builders remain the layout reference and the test oracle).
     pub fn enqueue_hello(&mut self, id: u64) {
-        self.enqueue_msg(MSG_HELLO, &hello_body(id));
+        self.begin_msg(MSG_HELLO, 11);
+        self.out_buf.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
+        self.out_buf.push(HELLO_VERSION);
+        self.out_buf.extend_from_slice(&id.to_le_bytes());
     }
 
     /// Queue the handshake accept with the run-configuration body.
@@ -423,12 +487,19 @@ impl FrameCodec {
 
     /// Queue a handshake reject.
     pub fn enqueue_nack(&mut self, code: u8, detail: u64) {
-        self.enqueue_msg(MSG_NACK, &nack_body(code, detail));
+        self.begin_msg(MSG_NACK, 9);
+        self.out_buf.push(code);
+        self.out_buf.extend_from_slice(&detail.to_le_bytes());
     }
 
     /// Queue one round's realized cohort (unmetered, like ACK and BYE).
     pub fn enqueue_cohort(&mut self, round: u64, ids: &[u64]) {
-        self.enqueue_msg(MSG_COHORT, &cohort_body(round, ids));
+        self.begin_msg(MSG_COHORT, 12 + 8 * ids.len());
+        self.out_buf.extend_from_slice(&round.to_le_bytes());
+        self.out_buf.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            self.out_buf.extend_from_slice(&id.to_le_bytes());
+        }
     }
 
     /// Queue the graceful-shutdown message.
@@ -608,6 +679,62 @@ mod tests {
         assert_eq!(done.expect("reassembled"), frame);
         assert_eq!(rx.received().bits, plain_bits);
         assert_eq!(rx.received().frames, 3);
+    }
+
+    #[test]
+    fn direct_control_writes_match_the_body_builders() {
+        // The direct-write enqueues (no intermediate body Vec) must emit the
+        // exact bytes of the builder-based path; the `*_body` builders are
+        // the layout oracle.
+        let ids = [3u64, 7, u64::MAX - 1];
+        let mut direct = FrameCodec::new();
+        direct.enqueue_hello(42);
+        direct.enqueue_nack(NACK_BAD_HELLO, 0xDEAD_BEEF);
+        direct.enqueue_cohort(11, &ids);
+
+        let mut built = FrameCodec::new();
+        built.enqueue_msg(MSG_HELLO, &hello_body(42));
+        built.enqueue_msg(MSG_NACK, &nack_body(NACK_BAD_HELLO, 0xDEAD_BEEF));
+        built.enqueue_msg(MSG_COHORT, &cohort_body(11, &ids));
+
+        assert_eq!(direct.pending_out(), built.pending_out());
+    }
+
+    #[test]
+    fn steady_state_enqueue_does_not_allocate() {
+        // One "round" of mixed traffic: control messages plus plain and
+        // chunked frame sends, fully drained afterwards (the steady state of
+        // a healthy connection).
+        fn round(codec: &mut FrameCodec) {
+            codec.enqueue_hello(1);
+            codec.enqueue_ack(&[9; 32]);
+            codec.enqueue_frame(&sample_frame());
+            let big = Frame::Uplink(UplinkFrame {
+                client: 2,
+                round: 1,
+                bits_per_index: 7,
+                indices: vec![(0..40).collect(), (0..40).rev().collect()],
+                side: SideInfo::None,
+            });
+            codec.enqueue_frame_chunked(&big, 8);
+            codec.enqueue_cohort(3, &[0, 1, 2]);
+            codec.enqueue_bye();
+            let n = codec.pending_out().len();
+            codec.consume_out(n);
+        }
+
+        let mut codec = FrameCodec::new();
+        round(&mut codec);
+        round(&mut codec); // warm both out_buf and the encode scratch
+        let warmed = codec.buffer_growth_events();
+        for _ in 0..5 {
+            round(&mut codec);
+        }
+        assert_eq!(
+            codec.buffer_growth_events(),
+            warmed,
+            "steady-state enqueues grew a buffer"
+        );
     }
 
     #[test]

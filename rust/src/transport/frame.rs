@@ -453,8 +453,168 @@ impl ChunkFrame {
 /// share) yields one empty final chunk so the receiver still observes the
 /// message.
 pub fn chunk_frames(frame: &Frame, chunk_slots: usize) -> Option<Vec<Frame>> {
+    let mut out = Vec::new();
+    for_each_chunk_window(frame, chunk_slots, |win| out.push(win.to_frame()))
+        .then_some(out)
+}
+
+/// One chunk window of an MRC frame, borrowed from the unsplit message: the
+/// geometry [`chunk_frames`] materializes, without cloning the index slices.
+/// [`ChunkWindow::to_frame`] builds the owned [`ChunkFrame`];
+/// [`ChunkWindow::encode_into`] serializes byte-identically to
+/// `Frame::Chunk(that frame).encode()` with no intermediate clone — the
+/// codec's allocation-free chunked send path
+/// (`chunked_window_encode_matches_owned_chunk_encode` pins the
+/// byte-equality).
+pub(crate) struct ChunkWindow<'a> {
+    client: u64,
+    round: u64,
+    inner: u8,
+    bits_per_index: u8,
+    seq: u32,
+    last: bool,
+    slot0: usize,
+    end: usize,
+    /// Downlink only: the *full* block-id list (sliced per window).
+    blocks: Option<&'a [u32]>,
+    /// The full index matrix (rows sliced per window).
+    indices: &'a [Vec<u32>],
+}
+
+impl ChunkWindow<'_> {
+    /// The owned [`ChunkFrame`] this window describes.
+    pub(crate) fn to_frame(&self) -> Frame {
+        Frame::Chunk(ChunkFrame {
+            client: self.client,
+            round: self.round,
+            inner: self.inner,
+            seq: self.seq,
+            last: self.last,
+            bits_per_index: self.bits_per_index,
+            slot0: self.slot0 as u32,
+            blocks: self
+                .blocks
+                .map_or_else(Vec::new, |b| b[self.slot0..self.end].to_vec()),
+            indices: self
+                .indices
+                .iter()
+                .map(|r| r[self.slot0..self.end].to_vec())
+                .collect(),
+        })
+    }
+
+    /// Serialize into `buf` (recycled — see [`WireWriter::with_buf`]),
+    /// returning `(bytes, payload_bits)` exactly as
+    /// `self.to_frame().encode()` would.
+    pub(crate) fn encode_into(&self, buf: Vec<u8>) -> (Vec<u8>, u64) {
+        let mut w = WireWriter::with_buf(buf);
+        w.put_u16(MAGIC);
+        w.put_u8(VERSION);
+        w.put_u8(KIND_CHUNK);
+        w.put_u64(self.client);
+        w.put_u64(self.round);
+        encode_chunk_body(
+            &mut w,
+            self.inner,
+            self.last,
+            self.seq,
+            self.bits_per_index,
+            self.indices.len(),
+            self.slot0 as u32,
+            self.end - self.slot0,
+            self.blocks.map_or(&[][..], |b| &b[self.slot0..self.end]),
+            self.indices.iter().map(|r| &r[self.slot0..self.end]),
+        );
+        let bits = w.payload_bits();
+        (w.finish(), bits)
+    }
+}
+
+/// One uplink chunk covering block columns `slot0..end` of a full index
+/// matrix — the incremental emitter's form (the distributed client sends
+/// chunks as the parallel pipeline completes their blocks) of the windows
+/// [`chunk_frames`] produces. Built on [`ChunkWindow::to_frame`] so the
+/// chunk construction cannot drift from the batch splitter; the emitted
+/// train's equality with [`chunk_frames`] is pinned in
+/// `coordinator::distributed`'s tests.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn uplink_chunk(
+    client: u64,
+    round: u64,
+    bits_per_index: u8,
+    seq: u32,
+    last: bool,
+    slot0: usize,
+    end: usize,
+    indices: &[Vec<u32>],
+) -> Frame {
+    ChunkWindow {
+        client,
+        round,
+        inner: KIND_UPLINK,
+        bits_per_index,
+        seq,
+        last,
+        slot0,
+        end,
+        blocks: None,
+        indices,
+    }
+    .to_frame()
+}
+
+/// The `KIND_CHUNK` body layout, written identically whether the rows come
+/// from an owned [`ChunkFrame`] (full rows) or a [`ChunkWindow`] (borrowed
+/// row slices) — the one place the chunk wire format exists.
+#[allow(clippy::too_many_arguments)]
+fn encode_chunk_body<'a>(
+    w: &mut WireWriter,
+    inner: u8,
+    last: bool,
+    seq: u32,
+    bits_per_index: u8,
+    n_rows: usize,
+    slot0: u32,
+    n_slots: usize,
+    blocks: &[u32],
+    rows: impl Iterator<Item = &'a [u32]>,
+) {
+    w.put_u8(inner);
+    w.put_u8(last as u8);
+    w.put_u32(seq);
+    w.put_u8(bits_per_index);
+    w.put_u32(n_rows as u32);
+    w.put_u32(slot0);
+    w.put_u32(n_slots as u32);
+    if inner == KIND_DOWNLINK {
+        for &b in blocks {
+            w.put_u32(b);
+        }
+    }
+    w.begin_payload();
+    for row in rows {
+        for &idx in row {
+            w.put_bits(idx as u64, bits_per_index as u32);
+        }
+    }
+    w.end_payload();
+}
+
+/// Walk the chunk windows of `frame` at `chunk_slots` block columns per
+/// chunk — the single source of truth for chunk geometry (boundaries, seq,
+/// slot0, the final `last` flag) shared by [`chunk_frames`], the codec's
+/// allocation-free chunked enqueue, and the distributed client's incremental
+/// chunk-train emission. Returns `false` without calling `f` when the frame
+/// does not chunk: `chunk_slots == 0`, plan/model kinds, side-info-carrying
+/// uplinks, or a zero-row message (which has no per-row slot structure to
+/// slice — and a downlink's block ids would have nothing to align with).
+pub(crate) fn for_each_chunk_window(
+    frame: &Frame,
+    chunk_slots: usize,
+    mut f: impl FnMut(ChunkWindow<'_>),
+) -> bool {
     if chunk_slots == 0 {
-        return None;
+        return false;
     }
     let (client, round, inner, bpi, blocks, indices) = match frame {
         Frame::Uplink(u) if u.side == SideInfo::None => {
@@ -465,37 +625,37 @@ pub fn chunk_frames(frame: &Frame, chunk_slots: usize) -> Option<Vec<Frame>> {
             d.round,
             KIND_DOWNLINK,
             d.bits_per_index,
-            Some(&d.blocks),
+            Some(d.blocks.as_slice()),
             &d.indices,
         ),
-        _ => return None,
+        _ => return false,
     };
     if indices.is_empty() {
-        // A zero-row message has no per-row slot structure to slice (and a
-        // downlink's block ids would have nothing to align with): unchunked.
-        return None;
+        return false;
     }
     let n_slots = indices.first().map_or(0, |r| r.len());
-    let mut out = Vec::with_capacity(n_slots.div_ceil(chunk_slots).max(1));
     let mut slot0 = 0usize;
+    let mut seq = 0u32;
     loop {
         let end = (slot0 + chunk_slots).min(n_slots);
         let last = end == n_slots;
-        out.push(Frame::Chunk(ChunkFrame {
+        f(ChunkWindow {
             client,
             round,
             inner,
-            seq: out.len() as u32,
-            last,
             bits_per_index: bpi,
-            slot0: slot0 as u32,
-            blocks: blocks.map_or_else(Vec::new, |b| b[slot0..end].to_vec()),
-            indices: indices.iter().map(|r| r[slot0..end].to_vec()).collect(),
-        }));
+            seq,
+            last,
+            slot0,
+            end,
+            blocks,
+            indices,
+        });
         if last {
-            return Some(out);
+            return true;
         }
         slot0 = end;
+        seq += 1;
     }
 }
 
@@ -836,7 +996,15 @@ impl Frame {
     /// assert_eq!(Frame::decode(&buf), frame);
     /// ```
     pub fn encode(&self) -> (Vec<u8>, u64) {
-        let mut w = WireWriter::new();
+        self.encode_into(Vec::new())
+    }
+
+    /// [`Frame::encode`] into a recycled buffer: `buf` is cleared (capacity
+    /// kept) and returned as the serialized bytes. The frame codec's hot
+    /// path round-trips one scratch buffer through here so steady-state
+    /// sends allocate nothing.
+    pub fn encode_into(&self, buf: Vec<u8>) -> (Vec<u8>, u64) {
+        let mut w = WireWriter::with_buf(buf);
         w.put_u16(MAGIC);
         w.put_u8(VERSION);
         let (kind, client, round) = match self {
@@ -963,25 +1131,18 @@ impl Frame {
             Frame::Chunk(c) => {
                 debug_assert!(c.inner == KIND_UPLINK || c.inner == KIND_DOWNLINK);
                 debug_assert!(c.inner == KIND_DOWNLINK || c.blocks.is_empty());
-                w.put_u8(c.inner);
-                w.put_u8(c.last as u8);
-                w.put_u32(c.seq);
-                w.put_u8(c.bits_per_index);
-                w.put_u32(c.indices.len() as u32);
-                w.put_u32(c.slot0);
-                w.put_u32(c.n_slots() as u32);
-                if c.carries_downlink() {
-                    for &b in &c.blocks {
-                        w.put_u32(b);
-                    }
-                }
-                w.begin_payload();
-                for row in &c.indices {
-                    for &idx in row {
-                        w.put_bits(idx as u64, c.bits_per_index as u32);
-                    }
-                }
-                w.end_payload();
+                encode_chunk_body(
+                    &mut w,
+                    c.inner,
+                    c.last,
+                    c.seq,
+                    c.bits_per_index,
+                    c.indices.len(),
+                    c.slot0,
+                    c.n_slots(),
+                    &c.blocks,
+                    c.indices.iter().map(|r| r.as_slice()),
+                );
             }
         }
         let bits = w.payload_bits();
@@ -1582,6 +1743,50 @@ mod tests {
             }
             assert_eq!(done.expect("last chunk completes the message"), frame);
             assert!(!asm.in_progress());
+        });
+    }
+
+    #[test]
+    fn chunked_window_encode_matches_owned_chunk_encode() {
+        // The codec's allocation-free chunked send serializes borrowed
+        // windows directly; every window must produce the exact bytes (and
+        // counted bits) of encoding the owned ChunkFrame it describes.
+        run_prop("frame-chunk-window", 40, |rng, case| {
+            let bpi = 1 + rng.next_below(10) as u8;
+            let n_samples = 1 + rng.next_below(3);
+            let n_slots = 1 + rng.next_below(22);
+            let max = (1u32 << bpi) - 1;
+            let indices: Vec<Vec<u32>> = (0..n_samples)
+                .map(|_| (0..n_slots).map(|_| (rng.next_u64() as u32) & max).collect())
+                .collect();
+            let frame = if case % 2 == 0 {
+                Frame::Uplink(UplinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    indices,
+                    side: SideInfo::None,
+                })
+            } else {
+                Frame::Downlink(DownlinkFrame {
+                    client: rng.next_u64(),
+                    round: rng.next_u64(),
+                    bits_per_index: bpi,
+                    blocks: (0..n_slots).map(|s| s as u32 * 3 + 1).collect(),
+                    indices,
+                })
+            };
+            let chunk_slots = 1 + rng.next_below(8);
+            let mut windows = 0usize;
+            let chunked = for_each_chunk_window(&frame, chunk_slots, |win| {
+                let (direct, direct_bits) = win.encode_into(Vec::new());
+                let (owned, owned_bits) = win.to_frame().encode();
+                assert_eq!(direct, owned, "window bytes differ from owned chunk");
+                assert_eq!(direct_bits, owned_bits);
+                windows += 1;
+            });
+            assert!(chunked);
+            assert_eq!(windows, n_slots.div_ceil(chunk_slots));
         });
     }
 

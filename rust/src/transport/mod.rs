@@ -33,6 +33,16 @@
 //!   event-driven many-client federator multiplexes with, built on the
 //!   fd-free framing state machine in [`codec`].
 //!
+//! ## Allocation contract of the send hot path
+//!
+//! The serializing paths recycle their buffers: [`codec::FrameCodec`] owns
+//! one frame-encode scratch (threaded through [`Frame::encode_into`] and the
+//! borrowed chunk windows of [`frame::chunk_frames`]'s geometry) plus its
+//! outbound queue, so a warmed-up connection performs **zero per-frame heap
+//! allocations** — growth only while a buffer first stretches to the largest
+//! message seen. [`codec::FrameCodec::buffer_growth_events`] counts those
+//! stretches; the steady-state test pins the counter flat across rounds.
+//!
 //! `BICOMPFL_TRANSPORT` selects the path for every coordinator and baseline
 //! (see [`TransportKind`]): unset or `loopback` is zero-copy, `framed`
 //! serializes in process, `socket` carries every frame through a kernel

@@ -70,8 +70,18 @@ impl Default for WireWriter {
 impl WireWriter {
     /// An empty writer.
     pub fn new() -> Self {
+        Self::with_buf(Vec::new())
+    }
+
+    /// A writer recycling `buf`'s allocation: the buffer is cleared (its
+    /// capacity kept) and handed back by [`WireWriter::finish`]. This is the
+    /// wire hot path's form — a codec that round-trips one scratch buffer
+    /// through `with_buf`/`finish` encodes frames with zero steady-state
+    /// allocation once the buffer has grown to the largest frame seen.
+    pub fn with_buf(mut buf: Vec<u8>) -> Self {
+        buf.clear();
         Self {
-            buf: Vec::new(),
+            buf,
             acc: 0,
             nacc: 0,
             payload_bits: 0,

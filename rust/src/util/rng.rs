@@ -64,6 +64,19 @@ impl Xoshiro256 {
         result
     }
 
+    /// Advance the state by `n` draws of [`Self::next_u64`], discarding the
+    /// outputs. Every derived draw (`next_f32`, `next_f64`, `next_below`)
+    /// consumes exactly one `next_u64` except `next_normal` (two), so callers
+    /// that know a consumer's draw count can fast-forward a cloned generator
+    /// to any point in the stream — the basis of the parallel block pipeline
+    /// in [`crate::mrc::stream`], where each block consumes a fixed
+    /// `n_samples × n_is` selector draws.
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
+
     /// Uniform f32 in [0, 1) with 24 bits of mantissa entropy.
     #[inline]
     pub fn next_f32(&mut self) -> f32 {

@@ -576,6 +576,52 @@ fn chunked_wire_is_bit_identical_across_all_transports() {
     }
 }
 
+/// The parallel block pipeline must be invisible everywhere the serial
+/// streaming encoder is pinned: same records, same models, same wire bits,
+/// over every serialized wire kind and combined with chunked frames (the
+/// chunk-train emission rides the pipeline's in-order sink).
+#[test]
+fn parallel_stream_is_bit_identical_across_all_transports() {
+    for variant in [
+        Variant::Gr,
+        Variant::GrReconst,
+        Variant::Pr,
+        Variant::PrSplitDl,
+    ] {
+        let run = |kind: &str, parallel: bool, chunk_blocks: usize| {
+            let d = 192;
+            let n = 4;
+            let mut c = cfg(variant);
+            c.parallel_stream = Some(parallel);
+            c.chunk_blocks = chunk_blocks;
+            let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
+            let mut alg = BiCompFl::new(d, n, c)
+                .with_engine(ParallelRoundEngine::with_shards(4))
+                .with_transport(make_transport(kind));
+            let recs = alg.run(&mut oracle, 4, 1);
+            let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+            (recs, alg.global_model().to_vec(), clients)
+        };
+        for chunk_blocks in [0usize, 3] {
+            let reference = run("loopback", false, chunk_blocks);
+            assert_eq!(
+                reference,
+                run("loopback", true, chunk_blocks),
+                "{}: loopback drifted under the parallel pipeline (cb={chunk_blocks})",
+                variant.label()
+            );
+            for kind in WIRE_KINDS {
+                assert_eq!(
+                    reference,
+                    run(kind, true, chunk_blocks),
+                    "{}: {kind} wire drifted under the parallel pipeline (cb={chunk_blocks})",
+                    variant.label()
+                );
+            }
+        }
+    }
+}
+
 /// Adaptive allocation puts real signalling bits into the plan frames
 /// (per-block boundaries for Adaptive, single renegotiated sizes for
 /// Adaptive-Avg); the serialized wire paths must carry them bit-exactly too.

@@ -42,9 +42,22 @@ SCHEMA = "bicompfl-bench-round/v1"
 # `BiCompFL-PR [chunked wire]` label, gated against "loopback" like the
 # other wire cases); "materialized" vs "stream" is the large-d MRC encode
 # comparison (`MRC encode [stream large-d]`): d-length parameter buffers
-# versus the O(block)-memory streaming encoder over identical draws.
-BASELINE_ENGINES = ("serial", "pooled-seq", "loopback", "materialized")
-CONTENDER_ENGINES = ("pooled", "staged", "framed", "socket", "tcp", "faulty", "chunked", "stream")
+# versus the O(block)-memory streaming encoder over identical draws;
+# "serial-stream" vs "parallel-stream" is the same streaming encode run
+# single-threaded versus fanned across the worker pool in block waves
+# (`MRC encode [parallel stream]`) — identical columns, wall clock split.
+BASELINE_ENGINES = ("serial", "pooled-seq", "loopback", "materialized", "serial-stream")
+CONTENDER_ENGINES = (
+    "pooled",
+    "staged",
+    "framed",
+    "socket",
+    "tcp",
+    "faulty",
+    "chunked",
+    "stream",
+    "parallel-stream",
+)
 
 
 def load_record(path):

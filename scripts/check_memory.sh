@@ -11,15 +11,23 @@
 # regression signal: if this script starts failing, something on the encode
 # or decode path began allocating per-entry instead of per-block.
 #
+# With SMOKE_THREADS > 0 the smoke shards the block pipeline that wide
+# across the worker pool: each worker holds its own O(block) scratch, so the
+# bound becomes O(block × workers) and the caller should raise the ceiling
+# proportionally (the CI job runs a second pass at 4 threads under 192 MiB).
+# Output is bit-identical to the serial pass at every width.
+#
 # Usage: scripts/check_memory.sh [BINARY]
 #   BINARY        path to the bicompfl binary (default target/release/bicompfl)
 #   MEM_CEILING_KB  override the ceiling, in KiB (default 131072 = 128 MiB)
 #   SMOKE_D         override the streamed dimension (default 10000000)
+#   SMOKE_THREADS   shard the block pipeline this wide (default 0 = serial)
 set -euo pipefail
 
 BIN="${1:-target/release/bicompfl}"
 CEILING_KB="${MEM_CEILING_KB:-131072}"
 D="${SMOKE_D:-10000000}"
+THREADS="${SMOKE_THREADS:-0}"
 
 if [ ! -x "$BIN" ]; then
     echo "error: $BIN not found or not executable (build with: cargo build --release)" >&2
@@ -34,7 +42,7 @@ log=$(mktemp)
 trap 'rm -f "$log"' EXIT
 
 # GNU time writes its report to stderr; keep the program's stdout visible.
-/usr/bin/time -v -o "$log" "$BIN" mrc-smoke --d "$D" | tee smoke_out.txt
+/usr/bin/time -v -o "$log" "$BIN" mrc-smoke --d "$D" --threads "$THREADS" | tee smoke_out.txt
 
 # The smoke must actually have completed (wire bits == analytic bits is
 # asserted inside the binary; this line only prints after that check).
@@ -48,7 +56,7 @@ if [ -z "$peak_kb" ]; then
     exit 2
 fi
 
-echo "peak RSS: ${peak_kb} KiB (ceiling: ${CEILING_KB} KiB, d=${D})"
+echo "peak RSS: ${peak_kb} KiB (ceiling: ${CEILING_KB} KiB, d=${D}, threads=${THREADS})"
 if [ "$peak_kb" -gt "$CEILING_KB" ]; then
     echo "FAIL: peak RSS ${peak_kb} KiB exceeds the ${CEILING_KB} KiB ceiling —" \
          "the O(block) memory bound of the streaming MRC path has regressed." >&2
