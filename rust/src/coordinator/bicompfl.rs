@@ -11,11 +11,15 @@
 use std::sync::Arc;
 
 use super::oracle::{MaskOracle, ShardedMaskOracle};
-use super::shared_rand::{mrc_stream, private_seed, Direction};
+use super::shared_rand::{private_seed, Direction};
 use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::{AllocationStrategy, BlockPlan};
 use crate::mrc::codec::{BlockCodec, EncodeScratch};
 use crate::mrc::kl;
+use crate::prss::{
+    client_keys, federator_link_keys, IndexedSharedRandomness, SeedMode,
+    SETUP_WIRE_BYTES_PER_CLIENT,
+};
 use crate::runtime::ParallelRoundEngine;
 use crate::transport::{
     self, channel, DownlinkFrame, Frame, Leg, PlanFrame, SideInfo, Transport, TransportStats,
@@ -117,17 +121,16 @@ impl DlJob {
         let codec = BlockCodec::new(self.n_is);
         let mut sel = Xoshiro256::new(self.sel_seed);
         let mut scratch = EncodeScratch::default();
+        let rand = IndexedSharedRandomness::new(self.seed).link(
+            self.round,
+            self.client as u64,
+            Direction::Downlink,
+        );
         // -- federator side: encode (selector order: block-major) ----------
         let mut indices = vec![vec![0u32; self.blocks.len()]; self.n_dl];
         for (slot, &b) in self.blocks.iter().enumerate() {
             let r = self.plan.block(b);
-            let stream = mrc_stream(
-                self.seed,
-                self.round,
-                self.client as u64,
-                b as u64,
-                Direction::Downlink,
-            );
+            let stream = rand.stream(b as u64);
             for (ell, row) in indices.iter_mut().enumerate() {
                 let out = codec.encode_with(
                     &self.theta[r.clone()],
@@ -164,13 +167,7 @@ impl DlJob {
         let mut est = self.prior.clone();
         for (slot, &b) in dl_rx.blocks.iter().enumerate() {
             let r = plan_rx.block(b as usize);
-            let stream = mrc_stream(
-                self.seed,
-                self.round,
-                self.client as u64,
-                b as u64,
-                Direction::Downlink,
-            );
+            let stream = rand.stream(u64::from(b));
             let mut mean = vec![0.0f32; r.len()];
             let mut buf = vec![0.0f32; r.len()];
             for (ell, row) in dl_rx.indices.iter().enumerate() {
@@ -276,6 +273,14 @@ pub struct BiCompFlConfig {
     /// is bit-identical to the serial encoder at every thread count, pinned
     /// by the determinism suite.
     pub parallel_stream: Option<bool>,
+    /// How the parties come to hold the shared seed ([`crate::prss`]):
+    /// ambient config (free, unmetered — the historical behavior) or
+    /// negotiated over the per-client X25519 + HKDF key exchange. Negotiated
+    /// runs execute the real exchange once per client, recover exactly this
+    /// config's seed (records stay bit-identical), and charge each client's
+    /// key-exchange wire bytes to the transport's distinct setup meter. The
+    /// default comes from `BICOMPFL_SEED_MODE` (unset ⇒ ambient).
+    pub seed_mode: SeedMode,
 }
 
 /// The `BICOMPFL_CHUNK` environment default for
@@ -305,6 +310,7 @@ impl Default for BiCompFlConfig {
             lambda: 1.0,
             chunk_blocks: env_chunk_blocks(),
             parallel_stream: None,
+            seed_mode: SeedMode::from_env_or_die(),
         }
     }
 }
@@ -340,6 +346,9 @@ pub struct BiCompFl {
     /// The chokepoint every counted bit crosses (`BICOMPFL_TRANSPORT`
     /// selects loopback or framed; the records are identical either way).
     transport: Arc<dyn Transport>,
+    /// Whether the negotiated seed establishment already ran (the handshake
+    /// happens once per instance, not once per `run`/`round` call).
+    setup_done: bool,
 }
 
 impl BiCompFl {
@@ -358,7 +367,29 @@ impl BiCompFl {
             last_cohort: Cohort::Full,
             engine: ParallelRoundEngine::auto(),
             transport: transport::from_env_or_die(),
+            setup_done: false,
             cfg,
+        }
+    }
+
+    /// Establish the shared seed when the config asks for negotiation: run
+    /// the real per-client X25519 + HKDF exchange (each client must recover
+    /// *exactly* the configured seed — asserted, so negotiated records are
+    /// bit-identical to ambient ones by construction) and charge each
+    /// client's key-exchange wire bytes to the transport's distinct setup
+    /// meter. Runs once per instance — the handshake happens once.
+    fn establish_seed(&mut self) {
+        if self.setup_done || self.cfg.seed_mode != SeedMode::Negotiated {
+            return;
+        }
+        self.setup_done = true;
+        for i in 0..self.n as u64 {
+            let fed = federator_link_keys(i);
+            let cli = client_keys(i);
+            let wire = fed.mask_seed(&cli.public(), self.cfg.seed);
+            let recovered = cli.unmask_seed(&fed.public(), wire);
+            assert_eq!(recovered, self.cfg.seed, "negotiated seed drifted for client {i}");
+            self.transport.record_setup(SETUP_WIRE_BYTES_PER_CLIENT);
         }
     }
 
@@ -438,11 +469,12 @@ impl BiCompFl {
         let codec = BlockCodec::new(n_is);
         let mut sel = Xoshiro256::new(sel_seed);
         let mut scratch = EncodeScratch::default();
+        let rand = IndexedSharedRandomness::new(seed).link(round, client, dir);
         let mut bits = 0u64;
         let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
         for b in 0..plan.n_blocks() {
             let r = plan.block(b);
-            let stream = mrc_stream(seed, round, client, b as u64, dir);
+            let stream = rand.stream(b as u64);
             for (ell, row) in indices.iter_mut().enumerate() {
                 let out = codec.encode_with(
                     &q[r.clone()],
@@ -484,6 +516,7 @@ impl BiCompFl {
                 n_is, round, q, prior, plan, seed, client, n_samples, dir, sel_seed,
             );
         }
+        let rand = IndexedSharedRandomness::new(seed).link(round, client, dir);
         let mut indices = vec![vec![0u32; plan.n_blocks()]; n_samples];
         let bits = crate::mrc::encode_stream_parallel(
             n_is,
@@ -491,7 +524,7 @@ impl BiCompFl {
             sel_seed,
             plan,
             shards,
-            |b| mrc_stream(seed, round, client, b, dir),
+            |b| rand.stream(b),
             |_, r, qb, pb| {
                 qb.extend_from_slice(&q[r.clone()]);
                 pb.extend_from_slice(&prior[r]);
@@ -506,10 +539,11 @@ impl BiCompFl {
     }
 
     /// Deterministic per-(round, client, direction) seed for the encoder's
-    /// private Gumbel selector — parallel encode == serial encode. Shares
-    /// the derivation with every other coordinator (`shared_rand`).
+    /// private Gumbel selector — parallel encode == serial encode. Drawn
+    /// from the [`IndexedSharedRandomness`] surface every coordinator
+    /// shares (bit-identical to the historical `shared_rand` derivation).
     fn sel_seed(&self, client: u64, dir: Direction) -> u64 {
-        super::shared_rand::selector_seed(self.cfg.seed, self.round, client, dir)
+        IndexedSharedRandomness::new(self.cfg.seed).selector(self.round, client, dir)
     }
 
     /// Decode `indices` into the mean of the reconstructed samples.
@@ -527,12 +561,13 @@ impl BiCompFl {
     ) -> Vec<f32> {
         let codec = BlockCodec::new(n_is);
         let mut scratch = EncodeScratch::default();
+        let rand = IndexedSharedRandomness::new(seed).link(round, client, dir);
         let mut mean = vec![0.0f32; prior.len()];
         let mut buf = vec![0.0f32; prior.len()];
         for (ell, row) in indices.iter().enumerate() {
             for b in 0..plan.n_blocks() {
                 let r = plan.block(b);
-                let stream = mrc_stream(seed, round, client, b as u64, dir);
+                let stream = rand.stream(b as u64);
                 codec.decode_with(
                     &prior[r.clone()],
                     &stream,
@@ -585,6 +620,7 @@ impl BiCompFl {
     /// concurrent view (and the engine is parallel); otherwise it runs
     /// serially — either way the results are bit-identical.
     pub fn round(&mut self, oracle: &mut dyn MaskOracle) -> MaskRoundBits {
+        self.establish_seed();
         let use_sharded = self.engine.is_parallel() && oracle.sharded().is_some();
         if use_sharded {
             let sh = oracle.sharded().expect("sharded view vanished");
@@ -1015,6 +1051,7 @@ impl BiCompFl {
         rounds: usize,
         eval_every: usize,
     ) -> Vec<RoundRecord> {
+        self.establish_seed();
         let meter_start = self.transport.stats();
         let pipelined = self.engine.is_parallel() && oracle.sharded().is_some();
         let out = if pipelined {
@@ -1394,6 +1431,36 @@ mod tests {
             assert_eq!(recs_serial, recs_par, "{} records drift in parallel", v.label());
             assert_eq!(theta_serial, theta_par, "{} model drifts in parallel", v.label());
         }
+    }
+
+    #[test]
+    fn negotiated_seed_mode_is_bit_identical_and_meters_setup() {
+        // Seed negotiation is a *transport* event, not a math event: the
+        // exchange recovers exactly the ambient seed, so every record and
+        // the final model match bit for bit — and the key-exchange bytes
+        // land in the meters' distinct setup category, never in the round
+        // totals.
+        let run = |mode: SeedMode| {
+            let mut c = cfg(Variant::Gr);
+            c.seed_mode = mode;
+            let mut oracle = SyntheticMaskOracle::new(256, 4, 42, 0.1);
+            let mut alg = BiCompFl::new(256, 4, c);
+            let recs = alg.run(&mut oracle, 3, 1);
+            (recs, alg.global_model().to_vec(), alg.transport_stats())
+        };
+        let (recs_a, theta_a, stats_a) = run(SeedMode::Ambient);
+        let (recs_n, theta_n, stats_n) = run(SeedMode::Negotiated);
+        assert_eq!(recs_a, recs_n, "negotiated records drift from ambient");
+        assert_eq!(theta_a, theta_n, "negotiated model drifts from ambient");
+        assert_eq!(stats_a.setup_bits, 0);
+        assert_eq!(stats_a.setup_wire_bytes, 0);
+        assert_eq!(stats_n.setup_wire_bytes, 4 * SETUP_WIRE_BYTES_PER_CLIENT);
+        assert_eq!(stats_n.setup_bits, 8 * stats_n.setup_wire_bytes);
+        assert_eq!(
+            stats_a.total_bits(),
+            stats_n.total_bits(),
+            "setup must stay out of the round-bit totals"
+        );
     }
 
     #[test]

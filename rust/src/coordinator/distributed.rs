@@ -40,6 +40,17 @@
 //! reassembly is bit-identical to the whole frame (chunking is bit-neutral,
 //! so all the accounting bars below hold unchanged).
 //!
+//! With [`RunOpts::seed_mode`] = [`SeedMode::Negotiated`] (CLI
+//! `--seed-mode`, env `BICOMPFL_SEED_MODE`) the handshake gains a metered
+//! key-exchange step: the ACK's seed field travels zeroed, each client
+//! sends its ephemeral X25519 public key (`MSG_KEYX_PUB`) and the federator
+//! answers with its link key plus the HKDF-masked seed (`MSG_KEYX_SEED`),
+//! so the client recovers *exactly* the ambient seed — records are
+//! bit-identical to ambient runs by construction, and the key-exchange
+//! bytes land in the meters' distinct setup category
+//! (`setup_bits == 8 × setup_wire_bytes`, asserted at run end). See
+//! [`crate::prss`].
+//!
 //! ## Protocol (per round, after the HELLO/ACK handshake)
 //!
 //! 1. every client trains locally, MRC-encodes its posterior against the
@@ -83,11 +94,12 @@ use std::time::{Duration, Instant};
 
 use super::bicompfl::BiCompFl;
 use super::oracle::{MaskOracle, SyntheticMaskOracle};
-use super::shared_rand::{mrc_stream, selector_seed, Direction};
+use super::shared_rand::Direction;
 use crate::algorithms::runner::{Cohort, RoundRecord};
 use crate::mrc::block::BlockPlan;
 use crate::mrc::codec::BlockCodec;
 use crate::mrc::kl;
+use crate::prss::{client_keys, federator_link_keys, IndexedSharedRandomness, SeedMode};
 use crate::transport::socket::{
     accept_clients, accept_clients_deadline, bind, connect_client, FrameStream, LinkMeter, Msg,
     Result, TransportError, HANDSHAKE_TIMEOUT, NACK_BAD_HELLO, NACK_STALE_ID,
@@ -138,6 +150,11 @@ pub struct RunSpec {
     /// each (0 = whole frames). Bit-neutral and bit-identical — records
     /// match the unchunked run exactly (pinned by the determinism suite).
     pub chunk_blocks: u32,
+    /// How the shared seed was established ([`SeedMode`] as a wire u32):
+    /// 0 = ambient config, 1 = negotiated over the metered key exchange.
+    /// In negotiated mode the ACK carries `seed = 0` on the wire and the
+    /// real seed arrives masked in the `MSG_KEYX_SEED` step.
+    pub seed_mode: u32,
 }
 
 impl Default for RunSpec {
@@ -158,12 +175,13 @@ impl Default for RunSpec {
             theta_clamp: 0.05,
             heterogeneity: 0.1,
             chunk_blocks: 0,
+            seed_mode: SeedMode::Ambient as u32,
         }
     }
 }
 
 /// Encoded byte length of a [`RunSpec`].
-const SPEC_BYTES: usize = 8 * 4 + 2 * 8 + 4 * 4 + 4;
+const SPEC_BYTES: usize = 8 * 4 + 2 * 8 + 4 * 4 + 4 + 4;
 
 impl RunSpec {
     /// Serialize to the fixed-width little-endian ACK body.
@@ -187,6 +205,7 @@ impl RunSpec {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out.extend_from_slice(&self.chunk_blocks.to_le_bytes());
+        out.extend_from_slice(&self.seed_mode.to_le_bytes());
         debug_assert_eq!(out.len(), SPEC_BYTES);
         out
     }
@@ -219,6 +238,7 @@ impl RunSpec {
             theta_clamp: f32_at(56),
             heterogeneity: f32_at(60),
             chunk_blocks: u32_at(64),
+            seed_mode: u32_at(68),
         };
         spec.validate()?;
         Ok(spec)
@@ -238,7 +258,25 @@ impl RunSpec {
                 self.n_is, self.block_size, self.n_ul
             ));
         }
+        if self.seed_mode > SeedMode::Negotiated as u32 {
+            return bad(format!("unknown seed mode {}", self.seed_mode));
+        }
         Ok(())
+    }
+
+    /// Whether this run establishes its seed over the metered key exchange.
+    fn negotiated(&self) -> bool {
+        self.seed_mode == SeedMode::Negotiated as u32
+    }
+
+    /// The ACK wire form of this spec: in negotiated mode the ambient seed
+    /// field is zeroed — the real seed only ever travels masked.
+    fn ack_spec(&self) -> RunSpec {
+        let mut s = *self;
+        if s.negotiated() {
+            s.seed = 0;
+        }
+        s
     }
 
     fn initial_theta(&self) -> Vec<f32> {
@@ -284,6 +322,13 @@ pub struct RunOpts {
     /// `spec.seed` and the round, so a rerun realizes the same cohorts).
     /// `None` (or m = n) keeps full participation.
     pub cohort: Option<usize>,
+    /// How the shared seed is established: ambient config (the historical
+    /// default) or the metered key exchange. Defaults to the
+    /// `BICOMPFL_SEED_MODE` selection, so every harness honors the env
+    /// knob without plumbing. [`federate`] stamps the choice into the
+    /// spec; [`participate`] adopts whatever mode the federator's ACK
+    /// names (its own copy of this field is not consulted).
+    pub seed_mode: SeedMode,
 }
 
 impl Default for RunOpts {
@@ -293,6 +338,7 @@ impl Default for RunOpts {
             faults: FaultSpec::none(),
             deadline: None,
             cohort: None,
+            seed_mode: SeedMode::from_env_or_die(),
         }
     }
 }
@@ -348,6 +394,7 @@ fn encode_uplink(
     theta: &[f32],
 ) -> (PlanFrame, UplinkFrame) {
     let plan = BlockPlan::fixed(spec.d as usize, spec.block_size as usize);
+    let isr = IndexedSharedRandomness::new(spec.seed);
     let (indices, _bits) = BiCompFl::encode_vector_at(
         spec.n_is as usize,
         round,
@@ -358,7 +405,7 @@ fn encode_uplink(
         client,
         spec.n_ul as usize,
         Direction::Uplink,
-        selector_seed(spec.seed, round, client, Direction::Uplink),
+        isr.selector(round, client, Direction::Uplink),
     );
     (
         PlanFrame::from_plan(client, round, &plan),
@@ -399,6 +446,8 @@ fn encode_uplink_streamed(
     let n_ul = spec.n_ul as usize;
     let n_blocks = plan.n_blocks();
     let bpi = BlockCodec::new(spec.n_is as usize).index_bits() as u8;
+    let isr = IndexedSharedRandomness::new(spec.seed);
+    let rand = isr.link(round, client, Direction::Uplink);
     let mut indices = vec![vec![0u32; n_blocks]; n_ul];
     let mut emitted = 0usize;
     let mut seq = 0u32;
@@ -406,10 +455,10 @@ fn encode_uplink_streamed(
     crate::mrc::encode_stream_parallel(
         spec.n_is as usize,
         n_ul,
-        selector_seed(spec.seed, round, client, Direction::Uplink),
+        isr.selector(round, client, Direction::Uplink),
         plan,
         shards,
-        |b| mrc_stream(spec.seed, round, client, b, Direction::Uplink),
+        |b| rand.stream(b),
         |_, r, qb, pb| {
             qb.extend_from_slice(&q[r.clone()]);
             pb.extend_from_slice(&theta[r]);
@@ -688,6 +737,10 @@ fn partition_cohort(
 /// [`NetAddr::Tcp`] federator is always the event-driven cohort loop (one
 /// thread, `poll(2)` readiness, no per-connection threads).
 pub fn federate(at: &NetAddr, opts: &RunOpts) -> Result<FederatorRun> {
+    // The seed-mode knob is stamped into the spec here, so the ACK (and
+    // every client) names the mode the federator actually runs.
+    let mut opts = opts.clone();
+    opts.spec.seed_mode = opts.seed_mode as u32;
     opts.spec.validate()?;
     if let Some(m) = opts.cohort {
         if m == 0 || m > opts.spec.n as usize {
@@ -699,8 +752,8 @@ pub fn federate(at: &NetAddr, opts: &RunOpts) -> Result<FederatorRun> {
     }
     match at {
         NetAddr::Unix(path) if opts.is_strict() => federate_unix_strict(path, &opts.spec),
-        NetAddr::Unix(path) => federate_unix_tolerant(path, opts),
-        NetAddr::Tcp(addr) => federate_tcp(addr, opts),
+        NetAddr::Unix(path) => federate_unix_tolerant(path, &opts),
+        NetAddr::Tcp(addr) => federate_tcp(addr, &opts),
     }
 }
 
@@ -711,13 +764,24 @@ pub fn federate(at: &NetAddr, opts: &RunOpts) -> Result<FederatorRun> {
 /// holds. The client's own link faults (if any) are injected on the send
 /// side through [`FaultyStream`]. Returns after the federator's BYE.
 pub fn participate(at: &NetAddr, id: u64, opts: &RunOpts) -> Result<()> {
-    let (stream, ack) = match at {
+    let (mut stream, ack) = match at {
         NetAddr::Unix(path) => connect_client(path, id)?,
         NetAddr::Tcp(addr) => connect_client_tcp(addr, id)?,
     };
-    let (spec, cohort_proto) = parse_ack(&ack)?;
+    let (mut spec, cohort_proto) = parse_ack(&ack)?;
     if id >= spec.n as u64 {
         return Err(TransportError::StaleClient { id });
+    }
+    if spec.negotiated() {
+        // The ACK's seed field is zeroed on the wire; recover the real
+        // seed from the masked key-exchange answer. Both messages land on
+        // this stream's setup meters, and the exchange runs before the
+        // fault gauntlet wraps the stream — establishment is handshake,
+        // not round traffic.
+        let keys = client_keys(id);
+        stream.send_keyx_pub(&keys.public())?;
+        let (fed_pub, masked) = stream.recv_keyx_seed()?;
+        spec.seed = keys.unmask_seed(&fed_pub, masked);
     }
     let fstream = FaultyStream::new(
         stream,
@@ -745,12 +809,28 @@ fn parse_ack(ack: &[u8]) -> Result<(RunSpec, bool)> {
     )))
 }
 
-/// The strict blocking federator (Unix-domain sockets, PR 4's loop).
+/// The federator's half of the seed establishment on one blocking stream:
+/// receive the client's ephemeral public key, answer with this link's key
+/// and the masked seed. Every byte of both messages lands on the stream's
+/// setup meters. Establishment is part of the handshake, so a client
+/// failing here fails the run — tolerance starts at round 0.
+fn negotiate_seed(stream: &mut FrameStream, client: u64, seed: u64) -> Result<()> {
+    let peer = stream.recv_keyx_pub()?;
+    let fed = federator_link_keys(client);
+    stream.send_keyx_seed(&fed.public(), fed.mask_seed(&peer, seed))
+}
+
+/// The strict blocking federator (PR 4's loop).
 fn federate_unix_strict(sock: &Path, spec: &RunSpec) -> Result<FederatorRun> {
     let n = spec.n as usize;
     let listener = bind(sock)?;
-    let mut streams = accept_clients(&listener, n, &spec.encode())?;
+    let mut streams = accept_clients(&listener, n, &spec.ack_spec().encode())?;
     crate::info!("federator: {} clients connected", n);
+    if spec.negotiated() {
+        for (i, stream) in streams.iter_mut().enumerate() {
+            negotiate_seed(stream, i as u64, spec.seed)?;
+        }
+    }
 
     let mut oracle = spec.oracle();
     let mut theta = spec.initial_theta();
@@ -839,9 +919,13 @@ fn sum_meters(recv: &mut LinkMeter, sent: &mut LinkMeter, r: LinkMeter, s: LinkM
     recv.frames += r.frames;
     recv.bits += r.bits;
     recv.wire_bytes += r.wire_bytes;
+    recv.setup_bits += r.setup_bits;
+    recv.setup_wire_bytes += r.setup_wire_bytes;
     sent.frames += s.frames;
     sent.bits += s.bits;
     sent.wire_bytes += s.wire_bytes;
+    sent.setup_bits += s.setup_bits;
+    sent.setup_wire_bytes += s.setup_wire_bytes;
 }
 
 /// The accounting bar, strict and tolerant alike: every received bit is
@@ -867,6 +951,18 @@ fn assert_wire_bits(
         "downlink bits bypassed the sockets: meter {} != records {dl}",
         wire_sent.bits
     );
+    // The setup category's defining invariant: every reported bit is a
+    // wire byte times eight, headers included, in both directions.
+    assert_eq!(
+        wire_recv.setup_bits,
+        8 * wire_recv.setup_wire_bytes,
+        "received setup bits must be exactly 8x the setup wire bytes"
+    );
+    assert_eq!(
+        wire_sent.setup_bits,
+        8 * wire_sent.setup_wire_bytes,
+        "sent setup bits must be exactly 8x the setup wire bytes"
+    );
 }
 
 /// The tolerant blocking federator (Unix-domain sockets, PR 6's loop, now
@@ -886,12 +982,17 @@ fn federate_unix_tolerant(sock: &Path, opts: &RunOpts) -> Result<FederatorRun> {
     let faults = &opts.faults;
     let n = spec.n as usize;
     let listener = bind(sock)?;
-    let mut ack = spec.encode();
+    let mut ack = spec.ack_spec().encode();
     ack.push(PROTO_COHORT);
     let accept_total =
         (faults.accept_deadline_ms > 0).then(|| Duration::from_millis(faults.accept_deadline_ms));
     let mut streams = accept_clients_deadline(&listener, n, &ack, accept_total)?;
     crate::info!("federator: {} clients connected", n);
+    if spec.negotiated() {
+        for (i, stream) in streams.iter_mut().enumerate() {
+            negotiate_seed(stream, i as u64, spec.seed)?;
+        }
+    }
 
     let mut report = FaultReport::new(n);
     let mut alive = vec![true; n];
@@ -1406,6 +1507,68 @@ fn flush_all(
     }
 }
 
+/// The federator's half of the seed establishment over the nonblocking
+/// endpoints: poll until every client's ephemeral key arrives, answer each
+/// with its link's masked seed, then drain the answers. Establishment is
+/// part of the handshake, so a connection failing here fails the run —
+/// the tolerant machinery only starts at round 0.
+fn negotiate_seeds_tcp(conns: &mut [Endpoint], seed: u64) -> Result<()> {
+    let n = conns.len();
+    let mut done = vec![false; n];
+    loop {
+        // Parse whatever is already buffered (a fast client's key may have
+        // landed alongside its HELLO).
+        for (i, conn) in conns.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            match conn.poll_msg()? {
+                Some(Msg::KeyxPub { key }) => {
+                    let fed = federator_link_keys(i as u64);
+                    conn.enqueue_keyx_seed(&fed.public(), fed.mask_seed(&key, seed));
+                    done[i] = true;
+                }
+                Some(other) => {
+                    return Err(TransportError::Handshake(format!(
+                        "client {i}: expected keyx-pub, got {other:?}"
+                    )));
+                }
+                None => {}
+            }
+        }
+        let needy: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
+        if needy.is_empty() {
+            break;
+        }
+        let mut fds: Vec<PollFd> = needy
+            .iter()
+            .map(|&i| PollFd::new(conns[i].as_raw_fd(), POLLIN))
+            .collect();
+        poll_fds(&mut fds, -1).map_err(TransportError::Io)?;
+        for (k, &i) in needy.iter().enumerate() {
+            if fds[k].revents != 0 && conns[i].fill()? {
+                return Err(conns[i].eof_error());
+            }
+        }
+    }
+    loop {
+        let writey: Vec<usize> = (0..n).filter(|&i| conns[i].wants_write()).collect();
+        if writey.is_empty() {
+            return Ok(());
+        }
+        let mut fds: Vec<PollFd> = writey
+            .iter()
+            .map(|&i| PollFd::new(conns[i].as_raw_fd(), POLLOUT))
+            .collect();
+        poll_fds(&mut fds, -1).map_err(TransportError::Io)?;
+        for (k, &i) in writey.iter().enumerate() {
+            if fds[k].revents != 0 {
+                conns[i].flush()?;
+            }
+        }
+    }
+}
+
 /// The event-driven TCP federator: one thread, `spec.n` nonblocking
 /// [`Endpoint`]s, a `poll(2)` readiness loop — no thread per connection.
 /// Always speaks the cohort protocol (strict [`RunOpts`] simply realize the
@@ -1418,12 +1581,15 @@ fn federate_tcp(addr: &str, opts: &RunOpts) -> Result<FederatorRun> {
     if let Ok(local) = listener.local_addr() {
         crate::info!("federator: listening on {local}");
     }
-    let mut ack = spec.encode();
+    let mut ack = spec.ack_spec().encode();
     ack.push(PROTO_COHORT);
     let accept_total = (opts.faults.accept_deadline_ms > 0)
         .then(|| Duration::from_millis(opts.faults.accept_deadline_ms));
     let mut conns = accept_endpoints(&listener, n, &ack, accept_total)?;
     crate::info!("federator: {} clients connected", n);
+    if spec.negotiated() {
+        negotiate_seeds_tcp(&mut conns, spec.seed)?;
+    }
 
     let mut report = FaultReport::new(n);
     let mut alive = vec![true; n];
@@ -1734,10 +1900,43 @@ mod tests {
             theta_clamp: 0.05,
             heterogeneity: 0.2,
             chunk_blocks: 7,
+            seed_mode: SeedMode::Negotiated as u32,
         };
         let body = spec.encode();
         assert_eq!(body.len(), SPEC_BYTES);
         assert_eq!(RunSpec::decode(&body).unwrap(), spec);
+    }
+
+    #[test]
+    fn run_spec_rejects_unknown_seed_modes() {
+        let bad = RunSpec {
+            seed_mode: 2,
+            ..RunSpec::default()
+        };
+        assert!(matches!(
+            RunSpec::decode(&bad.encode()),
+            Err(TransportError::Handshake(_))
+        ));
+    }
+
+    #[test]
+    fn negotiated_ack_zeroes_the_seed_on_the_wire() {
+        let ambient = RunSpec::default();
+        assert_eq!(ambient.ack_spec(), ambient);
+        let negotiated = RunSpec {
+            seed_mode: SeedMode::Negotiated as u32,
+            ..RunSpec::default()
+        };
+        let ack = negotiated.ack_spec();
+        assert_eq!(ack.seed, 0, "the ambient seed must not leak into the ACK");
+        assert_eq!(
+            RunSpec {
+                seed: negotiated.seed,
+                ..ack
+            },
+            negotiated,
+            "only the seed field may differ between spec and ACK"
+        );
     }
 
     #[test]

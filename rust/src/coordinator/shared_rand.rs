@@ -22,16 +22,34 @@ pub enum Direction {
     Downlink = 2,
 }
 
+/// One step of the order-sensitive label chain-mix: absorb `part` into the
+/// running state `s`. Two splitmix passes per part — the first keyed by a
+/// golden-ratio spread of (state + part), xored back into the state, the
+/// second re-absorbing the part into that mix — so swapping two label parts
+/// never yields the same chain (pinned by the KAT suite; any edit here shifts
+/// every metered bit in the repo).
+pub fn chain_mix_step(s: u64, part: u64) -> u64 {
+    let mut phi = s.wrapping_add(part).wrapping_mul(0x9E3779B97F4A7C15);
+    let mixed = s ^ splitmix64(&mut phi);
+    let mut t = mixed.wrapping_add(part);
+    splitmix64(&mut t)
+}
+
+/// Chain-mix the full (round, client, block, direction) label into a stream
+/// key. The (round, client) prefix is a pure function of its own — the
+/// [`crate::prss::IndexedSharedRandomness`] link cache folds it once and
+/// reuses it across every block of a leg.
+pub fn mrc_stream_key(seed: u64, round: u64, client: u64, block: u64, dir: Direction) -> u64 {
+    let mut s = seed;
+    for part in [round, client, block, dir as u64] {
+        s = chain_mix_step(s, part);
+    }
+    s
+}
+
 /// Derive the MRC candidate stream for one (round, client, block, direction).
 pub fn mrc_stream(seed: u64, round: u64, client: u64, block: u64, dir: Direction) -> Philox {
-    let mut s = seed;
-    // Chain-mix the label parts through splitmix (order-sensitive).
-    for part in [round, client, block, dir as u64] {
-        s = s ^ splitmix64(&mut { s.wrapping_add(part).wrapping_mul(0x9E3779B97F4A7C15) });
-        let mut t = s.wrapping_add(part);
-        s = splitmix64(&mut t);
-    }
-    Philox::new(s)
+    Philox::new(mrc_stream_key(seed, round, client, block, dir))
 }
 
 /// Per-client private seed derived from a master simulation seed. In a real
@@ -67,6 +85,43 @@ pub fn client_selector_seed(sel_seed: u64, client: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chain_mix_step_matches_the_reference_expression() {
+        // The helper must be bit-identical to the historical inline mix:
+        //   s ^= splitmix64(&mut ((s + part) * GOLDEN)); s = splitmix64(&mut (s + part))
+        // written out with explicit temporaries here so a refactor of the
+        // helper cannot silently drift.
+        for (s0, part) in [
+            (0u64, 0u64),
+            (0xB1C0, 3),
+            (u64::MAX, 1),
+            (42, u64::MAX),
+            (0x9E3779B97F4A7C15, 0x5E1EC70B),
+        ] {
+            let mut phi = s0.wrapping_add(part).wrapping_mul(0x9E3779B97F4A7C15);
+            let mixed = s0 ^ splitmix64(&mut phi);
+            let mut t = mixed.wrapping_add(part);
+            let want = splitmix64(&mut t);
+            assert_eq!(chain_mix_step(s0, part), want, "s={s0:#x} part={part:#x}");
+        }
+    }
+
+    #[test]
+    fn mrc_stream_is_the_fold_of_chain_mix_steps() {
+        let (seed, round, client, block) = (0xB1C0u64, 5u64, 2u64, 9u64);
+        for dir in [Direction::Uplink, Direction::Downlink] {
+            let mut s = seed;
+            for part in [round, client, block, dir as u64] {
+                s = chain_mix_step(s, part);
+            }
+            assert_eq!(mrc_stream_key(seed, round, client, block, dir), s);
+            assert_eq!(
+                mrc_stream(seed, round, client, block, dir).block(0, 0),
+                Philox::new(s).block(0, 0)
+            );
+        }
+    }
 
     #[test]
     fn streams_reproducible_across_parties() {

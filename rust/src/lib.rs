@@ -14,6 +14,7 @@ pub mod compressors;
 pub mod transport;
 pub mod algorithms;
 pub mod coordinator;
+pub mod prss;
 pub mod runtime;
 pub mod metrics;
 pub mod config;

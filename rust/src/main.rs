@@ -33,6 +33,7 @@ use bicompfl::exp::ablations;
 use bicompfl::exp::tables::{run_table, MethodFilter};
 use bicompfl::info;
 use bicompfl::metrics::render_table;
+use bicompfl::prss::SeedMode;
 use bicompfl::util::cli::Cli;
 use bicompfl::util::logging;
 
@@ -99,6 +100,12 @@ fn cli() -> Cli {
          pool (0 = serial reference); bit-identical at every width",
     )
     .flag("seed", "1", "master seed")
+    .flag(
+        "seed-mode",
+        "",
+        "federator: seed establishment (ambient|negotiated); \
+         overrides BICOMPFL_SEED_MODE",
+    )
     .flag("out", "results", "output directory")
     .switch("fast", "use the synthetic oracle instead of PJRT artifacts")
     .switch("noniid", "force Dirichlet(0.1) data allocation")
@@ -133,6 +140,18 @@ fn net_addr(c: &Cli, flag: &str, topo_addr: Option<&str>) -> distributed::NetAdd
     } else {
         distributed::NetAddr::Unix(PathBuf::from(c.get("sock")))
     }
+}
+
+/// The seed-establishment mode a federator serves: the `--seed-mode` flag
+/// beats `BICOMPFL_SEED_MODE`, unset means ambient. Clients adopt whatever
+/// mode the handshake ACK names, so only the federator consults this.
+fn seed_mode_flag(c: &Cli) -> Result<SeedMode> {
+    let v = c.get("seed-mode");
+    if v.is_empty() {
+        return SeedMode::from_env().map_err(|e| anyhow!(e));
+    }
+    SeedMode::parse(&v)
+        .ok_or_else(|| anyhow!("unknown seed mode {v:?}; expected one of {:?}", SeedMode::NAMES))
 }
 
 fn build_cfg(c: &Cli) -> Result<ExpConfig> {
@@ -225,6 +244,7 @@ fn real_main() -> Result<()> {
                     .unwrap_or_else(bicompfl::transport::FaultSpec::none),
                 deadline: None,
                 cohort: topo.and_then(|t| t.cohort),
+                seed_mode: seed_mode_flag(&c)?,
             };
             if !opts.is_strict() {
                 info!(

@@ -100,21 +100,27 @@ pub fn fmt_bpp(v: f64) -> String {
 }
 
 /// Render a transport meter snapshot (or run delta) as a markdown line set:
-/// the wire-level view backing the bit columns of the tables above.
+/// the wire-level view backing the bit columns of the tables above. The
+/// setup columns are the one-time shared-randomness establishment cost
+/// (`crate::prss`), kept out of the per-round UL/DL categories so the
+/// table numbers stay comparable between ambient and negotiated runs.
 pub fn render_transport(label: &str, stats: &TransportStats) -> String {
     let mut out = format!(
         "### transport [{label}]\n\n\
-         | Frames | UL bits | DL bits | DL bits (BC) | payload bytes | wire bytes |\n\
-         |---|---|---|---|---|---|\n\
-         | {} | {} | {} | {} | {} | {} |\n",
+         | Frames | UL bits | DL bits | DL bits (BC) | payload bytes | wire bytes \
+         | setup bits | setup wire bytes |\n\
+         |---|---|---|---|---|---|---|---|\n\
+         | {} | {} | {} | {} | {} | {} | {} | {} |\n",
         stats.frames,
         stats.ul_bits,
         stats.dl_bits,
         stats.dl_bc_bits,
         stats.payload_bytes,
         stats.wire_bytes,
+        stats.setup_bits,
+        stats.setup_wire_bytes,
     );
-    if stats.wire_bytes == 0 {
+    if stats.wire_bytes == 0 && stats.setup_wire_bytes == 0 {
         out.push_str("\n(loopback transport: bits metered analytically, nothing serialized)\n");
     }
     out
@@ -130,6 +136,8 @@ pub fn transport_json(label: &str, stats: &TransportStats) -> Json {
         ("dl_bc_bits", num(stats.dl_bc_bits as f64)),
         ("payload_bytes", num(stats.payload_bytes as f64)),
         ("wire_bytes", num(stats.wire_bytes as f64)),
+        ("setup_bits", num(stats.setup_bits as f64)),
+        ("setup_wire_bytes", num(stats.setup_wire_bytes as f64)),
     ])
 }
 
@@ -244,15 +252,19 @@ mod tests {
             dl_bc_bits: 640,
             wire_bytes: 600,
             payload_bytes: 400,
+            setup_bits: 656,
+            setup_wire_bytes: 82,
         };
         let t = render_transport("framed", &stats);
-        assert!(t.contains("| 12 | 640 | 1920 | 640 | 400 | 600 |"));
+        assert!(t.contains("| 12 | 640 | 1920 | 640 | 400 | 600 | 656 | 82 |"));
         assert!(!t.contains("loopback transport"), "framed is serialized");
         let lo = render_transport("loopback", &TransportStats::default());
         assert!(lo.contains("nothing serialized"));
         let j = transport_json("framed", &stats);
         assert_eq!(j.req("transport").as_str(), Some("framed"));
         assert_eq!(j.req("ul_bits").as_f64(), Some(640.0));
+        assert_eq!(j.req("setup_bits").as_f64(), Some(656.0));
+        assert_eq!(j.req("setup_wire_bytes").as_f64(), Some(82.0));
     }
 
     #[test]

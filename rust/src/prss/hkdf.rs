@@ -1,0 +1,101 @@
+//! HKDF-SHA256 (RFC 5869) over the in-tree [`super::sha256`] shim.
+//!
+//! Extract-then-expand, exactly as the RFC specifies; the PRSS layer uses it
+//! to turn an X25519 shared secret into the seed-mask keystream and to derive
+//! deterministic ephemeral scalars. Pinned by the RFC 5869 known-answer
+//! vectors in `tests/kats.rs`.
+
+use super::sha256::hmac_sha256;
+
+/// HKDF-Extract: PRK = HMAC-Hash(salt, IKM). An empty salt means the
+/// RFC's default (a zero-filled hash-length key) via HMAC's zero padding.
+pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    hmac_sha256(salt, ikm)
+}
+
+/// HKDF-Expand: stretch `prk` to `out.len()` bytes of OKM under `info`.
+///
+/// # Panics
+/// If `out.len() > 255 * 32` (the RFC's hard output ceiling).
+pub fn expand(prk: &[u8; 32], info: &[u8], out: &mut [u8]) {
+    assert!(out.len() <= 255 * 32, "HKDF output exceeds 255*HashLen");
+    let mut t: Vec<u8> = Vec::with_capacity(32 + info.len() + 1);
+    let mut prev_len = 0usize;
+    let mut counter = 1u8;
+    let mut written = 0usize;
+    while written < out.len() {
+        t.truncate(prev_len);
+        t.extend_from_slice(info);
+        t.push(counter);
+        let block = hmac_sha256(prk, &t);
+        let take = (out.len() - written).min(32);
+        out[written..written + take].copy_from_slice(&block[..take]);
+        written += take;
+        // Next T(i) = HMAC(PRK, T(i-1) || info || i): seed the buffer with
+        // the full previous block.
+        t.clear();
+        t.extend_from_slice(&block);
+        prev_len = 32;
+        counter = counter.wrapping_add(1);
+    }
+}
+
+/// One-shot extract-then-expand into a fixed-size array.
+pub fn derive<const N: usize>(salt: &[u8], ikm: &[u8], info: &[u8]) -> [u8; N] {
+    let prk = extract(salt, ikm);
+    let mut out = [0u8; N];
+    expand(&prk, info, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn rfc5869_case_1() {
+        let ikm = [0x0bu8; 22];
+        let salt: Vec<u8> = (0x00..=0x0c).collect();
+        let info: Vec<u8> = (0xf0..=0xf9).collect();
+        let prk = extract(&salt, &ikm);
+        assert_eq!(
+            hex(&prk),
+            "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5"
+        );
+        let mut okm = [0u8; 42];
+        expand(&prk, &info, &mut okm);
+        assert_eq!(
+            hex(&okm),
+            "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+        );
+    }
+
+    #[test]
+    fn rfc5869_case_3_empty_salt_and_info() {
+        let ikm = [0x0bu8; 22];
+        let prk = extract(&[], &ikm);
+        assert_eq!(
+            hex(&prk),
+            "19ef24a32c717b167f33a91d6f648bdf96596776afdb6377ac434c1c293ccb04"
+        );
+        let mut okm = [0u8; 42];
+        expand(&prk, &[], &mut okm);
+        assert_eq!(
+            hex(&okm),
+            "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+        );
+    }
+
+    #[test]
+    fn derive_is_extract_then_expand() {
+        let okm: [u8; 16] = derive(b"salt", b"ikm", b"info");
+        let prk = extract(b"salt", b"ikm");
+        let mut want = [0u8; 16];
+        expand(&prk, b"info", &mut want);
+        assert_eq!(okm, want);
+    }
+}

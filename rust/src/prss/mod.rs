@@ -1,0 +1,320 @@
+//! PRSS-style shared-randomness establishment.
+//!
+//! BiCompFL's MRC only works because federator and clients derive identical
+//! Philox candidate streams. Historically the shared seed was ambient config
+//! — an uncounted channel a real deployment would have to pay for. This
+//! module makes seed agreement a first-class, *metered* protocol step:
+//!
+//! * [`KeyExchange`] — an X25519 Diffie-Hellman exchange (in-tree
+//!   [`x25519`] + [`hkdf`] + [`sha256`] shims, offline and dependency-free)
+//!   whose shared secret keys an HKDF-SHA256 keystream. The federator ships
+//!   each client `wire_seed = seed ⊕ keystream`, so the client recovers
+//!   *exactly* the seed the ambient simulation uses — negotiated runs are
+//!   bit-identical to ambient runs by construction, and every key-exchange
+//!   byte crosses the [`crate::transport`] chokepoint into a distinct setup
+//!   meter (wire-bytes × 8 == reported setup bits).
+//! * [`SeedMode`] — the `--seed-mode ambient|negotiated` /
+//!   `BICOMPFL_SEED_MODE` knob selecting between the two.
+//! * [`IndexedSharedRandomness`] — the generator cache both parties draw
+//!   from once the seed is established: per-(round, client, direction)
+//!   [`LinkRandomness`] handles fold the label chain-mix prefix once and
+//!   stamp out per-block Philox streams, bit-identical to the historical
+//!   [`mrc_stream`]/[`selector_seed`] derivations (pinned by
+//!   `tests/prss_conformance.rs` and the KAT suite).
+//!
+//! GR derives one group seed shared by all parties; PR derives pairwise
+//! seeds ([`IndexedSharedRandomness::private`]) so client j cannot reproduce
+//! client i's stream.
+//!
+//! Ephemeral scalars are derived deterministically from (role, id) —
+//! reproducibility over secrecy, which is the right trade for a metered
+//! simulation; a deployment would draw them from OS entropy. The *protocol
+//! shape* (message sizes, derivation tree, meter category) is exactly what
+//! such a deployment would pay for.
+
+pub mod hkdf;
+pub mod sha256;
+pub mod x25519;
+
+use crate::coordinator::shared_rand::{
+    chain_mix_step, mrc_stream_key, private_seed, selector_seed, Direction,
+};
+use crate::util::rng::Philox;
+
+/// Domain-separation label versioning every PRSS derivation.
+const DOMAIN: &[u8] = b"bicompfl.prss.v1";
+
+/// Body length of a `MSG_KEYX_PUB` wire message: one X25519 public key.
+pub const KEYX_PUB_BYTES: usize = 32;
+/// Body length of a `MSG_KEYX_SEED` wire message: the responder's X25519
+/// public key followed by the masked 64-bit seed (little-endian).
+pub const KEYX_SEED_BYTES: usize = 32 + 8;
+
+/// Wire bytes of one client's full key-exchange round-trip, message headers
+/// (tag byte + u32 length prefix) included. The codec test
+/// `keyx_meters_setup_not_frames` pins this against the real
+/// encoder, and the in-process simulation charges exactly this many bytes
+/// per client through [`crate::transport::Transport::record_setup`].
+pub const SETUP_WIRE_BYTES_PER_CLIENT: u64 =
+    (5 + KEYX_PUB_BYTES as u64) + (5 + KEYX_SEED_BYTES as u64);
+
+/// How parties come to hold the shared MRC seed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SeedMode {
+    /// The seed is ambient config every party already holds (the historical
+    /// behavior; setup costs nothing and meters nothing).
+    #[default]
+    Ambient,
+    /// The seed is established over the wire by a metered X25519 + HKDF key
+    /// exchange woven into the HELLO/ACK handshake.
+    Negotiated,
+}
+
+impl SeedMode {
+    /// Every mode name accepted by [`SeedMode::parse`], in display order.
+    pub const NAMES: [&'static str; 2] = ["ambient", "negotiated"];
+
+    /// Parse a mode name (as spelled in [`SeedMode::NAMES`]).
+    pub fn parse(s: &str) -> Option<SeedMode> {
+        match s {
+            "ambient" => Some(SeedMode::Ambient),
+            "negotiated" => Some(SeedMode::Negotiated),
+            _ => None,
+        }
+    }
+
+    /// This mode's canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeedMode::Ambient => "ambient",
+            SeedMode::Negotiated => "negotiated",
+        }
+    }
+
+    /// The `BICOMPFL_SEED_MODE` selection (unset ⇒ [`SeedMode::Ambient`]).
+    pub fn from_env() -> Result<SeedMode, String> {
+        match std::env::var("BICOMPFL_SEED_MODE") {
+            Err(_) => Ok(SeedMode::Ambient),
+            Ok(v) => SeedMode::parse(&v).ok_or_else(|| {
+                format!(
+                    "BICOMPFL_SEED_MODE={v:?} is not a seed mode (expected one of {:?})",
+                    SeedMode::NAMES
+                )
+            }),
+        }
+    }
+
+    /// [`SeedMode::from_env`], panicking with the error message on an
+    /// unparsable value (mirrors `transport::from_env_or_die`).
+    pub fn from_env_or_die() -> SeedMode {
+        match SeedMode::from_env() {
+            Ok(m) => m,
+            Err(e) => panic!("{e}"),
+        }
+    }
+}
+
+/// One party's half of the seed-establishment Diffie-Hellman exchange.
+///
+/// The exchange is symmetric: each side derives
+/// `keystream = HKDF(X25519(own_secret, peer_public))` and the masked seed
+/// is `seed ⊕ keystream`, so [`KeyExchange::mask_seed`] and
+/// [`KeyExchange::unmask_seed`] are the same XOR viewed from the two ends.
+pub struct KeyExchange {
+    secret: [u8; 32],
+    public: [u8; 32],
+}
+
+impl KeyExchange {
+    /// Build from an explicit secret scalar (clamped on use per RFC 7748).
+    pub fn from_secret(secret: [u8; 32]) -> KeyExchange {
+        let public = x25519::x25519_base(&secret);
+        KeyExchange { secret, public }
+    }
+
+    /// Deterministic ephemeral keypair for (role, id): the scalar is
+    /// HKDF-derived from the domain-separated label, so runs are
+    /// reproducible without OS entropy (see the module docs for the trade).
+    pub fn deterministic(role: &str, id: u64) -> KeyExchange {
+        let mut ikm = Vec::with_capacity(role.len() + 8);
+        ikm.extend_from_slice(role.as_bytes());
+        ikm.extend_from_slice(&id.to_le_bytes());
+        let secret: [u8; 32] = hkdf::derive(DOMAIN, &ikm, b"ephemeral x25519 scalar");
+        KeyExchange::from_secret(secret)
+    }
+
+    /// The public key this party puts on the wire.
+    pub fn public(&self) -> [u8; 32] {
+        self.public
+    }
+
+    /// The 64-bit seed-mask keystream shared with `peer_public`.
+    fn keystream(&self, peer_public: &[u8; 32]) -> u64 {
+        let shared = x25519::x25519(&self.secret, peer_public);
+        let block: [u8; 8] = hkdf::derive(DOMAIN, &shared, b"seed mask");
+        u64::from_le_bytes(block)
+    }
+
+    /// Mask `seed` for the wire against `peer_public`.
+    pub fn mask_seed(&self, peer_public: &[u8; 32], seed: u64) -> u64 {
+        seed ^ self.keystream(peer_public)
+    }
+
+    /// Recover the seed from a wire-masked value (the inverse XOR).
+    pub fn unmask_seed(&self, peer_public: &[u8; 32], wire: u64) -> u64 {
+        wire ^ self.keystream(peer_public)
+    }
+}
+
+/// The federator's ephemeral keypair for its link to `client`.
+pub fn federator_link_keys(client: u64) -> KeyExchange {
+    KeyExchange::deterministic("federator-link", client)
+}
+
+/// Client `id`'s ephemeral keypair.
+pub fn client_keys(id: u64) -> KeyExchange {
+    KeyExchange::deterministic("client", id)
+}
+
+/// The established-seed view every party draws randomness from: the same
+/// derivation tree as `coordinator::shared_rand` (bit-identical, pinned by
+/// the conformance suite) behind a handle that owns the seed — ambient and
+/// negotiated runs differ only in where that seed came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexedSharedRandomness {
+    seed: u64,
+}
+
+impl IndexedSharedRandomness {
+    /// Wrap an established seed (group seed for GR; see
+    /// [`IndexedSharedRandomness::private`] for PR).
+    pub fn new(seed: u64) -> IndexedSharedRandomness {
+        IndexedSharedRandomness { seed }
+    }
+
+    /// The underlying seed (what a negotiated exchange puts on the wire).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The PR pairwise view for `client`: a seed shared only between that
+    /// client and the federator, so no other client can reproduce its
+    /// streams.
+    pub fn private(&self, client: u64) -> IndexedSharedRandomness {
+        IndexedSharedRandomness::new(private_seed(self.seed, client))
+    }
+
+    /// The MRC candidate stream for one full label — identical to
+    /// `shared_rand::mrc_stream(self.seed(), ..)`.
+    pub fn stream(&self, round: u64, client: u64, block: u64, dir: Direction) -> Philox {
+        Philox::new(mrc_stream_key(self.seed, round, client, block, dir))
+    }
+
+    /// The encoder-private Gumbel selector seed — identical to
+    /// `shared_rand::selector_seed(self.seed(), ..)`.
+    pub fn selector(&self, round: u64, client: u64, dir: Direction) -> u64 {
+        selector_seed(self.seed, round, client, dir)
+    }
+
+    /// The per-(round, client, direction) generator handle: folds the
+    /// (round, client) chain-mix prefix once so the per-block hot path —
+    /// the precomputed randomness feeding `EncodeScratch` and the stream
+    /// encoder — only absorbs (block, direction).
+    pub fn link(&self, round: u64, client: u64, dir: Direction) -> LinkRandomness {
+        LinkRandomness {
+            prefix: chain_mix_step(chain_mix_step(self.seed, round), client),
+            dir,
+        }
+    }
+}
+
+/// One link's cached generator state: the (round, client) label prefix,
+/// ready to stamp out per-block candidate streams. Copy-cheap (two u64s), so
+/// workers carry it by value into the block pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkRandomness {
+    prefix: u64,
+    dir: Direction,
+}
+
+impl LinkRandomness {
+    /// The candidate stream for `block` on this link — bit-identical to the
+    /// full four-part chain-mix (`shared_rand::mrc_stream`).
+    pub fn stream(&self, block: u64) -> Philox {
+        Philox::new(chain_mix_step(chain_mix_step(self.prefix, block), self.dir as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shared_rand::mrc_stream;
+
+    #[test]
+    fn seed_mode_parses_its_own_names() {
+        for name in SeedMode::NAMES {
+            assert_eq!(SeedMode::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(SeedMode::parse("quantum"), None);
+        assert_eq!(SeedMode::default(), SeedMode::Ambient);
+    }
+
+    #[test]
+    fn mask_unmask_roundtrips_between_the_two_parties() {
+        for client in 0..6u64 {
+            let fed = federator_link_keys(client);
+            let cli = client_keys(client);
+            for seed in [0u64, 0xB1C0, u64::MAX, 0x9E3779B97F4A7C15] {
+                let wire = fed.mask_seed(&cli.public(), seed);
+                assert_eq!(cli.unmask_seed(&fed.public(), wire), seed);
+                // The mask is a real keystream, not a no-op.
+                assert_ne!(wire, seed, "client {client} seed {seed:#x} unmasked on the wire");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_links_use_distinct_keystreams() {
+        let seed = 0xB1C0u64;
+        let wires: Vec<u64> = (0..8u64)
+            .map(|c| federator_link_keys(c).mask_seed(&client_keys(c).public(), seed))
+            .collect();
+        let mut dedup = wires.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), wires.len(), "keystream collision across links");
+    }
+
+    #[test]
+    fn isr_matches_the_shared_rand_surface() {
+        let isr = IndexedSharedRandomness::new(0xB1C0);
+        for round in [0u64, 3] {
+            for client in [0u64, 2, 7] {
+                for dir in [Direction::Uplink, Direction::Downlink] {
+                    assert_eq!(
+                        isr.selector(round, client, dir),
+                        selector_seed(0xB1C0, round, client, dir)
+                    );
+                    let link = isr.link(round, client, dir);
+                    for block in [0u64, 1, 9] {
+                        let want = mrc_stream(0xB1C0, round, client, block, dir).block(0, 0);
+                        assert_eq!(isr.stream(round, client, block, dir).block(0, 0), want);
+                        assert_eq!(link.stream(block).block(0, 0), want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn private_views_are_pairwise_distinct() {
+        let isr = IndexedSharedRandomness::new(99);
+        let a = isr.private(0);
+        let b = isr.private(1);
+        assert_ne!(a.seed(), b.seed());
+        assert_ne!(
+            a.stream(0, 0, 0, Direction::Uplink).block(0, 0),
+            b.stream(0, 0, 0, Direction::Uplink).block(0, 0)
+        );
+    }
+}

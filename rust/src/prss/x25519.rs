@@ -1,0 +1,315 @@
+//! In-tree X25519 (RFC 7748): the Montgomery ladder over Curve25519 with
+//! 5×51-bit limb field arithmetic mod p = 2^255 − 19.
+//!
+//! Vendored shim, matching the repo's offline/dependency-free convention.
+//! The swap in the ladder is mask-based rather than branch-based, but no
+//! further side-channel hardening is claimed — the PRSS layer runs it with
+//! deterministic scalars inside a reproducible simulation. Pinned by the
+//! RFC 7748 §5.2/§6.1 known-answer vectors in `tests/kats.rs`.
+
+/// 51-bit limb mask.
+const MASK51: u64 = (1 << 51) - 1;
+
+/// Field element mod 2^255 − 19, radix 2^51, limbs kept partially reduced
+/// (< 2^52 between operations).
+#[derive(Clone, Copy, Debug)]
+struct Fe([u64; 5]);
+
+impl Fe {
+    const ZERO: Fe = Fe([0; 5]);
+    const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    /// Load 32 little-endian bytes, masking the top bit per RFC 7748 §5.
+    fn from_bytes(b: &[u8; 32]) -> Fe {
+        let w = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        Fe([
+            w(0) & MASK51,
+            (w(6) >> 3) & MASK51,
+            (w(12) >> 6) & MASK51,
+            (w(19) >> 1) & MASK51,
+            (w(24) >> 12) & MASK51,
+        ])
+    }
+
+    /// Serialize fully reduced (canonical in [0, p)) little-endian.
+    fn to_bytes(mut self) -> [u8; 32] {
+        self = self.carry();
+        // q = 1 iff self >= p, computed by rippling (self + 19) >> 255.
+        let mut q = (self.0[0].wrapping_add(19)) >> 51;
+        for i in 1..5 {
+            q = (self.0[i].wrapping_add(q)) >> 51;
+        }
+        self.0[0] = self.0[0].wrapping_add(19u64.wrapping_mul(q));
+        for i in 0..4 {
+            self.0[i + 1] = self.0[i + 1].wrapping_add(self.0[i] >> 51);
+            self.0[i] &= MASK51;
+        }
+        self.0[4] &= MASK51; // drop the 2^255 carry: value is now mod 2^255
+        let mut out = [0u8; 32];
+        let mut acc: u128 = 0;
+        let mut bits = 0u32;
+        let mut idx = 0usize;
+        for &limb in &self.0 {
+            acc |= (limb as u128) << bits;
+            bits += 51;
+            while bits >= 8 {
+                out[idx] = acc as u8;
+                acc >>= 8;
+                bits -= 8;
+                idx += 1;
+            }
+        }
+        debug_assert_eq!(idx, 31);
+        out[31] = acc as u8;
+        out
+    }
+
+    /// Single carry pass bringing limbs back under 2^51 (+ epsilon).
+    fn carry(mut self) -> Fe {
+        for i in 0..4 {
+            self.0[i + 1] += self.0[i] >> 51;
+            self.0[i] &= MASK51;
+        }
+        self.0[0] += 19 * (self.0[4] >> 51);
+        self.0[4] &= MASK51;
+        self.0[1] += self.0[0] >> 51;
+        self.0[0] &= MASK51;
+        self
+    }
+
+    fn add(self, rhs: Fe) -> Fe {
+        let mut r = self.0;
+        for i in 0..5 {
+            r[i] += rhs.0[i];
+        }
+        Fe(r)
+    }
+
+    /// self − rhs, biased by 2p so no limb underflows.
+    fn sub(self, rhs: Fe) -> Fe {
+        const TWO_P: [u64; 5] = [
+            0xFFFFFFFFFFFDA,
+            0xFFFFFFFFFFFFE,
+            0xFFFFFFFFFFFFE,
+            0xFFFFFFFFFFFFE,
+            0xFFFFFFFFFFFFE,
+        ];
+        let mut r = self.0;
+        for i in 0..5 {
+            r[i] = r[i] + TWO_P[i] - rhs.0[i];
+        }
+        Fe(r).carry()
+    }
+
+    fn mul(self, rhs: Fe) -> Fe {
+        let [a0, a1, a2, a3, a4] = self.0;
+        let [b0, b1, b2, b3, b4] = rhs.0;
+        let m = |x: u64, y: u64| (x as u128) * (y as u128);
+        let r0 = m(a0, b0) + 19 * (m(a1, b4) + m(a2, b3) + m(a3, b2) + m(a4, b1));
+        let r1 = m(a0, b1) + m(a1, b0) + 19 * (m(a2, b4) + m(a3, b3) + m(a4, b2));
+        let r2 = m(a0, b2) + m(a1, b1) + m(a2, b0) + 19 * (m(a3, b4) + m(a4, b3));
+        let r3 = m(a0, b3) + m(a1, b2) + m(a2, b1) + m(a3, b0) + 19 * m(a4, b4);
+        let r4 = m(a0, b4) + m(a1, b3) + m(a2, b2) + m(a3, b1) + m(a4, b0);
+        Fe::reduce_wide([r0, r1, r2, r3, r4])
+    }
+
+    fn square(self) -> Fe {
+        self.mul(self)
+    }
+
+    /// Multiply by the curve constant a24 = (486662 − 2) / 4 = 121665.
+    fn mul_small(self, c: u64) -> Fe {
+        let r: [u128; 5] = core::array::from_fn(|i| (self.0[i] as u128) * (c as u128));
+        Fe::reduce_wide(r)
+    }
+
+    /// Fold 2^255 ≡ 19 and carry a widened product back into 51-bit limbs.
+    fn reduce_wide(r: [u128; 5]) -> Fe {
+        let [mut r0, mut r1, mut r2, mut r3, mut r4] = r;
+        r1 += r0 >> 51;
+        r0 &= MASK51 as u128;
+        r2 += r1 >> 51;
+        r1 &= MASK51 as u128;
+        r3 += r2 >> 51;
+        r2 &= MASK51 as u128;
+        r4 += r3 >> 51;
+        r3 &= MASK51 as u128;
+        r0 += 19 * (r4 >> 51);
+        r4 &= MASK51 as u128;
+        let mut out = Fe([r0 as u64, r1 as u64, r2 as u64, r3 as u64, r4 as u64]);
+        out.0[1] += out.0[0] >> 51;
+        out.0[0] &= MASK51;
+        out
+    }
+
+    /// z^(p − 2) = z^(2^255 − 21): the classic 254-squaring addition chain.
+    fn invert(self) -> Fe {
+        let sq_n = |mut z: Fe, n: u32| {
+            for _ in 0..n {
+                z = z.square();
+            }
+            z
+        };
+        let z2 = self.square(); // 2
+        let z9 = sq_n(z2, 2).mul(self); // 9
+        let z11 = z9.mul(z2); // 11
+        let z2_5_0 = z11.square().mul(z9); // 2^5 - 2^0
+        let z2_10_0 = sq_n(z2_5_0, 5).mul(z2_5_0);
+        let z2_20_0 = sq_n(z2_10_0, 10).mul(z2_10_0);
+        let z2_40_0 = sq_n(z2_20_0, 20).mul(z2_20_0);
+        let z2_50_0 = sq_n(z2_40_0, 10).mul(z2_10_0);
+        let z2_100_0 = sq_n(z2_50_0, 50).mul(z2_50_0);
+        let z2_200_0 = sq_n(z2_100_0, 100).mul(z2_100_0);
+        let z2_250_0 = sq_n(z2_200_0, 50).mul(z2_50_0);
+        sq_n(z2_250_0, 5).mul(z11) // 2^255 - 21
+    }
+}
+
+/// Mask-based conditional swap: exchanges `a` and `b` iff `swap == 1`.
+fn cswap(swap: u64, a: &mut Fe, b: &mut Fe) {
+    let mask = 0u64.wrapping_sub(swap);
+    for i in 0..5 {
+        let t = mask & (a.0[i] ^ b.0[i]);
+        a.0[i] ^= t;
+        b.0[i] ^= t;
+    }
+}
+
+/// RFC 7748 §5 scalar clamping.
+fn clamp(mut k: [u8; 32]) -> [u8; 32] {
+    k[0] &= 248;
+    k[31] &= 127;
+    k[31] |= 64;
+    k
+}
+
+/// The X25519 function: scalar-multiply the u-coordinate `u` by the clamped
+/// scalar `k` on the Curve25519 Montgomery ladder.
+pub fn x25519(k: &[u8; 32], u: &[u8; 32]) -> [u8; 32] {
+    let k = clamp(*k);
+    let x1 = Fe::from_bytes(u);
+    let mut x2 = Fe::ONE;
+    let mut z2 = Fe::ZERO;
+    let mut x3 = x1;
+    let mut z3 = Fe::ONE;
+    let mut swap = 0u64;
+    for t in (0..255).rev() {
+        let k_t = ((k[t / 8] >> (t % 8)) & 1) as u64;
+        swap ^= k_t;
+        cswap(swap, &mut x2, &mut x3);
+        cswap(swap, &mut z2, &mut z3);
+        swap = k_t;
+        let a = x2.add(z2);
+        let aa = a.square();
+        let b = x2.sub(z2);
+        let bb = b.square();
+        let e = aa.sub(bb);
+        let c = x3.add(z3);
+        let d = x3.sub(z3);
+        let da = d.mul(a);
+        let cb = c.mul(b);
+        x3 = da.add(cb).square();
+        z3 = x1.mul(da.sub(cb).square());
+        x2 = aa.mul(bb);
+        z2 = e.mul(aa.add(e.mul_small(121665)));
+    }
+    cswap(swap, &mut x2, &mut x3);
+    cswap(swap, &mut z2, &mut z3);
+    x2.mul(z2.invert()).to_bytes()
+}
+
+/// The Curve25519 base point u = 9.
+pub const BASE_POINT: [u8; 32] = {
+    let mut b = [0u8; 32];
+    b[0] = 9;
+    b
+};
+
+/// Public key for a (clamped-on-use) secret scalar: X25519(k, 9).
+pub fn x25519_base(k: &[u8; 32]) -> [u8; 32] {
+    x25519(k, &BASE_POINT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap();
+        }
+        out
+    }
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn field_roundtrip_and_identities() {
+        let a = Fe::from_bytes(&unhex(
+            "0900000000000000000000000000000000000000000000000000000000000000",
+        ));
+        assert_eq!(a.to_bytes()[0], 9);
+        assert_eq!(a.mul(Fe::ONE).to_bytes(), a.to_bytes());
+        assert_eq!(a.sub(a).to_bytes(), Fe::ZERO.to_bytes());
+        assert_eq!(a.mul(a.invert()).to_bytes(), Fe::ONE.to_bytes());
+    }
+
+    #[test]
+    fn rfc7748_section_5_2_vector_1() {
+        let k = unhex("a546e36bf0527c9d3b16154b82465edd62144c0ac1fc5a18506a2244ba449ac4");
+        let u = unhex("e6db6867583030db3594c1a424b15f7c726624ec26b3353b10a903a6d0ab1c4c");
+        assert_eq!(
+            hex(&x25519(&k, &u)),
+            "c3da55379de9c6908e94ea4df28d084f32eccf03491c71f754b4075577a28552"
+        );
+    }
+
+    #[test]
+    fn rfc7748_section_5_2_vector_2() {
+        let k = unhex("4b66e9d4d1b4673c5ad22691957d6af5c11b6421e0ea01d42ca4169e7918ba0d");
+        let u = unhex("e5210f12786811d3f4b7959d0538ae2c31dbe7106fc03c3efc4cd549c715a493");
+        assert_eq!(
+            hex(&x25519(&k, &u)),
+            "95cbde9476e8907d7aade45cb4b873f88b595a68799fa152e6f8f7647aac7957"
+        );
+    }
+
+    #[test]
+    fn rfc7748_section_6_1_diffie_hellman() {
+        let a = unhex("77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a");
+        let b = unhex("5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb");
+        let a_pub = x25519_base(&a);
+        let b_pub = x25519_base(&b);
+        assert_eq!(
+            hex(&a_pub),
+            "8520f0098930a754748b7ddcb43ef75a0dbf3a0d26381af4eba4a98eaa9b4e6a"
+        );
+        assert_eq!(
+            hex(&b_pub),
+            "de9edb7d7b7dc1b4d35b61c2ece435373f8343c85b78674dadfc7e146f882b4f"
+        );
+        let shared_a = x25519(&a, &b_pub);
+        let shared_b = x25519(&b, &a_pub);
+        assert_eq!(shared_a, shared_b);
+        assert_eq!(
+            hex(&shared_a),
+            "4a5d9d5ba4ce2de1728e3bf480350f25e07e21c947d19e3376f09b3c1e161742"
+        );
+    }
+
+    #[test]
+    fn diffie_hellman_agrees_for_arbitrary_scalars() {
+        for i in 0u8..8 {
+            let mut a = [i.wrapping_mul(37); 32];
+            a[5] = 0x77 ^ i;
+            let mut b = [i.wrapping_mul(91).wrapping_add(3); 32];
+            b[17] = 0x1c ^ i;
+            let shared_a = x25519(&a, &x25519_base(&b));
+            let shared_b = x25519(&b, &x25519_base(&a));
+            assert_eq!(shared_a, shared_b, "scalar pair {i}");
+        }
+    }
+}

@@ -44,6 +44,8 @@ pub(crate) const MSG_ACK: u8 = 3;
 pub(crate) const MSG_NACK: u8 = 4;
 pub(crate) const MSG_BYE: u8 = 5;
 pub(crate) const MSG_COHORT: u8 = 6;
+pub(crate) const MSG_KEYX_PUB: u8 = 7;
+pub(crate) const MSG_KEYX_SEED: u8 = 8;
 
 /// Handshake magic/version, independent of the frame codec's so the two can
 /// evolve separately.
@@ -90,6 +92,13 @@ pub enum Msg {
     Cohort { round: u64, ids: Vec<u64> },
     /// Graceful shutdown.
     Bye,
+    /// Key-exchange step 1 (client → federator): the client's ephemeral
+    /// X25519 public key. Setup traffic — metered in the setup category.
+    KeyxPub { key: [u8; 32] },
+    /// Key-exchange step 2 (federator → client): the federator's ephemeral
+    /// X25519 public key plus the run seed masked under the HKDF keystream
+    /// of the shared secret. Setup traffic — metered in the setup category.
+    KeyxSeed { key: [u8; 32], masked: u64 },
 }
 
 /// Cumulative one-direction traffic through a codec.
@@ -101,6 +110,12 @@ pub struct LinkMeter {
     pub bits: u64,
     /// Physical bytes including message envelopes and frame headers.
     pub wire_bytes: u64,
+    /// Key-exchange (seed-agreement) bits: exactly 8× the wire bytes of the
+    /// KEYX messages, envelopes included — setup cost, kept apart from the
+    /// per-round payload bits above.
+    pub setup_bits: u64,
+    /// Physical bytes of the KEYX messages, envelopes included.
+    pub setup_wire_bytes: u64,
 }
 
 /// Validation of an untrusted frame buffer before decoding it: header
@@ -182,6 +197,27 @@ fn parse_body(tag: u8, body: &[u8]) -> Result<Msg> {
             Ok(Msg::Cohort { round, ids })
         }
         MSG_BYE => Ok(Msg::Bye),
+        MSG_KEYX_PUB => {
+            if len != 32 {
+                return Err(TransportError::Handshake(format!(
+                    "keyx-pub body is {len} bytes, expected 32"
+                )));
+            }
+            Ok(Msg::KeyxPub {
+                key: body.try_into().unwrap(),
+            })
+        }
+        MSG_KEYX_SEED => {
+            if len != 40 {
+                return Err(TransportError::Handshake(format!(
+                    "keyx-seed body is {len} bytes, expected 40"
+                )));
+            }
+            Ok(Msg::KeyxSeed {
+                key: body[0..32].try_into().unwrap(),
+                masked: u64::from_le_bytes(body[32..40].try_into().unwrap()),
+            })
+        }
         t => Err(TransportError::BadFrame(format!("unknown message tag {t}"))),
     }
 }
@@ -200,6 +236,20 @@ pub(crate) fn nack_body(code: u8, detail: u64) -> Vec<u8> {
     let mut body = Vec::with_capacity(9);
     body.push(code);
     body.extend_from_slice(&detail.to_le_bytes());
+    body
+}
+
+/// The keyx-pub body: the sender's ephemeral X25519 public key.
+pub(crate) fn keyx_pub_body(key: &[u8; 32]) -> Vec<u8> {
+    key.to_vec()
+}
+
+/// The keyx-seed body: the federator's ephemeral public key plus the masked
+/// run seed.
+pub(crate) fn keyx_seed_body(key: &[u8; 32], masked: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(40);
+    body.extend_from_slice(key);
+    body.extend_from_slice(&masked.to_le_bytes());
     body
 }
 
@@ -355,10 +405,20 @@ impl FrameCodec {
         }
         let body = &self.in_buf[at + MSG_HEADER..at + MSG_HEADER + len];
         let msg = parse_body(tag, body)?;
-        if let Msg::Frame(_, bits) = &msg {
-            self.received.frames += 1;
-            self.received.bits += bits;
-            self.received.wire_bytes += (MSG_HEADER + len) as u64;
+        match &msg {
+            Msg::Frame(_, bits) => {
+                self.received.frames += 1;
+                self.received.bits += bits;
+                self.received.wire_bytes += (MSG_HEADER + len) as u64;
+            }
+            Msg::KeyxPub { .. } | Msg::KeyxSeed { .. } => {
+                // Setup traffic: every key-exchange byte (envelope included)
+                // is charged at 8 bits per wire byte, in its own category.
+                let wire = (MSG_HEADER + len) as u64;
+                self.received.setup_wire_bytes += wire;
+                self.received.setup_bits += 8 * wire;
+            }
+            _ => {}
         }
         self.in_pos += MSG_HEADER + len;
         if self.in_pos == self.in_buf.len() {
@@ -507,6 +567,30 @@ impl FrameCodec {
         self.enqueue_msg(MSG_BYE, &[]);
     }
 
+    /// Queue key-exchange step 1 (client → federator): the ephemeral public
+    /// key. Metered as setup traffic at 8 bits per wire byte.
+    pub fn enqueue_keyx_pub(&mut self, key: &[u8; 32]) {
+        self.begin_msg(MSG_KEYX_PUB, 32);
+        self.out_buf.extend_from_slice(key);
+        self.meter_setup_sent(32);
+    }
+
+    /// Queue key-exchange step 2 (federator → client): the federator's
+    /// ephemeral public key plus the masked run seed. Metered as setup
+    /// traffic at 8 bits per wire byte.
+    pub fn enqueue_keyx_seed(&mut self, key: &[u8; 32], masked: u64) {
+        self.begin_msg(MSG_KEYX_SEED, 40);
+        self.out_buf.extend_from_slice(key);
+        self.out_buf.extend_from_slice(&masked.to_le_bytes());
+        self.meter_setup_sent(40);
+    }
+
+    fn meter_setup_sent(&mut self, body_len: usize) {
+        let wire = (MSG_HEADER + body_len) as u64;
+        self.sent.setup_wire_bytes += wire;
+        self.sent.setup_bits += 8 * wire;
+    }
+
     /// The queued bytes not yet written to the transport. The owner writes
     /// some prefix of this slice and reports it via [`Self::consume_out`] —
     /// partial writes are the normal case on a nonblocking socket.
@@ -560,6 +644,8 @@ mod tests {
         tx.enqueue_nack(NACK_STALE_ID, 9);
         let bits = tx.enqueue_frame(&sample_frame());
         tx.enqueue_cohort(4, &[0, 2]);
+        tx.enqueue_keyx_pub(&[0xA5; 32]);
+        tx.enqueue_keyx_seed(&[0x5A; 32], 0x0123_4567_89AB_CDEF);
         tx.enqueue_bye();
         let stream = tx.pending_out().to_vec();
 
@@ -571,7 +657,7 @@ mod tests {
                 msgs.push(m);
             }
         }
-        assert_eq!(msgs.len(), 6);
+        assert_eq!(msgs.len(), 8);
         assert!(matches!(msgs[0], Msg::Hello { id: 9 }));
         assert!(matches!(&msgs[1], Msg::Ack(b) if b == &[1, 2, 3]));
         assert!(matches!(msgs[2], Msg::Nack { code: NACK_STALE_ID, detail: 9 }));
@@ -583,9 +669,15 @@ mod tests {
             other => panic!("expected frame, got {other:?}"),
         }
         assert!(matches!(&msgs[4], Msg::Cohort { round: 4, ids } if ids == &[0, 2]));
-        assert!(matches!(msgs[5], Msg::Bye));
+        assert!(matches!(&msgs[5], Msg::KeyxPub { key } if key == &[0xA5; 32]));
+        assert!(matches!(
+            &msgs[6],
+            Msg::KeyxSeed { key, masked: 0x0123_4567_89AB_CDEF } if key == &[0x5A; 32]
+        ));
+        assert!(matches!(msgs[7], Msg::Bye));
         assert_eq!(rx.received().frames, 1);
         assert_eq!(rx.received().bits, bits);
+        assert_eq!(rx.received(), tx.sent());
         assert!(rx.at_boundary());
     }
 
@@ -687,15 +779,20 @@ mod tests {
         // exact bytes of the builder-based path; the `*_body` builders are
         // the layout oracle.
         let ids = [3u64, 7, u64::MAX - 1];
+        let key = core::array::from_fn::<u8, 32, _>(|i| i as u8);
         let mut direct = FrameCodec::new();
         direct.enqueue_hello(42);
         direct.enqueue_nack(NACK_BAD_HELLO, 0xDEAD_BEEF);
         direct.enqueue_cohort(11, &ids);
+        direct.enqueue_keyx_pub(&key);
+        direct.enqueue_keyx_seed(&key, 77);
 
         let mut built = FrameCodec::new();
         built.enqueue_msg(MSG_HELLO, &hello_body(42));
         built.enqueue_msg(MSG_NACK, &nack_body(NACK_BAD_HELLO, 0xDEAD_BEEF));
         built.enqueue_msg(MSG_COHORT, &cohort_body(11, &ids));
+        built.enqueue_msg(MSG_KEYX_PUB, &keyx_pub_body(&key));
+        built.enqueue_msg(MSG_KEYX_SEED, &keyx_seed_body(&key, 77));
 
         assert_eq!(direct.pending_out(), built.pending_out());
     }
@@ -751,5 +848,108 @@ mod tests {
         assert_eq!(tx.sent().frames, 1);
         assert_eq!(tx.sent().bits, bits);
         assert!(tx.sent().wire_bytes > 0);
+        assert_eq!(tx.sent().setup_bits, 0);
+        assert_eq!(tx.sent().setup_wire_bytes, 0);
+    }
+
+    #[test]
+    fn keyx_meters_setup_not_frames() {
+        // Key-exchange traffic lands in its own meter category: zero frames,
+        // zero payload bits, and setup bits exactly 8× the setup wire bytes
+        // (envelopes included) — on both the send and the receive side.
+        let mut tx = FrameCodec::new();
+        tx.enqueue_keyx_pub(&[7; 32]);
+        tx.enqueue_keyx_seed(&[9; 32], 0xB1C0);
+        let sent = tx.sent();
+        assert_eq!(sent.frames, 0);
+        assert_eq!(sent.bits, 0);
+        assert_eq!(sent.wire_bytes, 0);
+        assert_eq!(sent.setup_wire_bytes, (MSG_HEADER + 32 + MSG_HEADER + 40) as u64);
+        assert_eq!(sent.setup_bits, 8 * sent.setup_wire_bytes);
+        assert_eq!(
+            sent.setup_wire_bytes,
+            crate::prss::SETUP_WIRE_BYTES_PER_CLIENT,
+            "wire layout drifted from the prss setup-cost constant"
+        );
+        assert_eq!(sent.setup_wire_bytes as usize, tx.pending_out().len());
+
+        let mut rx = FrameCodec::new();
+        rx.feed(tx.pending_out());
+        assert!(matches!(rx.poll_msg().unwrap(), Some(Msg::KeyxPub { .. })));
+        assert!(matches!(rx.poll_msg().unwrap(), Some(Msg::KeyxSeed { .. })));
+        assert_eq!(rx.received(), sent);
+    }
+
+    #[test]
+    fn keyx_bodies_reject_every_wrong_length() {
+        // Exact-length bodies only: any other length is a typed handshake
+        // error, never a panic — including empty and oversized bodies.
+        for tag in [MSG_KEYX_PUB, MSG_KEYX_SEED] {
+            let want = if tag == MSG_KEYX_PUB { 32 } else { 40 };
+            for len in (0..=64).filter(|&l| l != want) {
+                let mut rx = FrameCodec::new();
+                rx.feed(&encode_msg(tag, &vec![0u8; len]));
+                match rx.poll_msg() {
+                    Err(TransportError::Handshake(_)) => {}
+                    other => panic!("tag {tag} len {len}: expected Handshake, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keyx_every_prefix_truncation_is_typed() {
+        // Every strict prefix of each keyx message either wants more bytes
+        // (Ok(None)) with an eof_error that is a typed Truncated/PeerClosed —
+        // no prefix parses, none panics.
+        let mut tx = FrameCodec::new();
+        tx.enqueue_keyx_pub(&[1; 32]);
+        let pub_msg = tx.pending_out().to_vec();
+        let n = pub_msg.len();
+        tx.consume_out(n);
+        tx.enqueue_keyx_seed(&[2; 32], u64::MAX);
+        let seed_msg = tx.pending_out().to_vec();
+
+        for msg in [pub_msg, seed_msg] {
+            for cut in 0..msg.len() {
+                let mut rx = FrameCodec::new();
+                rx.feed(&msg[..cut]);
+                assert!(matches!(rx.poll_msg(), Ok(None)), "prefix {cut} parsed");
+                match rx.eof_error() {
+                    TransportError::PeerClosed => assert_eq!(cut, 0),
+                    TransportError::Truncated { expected, got } => {
+                        assert!(got < expected.max(MSG_HEADER), "cut {cut}");
+                    }
+                    other => panic!("cut {cut}: unexpected {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keyx_corrupt_payloads_never_panic() {
+        // Deterministic corruption sweep: flip each byte of both keyx
+        // messages in turn and confirm the stream either still parses (body
+        // bytes are opaque key material) or fails with a typed error.
+        let mut tx = FrameCodec::new();
+        tx.enqueue_keyx_pub(&[0x11; 32]);
+        tx.enqueue_keyx_seed(&[0x22; 32], 42);
+        let clean = tx.pending_out().to_vec();
+        for i in 0..clean.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bytes = clean.clone();
+                bytes[i] ^= flip;
+                let mut rx = FrameCodec::new();
+                rx.feed(&bytes);
+                loop {
+                    match rx.poll_msg() {
+                        Ok(Some(_)) => continue,
+                        Ok(None) => break, // corrupt length: stream stalls, typed via eof_error
+                        Err(TransportError::Handshake(_) | TransportError::BadFrame(_)) => break,
+                        Err(other) => panic!("byte {i} flip {flip:#x}: {other:?}"),
+                    }
+                }
+            }
+        }
     }
 }

@@ -392,6 +392,12 @@ impl Transport for FaultyTransport {
         self.inner.relay_copies(leg, frame, copies)
     }
 
+    fn record_setup(&self, wire_bytes: u64) {
+        // Setup traffic is never paced or altered — delegated untouched so
+        // the wrapped meter's setup category stays exact under faults.
+        self.inner.record_setup(wire_bytes);
+    }
+
     fn stats(&self) -> TransportStats {
         self.inner.stats()
     }
@@ -505,10 +511,14 @@ mod tests {
             assert_eq!(a.frame, b.frame);
             assert_eq!(plain.relay_copies(leg, &f, 3), shaped.relay_copies(leg, &f, 3));
         }
+        plain.record_setup(82);
+        shaped.record_setup(82);
         let (p, s) = (plain.stats(), shaped.stats());
         assert_eq!(p.ul_bits, s.ul_bits);
         assert_eq!(p.dl_bits, s.dl_bits);
         assert_eq!(p.dl_bc_bits, s.dl_bc_bits);
         assert_eq!(p.frames, s.frames);
+        assert_eq!(p.setup_bits, s.setup_bits);
+        assert_eq!(p.setup_wire_bytes, s.setup_wire_bytes);
     }
 }

@@ -163,10 +163,16 @@ pub struct TransportStats {
     pub wire_bytes: u64,
     /// Payload bytes serialized (padded counted bits); 0 on `Loopback`.
     pub payload_bytes: u64,
+    /// Seed-agreement (key-exchange) bits: exactly 8× `setup_wire_bytes`.
+    /// One-time setup cost, kept apart from the per-round legs above.
+    pub setup_bits: u64,
+    /// Physical bytes of the key-exchange messages, envelopes included.
+    pub setup_wire_bytes: u64,
 }
 
 impl TransportStats {
-    /// All counted bits across the three legs.
+    /// All counted bits across the three legs (setup excluded — it is a
+    /// one-time cost reported in its own category).
     pub fn total_bits(&self) -> u64 {
         self.ul_bits + self.dl_bits + self.dl_bc_bits
     }
@@ -180,6 +186,8 @@ impl TransportStats {
             dl_bc_bits: self.dl_bc_bits - earlier.dl_bc_bits,
             wire_bytes: self.wire_bytes - earlier.wire_bytes,
             payload_bytes: self.payload_bytes - earlier.payload_bytes,
+            setup_bits: self.setup_bits - earlier.setup_bits,
+            setup_wire_bytes: self.setup_wire_bytes - earlier.setup_wire_bytes,
         }
     }
 }
@@ -194,6 +202,8 @@ pub(crate) struct Meter {
     dl_bc_bits: AtomicU64,
     wire_bytes: AtomicU64,
     payload_bytes: AtomicU64,
+    setup_bits: AtomicU64,
+    setup_wire_bytes: AtomicU64,
 }
 
 impl Meter {
@@ -221,6 +231,13 @@ impl Meter {
         self.payload_bytes.fetch_add(payload_bytes * copies, Ordering::Relaxed);
     }
 
+    /// Charge `wire_bytes` of key-exchange traffic: the setup category, at
+    /// exactly 8 bits per wire byte (envelopes included).
+    pub(crate) fn record_setup(&self, wire_bytes: u64) {
+        self.setup_wire_bytes.fetch_add(wire_bytes, Ordering::Relaxed);
+        self.setup_bits.fetch_add(8 * wire_bytes, Ordering::Relaxed);
+    }
+
     pub(crate) fn snapshot(&self) -> TransportStats {
         TransportStats {
             frames: self.frames.load(Ordering::Relaxed),
@@ -229,6 +246,8 @@ impl Meter {
             dl_bc_bits: self.dl_bc_bits.load(Ordering::Relaxed),
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            setup_bits: self.setup_bits.load(Ordering::Relaxed),
+            setup_wire_bytes: self.setup_wire_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -256,6 +275,15 @@ pub trait Transport: Send + Sync {
     /// relay fans every payload to n−1 peers) cost O(n) encodes, not O(n²).
     /// Returns the summed bits.
     fn relay_copies(&self, leg: Leg, frame: &Frame, copies: u64) -> u64;
+
+    /// Charge `wire_bytes` of seed-agreement (key-exchange) traffic to the
+    /// setup meter category, at exactly 8 bits per wire byte. The in-process
+    /// transports use this to account the simulated handshake; the socket
+    /// transports use it to surface the bytes their peer codecs carried.
+    /// Default: uncharged (a transport with no meter).
+    fn record_setup(&self, wire_bytes: u64) {
+        let _ = wire_bytes;
+    }
 
     fn stats(&self) -> TransportStats;
 }
@@ -292,6 +320,10 @@ impl Transport for Loopback {
         let bits = frame.counted_bits();
         self.meter.record_many(leg, copies, bits, 0, 0);
         bits * copies
+    }
+
+    fn record_setup(&self, wire_bytes: u64) {
+        self.meter.record_setup(wire_bytes);
     }
 
     fn stats(&self) -> TransportStats {
@@ -358,6 +390,10 @@ impl Transport for FramedLoopback {
         self.meter
             .record_many(leg, copies, payload_bits, buf.len() as u64, payload_bytes);
         payload_bits * copies
+    }
+
+    fn record_setup(&self, wire_bytes: u64) {
+        self.meter.record_setup(wire_bytes);
     }
 
     fn stats(&self) -> TransportStats {
@@ -666,6 +702,24 @@ mod tests {
             assert_eq!(fr_one.stats(), fr_many.stats(), "framed meters diverged");
             assert_eq!(fr_many.relay_copies(Leg::Uplink, &frame, 0), 0);
         }
+    }
+
+    #[test]
+    fn setup_meter_is_a_distinct_category() {
+        let t = Loopback::new();
+        t.record_setup(82);
+        t.relay(Leg::Uplink, &sample_frames()[1]);
+        let s = t.stats();
+        assert_eq!(s.setup_wire_bytes, 82);
+        assert_eq!(s.setup_bits, 8 * 82);
+        // Setup never leaks into the per-round legs or the frame counters.
+        assert_eq!(s.frames, 1);
+        assert_eq!(s.total_bits(), sample_frames()[1].counted_bits());
+        let snap = t.stats();
+        t.record_setup(82);
+        let delta = t.stats().since(&snap);
+        assert_eq!(delta.setup_bits, 8 * 82);
+        assert_eq!(delta.ul_bits, 0);
     }
 
     #[test]

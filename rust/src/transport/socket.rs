@@ -272,6 +272,43 @@ impl FrameStream {
         self.flush_out()
     }
 
+    /// Send key-exchange step 1 (client → federator): this peer's ephemeral
+    /// X25519 public key. Metered as setup traffic by the codec.
+    pub fn send_keyx_pub(&mut self, key: &[u8; 32]) -> Result<()> {
+        self.codec.enqueue_keyx_pub(key);
+        self.flush_out()
+    }
+
+    /// Send key-exchange step 2 (federator → client): the federator's
+    /// ephemeral public key plus the masked run seed. Metered as setup
+    /// traffic by the codec.
+    pub fn send_keyx_seed(&mut self, key: &[u8; 32], masked: u64) -> Result<()> {
+        self.codec.enqueue_keyx_seed(key, masked);
+        self.flush_out()
+    }
+
+    /// Block until the peer's key-exchange public key arrives (step 1,
+    /// federator side).
+    pub fn recv_keyx_pub(&mut self) -> Result<[u8; 32]> {
+        match self.recv_msg()? {
+            Msg::KeyxPub { key } => Ok(key),
+            other => Err(TransportError::Handshake(format!(
+                "expected keyx-pub, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Block until the federator's key-exchange reply arrives (step 2,
+    /// client side): its public key plus the masked run seed.
+    pub fn recv_keyx_seed(&mut self) -> Result<([u8; 32], u64)> {
+        match self.recv_msg()? {
+            Msg::KeyxSeed { key, masked } => Ok((key, masked)),
+            other => Err(TransportError::Handshake(format!(
+                "expected keyx-seed, got {other:?}"
+            ))),
+        }
+    }
+
     /// Block until the federator's cohort message for the current round
     /// arrives. A BYE here means the federator shut down where a cohort was
     /// expected: [`TransportError::PeerClosed`].
@@ -677,6 +714,10 @@ impl Transport for SocketTransport {
         bits * copies
     }
 
+    fn record_setup(&self, wire_bytes: u64) {
+        self.meter.record_setup(wire_bytes);
+    }
+
     fn stats(&self) -> TransportStats {
         self.meter.snapshot()
     }
@@ -768,6 +809,27 @@ mod tests {
         assert_eq!(tx.sent().frames, 1);
         tx.send_bye().unwrap();
         assert!(matches!(rx.recv_bye(), Ok(())));
+    }
+
+    #[test]
+    fn framestream_keyx_roundtrip_meters_setup() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut client = FrameStream::new(a);
+        let mut fed = FrameStream::new(b);
+        client.send_keyx_pub(&[0xC1; 32]).unwrap();
+        assert_eq!(fed.recv_keyx_pub().unwrap(), [0xC1; 32]);
+        fed.send_keyx_seed(&[0xF0; 32], 0xB1C0).unwrap();
+        assert_eq!(client.recv_keyx_seed().unwrap(), ([0xF0; 32], 0xB1C0));
+        // Both directions meter setup at 8 bits per wire byte, no frames.
+        let up = client.sent();
+        let down = fed.sent();
+        assert_eq!(up.setup_wire_bytes, 5 + 32);
+        assert_eq!(down.setup_wire_bytes, 5 + 40);
+        assert_eq!(up.setup_bits, 8 * up.setup_wire_bytes);
+        assert_eq!(down.setup_bits, 8 * down.setup_wire_bytes);
+        assert_eq!(up.frames + down.frames, 0);
+        assert_eq!(fed.received(), up);
+        assert_eq!(client.received(), down);
     }
 
     #[test]

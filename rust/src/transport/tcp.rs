@@ -258,6 +258,13 @@ impl Endpoint {
         self.codec.enqueue_bye();
     }
 
+    /// Queue key-exchange step 2 (federator → client): the federator's
+    /// ephemeral public key plus the masked run seed. Metered as setup
+    /// traffic by the codec.
+    pub fn enqueue_keyx_seed(&mut self, key: &[u8; 32], masked: u64) {
+        self.codec.enqueue_keyx_seed(key, masked);
+    }
+
     /// Write as much queued output as the socket accepts right now.
     /// Returns `Ok(true)` when the queue fully drained, `Ok(false)` when
     /// bytes remain (poll the fd for [`POLLOUT`] and flush again). A dead
@@ -409,6 +416,10 @@ impl Transport for TcpTransport {
         self.meter
             .record_many(leg, copies, bits, wire_bytes, bits.div_ceil(8));
         bits * copies
+    }
+
+    fn record_setup(&self, wire_bytes: u64) {
+        self.meter.record_setup(wire_bytes);
     }
 
     fn stats(&self) -> TransportStats {

@@ -155,6 +155,68 @@ fn wire_bytes_times_eight_equal_reported_bits_for_mrc_variants() {
     }
 }
 
+/// The setup category obeys the same wire-exactness bar as the payload
+/// legs, without ever mixing with them: a negotiated run charges exactly
+/// one key-exchange round-trip of wire bytes per client, reports setup bits
+/// as wire-bytes × 8, and leaves every payload-side invariant — counted
+/// bits == payload bytes × 8, records == meters — byte-for-byte identical
+/// to the ambient run.
+#[test]
+fn setup_bits_are_wire_exact_and_stay_out_of_the_round_categories() {
+    use bicompfl::prss::{SeedMode, SETUP_WIRE_BYTES_PER_CLIENT};
+    for variant in [Variant::Gr, Variant::Pr] {
+        for n in [1usize, 4] {
+            for (kind, transport) in wire_transports() {
+                let d = 256;
+                let run_stats = |mode: SeedMode, transport: Arc<dyn Transport>| {
+                    let cfg = BiCompFlConfig {
+                        variant,
+                        n_is: 256,
+                        allocation: AllocationStrategy::fixed(64),
+                        local_iters: 1,
+                        local_lr: 0.2,
+                        seed_mode: mode,
+                        ..Default::default()
+                    };
+                    let mut oracle = SyntheticMaskOracle::new(d, n, 3, 0.1);
+                    let mut alg = BiCompFl::new(d, n, cfg).with_transport(transport.clone());
+                    let recs = alg.run(&mut oracle, 2, 1);
+                    (recs, transport.stats())
+                };
+                let (recs_a, ambient) = run_stats(SeedMode::Ambient, transport);
+                let fresh: Arc<dyn Transport> = match kind {
+                    "framed" => Arc::new(FramedLoopback::new()),
+                    _ => Arc::new(SocketTransport::duplex().expect("socketpair failed")),
+                };
+                let (recs_n, negotiated) = run_stats(SeedMode::Negotiated, fresh);
+                assert_eq!(recs_a, recs_n, "{}: n={n} [{kind}]", variant.label());
+                assert_eq!((ambient.setup_bits, ambient.setup_wire_bytes), (0, 0));
+                assert_eq!(
+                    negotiated.setup_wire_bytes,
+                    n as u64 * SETUP_WIRE_BYTES_PER_CLIENT,
+                    "{}: n={n} [{kind}]: setup is one exchange per client",
+                    variant.label()
+                );
+                assert_eq!(
+                    negotiated.setup_bits,
+                    8 * negotiated.setup_wire_bytes,
+                    "{}: n={n} [{kind}]: setup bits must be wire-bytes × 8",
+                    variant.label()
+                );
+                // Setup never contaminates the per-round categories.
+                assert_eq!(negotiated.total_bits(), ambient.total_bits());
+                assert_eq!(negotiated.payload_bytes, ambient.payload_bytes);
+                assert_eq!(
+                    negotiated.payload_bytes * 8,
+                    negotiated.total_bits(),
+                    "{}: n={n} [{kind}]: payload exactness broke under negotiation",
+                    variant.label()
+                );
+            }
+        }
+    }
+}
+
 /// The same wire-exactness bar for a conventional-FL baseline: FedAvg's
 /// dense 32-bit frames are always byte-aligned, so serialized payload
 /// bytes × 8 must equal the reported uplink + downlink bits exactly.

@@ -742,6 +742,63 @@ fn every_baseline_wire_transport_matches_loopback() {
     }
 }
 
+/// Negotiated seed establishment must be invisible to every round-level
+/// observable: the key exchange recovers exactly the ambient seed, so
+/// records, models, and client estimates are bit-identical on every wire
+/// kind — while the exchange itself lands in the *setup* meter category
+/// (wire-bytes × 8 == reported bits, one exchange per client, excluded
+/// from the per-round totals the tables are built from).
+#[test]
+fn negotiated_seed_mode_is_invisible_to_rounds_on_every_wire() {
+    use bicompfl::prss::{SeedMode, SETUP_WIRE_BYTES_PER_CLIENT};
+    for variant in [Variant::Gr, Variant::Pr] {
+        let n = 4;
+        let run = |kind: &str, mode: SeedMode| {
+            let d = 192;
+            let mut c = cfg(variant);
+            c.seed_mode = mode;
+            let mut oracle = SyntheticMaskOracle::new(d, n, 42, 0.1);
+            let mut alg = BiCompFl::new(d, n, c)
+                .with_engine(ParallelRoundEngine::with_shards(4))
+                .with_transport(make_transport(kind));
+            let recs = alg.run(&mut oracle, 4, 1);
+            let clients: Vec<Vec<f32>> = (0..n).map(|i| alg.client_model(i).to_vec()).collect();
+            let stats = alg.transport_stats();
+            ((recs, alg.global_model().to_vec(), clients), stats)
+        };
+        let (reference, ambient_stats) = run("loopback", SeedMode::Ambient);
+        assert_eq!(ambient_stats.setup_bits, 0, "ambient mode must meter no setup");
+        assert_eq!(ambient_stats.setup_wire_bytes, 0);
+        for kind in ["loopback", "framed", "socket", "tcp", "faulty"] {
+            let (got, stats) = run(kind, SeedMode::Negotiated);
+            assert_eq!(
+                reference,
+                got,
+                "{}: negotiated seed changed an observable on the {kind} wire",
+                variant.label()
+            );
+            assert_eq!(
+                stats.setup_wire_bytes,
+                n as u64 * SETUP_WIRE_BYTES_PER_CLIENT,
+                "{}: {kind} setup charge is not one exchange per client",
+                variant.label()
+            );
+            assert_eq!(
+                stats.setup_bits,
+                8 * stats.setup_wire_bytes,
+                "{}: {kind} setup bits must be wire-bytes x 8",
+                variant.label()
+            );
+            assert_eq!(
+                stats.total_bits(),
+                ambient_stats.total_bits(),
+                "{}: setup leaked into the {kind} round-bit totals",
+                variant.label()
+            );
+        }
+    }
+}
+
 /// The same invariant holds cumulatively: over n consecutive rounds the
 /// rotating shares cover every (client, block) pair exactly once.
 #[test]

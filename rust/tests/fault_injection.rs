@@ -17,7 +17,9 @@ use bicompfl::coordinator::bicompfl::{BiCompFl, BiCompFlConfig, Variant};
 use bicompfl::coordinator::distributed::{federate, participate, NetAddr, RunOpts, RunSpec};
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::prss::{SeedMode, KEYX_PUB_BYTES, KEYX_SEED_BYTES, SETUP_WIRE_BYTES_PER_CLIENT};
 use bicompfl::runtime::ParallelRoundEngine;
+use bicompfl::transport::codec::{FrameCodec, Msg};
 use bicompfl::transport::socket::{accept_clients_deadline, bind, connect_client, TransportError};
 use bicompfl::transport::{
     DownlinkFrame, FaultReport, FaultSpec, Frame, ModelFrame, ModelPayload, PlanFrame, QsSide,
@@ -47,6 +49,7 @@ fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
         theta_clamp: 0.05,
         heterogeneity: 0.1,
         chunk_blocks: 0,
+        seed_mode: 0,
     }
 }
 
@@ -291,6 +294,184 @@ fn accept_deadline_reports_the_missing_client_ids() {
     }
     drop(held);
     let _ = std::fs::remove_file(&sock);
+}
+
+/// Negotiated seed establishment rides the same fault-tolerant federator:
+/// with zero faults the run stays bit-identical to the in-process reference
+/// (strict and deadline-tolerant dispatch both), and the key exchange shows
+/// up only in the setup meters — wire-exact in both directions, one
+/// `KEYX_PUB` in and one `KEYX_SEED` out per client, envelopes included.
+#[test]
+fn negotiated_zero_fault_runs_match_the_reference_and_meter_setup() {
+    let spec = small_spec(3, 2, 0xB1C0);
+    let n = spec.n as u64;
+    for (tag, deadline) in [("negz", None), ("negzdl", Some(Duration::from_secs(30)))] {
+        let opts = RunOpts {
+            deadline,
+            seed_mode: SeedMode::Negotiated,
+            ..RunOpts::strict(spec)
+        };
+        let (run, clients) = run_opts_matrix(tag, &opts);
+        for (id, c) in clients.into_iter().enumerate() {
+            c.unwrap_or_else(|e| panic!("{tag}: negotiated client {id} failed: {e}"));
+        }
+        let run = run.expect("federator run");
+        assert_eq!(run.records, reference_records(&spec), "{tag}");
+        assert_eq!(run.faults, FaultReport::all_delivered(3, 2), "{tag}");
+        assert_eq!(run.wire_recv.setup_wire_bytes, n * (5 + KEYX_PUB_BYTES as u64), "{tag}");
+        assert_eq!(run.wire_sent.setup_wire_bytes, n * (5 + KEYX_SEED_BYTES as u64), "{tag}");
+        assert_eq!(
+            run.wire_recv.setup_wire_bytes + run.wire_sent.setup_wire_bytes,
+            n * SETUP_WIRE_BYTES_PER_CLIENT,
+            "{tag}"
+        );
+        assert_eq!(run.wire_recv.setup_bits, 8 * run.wire_recv.setup_wire_bytes, "{tag}");
+        assert_eq!(run.wire_sent.setup_bits, 8 * run.wire_sent.setup_wire_bytes, "{tag}");
+    }
+}
+
+/// The key exchange completes at handshake time, before the fault layer
+/// starts counting a client's frames — so a mid-run dropout under negotiated
+/// seeds realizes the exact same records, cohorts, and fault counters as the
+/// ambient run, and even the client that later drops has already paid its
+/// full (metered) setup cost.
+#[test]
+fn a_dropout_under_negotiated_seeds_realizes_the_ambient_run() {
+    let spec = small_spec(3, 3, 0x0D0D);
+    let ambient = RunOpts {
+        spec,
+        faults: FaultSpec::parse("2:drop_after=3").unwrap(),
+        seed_mode: SeedMode::Ambient,
+        ..Default::default()
+    };
+    let negotiated = RunOpts {
+        seed_mode: SeedMode::Negotiated,
+        ..ambient.clone()
+    };
+    let (amb_run, amb_clients) = run_opts_matrix("dropamb", &ambient);
+    let (neg_run, neg_clients) = run_opts_matrix("dropneg", &negotiated);
+    for clients in [&amb_clients, &neg_clients] {
+        assert!(clients[0].is_ok() && clients[1].is_ok(), "survivors finish");
+        assert!(clients[2].is_err(), "the dropped client sees its own death");
+    }
+    let amb_run = amb_run.expect("ambient federator tolerates the dropout");
+    let neg_run = neg_run.expect("negotiated federator tolerates the dropout");
+    assert_eq!(neg_run.records, amb_run.records, "mode changed the realized run");
+    assert_eq!(neg_run.faults, amb_run.faults, "mode changed the fault counters");
+    assert_eq!(neg_run.records[1].cohort, Cohort::Partial(vec![0, 1]));
+    // All three clients completed establishment before any frame counted.
+    assert_eq!(amb_run.wire_recv.setup_wire_bytes, 0);
+    assert_eq!(amb_run.wire_sent.setup_wire_bytes, 0);
+    assert_eq!(neg_run.wire_recv.setup_wire_bytes, 3 * (5 + KEYX_PUB_BYTES as u64));
+    assert_eq!(neg_run.wire_sent.setup_wire_bytes, 3 * (5 + KEYX_SEED_BYTES as u64));
+    assert_eq!(
+        (neg_run.wire_recv.bits, neg_run.wire_sent.bits),
+        (amb_run.wire_recv.bits, amb_run.wire_sent.bits),
+        "setup traffic leaked into the per-round bit categories"
+    );
+}
+
+/// A hand-built `[tag][len u32 LE][body]` key-exchange message, bypassing
+/// the codec's own encoders so the fuzz below exercises the parser against
+/// attacker-shaped bytes.
+fn keyx_msg(tag: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = vec![tag];
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Integration-level fuzz of the key-exchange wire messages through the
+/// public codec surface: both KEYX kinds round-trip from raw bytes and meter
+/// as setup, every strict prefix waits for more input (and an EOF there is a
+/// typed truncation), every wrong body length is a typed handshake error, a
+/// corrupted tag is a typed bad-frame error, and single-byte corruption
+/// anywhere in the message never panics.
+#[test]
+fn keyx_wire_bytes_fuzz_clean_through_the_public_codec() {
+    let key = [0xA5u8; 32];
+    let masked = 0x0123_4567_89AB_CDEFu64;
+    let pub_msg = keyx_msg(7, &key);
+    let mut seed_body = key.to_vec();
+    seed_body.extend_from_slice(&masked.to_le_bytes());
+    let seed_msg = keyx_msg(8, &seed_body);
+
+    // The untampered messages parse and land in the setup meter.
+    let mut c = FrameCodec::new();
+    c.feed(&pub_msg);
+    match c.poll_msg() {
+        Ok(Some(Msg::KeyxPub { key: k })) => assert_eq!(k, key),
+        other => panic!("keyx-pub bytes must parse, got {other:?}"),
+    }
+    c.feed(&seed_msg);
+    match c.poll_msg() {
+        Ok(Some(Msg::KeyxSeed { key: k, masked: m })) => {
+            assert_eq!((k, m), (key, masked));
+        }
+        other => panic!("keyx-seed bytes must parse, got {other:?}"),
+    }
+    let wire = (pub_msg.len() + seed_msg.len()) as u64;
+    assert_eq!(c.received().setup_wire_bytes, wire);
+    assert_eq!(c.received().setup_bits, 8 * wire);
+    assert_eq!(c.received().frames, 0, "keyx messages are not frames");
+    assert_eq!(wire, SETUP_WIRE_BYTES_PER_CLIENT, "hand-built sizes drifted");
+
+    for msg in [&pub_msg, &seed_msg] {
+        // Every strict prefix: not a message yet, never an error or a panic;
+        // hanging up there is a typed truncation (or a clean close at 0).
+        for k in 0..msg.len() {
+            let mut c = FrameCodec::new();
+            c.feed(&msg[..k]);
+            assert!(
+                matches!(c.poll_msg(), Ok(None)),
+                "{k}-byte prefix of {} must wait for more bytes",
+                msg.len()
+            );
+            if k == 0 {
+                assert!(matches!(c.eof_error(), TransportError::PeerClosed));
+            } else {
+                assert!(matches!(c.eof_error(), TransportError::Truncated { .. }));
+            }
+        }
+        // Single-byte corruption anywhere: any typed result is acceptable,
+        // a panic (or an attacker-sized allocation blowing up) is not.
+        for i in 0..msg.len() {
+            let mut m = msg.clone();
+            m[i] ^= 0xFF;
+            let mut c = FrameCodec::new();
+            c.feed(&m);
+            let _ = c.poll_msg();
+        }
+    }
+
+    // Wrong body lengths under the correct tags are typed handshake errors.
+    for (tag, good) in [(7u8, KEYX_PUB_BYTES), (8, KEYX_SEED_BYTES)] {
+        for bad in [0usize, 1, 31, 33, 39, 41, 64] {
+            if bad == good {
+                continue;
+            }
+            let mut c = FrameCodec::new();
+            c.feed(&keyx_msg(tag, &vec![0x5Au8; bad]));
+            match c.poll_msg() {
+                Err(TransportError::Handshake(why)) => {
+                    assert!(why.contains("expected"), "{why}");
+                }
+                other => {
+                    panic!("tag {tag}, {bad}-byte body: want a handshake error, got {other:?}")
+                }
+            }
+        }
+    }
+
+    // A corrupted tag is a bad frame, not a misparse into another kind.
+    let mut corrupted = pub_msg.clone();
+    corrupted[0] = 0xEE;
+    let mut c = FrameCodec::new();
+    c.feed(&corrupted);
+    match c.poll_msg() {
+        Err(TransportError::BadFrame(why)) => assert!(why.contains("unknown"), "{why}"),
+        other => panic!("unknown tag must be a bad frame, got {other:?}"),
+    }
 }
 
 /// The panic-freedom bar of the wire decoder: for every frame kind, decoding

@@ -1,0 +1,184 @@
+//! Cross-party conformance for the PRSS subsystem.
+//!
+//! The MRC protocol only works if the federator and every client derive the
+//! *same bytes* from the established seed for the same (round, client,
+//! block, direction) label — and, in PR mode, if no client can derive
+//! another client's bytes. This suite plays both parties in-process: the
+//! client's seed comes through a real `KeyExchange` mask/unmask round-trip
+//! (exactly what `MSG_KEYX_SEED` carries), then both sides' derivations are
+//! compared byte-for-byte.
+
+use bicompfl::coordinator::shared_rand::{
+    mrc_stream, private_seed, selector_seed, Direction,
+};
+use bicompfl::prss::{client_keys, federator_link_keys, IndexedSharedRandomness, KeyExchange};
+
+const DIRS: [Direction; 2] = [Direction::Uplink, Direction::Downlink];
+
+/// The candidate bytes one party draws for a label: a few Philox blocks,
+/// serialized little-endian — the byte stream the MRC encoder/decoder
+/// actually consumes.
+fn drawn_bytes(isr: &IndexedSharedRandomness, round: u64, client: u64, dir: Direction) -> Vec<u8> {
+    let link = isr.link(round, client, dir);
+    let mut out = Vec::new();
+    for block in 0..6u64 {
+        let stream = link.stream(block);
+        for ctr in 0..4u64 {
+            for lane in stream.block(ctr, 0) {
+                out.extend_from_slice(&lane.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn both_parties_derive_identical_bytes_after_a_real_key_exchange() {
+    let group_seed = 0xB1C0u64;
+    for client in 0..4u64 {
+        // Federator side: owns the seed, masks it for this link.
+        let fed_isr = IndexedSharedRandomness::new(group_seed);
+        let fed = federator_link_keys(client);
+        let wire = fed.mask_seed(&client_keys(client).public(), group_seed);
+
+        // Client side: recovers the seed from the wire value alone.
+        let cli = client_keys(client);
+        let recovered = cli.unmask_seed(&fed.public(), wire);
+        assert_eq!(recovered, group_seed, "client {client} recovered a different seed");
+        let cli_isr = IndexedSharedRandomness::new(recovered);
+
+        for round in [0u64, 1, 5] {
+            for dir in DIRS {
+                assert_eq!(
+                    drawn_bytes(&fed_isr, round, client, dir),
+                    drawn_bytes(&cli_isr, round, client, dir),
+                    "byte drift at (round {round}, client {client}, {dir:?})"
+                );
+                assert_eq!(
+                    fed_isr.selector(round, client, dir),
+                    cli_isr.selector(round, client, dir),
+                    "selector drift at (round {round}, client {client}, {dir:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn link_cache_matches_the_full_derivation_everywhere() {
+    // The hot-path handle (fold the (round, client) prefix once) must be
+    // bit-identical to the historical four-part chain-mix at every label
+    // and every counter, not just block 0.
+    let isr = IndexedSharedRandomness::new(42);
+    for round in [0u64, 2, 9] {
+        for client in [0u64, 1, 6] {
+            for dir in DIRS {
+                let link = isr.link(round, client, dir);
+                for block in [0u64, 1, 3, 17] {
+                    let want = mrc_stream(42, round, client, block, dir);
+                    let got = link.stream(block);
+                    for ctr in [0u64, 1, 1000] {
+                        assert_eq!(
+                            got.block(ctr, 0),
+                            want.block(ctr, 0),
+                            "({round},{client},{block},{dir:?}) ctr {ctr}"
+                        );
+                    }
+                    assert_eq!(
+                        isr.stream(round, client, block, dir).block(0, 0),
+                        want.block(0, 0)
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pr_mode_isolates_clients_pairwise() {
+    // PR derives per-client seeds shared only with the federator. Client j,
+    // holding its own private view, must not reproduce client i's bytes for
+    // any label — including labels that *name* client i.
+    let isr = IndexedSharedRandomness::new(0xB1C0);
+    let n = 4u64;
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let mine = isr.private(i);
+            let theirs = isr.private(j);
+            assert_ne!(mine.seed(), theirs.seed());
+            for round in [0u64, 3] {
+                for dir in DIRS {
+                    assert_ne!(
+                        drawn_bytes(&mine, round, i, dir),
+                        drawn_bytes(&theirs, round, i, dir),
+                        "client {j} reproduced client {i}'s private bytes"
+                    );
+                }
+            }
+        }
+    }
+    // The private view is the shared_rand derivation, so the federator
+    // (holding the group seed) reaches the same per-client streams.
+    for i in 0..n {
+        assert_eq!(isr.private(i).seed(), private_seed(0xB1C0, i));
+    }
+}
+
+#[test]
+fn isr_surface_is_the_shared_rand_surface() {
+    // Ambient call sites moved behind IndexedSharedRandomness; both
+    // surfaces must agree so loopback == framed == socket == tcp == faulty
+    // stays bit-identical whichever surface a coordinator uses.
+    for seed in [0u64, 0xB1C0, u64::MAX] {
+        let isr = IndexedSharedRandomness::new(seed);
+        assert_eq!(isr.seed(), seed);
+        for round in [0u64, 7] {
+            for client in [0u64, 5] {
+                for dir in DIRS {
+                    assert_eq!(
+                        isr.selector(round, client, dir),
+                        selector_seed(seed, round, client, dir)
+                    );
+                    for block in [0u64, 11] {
+                        assert_eq!(
+                            isr.stream(round, client, block, dir).block(0, 0),
+                            mrc_stream(seed, round, client, block, dir).block(0, 0)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_link_keys_cannot_recover_the_seed() {
+    // An eavesdropping client (wrong secret for the link) unmasks to
+    // garbage, and every link's keystream is distinct.
+    let seed = 0x5EED_CAFEu64;
+    let fed0 = federator_link_keys(0);
+    let wire0 = fed0.mask_seed(&client_keys(0).public(), seed);
+    for j in 1..6u64 {
+        let eaves = client_keys(j);
+        assert_ne!(
+            eaves.unmask_seed(&fed0.public(), wire0),
+            seed,
+            "client {j} recovered link 0's seed"
+        );
+    }
+    // Symmetry: both ends of one link derive the same keystream.
+    let cli0 = client_keys(0);
+    assert_eq!(
+        fed0.mask_seed(&cli0.public(), 0),
+        cli0.mask_seed(&fed0.public(), 0),
+        "DH keystream is not symmetric"
+    );
+    // And an explicit-scalar exchange agrees with itself end to end.
+    let a = KeyExchange::from_secret([7u8; 32]);
+    let b = KeyExchange::from_secret([9u8; 32]);
+    let wire = a.mask_seed(&b.public(), seed);
+    assert_eq!(b.unmask_seed(&a.public(), wire), seed);
+}

@@ -40,6 +40,7 @@ fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
         theta_clamp: 0.05,
         heterogeneity: 0.1,
         chunk_blocks: 0,
+        seed_mode: 0,
     }
 }
 

@@ -16,6 +16,7 @@ use bicompfl::coordinator::distributed::{
 };
 use bicompfl::coordinator::SyntheticMaskOracle;
 use bicompfl::mrc::block::{AllocationStrategy, BlockPlan};
+use bicompfl::prss::{SeedMode, KEYX_PUB_BYTES, KEYX_SEED_BYTES, SETUP_WIRE_BYTES_PER_CLIENT};
 use bicompfl::runtime::ParallelRoundEngine;
 use bicompfl::transport::codec::{FrameCodec, LinkMeter};
 use bicompfl::transport::tcp::connect_client_tcp;
@@ -53,6 +54,7 @@ fn small_spec(n: u32, rounds: u32, seed: u64) -> RunSpec {
         theta_clamp: 0.05,
         heterogeneity: 0.1,
         chunk_blocks: 0,
+        seed_mode: 0,
     }
 }
 
@@ -157,6 +159,62 @@ fn one_federator_thread_drives_64_tcp_clients_bit_identically() {
     let per_client = (spec.d / spec.block_size) as u64 * 6;
     assert_eq!(run.records[0].ul_bits, 64 * per_client);
     assert_eq!(run.records[0].dl_bits, 63 * 64 * per_client);
+}
+
+/// Negotiated seed establishment over real TCP: the key exchange recovers
+/// exactly the ambient seed (records bit-identical to the in-process
+/// simulation), the ACK carries a zeroed seed so the real one only travels
+/// masked inside `MSG_KEYX_SEED`, and the exchange lands in the setup meter
+/// — one KEYX_PUB received and one KEYX_SEED sent per client, with setup
+/// bits exactly 8× the setup wire bytes on both directions.
+#[test]
+fn negotiated_tcp_run_matches_the_ambient_simulation_and_meters_setup() {
+    let spec = small_spec(3, 3, 0x5EED);
+    // Pin both modes explicitly: this test must compare them even when the
+    // surrounding suite runs under BICOMPFL_SEED_MODE=negotiated.
+    let ambient = RunOpts {
+        seed_mode: SeedMode::Ambient,
+        ..RunOpts::strict(spec)
+    };
+    let negotiated = RunOpts {
+        seed_mode: SeedMode::Negotiated,
+        ..ambient.clone()
+    };
+    let (run, clients) = run_tcp_matrix(&negotiated);
+    for (id, c) in clients.into_iter().enumerate() {
+        c.unwrap_or_else(|e| panic!("negotiated client {id} failed: {e}"));
+    }
+    let run = run.expect("negotiated federator run");
+    assert_eq!(
+        run.records,
+        reference_records(&spec),
+        "negotiated TCP records diverged from the ambient simulation"
+    );
+    // Setup accounting: the federator receives one public key and sends one
+    // masked-seed message per client, envelopes (tag + u32 length) included.
+    let n = u64::from(spec.n);
+    let env = 5u64; // MSG_HEADER
+    assert_eq!(run.wire_recv.setup_wire_bytes, n * (env + KEYX_PUB_BYTES as u64));
+    assert_eq!(run.wire_sent.setup_wire_bytes, n * (env + KEYX_SEED_BYTES as u64));
+    assert_eq!(
+        run.wire_recv.setup_wire_bytes + run.wire_sent.setup_wire_bytes,
+        n * SETUP_WIRE_BYTES_PER_CLIENT
+    );
+    assert_eq!(run.wire_recv.setup_bits, 8 * run.wire_recv.setup_wire_bytes);
+    assert_eq!(run.wire_sent.setup_bits, 8 * run.wire_sent.setup_wire_bytes);
+
+    // The same run in ambient mode meters no setup at all, and lands on the
+    // same records and the same per-round wire bits.
+    let (ambient_run, ambient_clients) = run_tcp_matrix(&ambient);
+    for c in ambient_clients {
+        c.expect("ambient client");
+    }
+    let ambient_run = ambient_run.expect("ambient federator run");
+    assert_eq!(ambient_run.records, run.records);
+    assert_eq!(ambient_run.wire_recv.setup_wire_bytes, 0);
+    assert_eq!(ambient_run.wire_sent.setup_bits, 0);
+    assert_eq!(ambient_run.wire_recv.bits, run.wire_recv.bits);
+    assert_eq!(ambient_run.wire_sent.bits, run.wire_sent.bits);
 }
 
 /// A TCP handshake offering an out-of-range id is answered with a typed
